@@ -1,0 +1,47 @@
+//! Capacity-planning walkthrough: run every strategy over a demand trace
+//! across the three CI regions and print the carbon/cost/fleet matrix —
+//! the paper's Fig 15/16 workflow as a CLI tool.
+//!
+//! Run: `cargo run --release --example capacity_planner [-- --model llama-70b]`
+
+use ecoserve::carbon::intensity::Region;
+use ecoserve::models;
+use ecoserve::planner::slicing::{cluster_slices, slice_trace};
+use ecoserve::strategies::Strategy;
+use ecoserve::util::cli::Args;
+use ecoserve::util::table::{fnum, Table};
+use ecoserve::workload::slo::{slo_for, Slo};
+use ecoserve::workload::{generate_trace, merge_traces, Arrivals, LengthDist,
+                         RequestClass};
+
+fn main() {
+    let args = Args::parse();
+    let model_name = args.str("model", "llama-8b");
+    let m = models::llm(&model_name).expect("unknown model");
+    let slo = slo_for(&model_name, false).map(|w| w.slo)
+        .unwrap_or(Slo { ttft_s: 2.0, tpot_s: 0.2 });
+
+    let online = generate_trace(Arrivals::Diurnal { rate: 20.0, amplitude: 0.5 },
+                                LengthDist::ShareGpt, RequestClass::Online,
+                                600.0, 1);
+    let offline = generate_trace(Arrivals::Poisson { rate: 8.0 },
+                                 LengthDist::LongBench, RequestClass::Offline,
+                                 600.0, 2);
+    let trace = merge_traces(vec![online, offline]);
+    let slices = cluster_slices(&slice_trace(m, &trace, 600.0, slo, 1));
+    println!("model {model_name}: {} slices from {} requests",
+             slices.len(), trace.len());
+
+    for region in Region::low_mid_high() {
+        println!("\n== {} (CI {} g/kWh) ==", region.name(), region.avg_ci());
+        let mut t = Table::new(&["strategy", "carbon kg/hr", "op", "emb", "$/hr",
+                                 "fleet"]);
+        for strat in Strategy::all() {
+            let p = strat.plan(&slices, region.avg_ci());
+            t.row(&[strat.name().into(), fnum(p.carbon_kg_per_hr()),
+                    fnum(p.op_kg_per_hr), fnum(p.emb_kg_per_hr), fnum(p.cost_hr),
+                    format!("{:?}", p.counts)]);
+        }
+        t.print();
+    }
+}

@@ -1,0 +1,58 @@
+//! Reuse deep-dive: when should offline decode move to host CPUs?
+//! Sweeps model × context × CI and reports the planner's choice plus the
+//! CPU-vs-GPU throughput/carbon arithmetic behind it (paper §4.1.1, §6.3).
+//!
+//! Run: `cargo run --release --example offline_cpu_reuse`
+
+use ecoserve::hw;
+use ecoserve::models;
+use ecoserve::perf::cpu::{decode_throughput, max_batch, CpuStrategy};
+use ecoserve::perf::roofline::{decode_throughput as gpu_tput, Device};
+use ecoserve::planner::slicing::Slice;
+use ecoserve::planner::{plan, Phase, PlanConfig};
+use ecoserve::util::table::{fnum, Table};
+use ecoserve::workload::slo::Slo;
+
+fn main() {
+    let spr = hw::cpu("SPR-112").unwrap();
+    println!("== CPU-vs-GPU offline decode arithmetic ==");
+    let mut t = Table::new(&["model", "ctx", "cpu tok/s (opt)", "gpu tok/s (A100)",
+                             "ratio"]);
+    for model_name in ["gemma-2b", "llama-8b", "gemma-27b"] {
+        let m = models::llm(model_name).unwrap();
+        let dev = Device::from_gpu(hw::gpu("A100-40").unwrap());
+        for &ctx in &[512usize, 2048, 8192] {
+            let cb = max_batch(m, 512.0, ctx).clamp(1, 512);
+            let cpu = decode_throughput(m, spr, cb, ctx, CpuStrategy::Optimized);
+            let mut tp = 1usize;
+            while m.max_batch(dev.mem_gb, ctx, tp) == 0 && tp < 8 { tp *= 2; }
+            let gb = m.max_batch(dev.mem_gb, ctx, tp).max(1);
+            let gpu = gpu_tput(m, &dev, gb, ctx, tp);
+            t.row(&[model_name.into(), format!("{ctx}"), fnum(cpu), fnum(gpu),
+                    fnum(cpu / gpu)]);
+        }
+    }
+    t.print();
+
+    println!("\n== planner decisions: offline decode placement ==");
+    let m = models::llm("llama-8b").unwrap();
+    let mut t = Table::new(&["ctx", "CI", "decode device", "carbon kg/hr"]);
+    for &ctx in &[512usize, 2048, 8192] {
+        for &ci in &[17.0f64, 261.0, 501.0] {
+            let slices = vec![
+                Slice { model: m, rate: 4.0, prompt: 256, output: 128,
+                        slo: Slo { ttft_s: 0.5, tpot_s: 0.1 }, offline: false },
+                Slice { model: m, rate: 2.0, prompt: ctx, output: 256,
+                        slo: Slo { ttft_s: 86_400.0, tpot_s: f64::INFINITY },
+                        offline: true },
+            ];
+            let p = plan(&slices, &PlanConfig { ci, ..Default::default() });
+            let dev = p.assignments.iter()
+                .find(|a| a.slice_idx == 1 && a.phase == Phase::Decode)
+                .map(|a| a.device.clone()).unwrap_or_default();
+            t.row(&[format!("{ctx}"), fnum(ci), dev, fnum(p.carbon_kg_per_hr())]);
+        }
+    }
+    t.print();
+    println!("(long context + clean grid -> host-CPU reuse)");
+}

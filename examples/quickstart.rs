@@ -1,0 +1,51 @@
+//! Quickstart: plan a carbon-aware deployment for a small workload and
+//! print the fleet, carbon, and savings vs a performance-optimized
+//! baseline.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use ecoserve::models;
+use ecoserve::planner::slicing::{cluster_slices, slice_trace};
+use ecoserve::strategies::Strategy;
+use ecoserve::util::table::{fnum, Table};
+use ecoserve::workload::slo::slo_for;
+use ecoserve::workload::{generate_trace, merge_traces, Arrivals, LengthDist,
+                         RequestClass};
+
+fn main() {
+    // 1. A workload: bursty online chat + long-context offline batch.
+    let model = models::llm("llama-8b").unwrap();
+    let online = generate_trace(Arrivals::Bursty { rate: 12.0, cv: 2.0 },
+                                LengthDist::ShareGpt, RequestClass::Online,
+                                300.0, 7);
+    let offline = generate_trace(Arrivals::Poisson { rate: 5.0 },
+                                 LengthDist::LongBench, RequestClass::Offline,
+                                 300.0, 8);
+    let trace = merge_traces(vec![online, offline]);
+    println!("workload: {} requests over 5 min", trace.len());
+
+    // 2. Slice it for the planner.
+    let slo = slo_for("llama-8b", false).unwrap().slo;
+    let slices = cluster_slices(&slice_trace(model, &trace, 300.0, slo, 1));
+    println!("planner slices: {}", slices.len());
+
+    // 3. Plan under EcoServe and the perf-optimized baseline (mid CI).
+    let eco = Strategy::EcoFull.plan(&slices, 261.0);
+    let perf = Strategy::PerfOpt.plan(&slices, 261.0);
+
+    let mut t = Table::new(&["strategy", "fleet", "carbon kg/hr", "op", "embodied",
+                             "$/hr"]);
+    for (name, p) in [("ecoserve", &eco), ("perf-opt", &perf)] {
+        t.row(&[name.into(), format!("{:?}", p.counts), fnum(p.carbon_kg_per_hr()),
+                fnum(p.op_kg_per_hr), fnum(p.emb_kg_per_hr), fnum(p.cost_hr)]);
+    }
+    t.print();
+    println!("\ncarbon saving: {:.1}%  (solve {:.0} ms, {} B&B nodes)",
+             100.0 * (1.0 - eco.carbon_kg_per_hr() / perf.carbon_kg_per_hr()),
+             eco.solve_s * 1e3, eco.nodes);
+    for a in &eco.assignments {
+        println!("  slice {} {:?} -> {} (load {:.2}, lat {})",
+                 a.slice_idx, a.phase, a.device, a.load,
+                 ecoserve::util::table::ftime(a.latency_s));
+    }
+}

@@ -1,0 +1,186 @@
+"""AOT compile path: lower the L2 model to HLO-text artifacts for Rust.
+
+Runs ONCE at build time (``make artifacts``); the Rust binary is
+self-contained afterwards. Interchange format is HLO *text*, not a serialized
+HloModuleProto: jax >= 0.5 emits protos with 64-bit instruction ids that the
+xla crate's xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (under --out-dir, default ../artifacts):
+  model_config.json              dims, buckets, parameter manifest
+  weights.bin                    seeded weights, ECOW format (runtime/weights.rs)
+  prefill_b{B}_s{S}.hlo.txt      bucketed prefill executables
+  decode_b{B}.hlo.txt            batched decode step (Pallas split-KV attention)
+  decode_ref_b{B}.hlo.txt        decode step with pure-jnp attention (perf A/B)
+  gemm_pallas_{N}.hlo.txt        L1 blocked-GEMM microbench
+  gemm_xla_{N}.hlo.txt           XLA-native dot microbench (baseline)
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import struct
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+from compile.kernels.gemm import gemm
+
+PREFILL_BUCKETS = [(1, 32), (1, 128), (4, 32), (4, 128), (8, 32)]
+DECODE_BUCKETS = [1, 4, 8]
+GEMM_SIZES = [256, 512]
+
+WEIGHTS_MAGIC = b"ECOW"
+WEIGHTS_VERSION = 1
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple for rust side)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def flatten_params(params):
+    """Deterministic (name, leaf) list — the weights.bin / HLO-param contract."""
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(params)[0]
+
+    def name_of(path):
+        parts = []
+        for p in path:
+            if isinstance(p, jax.tree_util.DictKey):
+                parts.append(str(p.key))
+            elif isinstance(p, jax.tree_util.SequenceKey):
+                parts.append(str(p.idx))
+            else:
+                parts.append(str(p))
+        return ".".join(parts)
+
+    return [(name_of(path), leaf) for path, leaf in leaves_with_paths]
+
+
+def write_weights(path: str, named_leaves) -> None:
+    """ECOW v1: magic, version:u32, count:u32, then per tensor
+    name_len:u16 name:utf8 dtype:u8(0=f32) ndim:u8 dims:u32* data:f32le*."""
+    with open(path, "wb") as f:
+        f.write(WEIGHTS_MAGIC)
+        f.write(struct.pack("<II", WEIGHTS_VERSION, len(named_leaves)))
+        for name, leaf in named_leaves:
+            arr = jax.numpy.asarray(leaf, dtype=jnp.float32)
+            nb = name.encode()
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", 0, arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            import numpy as np
+            f.write(np.asarray(arr).astype("<f4").tobytes())
+
+
+def lower_prefill(cfg, params, batch, seq):
+    fn = functools.partial(M.prefill, cfg)
+    spec_tok = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    spec_len = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    return jax.jit(fn).lower(params, spec_tok, spec_len)
+
+
+def lower_decode(cfg, params, batch, use_pallas=True):
+    fn = functools.partial(M.decode_step, cfg, use_pallas=use_pallas)
+    cshape = (cfg.n_layers, batch, cfg.max_seq, cfg.n_kv_heads, cfg.head_dim)
+    spec_c = jax.ShapeDtypeStruct(cshape, jnp.float32)
+    spec_i = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    return jax.jit(fn).lower(params, spec_c, spec_c, spec_i, spec_i)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    ap.add_argument("--seed", type=int, default=42)
+    ap.add_argument("--quick", action="store_true",
+                    help="only the smallest bucket of each kind (CI smoke)")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    cfg = M.ModelCfg()
+    params = M.init_params(cfg, seed=args.seed)
+    named = flatten_params(params)
+
+    write_weights(os.path.join(args.out_dir, "weights.bin"), named)
+    print(f"weights.bin: {len(named)} tensors, "
+          f"{sum(int(l.size) for _, l in named)} params")
+
+    prefill_buckets = PREFILL_BUCKETS[:1] if args.quick else PREFILL_BUCKETS
+    decode_buckets = DECODE_BUCKETS[:1] if args.quick else DECODE_BUCKETS
+    gemm_sizes = GEMM_SIZES[:1] if args.quick else GEMM_SIZES
+
+    artifacts = {}
+
+    for b, s in prefill_buckets:
+        name = f"prefill_b{b}_s{s}"
+        text = to_hlo_text(lower_prefill(cfg, params, b, s))
+        with open(os.path.join(args.out_dir, f"{name}.hlo.txt"), "w") as f:
+            f.write(text)
+        artifacts[name] = {"kind": "prefill", "batch": b, "seq": s}
+        print(f"{name}: {len(text)} chars")
+
+    for b in decode_buckets:
+        name = f"decode_b{b}"
+        text = to_hlo_text(lower_decode(cfg, params, b, use_pallas=True))
+        with open(os.path.join(args.out_dir, f"{name}.hlo.txt"), "w") as f:
+            f.write(text)
+        artifacts[name] = {"kind": "decode", "batch": b, "pallas": True}
+        print(f"{name}: {len(text)} chars")
+
+    # Reference-attention decode at the largest bucket: the perf A/B partner.
+    b = decode_buckets[-1]
+    name = f"decode_ref_b{b}"
+    text = to_hlo_text(lower_decode(cfg, params, b, use_pallas=False))
+    with open(os.path.join(args.out_dir, f"{name}.hlo.txt"), "w") as f:
+        f.write(text)
+    artifacts[name] = {"kind": "decode", "batch": b, "pallas": False}
+    print(f"{name}: {len(text)} chars")
+
+    for n in gemm_sizes:
+        spec = jax.ShapeDtypeStruct((n, n), jnp.float32)
+        bm = min(128, n)
+        lowered = jax.jit(
+            functools.partial(gemm, bm=bm, bn=bm, bk=bm)).lower(spec, spec)
+        pname = f"gemm_pallas_{n}"
+        with open(os.path.join(args.out_dir, f"{pname}.hlo.txt"), "w") as f:
+            f.write(to_hlo_text(lowered))
+        artifacts[pname] = {"kind": "gemm", "n": n, "pallas": True}
+        lowered = jax.jit(lambda a, b: (jnp.dot(a, b),)).lower(spec, spec)
+        xname = f"gemm_xla_{n}"
+        with open(os.path.join(args.out_dir, f"{xname}.hlo.txt"), "w") as f:
+            f.write(to_hlo_text(lowered))
+        artifacts[xname] = {"kind": "gemm", "n": n, "pallas": False}
+        print(f"gemm {n}: pallas + xla")
+
+    config = {
+        "model": {
+            "vocab": cfg.vocab, "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+            "n_kv_heads": cfg.n_kv_heads, "head_dim": cfg.head_dim,
+            "ffn_hidden": cfg.ffn_hidden, "max_seq": cfg.max_seq,
+            "pad": M.PAD, "bos": M.BOS, "eos": M.EOS,
+        },
+        "params": [{"name": n, "shape": list(l.shape)} for n, l in named],
+        "artifacts": artifacts,
+        "prefill_buckets": [list(t) for t in prefill_buckets],
+        "decode_buckets": decode_buckets,
+    }
+    with open(os.path.join(args.out_dir, "model_config.json"), "w") as f:
+        json.dump(config, f, indent=1)
+    print(f"model_config.json: {len(config['params'])} params, "
+          f"{len(artifacts)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,144 @@
+"""L1 Pallas kernel: split-KV (flash-decoding style) decode attention.
+
+This is the TPU-side expression of EcoServe's CPU decode optimization
+(paper §4.1.1, Figs 9/18/19): the paper parallelizes decode attention along
+the KV *sequence-length* dimension (in addition to batch) to saturate memory
+bandwidth across all cores. Here the same insight maps onto the Pallas grid:
+the third grid axis iterates over KV chunks, each program reduces one
+(batch, head, kv-chunk) tile held in VMEM, and partial softmax results are
+merged with a numerically stable running-max rescale.
+
+The kernel supports grouped-query attention (GQA): ``n_heads`` query heads
+share ``n_kv_heads`` KV heads via the BlockSpec index map.
+
+Kernels are lowered with ``interpret=True`` — CPU PJRT cannot execute Mosaic
+custom-calls; correctness is validated against ``ref.decode_attention_ref``
+and real-TPU efficiency is estimated analytically (DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Large-but-finite mask value: using -inf produces NaNs in fully-masked
+# chunks (exp(-inf - -inf)); -1e30 underflows to exactly 0 after the
+# running-max rescale, which is what we want.
+NEG_MASK = -1e30
+
+
+def _decode_attn_kernel(q_ref, k_ref, v_ref, pos_ref, o_ref, m_ref, l_ref, *,
+                        chunk: int, scale: float, num_chunks: int):
+    """One (batch, q-head, kv-chunk) grid step of split-KV decode attention.
+
+    Running state lives in the output refs (same block for every chunk of a
+    given (b, h)): ``o_ref`` holds the *unnormalized* accumulator until the
+    final chunk, ``m_ref``/``l_ref`` hold the running max / normalizer.
+    """
+    c = pl.program_id(2)
+
+    q = q_ref[0, 0, :]        # [Dh]
+    k = k_ref[0, :, 0, :]     # [chunk, Dh]
+    v = v_ref[0, :, 0, :]     # [chunk, Dh]
+
+    s = jnp.dot(k, q) * scale                                    # [chunk]
+    idx = jax.lax.broadcasted_iota(jnp.int32, (chunk,), 0) + c * chunk
+    s = jnp.where(idx <= pos_ref[0], s, NEG_MASK)
+
+    m_c = jnp.maximum(jnp.max(s), NEG_MASK)
+    p_c = jnp.exp(s - m_c)                                       # [chunk]
+    # Zero out fully-masked lanes (where s == NEG_MASK == m_c → exp(0) == 1).
+    p_c = jnp.where(idx <= pos_ref[0], p_c, 0.0)
+    l_c = jnp.sum(p_c)
+    acc_c = jnp.dot(p_c, v)                                      # [Dh]
+
+    @pl.when(c == 0)
+    def _init():
+        m_ref[0, 0] = m_c
+        l_ref[0, 0] = l_c
+        o_ref[0, 0, :] = acc_c
+
+    @pl.when(c > 0)
+    def _merge():
+        m_prev = m_ref[0, 0]
+        l_prev = l_ref[0, 0]
+        m_new = jnp.maximum(m_prev, m_c)
+        alpha = jnp.exp(m_prev - m_new)
+        beta = jnp.exp(m_c - m_new)
+        m_ref[0, 0] = m_new
+        l_ref[0, 0] = alpha * l_prev + beta * l_c
+        o_ref[0, 0, :] = alpha * o_ref[0, 0, :] + beta * acc_c
+
+    @pl.when(c == num_chunks - 1)
+    def _finalize():
+        # Every position <= pos is live, so l >= exp(0) > 0 when pos >= 0.
+        o_ref[0, 0, :] = o_ref[0, 0, :] / jnp.maximum(l_ref[0, 0], 1e-30)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     pos: jax.Array, *, chunk: int = 64) -> jax.Array:
+    """Split-KV decode attention.
+
+    Args:
+      q:   [B, H, Dh]        query for the current token.
+      k:   [B, S, KVH, Dh]   key cache (S must be a multiple of ``chunk``).
+      v:   [B, S, KVH, Dh]   value cache.
+      pos: [B] int32         index of the current token; positions > pos
+                             are masked out (cache slot ``pos`` must already
+                             hold the current token's K/V).
+      chunk: KV-chunk size — the sequence-dimension parallelism degree.
+
+    Returns:
+      [B, H, Dh] attention output.
+    """
+    b, h, dh = q.shape
+    _, s, kvh, _ = k.shape
+    assert s % chunk == 0, f"seq len {s} not a multiple of chunk {chunk}"
+    assert h % kvh == 0, f"q heads {h} not a multiple of kv heads {kvh}"
+    group = h // kvh
+    num_chunks = s // chunk
+    scale = 1.0 / (dh ** 0.5)
+
+    kernel = functools.partial(
+        _decode_attn_kernel, chunk=chunk, scale=scale, num_chunks=num_chunks)
+
+    out, _, _ = pl.pallas_call(
+        kernel,
+        grid=(b, h, num_chunks),
+        in_specs=[
+            pl.BlockSpec((1, 1, dh), lambda bi, hi, ci: (bi, hi, 0)),
+            pl.BlockSpec((1, chunk, 1, dh),
+                         lambda bi, hi, ci: (bi, ci, hi // group, 0)),
+            pl.BlockSpec((1, chunk, 1, dh),
+                         lambda bi, hi, ci: (bi, ci, hi // group, 0)),
+            pl.BlockSpec((1,), lambda bi, hi, ci: (bi,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, dh), lambda bi, hi, ci: (bi, hi, 0)),
+            pl.BlockSpec((1, 1), lambda bi, hi, ci: (bi, hi)),
+            pl.BlockSpec((1, 1), lambda bi, hi, ci: (bi, hi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, dh), q.dtype),
+            jax.ShapeDtypeStruct((b, h), q.dtype),
+            jax.ShapeDtypeStruct((b, h), q.dtype),
+        ],
+        interpret=True,
+    )(q, k, v, pos)
+    return out
+
+
+def vmem_bytes_per_program(dh: int, chunk: int, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM footprint of one grid program (DESIGN.md §7).
+
+    q tile + K tile + V tile + output/merge state. Used by vmem_report.py to
+    check the double-buffered footprint stays within a 16 MiB VMEM budget.
+    """
+    q_t = dh * dtype_bytes
+    kv_t = 2 * chunk * dh * dtype_bytes
+    out_t = (dh + 2) * dtype_bytes
+    return q_t + kv_t + out_t

@@ -1,0 +1,81 @@
+"""L1 Pallas kernel: blocked GEMM with an accumulating K-grid.
+
+The TPU analogue of EcoServe's tiled Linear-operator slicing (paper Fig 9):
+the paper co-selects tile shape and parallelism degree so each slice's
+arithmetic intensity sits at the roofline knee; here BlockSpecs carve
+A/B into MXU-shaped (default 128x128) VMEM tiles and the third grid axis
+accumulates partial products over K, which is exactly the HBM<->VMEM
+schedule the CPU implementation expresses with cache blocking.
+
+Lowered with interpret=True (see decode_attention.py for why); validated
+against ``ref.gemm_ref`` / jnp.dot.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gemm_kernel(a_ref, b_ref, o_ref):
+    """One (m, n, k) grid step: accumulate an MXU-shaped partial product."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # fp32 accumulation regardless of input dtype (bf16 on real MXU).
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def gemm(a: jax.Array, b: jax.Array, *,
+         bm: int = 128, bn: int = 128, bk: int = 128) -> jax.Array:
+    """Blocked matmul ``a @ b``.
+
+    Args:
+      a: [M, K]; M, K must be multiples of bm, bk.
+      b: [K, N]; N must be a multiple of bn.
+      bm/bn/bk: VMEM tile shape (default MXU-shaped 128^3).
+
+    Returns:
+      [M, N] product, fp32-accumulated.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, \
+        f"({m},{n},{k}) not tileable by ({bm},{bn},{bk})"
+
+    return pl.pallas_call(
+        _gemm_kernel,
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda mi, ni, ki: (mi, ki)),
+            pl.BlockSpec((bk, bn), lambda mi, ni, ki: (ki, ni)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda mi, ni, ki: (mi, ni)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=True,
+    )(a, b)
+
+
+def vmem_bytes_per_program(bm: int, bn: int, bk: int,
+                           dtype_bytes: int = 4) -> int:
+    """VMEM bytes per grid program: A tile + B tile + accumulator."""
+    return (bm * bk + bk * bn + bm * bn) * dtype_bytes
+
+
+def mxu_utilization_estimate(bm: int, bn: int, bk: int,
+                             mxu: int = 128) -> float:
+    """Fraction of MXU lanes busy for a (bm, bn, bk) tile (DESIGN.md §7)."""
+    eff_m = min(bm, mxu) / mxu
+    eff_n = min(bn, mxu) / mxu
+    eff_k = min(bk, mxu) / mxu
+    return eff_m * eff_n * eff_k

@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+These are the CORE correctness references: deliberately written in the most
+direct (unfused, materialize-everything) style so a bug in the blocked /
+split-KV kernels cannot be mirrored here. pytest + hypothesis sweep shapes
+and dtypes against these in python/tests/.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, pos):
+    """Reference decode attention with GQA and position masking.
+
+    q: [B, H, Dh]; k, v: [B, S, KVH, Dh]; pos: [B] int32.
+    Returns [B, H, Dh].
+    """
+    b, h, dh = q.shape
+    _, s, kvh, _ = k.shape
+    group = h // kvh
+    # Expand KV heads to query heads: head i uses kv head i // group.
+    k_e = jnp.repeat(k, group, axis=2)      # [B, S, H, Dh]
+    v_e = jnp.repeat(v, group, axis=2)
+    scores = jnp.einsum("bhd,bshd->bhs", q, k_e) / (dh ** 0.5)
+    idx = jnp.arange(s)[None, None, :]                      # [1, 1, S]
+    mask = idx <= pos[:, None, None]                        # [B, 1, S]
+    scores = jnp.where(mask, scores, -jnp.inf)
+    w = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    w = w / w.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhs,bshd->bhd", w, v_e)
+
+
+def gemm_ref(a, b):
+    """Reference matmul."""
+    return jnp.dot(a, b)
+
+
+def prefill_attention_ref(q, k, v, lengths):
+    """Reference causal prefill attention with per-sequence length masking.
+
+    q: [B, S, H, Dh]; k, v: [B, S, KVH, Dh]; lengths: [B] int32.
+    Returns [B, S, H, Dh].
+    """
+    b, s, h, dh = q.shape
+    kvh = k.shape[2]
+    group = h // kvh
+    k_e = jnp.repeat(k, group, axis=2)
+    v_e = jnp.repeat(v, group, axis=2)
+    scores = jnp.einsum("bihd,bjhd->bhij", q, k_e) / (dh ** 0.5)
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    causal = j <= i                                          # [S, S]
+    live = jnp.arange(s)[None, :] < lengths[:, None]         # [B, S]
+    mask = causal[None, None, :, :] & live[:, None, None, :]
+    scores = jnp.where(mask, scores, -1e30)
+    w = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    w = w / jnp.maximum(w.sum(axis=-1, keepdims=True), 1e-30)
+    return jnp.einsum("bhij,bjhd->bihd", w, v_e)

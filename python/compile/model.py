@@ -1,0 +1,234 @@
+"""L2: the served transformer (JAX, build-time only).
+
+A small GQA + RoPE + SwiGLU decoder-only transformer whose decode path calls
+the L1 split-KV Pallas attention kernel (kernels/decode_attention.py). The
+model is AOT-lowered by aot.py into per-bucket HLO-text artifacts; the Rust
+runtime executes those artifacts — Python never runs on the request path.
+
+Weights live in a params pytree whose *flatten order* is the contract with
+the Rust side: aot.py records (name, shape) per leaf in model_config.json and
+writes weights.bin in the same order; the lowered HLO takes one parameter per
+leaf followed by the runtime inputs, in signature order.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.decode_attention import decode_attention
+from compile.kernels.ref import decode_attention_ref, prefill_attention_ref
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelCfg:
+    """Architecture of the served model (defaults: the tiny e2e model)."""
+    vocab: int = 259          # 256 bytes + PAD/BOS/EOS
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 8
+    n_kv_heads: int = 2
+    head_dim: int = 32
+    ffn_hidden: int = 512
+    max_seq: int = 512
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+
+    def __post_init__(self):
+        assert self.d_model == self.n_heads * self.head_dim
+        assert self.n_heads % self.n_kv_heads == 0
+
+
+PAD, BOS, EOS = 0, 1, 2  # byte b encodes as token b + 3
+
+
+def init_params(cfg: ModelCfg, seed: int = 42):
+    """Seeded init — the 'small real model' stand-in (DESIGN.md §1)."""
+    key = jax.random.PRNGKey(seed)
+    d, f, v = cfg.d_model, cfg.ffn_hidden, cfg.vocab
+    kvd = cfg.n_kv_heads * cfg.head_dim
+
+    def mat(key, shape, scale=0.02):
+        return (jax.random.normal(key, shape, dtype=jnp.float32) * scale)
+
+    keys = iter(jax.random.split(key, 3 + 7 * cfg.n_layers))
+    params = {
+        "embed": mat(next(keys), (v, d)),
+        "lm_head": mat(next(keys), (d, v)),
+        "final_norm": jnp.ones((d,), jnp.float32),
+    }
+    layers = []
+    for _ in range(cfg.n_layers):
+        layers.append({
+            "attn_norm": jnp.ones((d,), jnp.float32),
+            "mlp_norm": jnp.ones((d,), jnp.float32),
+            "w_q": mat(next(keys), (d, d)),
+            "w_k": mat(next(keys), (d, kvd)),
+            "w_v": mat(next(keys), (d, kvd)),
+            "w_o": mat(next(keys), (d, d)),
+            "w_gate": mat(next(keys), (d, f)),
+            "w_up": mat(next(keys), (d, f)),
+            "w_down": mat(next(keys), (f, d)),
+        })
+    params["layers"] = layers
+    return params
+
+
+def rms_norm(x, w, eps=1e-5):
+    return x * w * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+
+
+def rope(x, positions, theta=10000.0):
+    """Rotary embedding, half-split convention.
+
+    x: [..., n_heads, head_dim]; positions: broadcastable to x[..., 0, 0].
+    """
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None, None].astype(jnp.float32) * freqs  # [..., 1, half]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def _mlp(layer, x):
+    return (silu(x @ layer["w_gate"]) * (x @ layer["w_up"])) @ layer["w_down"]
+
+
+def _update_cache(cache_l, new, pos):
+    """Write new [B, KVH, Dh] at per-sequence slot pos [B] of [B, S, KVH, Dh]."""
+    return jax.vmap(
+        lambda c, n, p: jax.lax.dynamic_update_slice(c, n[None], (p, 0, 0))
+    )(cache_l, new, pos)
+
+
+def decode_step(cfg: ModelCfg, params, k_cache, v_cache, token, pos,
+                use_pallas: bool = True):
+    """One batched decode step.
+
+    k_cache/v_cache: [L, B, S, KVH, Dh]; token, pos: [B] int32. The new
+    token's K/V is written at slot ``pos`` *before* attention, so attention
+    masks positions > pos (inclusive of the current token).
+
+    Returns (logits [B, V], k_cache, v_cache).
+    """
+    b = token.shape[0]
+    h, kvh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    if use_pallas:
+        # Perf pass (EXPERIMENTS.md §Perf): fatter KV chunks cut grid-
+        # program count 4x; 256 keeps (B x H x 2) parallelism and a 65 KB
+        # per-program VMEM footprint.
+        chunk = max(c for c in (64, 128, 256) if cfg.max_seq % c == 0
+                    and c <= cfg.max_seq)
+        attn = functools.partial(decode_attention, chunk=chunk)
+    else:
+        attn = decode_attention_ref
+
+    x = params["embed"][token]                                    # [B, D]
+    for li, layer in enumerate(params["layers"]):
+        hid = rms_norm(x, layer["attn_norm"], cfg.norm_eps)
+        q = (hid @ layer["w_q"]).reshape(b, h, dh)
+        k_new = (hid @ layer["w_k"]).reshape(b, kvh, dh)
+        v_new = (hid @ layer["w_v"]).reshape(b, kvh, dh)
+        q = rope(q, pos, cfg.rope_theta)
+        k_new = rope(k_new, pos, cfg.rope_theta)
+
+        k_l = _update_cache(k_cache[li], k_new, pos)
+        v_l = _update_cache(v_cache[li], v_new, pos)
+        k_cache = k_cache.at[li].set(k_l)
+        v_cache = v_cache.at[li].set(v_l)
+
+        a = attn(q, k_l, v_l, pos)                                # [B, H, Dh]
+        x = x + a.reshape(b, cfg.d_model) @ layer["w_o"]
+
+        hid2 = rms_norm(x, layer["mlp_norm"], cfg.norm_eps)
+        x = x + _mlp(layer, hid2)
+
+    logits = rms_norm(x, params["final_norm"], cfg.norm_eps) @ params["lm_head"]
+    return logits, k_cache, v_cache
+
+
+def prefill(cfg: ModelCfg, params, tokens, lengths):
+    """Batched prefill over bucket-padded prompts.
+
+    tokens: [B, S] int32 (PAD beyond lengths); lengths: [B] int32.
+
+    Returns (last_logits [B, V], k_cache, v_cache) with caches shaped
+    [L, B, max_seq, KVH, Dh], zeroed beyond S and beyond each length.
+    """
+    b, s = tokens.shape
+    h, kvh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    positions = jnp.arange(s, dtype=jnp.int32)
+    live = (positions[None, :] < lengths[:, None])               # [B, S]
+
+    x = params["embed"][tokens]                                   # [B, S, D]
+    ks, vs = [], []
+    for layer in params["layers"]:
+        hid = rms_norm(x, layer["attn_norm"], cfg.norm_eps)
+        q = (hid @ layer["w_q"]).reshape(b, s, h, dh)
+        k = (hid @ layer["w_k"]).reshape(b, s, kvh, dh)
+        v = (hid @ layer["w_v"]).reshape(b, s, kvh, dh)
+        q = rope(q, positions[None, :], cfg.rope_theta)
+        k = rope(k, positions[None, :], cfg.rope_theta)
+        # Zero padded slots so the decode-phase mask can be purely positional.
+        k = k * live[..., None, None]
+        v = v * live[..., None, None]
+
+        a = prefill_attention_ref(q, k, v, lengths)               # [B,S,H,Dh]
+        x = x + a.reshape(b, s, cfg.d_model) @ layer["w_o"]
+        hid2 = rms_norm(x, layer["mlp_norm"], cfg.norm_eps)
+        x = x + _mlp(layer, hid2)
+        ks.append(k)
+        vs.append(v)
+
+    k_cache = jnp.stack(ks)                                       # [L,B,S,KVH,Dh]
+    v_cache = jnp.stack(vs)
+    pad = cfg.max_seq - s
+    if pad > 0:
+        widths = [(0, 0), (0, 0), (0, pad), (0, 0), (0, 0)]
+        k_cache = jnp.pad(k_cache, widths)
+        v_cache = jnp.pad(v_cache, widths)
+
+    last = jnp.clip(lengths - 1, 0, s - 1)
+    x_last = jnp.take_along_axis(x, last[:, None, None].astype(jnp.int32), 1)[:, 0]
+    logits = rms_norm(x_last, params["final_norm"], cfg.norm_eps) @ params["lm_head"]
+    return logits, k_cache, v_cache
+
+
+def empty_cache(cfg: ModelCfg, batch: int):
+    shape = (cfg.n_layers, batch, cfg.max_seq, cfg.n_kv_heads, cfg.head_dim)
+    return jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32)
+
+
+def full_forward_ref(cfg: ModelCfg, params, tokens, lengths):
+    """Oracle: all-positions logits via prefill-style full attention.
+
+    Used by tests to check prefill+decode chains: the logits the decode path
+    produces at step t must match column t of this full forward.
+    """
+    b, s = tokens.shape
+    h, kvh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    positions = jnp.arange(s, dtype=jnp.int32)
+    live = (positions[None, :] < lengths[:, None])
+    x = params["embed"][tokens]
+    for layer in params["layers"]:
+        hid = rms_norm(x, layer["attn_norm"], cfg.norm_eps)
+        q = rope((hid @ layer["w_q"]).reshape(b, s, h, dh), positions[None, :],
+                 cfg.rope_theta)
+        k = rope((hid @ layer["w_k"]).reshape(b, s, kvh, dh), positions[None, :],
+                 cfg.rope_theta)
+        v = (hid @ layer["w_v"]).reshape(b, s, kvh, dh)
+        k = k * live[..., None, None]
+        v = v * live[..., None, None]
+        a = prefill_attention_ref(q, k, v, lengths)
+        x = x + a.reshape(b, s, cfg.d_model) @ layer["w_o"]
+        x = x + _mlp(layer, rms_norm(x, layer["mlp_norm"], cfg.norm_eps))
+    return rms_norm(x, params["final_norm"], cfg.norm_eps) @ params["lm_head"]

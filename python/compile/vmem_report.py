@@ -1,0 +1,47 @@
+"""L1 perf analysis: VMEM footprint + MXU-utilization estimates for the
+Pallas kernels at serving shapes (DESIGN.md §7).
+
+interpret=True gives CPU-numpy timings only — not a TPU proxy — so kernel
+performance is assessed structurally: does the BlockSpec schedule keep the
+per-program working set inside VMEM with double-buffering headroom, and how
+full are the MXU tiles?
+
+Run: cd python && python -m compile.vmem_report
+"""
+
+from compile.kernels import decode_attention as da
+from compile.kernels import gemm
+
+VMEM_BYTES = 16 * 1024 * 1024  # per-core VMEM on current TPUs
+
+
+def report():
+    print("== decode_attention (split-KV) per-program VMEM ==")
+    print(f"{'dh':>4} {'chunk':>6} {'bytes':>10} {'2x-buffered %VMEM':>18}")
+    for dh in (32, 64, 128):
+        for chunk in (32, 64, 128, 256):
+            b = da.vmem_bytes_per_program(dh, chunk)
+            frac = 2 * b / VMEM_BYTES * 100
+            print(f"{dh:>4} {chunk:>6} {b:>10} {frac:>17.2f}%")
+
+    print("\n== gemm tiles ==")
+    print(f"{'tile':>12} {'bytes':>10} {'2x %VMEM':>10} {'MXU util':>9}")
+    for t in (32, 64, 128, 256):
+        b = gemm.vmem_bytes_per_program(t, t, t)
+        u = gemm.mxu_utilization_estimate(t, t, t)
+        print(f"{t:>4}x{t:<4}x{t:<3} {b:>10} {2 * b / VMEM_BYTES * 100:>9.2f}% "
+              f"{u * 100:>8.1f}%")
+
+    print("\nServing shapes (tiny e2e model, d_head=32, chunk=64):")
+    b = da.vmem_bytes_per_program(32, 64)
+    print(f"  decode-attn program: {b} B "
+          f"({2 * b / VMEM_BYTES * 100:.3f}% VMEM double-buffered) — "
+          f"far under budget; grid parallelism (B x H x chunks) is the "
+          f"occupancy lever, mirroring the paper's CPU core-scaling.")
+    print("  gemm default 128^3 tile: 100% MXU-shaped, "
+          f"{2 * gemm.vmem_bytes_per_program(128, 128, 128) / VMEM_BYTES * 100:.1f}%"
+          " VMEM double-buffered.")
+
+
+if __name__ == "__main__":
+    report()

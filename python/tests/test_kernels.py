@@ -1,0 +1,183 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes; every test asserts allclose against ref.py.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.decode_attention import (decode_attention,
+                                              vmem_bytes_per_program)
+from compile.kernels.gemm import gemm, mxu_utilization_estimate
+from compile.kernels.gemm import vmem_bytes_per_program as gemm_vmem
+from compile.kernels.ref import decode_attention_ref, gemm_ref
+
+hypothesis.settings.register_profile(
+    "kernels", deadline=None, max_examples=25,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow])
+hypothesis.settings.load_profile("kernels")
+
+
+def rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype=dtype)
+
+
+# ---------------------------------------------------------------- decode attn
+
+@hypothesis.given(
+    b=st.sampled_from([1, 2, 4]),
+    h=st.sampled_from([1, 2, 4, 8]),
+    kvh_div=st.sampled_from([1, 2, 4]),
+    dh=st.sampled_from([8, 16, 32]),
+    s_chunks=st.integers(min_value=1, max_value=4),
+    chunk=st.sampled_from([16, 32, 64]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_decode_attention_matches_ref(b, h, kvh_div, dh, s_chunks, chunk, seed):
+    if h % kvh_div != 0:
+        kvh_div = 1
+    kvh = h // kvh_div
+    s = s_chunks * chunk
+    key = jax.random.PRNGKey(seed)
+    kq, kk, kv, kp = jax.random.split(key, 4)
+    q = jax.random.normal(kq, (b, h, dh))
+    k = jax.random.normal(kk, (b, s, kvh, dh))
+    v = jax.random.normal(kv, (b, s, kvh, dh))
+    pos = jax.random.randint(kp, (b,), 0, s)
+    got = decode_attention(q, k, v, pos, chunk=chunk)
+    want = decode_attention_ref(q, k, v, pos)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_decode_attention_pos_zero():
+    """pos=0: only slot 0 attended -> output equals v[:, 0] per kv group."""
+    b, h, kvh, dh, s = 2, 4, 2, 16, 64
+    q = rand(0, (b, h, dh))
+    k = rand(1, (b, s, kvh, dh))
+    v = rand(2, (b, s, kvh, dh))
+    pos = jnp.zeros((b,), jnp.int32)
+    got = decode_attention(q, k, v, pos, chunk=32)
+    want = jnp.repeat(v[:, 0], h // kvh, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_decode_attention_full_context():
+    """pos=S-1: equal to unmasked softmax attention over the whole cache."""
+    b, h, kvh, dh, s = 1, 8, 2, 32, 128
+    q, k, v = rand(3, (b, h, dh)), rand(4, (b, s, kvh, dh)), rand(5, (b, s, kvh, dh))
+    pos = jnp.full((b,), s - 1, jnp.int32)
+    got = decode_attention(q, k, v, pos, chunk=64)
+    want = decode_attention_ref(q, k, v, pos)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_decode_attention_per_sequence_pos():
+    """Mixed per-sequence positions (continuous batching) stay independent."""
+    b, h, kvh, dh, s = 4, 4, 4, 16, 64
+    q, k, v = rand(6, (b, h, dh)), rand(7, (b, s, kvh, dh)), rand(8, (b, s, kvh, dh))
+    pos = jnp.array([0, 13, 31, 63], jnp.int32)
+    got = decode_attention(q, k, v, pos, chunk=16)
+    want = decode_attention_ref(q, k, v, pos)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+    # Changing cache content beyond a sequence's pos must not change it.
+    k2 = k.at[1, 20:].set(99.0)
+    got2 = decode_attention(q, k2, v, pos, chunk=16)
+    np.testing.assert_allclose(np.asarray(got2[1]), np.asarray(got[1]),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_decode_attention_invariant_to_chunk():
+    """Split-KV merge is exact: results identical across chunk sizes."""
+    b, h, kvh, dh, s = 2, 8, 2, 32, 128
+    q, k, v = rand(9, (b, h, dh)), rand(10, (b, s, kvh, dh)), rand(11, (b, s, kvh, dh))
+    pos = jnp.array([100, 37], jnp.int32)
+    outs = [decode_attention(q, k, v, pos, chunk=c) for c in (16, 32, 64, 128)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(o), np.asarray(outs[0]),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_decode_attention_softmax_scale_extremes():
+    """Large-magnitude logits: the running-max merge must stay stable."""
+    b, h, kvh, dh, s = 1, 2, 1, 16, 64
+    q = rand(12, (b, h, dh)) * 30.0
+    k = rand(13, (b, s, kvh, dh)) * 30.0
+    v = rand(14, (b, s, kvh, dh))
+    pos = jnp.array([s - 1], jnp.int32)
+    got = decode_attention(q, k, v, pos, chunk=16)
+    want = decode_attention_ref(q, k, v, pos)
+    assert np.isfinite(np.asarray(got)).all()
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_decode_attention_rejects_bad_shapes():
+    q = jnp.zeros((1, 4, 16))
+    k = jnp.zeros((1, 60, 2, 16))  # 60 not a multiple of 32
+    v = jnp.zeros((1, 60, 2, 16))
+    with pytest.raises(AssertionError):
+        decode_attention(q, k, v, jnp.zeros((1,), jnp.int32), chunk=32)
+
+
+def test_vmem_budget():
+    """DESIGN.md §7: per-program footprint fits VMEM with double buffering."""
+    assert vmem_bytes_per_program(dh=32, chunk=64) < 2 * 1024 * 1024
+    assert gemm_vmem(128, 128, 128) * 2 < 16 * 1024 * 1024
+
+
+# ----------------------------------------------------------------------- gemm
+
+@hypothesis.given(
+    mt=st.integers(min_value=1, max_value=3),
+    nt=st.integers(min_value=1, max_value=3),
+    kt=st.integers(min_value=1, max_value=3),
+    bs=st.sampled_from([16, 32, 64]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_gemm_matches_ref(mt, nt, kt, bs, seed):
+    m, n, k = mt * bs, nt * bs, kt * bs
+    key = jax.random.PRNGKey(seed)
+    ka, kb = jax.random.split(key)
+    a = jax.random.normal(ka, (m, k))
+    b = jax.random.normal(kb, (k, n))
+    got = gemm(a, b, bm=bs, bn=bs, bk=bs)
+    want = gemm_ref(a, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_gemm_identity():
+    n = 64
+    a = rand(20, (n, n))
+    got = gemm(a, jnp.eye(n), bm=32, bn=32, bk=32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(a),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_gemm_tile_invariance():
+    m = n = k = 128
+    a, b = rand(21, (m, k)), rand(22, (k, n))
+    o1 = gemm(a, b, bm=32, bn=32, bk=32)
+    o2 = gemm(a, b, bm=64, bn=64, bk=64)
+    o3 = gemm(a, b, bm=128, bn=128, bk=128)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o3), rtol=1e-5, atol=1e-5)
+
+
+def test_gemm_rejects_untileable():
+    with pytest.raises(AssertionError):
+        gemm(jnp.zeros((100, 128)), jnp.zeros((128, 128)))
+
+
+def test_mxu_utilization_estimate():
+    assert mxu_utilization_estimate(128, 128, 128) == 1.0
+    assert mxu_utilization_estimate(64, 128, 128) == 0.5
+    assert mxu_utilization_estimate(32, 32, 32) == pytest.approx(1 / 64)

@@ -1,0 +1,153 @@
+"""L2 model correctness: shapes, prefill/decode-chain consistency, AOT lowering."""
+
+import json
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import aot
+
+TINY = M.ModelCfg(vocab=37, d_model=32, n_layers=2, n_heads=4, n_kv_heads=2,
+                  head_dim=8, ffn_hidden=48, max_seq=64)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(TINY, seed=7)
+
+
+def make_tokens(key, batch, lengths, seq):
+    toks = jax.random.randint(key, (batch, seq), 3, TINY.vocab)
+    pos = jnp.arange(seq)[None, :]
+    return jnp.where(pos < jnp.asarray(lengths)[:, None], toks, M.PAD)
+
+
+def test_prefill_shapes(params):
+    tokens = make_tokens(jax.random.PRNGKey(0), 2, [5, 8], 16)
+    logits, kc, vc = M.prefill(TINY, params, tokens, jnp.array([5, 8]))
+    assert logits.shape == (2, TINY.vocab)
+    assert kc.shape == (TINY.n_layers, 2, TINY.max_seq, TINY.n_kv_heads,
+                        TINY.head_dim)
+    assert vc.shape == kc.shape
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_prefill_cache_zero_beyond_length(params):
+    tokens = make_tokens(jax.random.PRNGKey(1), 2, [5, 8], 16)
+    _, kc, vc = M.prefill(TINY, params, tokens, jnp.array([5, 8]))
+    assert np.allclose(np.asarray(kc[:, 0, 5:]), 0.0)
+    assert np.allclose(np.asarray(vc[:, 1, 8:]), 0.0)
+
+
+def test_prefill_logits_match_full_forward(params):
+    lengths = jnp.array([5, 12])
+    tokens = make_tokens(jax.random.PRNGKey(2), 2, [5, 12], 16)
+    logits, _, _ = M.prefill(TINY, params, tokens, lengths)
+    all_logits = M.full_forward_ref(TINY, params, tokens, lengths)
+    want = jnp.stack([all_logits[0, 4], all_logits[1, 11]])
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("use_pallas", [True, False])
+def test_decode_chain_matches_full_forward(params, use_pallas):
+    """Teacher-forced decode after prefill reproduces full-forward logits."""
+    batch, plen, total = 2, 6, 12
+    lengths = jnp.array([plen] * batch)
+    tokens_all = make_tokens(jax.random.PRNGKey(3), batch, [total] * batch, total)
+    logits, kc, vc = M.prefill(TINY, params, tokens_all[:, :plen], lengths)
+    full = M.full_forward_ref(TINY, params, tokens_all,
+                              jnp.array([total] * batch))
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(full[:, plen - 1]),
+                               rtol=3e-5, atol=3e-5)
+    for t in range(plen, total):
+        tok = tokens_all[:, t]
+        pos = jnp.full((batch,), t, jnp.int32)
+        logits, kc, vc = M.decode_step(TINY, params, kc, vc, tok, pos,
+                                       use_pallas=use_pallas)
+        np.testing.assert_allclose(
+            np.asarray(logits), np.asarray(full[:, t]), rtol=1e-4, atol=1e-4,
+            err_msg=f"step {t} (pallas={use_pallas})")
+
+
+def test_decode_pallas_matches_ref_attention(params):
+    """The Pallas and jnp decode paths agree step-by-step."""
+    batch = 2
+    kc, vc = M.empty_cache(TINY, batch)
+    kc2, vc2 = M.empty_cache(TINY, batch)
+    tok = jnp.array([M.BOS, M.BOS], jnp.int32)
+    for t in range(4):
+        pos = jnp.full((batch,), t, jnp.int32)
+        l1, kc, vc = M.decode_step(TINY, params, kc, vc, tok, pos, True)
+        l2, kc2, vc2 = M.decode_step(TINY, params, kc2, vc2, tok, pos, False)
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                                   rtol=1e-4, atol=1e-4)
+        tok = jnp.argmax(l1, axis=-1).astype(jnp.int32)
+
+
+def test_batch_independence(params):
+    """A sequence's logits must not depend on its batch neighbours."""
+    tokens = make_tokens(jax.random.PRNGKey(4), 2, [7, 3], 16)
+    lengths = jnp.array([7, 3])
+    both, _, _ = M.prefill(TINY, params, tokens, lengths)
+    solo, _, _ = M.prefill(TINY, params, tokens[:1], lengths[:1])
+    np.testing.assert_allclose(np.asarray(both[0]), np.asarray(solo[0]),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_rope_positions_distinguish(params):
+    """Same token at different positions yields different K."""
+    x = jax.random.normal(jax.random.PRNGKey(5), (1, 4, 8))
+    r0 = M.rope(x, jnp.array([0]))
+    r5 = M.rope(x, jnp.array([5]))
+    assert not np.allclose(np.asarray(r0), np.asarray(r5))
+    np.testing.assert_allclose(np.asarray(jnp.linalg.norm(r0)),
+                               np.asarray(jnp.linalg.norm(r5)), rtol=1e-5)
+
+
+def test_flatten_params_deterministic(params):
+    n1 = [n for n, _ in aot.flatten_params(params)]
+    n2 = [n for n, _ in aot.flatten_params(M.init_params(TINY, seed=7))]
+    assert n1 == n2
+    assert len(n1) == 3 + 9 * TINY.n_layers
+    assert "layers.0.w_q" in n1 and "embed" in n1
+
+
+def test_weights_bin_roundtrip(params):
+    """ECOW format parses back to identical tensors (mirror of weights.rs)."""
+    named = aot.flatten_params(params)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "w.bin")
+        aot.write_weights(path, named)
+        import struct
+        with open(path, "rb") as f:
+            assert f.read(4) == b"ECOW"
+            ver, cnt = struct.unpack("<II", f.read(8))
+            assert ver == 1 and cnt == len(named)
+            for name, leaf in named:
+                nlen = struct.unpack("<H", f.read(2))[0]
+                assert f.read(nlen).decode() == name
+                dt, nd = struct.unpack("<BB", f.read(2))
+                assert dt == 0 and nd == leaf.ndim
+                dims = struct.unpack(f"<{nd}I", f.read(4 * nd)) if nd else ()
+                assert tuple(dims) == leaf.shape
+                data = np.frombuffer(f.read(4 * int(leaf.size)), dtype="<f4")
+                np.testing.assert_array_equal(
+                    data.reshape(leaf.shape), np.asarray(leaf))
+            assert f.read() == b""
+
+
+def test_aot_lowering_smoke(params):
+    """Prefill + decode lower to HLO text with the expected parameter count."""
+    text = aot.to_hlo_text(aot.lower_decode(TINY, params, batch=2))
+    assert "ENTRY" in text
+    nparams = len(aot.flatten_params(params)) + 4  # kc, vc, token, pos
+    entry = text[text.index("ENTRY"):]
+    assert entry.count("parameter(") == nparams
+    text_p = aot.to_hlo_text(aot.lower_prefill(TINY, params, batch=1, seq=16))
+    assert "ENTRY" in text_p

@@ -1,0 +1,44 @@
+//! Fig 1: TDP and embodied-carbon split between host and GPU on a
+//! DGX-A100-like node, plus the 4R savings overview.
+use ecoserve::carbon::embodied::platform_embodied;
+use ecoserve::hw::platform::azure_nd96_a100;
+use ecoserve::util::table::{fnum, Table};
+
+fn main() {
+    let p = azure_nd96_a100();
+    let (host, gpus) = platform_embodied(&p);
+    let host_tdp = p.host.tdp_w();
+    let gpu_tdp = p.gpu.tdp_w * p.gpu_count as f64;
+    println!("== Fig 1 (left): TDP vs embodied split, {} ==", p.name);
+    let mut t = Table::new(&["metric", "host", "gpus", "host %"]);
+    t.row(&["TDP (W)".into(), fnum(host_tdp), fnum(gpu_tdp),
+            fnum(100.0 * host_tdp / (host_tdp + gpu_tdp))]);
+    t.row(&["embodied (kgCO2e)".into(), fnum(host.total()), fnum(gpus.total()),
+            fnum(100.0 * host.total() / (host.total() + gpus.total()))]);
+    t.print();
+    println!("\n== Fig 1 (right): 4R carbon savings vs perf-opt ==");
+    use ecoserve::models;
+    use ecoserve::planner::slicing::Slice;
+    use ecoserve::strategies::Strategy;
+    use ecoserve::workload::slo::Slo;
+    let m = models::llm("llama-8b").unwrap();
+    let mk = |offline_rate: f64| vec![
+        Slice { model: m, rate: 30.0, prompt: 256, output: 128,
+                slo: Slo { ttft_s: 0.5, tpot_s: 0.1 }, offline: false },
+        Slice { model: m, rate: offline_rate, prompt: 4096, output: 256,
+                slo: Slo { ttft_s: 86_400.0, tpot_s: f64::INFINITY }, offline: true },
+    ];
+    let mut t = Table::new(&["strategy", "online-heavy %", "offline-heavy %"]);
+    for strat in [Strategy::EcoReuse, Strategy::EcoRightsize, Strategy::EcoReduce,
+                  Strategy::EcoRecycle, Strategy::EcoFull] {
+        let mut cells = vec![strat.name().to_string()];
+        for off in [6.0, 30.0] {
+            let s = mk(off);
+            let base = Strategy::PerfOpt.plan(&s, 261.0).carbon_kg_per_hr();
+            let c = strat.plan(&s, 261.0).carbon_kg_per_hr();
+            cells.push(fnum(100.0 * (1.0 - c / base)));
+        }
+        t.row(&cells);
+    }
+    t.print();
+}

@@ -1,0 +1,22 @@
+//! Fig 3: embodied carbon per GB across DRAM technologies.
+use ecoserve::carbon::embodied::mem_kg_per_gb;
+use ecoserve::hw::MemTech;
+use ecoserve::util::table::{fnum, Table};
+
+fn main() {
+    println!("== Fig 3: kgCO2e per GB by memory technology ==");
+    let mut t = Table::new(&["tech", "kgCO2e/GB", "rel. bit-density (proxy)"]);
+    for (name, tech, dens) in [
+        ("GDDR5", MemTech::Gddr5, 1.0),
+        ("DDR4/LPDDR5", MemTech::Ddr4, 1.4),
+        ("GDDR6", MemTech::Gddr6, 1.1),
+        ("HBM2", MemTech::Hbm2, 1.5),
+        ("HBM2e", MemTech::Hbm2e, 1.6),
+        ("HBM3", MemTech::Hbm3, 1.7),
+        ("HBM3e", MemTech::Hbm3e, 1.9),
+    ] {
+        t.row(&[name.into(), fnum(mem_kg_per_gb(tech)), fnum(dens)]);
+    }
+    t.print();
+    println!("(newer nodes: higher bit density -> lower embodied per GB)");
+}

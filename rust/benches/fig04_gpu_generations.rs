@@ -1,0 +1,18 @@
+//! Fig 4: embodied carbon breakdown, TDP, and cost across GPU generations.
+use ecoserve::carbon::embodied::gpu_embodied;
+use ecoserve::hw;
+use ecoserve::util::table::{fnum, Table};
+
+fn main() {
+    println!("== Fig 4: embodied breakdown / power / cost by GPU generation ==");
+    let mut t = Table::new(&["gpu", "soc", "memory", "pcb", "cooling", "pdn",
+                             "total kg", "soc %", "tdp W", "$/hr"]);
+    for g in hw::gpu_catalog() {
+        let b = gpu_embodied(g);
+        t.row(&[g.name.into(), fnum(b.soc), fnum(b.memory), fnum(b.pcb),
+                fnum(b.cooling), fnum(b.pdn), fnum(b.total()),
+                fnum(100.0 * b.soc / b.total()), fnum(g.tdp_w), fnum(g.cost_hr)]);
+    }
+    t.print();
+    println!("(SoC/ACT share ~20%: the rest is memory, board, cooling, PDN)");
+}

@@ -1,0 +1,23 @@
+//! Fig 5: embodied breakdown of cloud instances, varying GPU type/count.
+use ecoserve::carbon::embodied::platform_embodied;
+use ecoserve::hw::platform::{azure_nd96_a100, standard_platform};
+use ecoserve::util::table::{fnum, Table};
+
+fn main() {
+    println!("== Fig 5: instance embodied carbon (host vs GPUs) ==");
+    let mut t = Table::new(&["instance", "host kg", "gpu kg", "host %",
+                             "host mem+storage %"]);
+    let mut add = |p: &ecoserve::hw::platform::Platform| {
+        let (h, g) = platform_embodied(p);
+        let total = h.total() + g.total();
+        t.row(&[p.name.clone(), fnum(h.total()), fnum(g.total()),
+                fnum(100.0 * h.total() / total),
+                fnum(100.0 * (h.memory + h.storage) / total)]);
+    };
+    add(&azure_nd96_a100());
+    for (gpu, n) in [("T4", 1), ("L4", 1), ("A6000", 2), ("A100-40", 4),
+                     ("A100-80", 8), ("H100", 4), ("H100", 8)] {
+        add(&standard_platform(gpu, n));
+    }
+    t.print();
+}

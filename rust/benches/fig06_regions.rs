@@ -1,0 +1,28 @@
+//! Fig 6: embodied vs operational carbon per second across grid regions
+//! (A100 node running Llama-13B, 4-year lifetime).
+use ecoserve::carbon::embodied::platform_embodied;
+use ecoserve::carbon::intensity::Region;
+use ecoserve::carbon::operational::{device_power, op_kg, GPU_POWER_GAMMA};
+use ecoserve::hw::platform::standard_platform;
+use ecoserve::util::table::{fnum, Table};
+
+fn main() {
+    println!("== Fig 6: op vs embodied carbon rate by region (A100, Llama-13B) ==");
+    let p = standard_platform("A100-40", 1);
+    let (host, gpu) = platform_embodied(&p);
+    let lt_s = 4.0 * 365.25 * 86_400.0;
+    let host_rate = host.total() / lt_s * 1e6; // mg/s
+    let gpu_rate = gpu.total() / lt_s * 1e6;
+    let gpu_p = device_power(p.gpu.idle_w, p.gpu.tdp_w, 0.8, GPU_POWER_GAMMA);
+    let host_p = p.host.idle_w() + 60.0;
+    let mut t = Table::new(&["region", "CI g/kWh", "op mg/s", "emb-host mg/s",
+                             "emb-gpu mg/s", "emb share %"]);
+    for r in Region::all() {
+        let op = op_kg(gpu_p + host_p, 1.0, r.avg_ci()) * 1e6;
+        let emb = host_rate + gpu_rate;
+        t.row(&[r.name().into(), fnum(r.avg_ci()), fnum(op), fnum(host_rate),
+                fnum(gpu_rate), fnum(100.0 * emb / (op + emb))]);
+    }
+    t.print();
+    println!("(clean grids: embodied dominates; host dominates embodied)");
+}

@@ -1,0 +1,35 @@
+//! Fig 8: roofline comparison, SPR-112 CPU vs A100-40 GPU, with prefill
+//! and decode operating points for Llama-3-8B at ctx 2048.
+use ecoserve::hw;
+use ecoserve::models;
+use ecoserve::perf::cpu as cpuperf;
+use ecoserve::perf::roofline::{knee_intensity, Device};
+use ecoserve::util::table::{fnum, Table};
+
+fn main() {
+    let m = models::llm("llama-8b").unwrap();
+    let a100 = Device::from_gpu(hw::gpu("A100-40").unwrap());
+    let spr = Device::from_cpu(hw::cpu("SPR-112").unwrap(), 512.0);
+    println!("== Fig 8: rooflines (Llama-8B, ctx 2048) ==");
+    let mut t = Table::new(&["device", "peak TF/s", "bw GB/s", "knee FLOP/B",
+                             "max batch @2048"]);
+    t.row(&["A100-40".into(), fnum(a100.peak_flops / 1e12), fnum(a100.mem_bw / 1e9),
+            fnum(knee_intensity(&a100)), format!("{}", m.max_batch(40.0, 2048, 1))]);
+    t.row(&["SPR-112".into(), fnum(spr.peak_flops / 1e12), fnum(spr.mem_bw / 1e9),
+            fnum(knee_intensity(&spr)),
+            format!("{}", cpuperf::max_batch(m, 512.0, 2048))]);
+    t.print();
+    println!("\noperating points (arithmetic intensity, FLOP/byte):");
+    let mut t = Table::new(&["op", "batch", "AI", "A100 bound", "CPU bound"]);
+    for (name, b) in [("decode", 1), ("decode", 16), ("decode", 512)] {
+        let ai = m.decode_intensity(b, 2048);
+        let bound = |d: &Device| if ai < knee_intensity(d) { "memory" } else { "compute" };
+        t.row(&[name.into(), format!("{b}"), fnum(ai),
+                bound(&a100).into(), bound(&spr).into()]);
+    }
+    let pf_ai = m.prefill_flops(1, 2048) / m.prefill_bytes(1, 2048);
+    t.row(&["prefill".into(), "1".into(), fnum(pf_ai), "compute".into(),
+            "compute".into()]);
+    t.print();
+    println!("(low-AI decode fits the CPU; GPU is capacity-bound at large batch)");
+}

@@ -1,0 +1,23 @@
+//! Fig 9: parallelism degree vs arithmetic intensity for Linear operators,
+//! and the PD the runtime co-selects.
+use ecoserve::hw;
+use ecoserve::perf::cpu::{best_linear_pd, linear_slice_ai};
+use ecoserve::util::table::{fnum, Table};
+
+fn main() {
+    let cpu = hw::cpu("SPR-112").unwrap();
+    println!("== Fig 9: Linear-op slice AI vs parallelism degree (SPR-112) ==");
+    let knee = cpu.bf16_tflops * 1e12 / (cpu.mem_bw_gbs * 1e9);
+    println!("roofline knee: {} FLOP/byte", fnum(knee));
+    for (d_in, d_out, batch) in [(4608, 36864, 16), (4096, 4096, 8), (2304, 2304, 1)] {
+        let mut t = Table::new(&["PD", "slice AI", "vs knee"]);
+        for pd in [1usize, 4, 16, 56, 112] {
+            let ai = linear_slice_ai(d_in, d_out, batch, pd, 2.0);
+            t.row(&[format!("{pd}"), fnum(ai),
+                    if ai >= knee { "compute-ok".into() } else { "bw-starved".into() }]);
+        }
+        let best = best_linear_pd(cpu, d_in, d_out, batch, 2.0);
+        println!("linear {d_in}x{d_out} batch {batch}: chosen PD = {best}");
+        t.print();
+    }
+}

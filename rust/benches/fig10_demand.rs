@@ -1,0 +1,25 @@
+//! Fig 10: online vs offline demand for Services A and B over a week and
+//! over a day.
+use ecoserve::util::table::{fnum, Table};
+use ecoserve::workload::demand::{demand_trace, trace_stats, Service};
+
+fn main() {
+    println!("== Fig 10: online/offline demand split (synthetic A/B traces) ==");
+    let mut t = Table::new(&["service", "avg offline %", "peak offline %",
+                             "paper avg %", "paper peak %"]);
+    for (svc, pa, pp) in [(Service::A, 21.0, 27.0), (Service::B, 45.0, 55.0)] {
+        let tr = demand_trace(svc, 7, 900.0, 42);
+        let (avg, peak, _) = trace_stats(&tr);
+        t.row(&[format!("{svc:?}"), fnum(avg * 100.0), fnum(peak * 100.0),
+                fnum(pa), fnum(pp)]);
+    }
+    t.print();
+    println!("\nService B, one day (hourly):");
+    let tr = demand_trace(Service::B, 1, 3600.0, 42);
+    let mut t = Table::new(&["hour", "online", "offline", "offline %"]);
+    for (h, p) in tr.iter().enumerate().step_by(3) {
+        t.row(&[format!("{h:02}"), fnum(p.online), fnum(p.offline),
+                fnum(100.0 * p.offline_frac())]);
+    }
+    t.print();
+}

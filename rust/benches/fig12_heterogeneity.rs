@@ -1,0 +1,37 @@
+//! Fig 12: A100-vs-H100 relative energy and carbon for Gemma-27B prompt
+//! and decode phases across context length and batch (values > 1 mean the
+//! A100 is preferable).
+use ecoserve::carbon::embodied::gpu_embodied;
+use ecoserve::hw;
+use ecoserve::models;
+use ecoserve::perf::roofline::{decode_step_perf, prefill_perf, Device};
+use ecoserve::util::table::{fnum, Table};
+
+fn main() {
+    let m = models::llm("gemma-27b").unwrap();
+    let a = Device::from_gpu(hw::gpu("A100-80").unwrap());
+    let h = Device::from_gpu(hw::gpu("H100").unwrap());
+    let emb_a = gpu_embodied(hw::gpu("A100-80").unwrap()).total();
+    let emb_h = gpu_embodied(hw::gpu("H100").unwrap()).total();
+    let ci = 261.0;
+    println!("== Fig 12: H100-relative-to-A100 ratios, Gemma-27B (>1: A100 wins) ==");
+    let mut t = Table::new(&["phase", "ctx", "batch", "energy H/A", "carbon H/A"]);
+    for (phase, ctx, b) in [("prompt", 512usize, 4usize), ("prompt", 2048, 8),
+                            ("prompt", 8192, 8), ("decode", 512, 4),
+                            ("decode", 2048, 8), ("decode", 8192, 16)] {
+        let (pa, ph) = if phase == "prompt" {
+            (prefill_perf(m, &a, b, ctx, 2), prefill_perf(m, &h, b, ctx, 2))
+        } else {
+            (decode_step_perf(m, &a, b, ctx, 2), decode_step_perf(m, &h, b, ctx, 2))
+        };
+        let carbon = |p: &ecoserve::perf::PhasePerf, emb: f64, lt_h: f64| {
+            p.energy_j / 3.6e6 * ci / 1000.0 + emb / lt_h * p.latency_s / 3600.0
+        };
+        let lt = 3.0 * 365.25 * 24.0;
+        t.row(&[phase.into(), format!("{ctx}"), format!("{b}"),
+                fnum(ph.energy_j / pa.energy_j),
+                fnum(carbon(&ph, emb_h, lt) / carbon(&pa, emb_a, lt))]);
+    }
+    t.print();
+    println!("(H100 wins long prompts; A100 preferred for decode)");
+}

@@ -1,0 +1,39 @@
+//! Fig 13: relative carbon per token vs V100 across hardware, for prompt-
+//! vs decode-heavy workloads and low/high carbon intensity.
+use ecoserve::carbon::embodied::gpu_embodied;
+use ecoserve::hw;
+use ecoserve::models;
+use ecoserve::perf::roofline::{decode_throughput, prefill_throughput, Device};
+use ecoserve::util::table::{fnum, Table};
+
+fn main() {
+    let m = models::llm("llama-8b").unwrap();
+    println!("== Fig 13: carbon per token relative to V100 (<1 is better) ==");
+    let carbon_per_tok = |g: &'static str, prompt_heavy: bool, ci: f64| -> f64 {
+        let spec = hw::gpu(g).unwrap();
+        let dev = Device::from_gpu(spec);
+        let tp = if m.weight_gb() > 0.85 * dev.mem_gb { 2 } else { 1 };
+        let tput = if prompt_heavy {
+            prefill_throughput(m, &dev, 4, 2048, tp)
+        } else {
+            decode_throughput(m, &dev, 16, 1024, tp)
+        };
+        let power = spec.tdp_w * 0.8 * tp as f64;
+        let op = power / 1000.0 * ci / 1000.0 / 3600.0; // kg/s
+        let emb = gpu_embodied(spec).total() * tp as f64 / (4.0 * 365.25 * 86400.0);
+        (op + emb) / tput
+    };
+    for (label, ci, ph) in [("prompt-heavy CI=400", 400.0, true),
+                            ("prompt-heavy CI=50", 50.0, true),
+                            ("decode-heavy CI=50", 50.0, false)] {
+        println!("\n{label}:");
+        let base = carbon_per_tok("V100", ph, ci);
+        let mut t = Table::new(&["gpu", "rel carbon/token", "saving %"]);
+        for g in ["V100", "A100-40", "A100-80", "L4", "H100", "GH200"] {
+            let c = carbon_per_tok(g, ph, ci);
+            t.row(&[g.into(), fnum(c / base), fnum(100.0 * (1.0 - c / base))]);
+        }
+        t.print();
+    }
+    println!("(optimal upgrade target differs by workload mix and CI)");
+}

@@ -1,0 +1,17 @@
+//! Fig 14: effective component age vs deployment time at cloud utilization.
+use ecoserve::carbon::reliability::{cpu_effective_age, max_safe_host_lifetime,
+                                    ssd_effective_age};
+use ecoserve::util::table::{fnum, Table};
+
+fn main() {
+    println!("== Fig 14: effective age vs deployment time (20% utilization) ==");
+    let mut t = Table::new(&["deployed years", "CPU eff. age", "SSD eff. age"]);
+    for y in [1.0, 2.0, 3.0, 5.0, 7.0, 9.0] {
+        t.row(&[fnum(y), fnum(cpu_effective_age(y, 0.2)),
+                fnum(ssd_effective_age(y, 0.2))]);
+    }
+    t.print();
+    println!("max safe host lifetime @20% util: {} years",
+             fnum(max_safe_host_lifetime(0.2, 5.0, 2.5)));
+    println!("(paper calibration: 5y @ 20% -> CPU ages 0.8y, SSD 1y)");
+}

@@ -1,0 +1,54 @@
+//! Fig 15: end-to-end carbon vs TTFT/TPOT trade-off across strategies,
+//! plus the cumulative benefit of stacking EcoServe's optimizations.
+use ecoserve::models;
+use ecoserve::planner::slicing::{cluster_slices, slice_trace};
+use ecoserve::planner::Phase;
+use ecoserve::strategies::Strategy;
+use ecoserve::util::table::{fnum, Table};
+use ecoserve::workload::slo::slo_for;
+use ecoserve::workload::{generate_trace, merge_traces, Arrivals, LengthDist,
+                         RequestClass};
+
+fn main() {
+    let m = models::llm("llama-8b").unwrap();
+    let slo = slo_for("llama-8b", false).unwrap().slo;
+    let online = generate_trace(Arrivals::Bursty { rate: 24.0, cv: 2.0 },
+                                LengthDist::ShareGpt, RequestClass::Online,
+                                600.0, 15);
+    let offline = generate_trace(Arrivals::Poisson { rate: 10.0 },
+                                 LengthDist::LongBench, RequestClass::Offline,
+                                 600.0, 16);
+    let trace = merge_traces(vec![online, offline]);
+    let slices = cluster_slices(&slice_trace(m, &trace, 600.0, slo, 1));
+    let ci = 261.0;
+
+    println!("== Fig 15 (left/center): carbon + latency vs perf-opt ==");
+    let base = Strategy::PerfOpt.plan(&slices, ci);
+    let mut t = Table::new(&["strategy", "carbon kg/hr", "saving %",
+                             "TTFT (model) s", "TPOT (model) s", "gpus"]);
+    for strat in Strategy::all() {
+        let p = strat.plan(&slices, ci);
+        t.row(&[strat.name().into(), fnum(p.carbon_kg_per_hr()),
+                fnum(100.0 * (1.0 - p.carbon_kg_per_hr() / base.carbon_kg_per_hr())),
+                fnum(p.mean_latency(Phase::Prompt)),
+                fnum(p.mean_latency(Phase::Decode)),
+                format!("{}", p.total_gpus())]);
+    }
+    t.print();
+
+    println!("\n== Fig 15 (right): cumulative stacking of optimizations ==");
+    let stack = [
+        ("baseline (perf-opt)", Strategy::PerfOpt),
+        ("+ reduce", Strategy::EcoReduce),
+        ("+ rightsize", Strategy::EcoRightsize),
+        ("+ reuse", Strategy::EcoReuse),
+        ("ecoserve (all 4R)", Strategy::EcoFull),
+    ];
+    let mut t = Table::new(&["config", "carbon kg/hr", "cumulative saving %"]);
+    for (name, strat) in stack {
+        let c = strat.plan(&slices, ci).carbon_kg_per_hr();
+        t.row(&[name.into(), fnum(c),
+                fnum(100.0 * (1.0 - c / base.carbon_kg_per_hr()))]);
+    }
+    t.print();
+}

@@ -1,0 +1,38 @@
+//! Fig 16: which strategy EcoServe's planner engages as workload length,
+//! SLO slack, and carbon intensity vary (Llama-70B).
+use ecoserve::models;
+use ecoserve::planner::slicing::Slice;
+use ecoserve::planner::{plan, Phase, PlanConfig};
+use ecoserve::util::table::{fnum, Table};
+use ecoserve::workload::slo::Slo;
+
+fn main() {
+    let m = models::llm("llama-70b").unwrap();
+    println!("== Fig 16: sampled reuse/rightsize configs (Llama-70B) ==");
+    let mut t = Table::new(&["ctx", "slo slack", "CI", "decode device",
+                             "reuse?", "carbon kg/hr"]);
+    for &ctx in &[512usize, 2048, 8192] {
+        for &slack in &[1.0f64, 3.0] {
+            for &ci in &[17.0f64, 261.0, 501.0] {
+                let slices = vec![
+                    Slice { model: m, rate: 2.0, prompt: ctx, output: 256,
+                            slo: Slo { ttft_s: 15.0 * slack, tpot_s: 0.24 * slack },
+                            offline: false },
+                    Slice { model: m, rate: 1.0, prompt: ctx, output: 256,
+                            slo: Slo { ttft_s: 86_400.0, tpot_s: f64::INFINITY },
+                            offline: true },
+                ];
+                let p = plan(&slices, &PlanConfig { ci, ..Default::default() });
+                let decode_dev = p.assignments.iter()
+                    .find(|a| a.slice_idx == 1 && a.phase == Phase::Decode)
+                    .map(|a| a.device.clone())
+                    .unwrap_or_else(|| "-".into());
+                let reuse = decode_dev == "cpu-host";
+                t.row(&[format!("{ctx}"), fnum(slack), fnum(ci), decode_dev,
+                        format!("{reuse}"), fnum(p.carbon_kg_per_hr())]);
+            }
+        }
+    }
+    t.print();
+    println!("(longer requests + lower CI -> reuse; higher CI -> rightsize)");
+}

@@ -1,0 +1,52 @@
+//! Fig 17: EcoServe vs Splitwise on iso-power deployments across carbon
+//! intensity and load (Bloom-176B and Llama-70B).
+use ecoserve::carbon::intensity::Region;
+use ecoserve::models;
+use ecoserve::planner::slicing::{cluster_slices, slice_trace};
+use ecoserve::sim::{simulate, Router};
+use ecoserve::strategies::{fleet_from_plan, sim_config, splitwise_fleet, Strategy};
+use ecoserve::util::table::{fnum, Table};
+use ecoserve::workload::slo::{slo_for, Slo};
+use ecoserve::workload::{generate_trace, Arrivals, LengthDist, RequestClass};
+
+fn main() {
+    println!("== Fig 17: iso-power EcoServe vs Splitwise (2-min traces) ==");
+    let mut t = Table::new(&["model", "CI", "load", "splitwise kg", "ecoserve kg",
+                             "saving %", "eco TTFT p90", "sw TTFT p90"]);
+    for model_name in ["llama-70b", "bloom-176b"] {
+        let m = models::llm(model_name).unwrap();
+        let slo = slo_for(model_name, false).map(|w| w.slo)
+            .unwrap_or(Slo { ttft_s: 20.0, tpot_s: 0.27 });
+        for region in Region::low_mid_high() {
+            for &(label, rate) in &[("low", 0.4f64), ("high", 1.2)] {
+                let tr = generate_trace(Arrivals::Poisson { rate },
+                                        LengthDist::AzureCode,
+                                        RequestClass::Online, 120.0, 17);
+                let slices = cluster_slices(&slice_trace(m, &tr, 120.0, slo, 1));
+                let ci = region.avg_ci();
+                let eco_plan = Strategy::EcoFull.plan(&slices, ci);
+                let eco_fleet = fleet_from_plan(&eco_plan, m, 2048);
+                let mut eco_cfg = sim_config(eco_fleet, &eco_plan, ci);
+                let mut eco = simulate(m, &tr, &eco_cfg, slo.ttft_s, slo.tpot_s);
+
+                // Splitwise: iso-power H100 fleet, fixed 3:1 PD split, JSQ.
+                let total = eco_plan.total_gpus().max(4);
+                let np = (total * 3 / 4).max(1);
+                let sw_fleet = splitwise_fleet(m, np, (total - np).max(1), 2048);
+                let sw_plan = Strategy::Splitwise.plan(&slices, ci);
+                let mut sw_cfg = sim_config(sw_fleet, &sw_plan, ci);
+                sw_cfg.router = Router::Jsq;
+                let mut sw = simulate(m, &tr, &sw_cfg, slo.ttft_s, slo.tpot_s);
+
+                eco_cfg.servers.clear();
+                sw_cfg.servers.clear();
+                t.row(&[model_name.into(), fnum(ci), label.into(),
+                        fnum(sw.carbon_kg()), fnum(eco.carbon_kg()),
+                        fnum(100.0 * (1.0 - eco.carbon_kg() / sw.carbon_kg())),
+                        fnum(eco.ttft.p90()), fnum(sw.ttft.p90())]);
+            }
+        }
+    }
+    t.print();
+    println!("(gap widens at lower request rate and higher CI — paper §6.2.1)");
+}

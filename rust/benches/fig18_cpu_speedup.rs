@@ -1,0 +1,34 @@
+//! Fig 18: EcoServe CPU decode speedup over a llama.cpp-style baseline
+//! across batch, context, and core count (Gemma-2B / Gemma-27B).
+use ecoserve::hw;
+use ecoserve::models;
+use ecoserve::perf::cpu::{decode_throughput, CpuStrategy};
+use ecoserve::util::table::{fnum, Table};
+
+fn main() {
+    println!("== Fig 18: CPU decode speedup vs llama.cpp baseline ==");
+    let mut all = Vec::new();
+    for cpu_name in ["SPR-56", "SPR-112"] {
+        let cpu = hw::cpu(cpu_name).unwrap();
+        for model_name in ["gemma-2b", "gemma-27b"] {
+            let m = models::llm(model_name).unwrap();
+            let mut t = Table::new(&["batch", "ctx", "naive tok/s", "opt tok/s",
+                                     "speedup"]);
+            for &b in &[1usize, 4, 16, 64] {
+                for &ctx in &[512usize, 2048, 8192] {
+                    let n = decode_throughput(m, cpu, b, ctx, CpuStrategy::Naive);
+                    let o = decode_throughput(m, cpu, b, ctx, CpuStrategy::Optimized);
+                    all.push(o / n);
+                    t.row(&[format!("{b}"), format!("{ctx}"), fnum(n), fnum(o),
+                            fnum(o / n)]);
+                }
+            }
+            println!("\n{model_name} on {cpu_name}:");
+            t.print();
+        }
+    }
+    let mean = all.iter().sum::<f64>() / all.len() as f64;
+    let max = all.iter().cloned().fold(0.0, f64::max);
+    println!("\nmean speedup {:.2}x, max {:.2}x (paper: avg 1.34x, up to 4.03x)",
+             mean, max);
+}

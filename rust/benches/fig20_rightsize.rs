@@ -1,0 +1,52 @@
+//! Fig 20: rightsizing vs Melange and single-hardware baselines
+//! (Gemma-27B, online TPOT=100 ms / offline 24 h).
+use ecoserve::models;
+use ecoserve::planner::slicing::Slice;
+use ecoserve::planner::{plan, PlanConfig};
+use ecoserve::strategies::Strategy;
+use ecoserve::util::table::{fnum, Table};
+use ecoserve::workload::slo::Slo;
+
+fn main() {
+    let m = models::llm("gemma-27b").unwrap();
+    println!("== Fig 20: rightsizing vs Melange / single-HW (Gemma-27B) ==");
+    for (setting, offline) in [("online", false), ("offline", true)] {
+        println!("\n{setting} setting:");
+        let mut t = Table::new(&["rate", "baseline", "carbon kg/hr", "energy-proxy",
+                                 "eco improvement x"]);
+        for &rate in &[1.0f64, 4.0, 16.0] {
+            let slo = if offline {
+                Slo { ttft_s: 86_400.0, tpot_s: f64::INFINITY }
+            } else {
+                Slo { ttft_s: 10.0, tpot_s: 0.1 }
+            };
+            let slices = vec![
+                Slice { model: m, rate, prompt: 512, output: 256, slo, offline },
+                Slice { model: m, rate: rate / 2.0, prompt: 4096, output: 256,
+                        slo, offline },
+            ];
+            let eco = Strategy::EcoRightsize.plan(&slices, 420.0);
+            let mut add = |name: &str, p: ecoserve::planner::Plan| {
+                t.row(&[fnum(rate), name.into(), fnum(p.carbon_kg_per_hr()),
+                        fnum(p.op_kg_per_hr),
+                        fnum(p.carbon_kg_per_hr() / eco.carbon_kg_per_hr())]);
+            };
+            add("melange", Strategy::Melange.plan(&slices, 420.0));
+            for hw in ["H100", "A100-80", "L4"] {
+                let cfg = PlanConfig {
+                    alpha: 0.0,
+                    gpu_menu: vec![hw],
+                    cpu_reuse: false,
+                    reduce_host: false,
+                    host_lifetime_y: 4.0,
+                    gpu_lifetime_y: 4.0,
+                    ..Default::default()
+                };
+                add(&format!("single-{hw}"), plan(&slices, &cfg));
+            }
+            add("eco-rightsize", eco.clone());
+        }
+        t.print();
+    }
+    println!("(ratios > 1: baseline emits more than rightsizing)");
+}

@@ -1,0 +1,20 @@
+//! Fig 21: asymmetric host/GPU replacement schedules over 10 years.
+use ecoserve::carbon::lifecycle::{fig21_comparison, LifecycleParams};
+use ecoserve::util::table::{fnum, Table};
+
+fn main() {
+    println!("== Fig 21: fixed 4y/4y vs EcoServe host-9y/GPU-3y ==");
+    let p = LifecycleParams::default();
+    let (base, eco) = fig21_comparison(&p, 10);
+    let (bc, ec) = (base.total_by_year(), eco.total_by_year());
+    let mut t = Table::new(&["year", "base emb", "base op", "eco emb", "eco op",
+                             "cum saving %"]);
+    for y in 0..10 {
+        t.row(&[format!("{y}"), fnum(base.emb_by_year[y]), fnum(base.op_by_year[y]),
+                fnum(eco.emb_by_year[y]), fnum(eco.op_by_year[y]),
+                fnum(100.0 * (1.0 - ec[y] / bc[y]))]);
+    }
+    t.print();
+    println!("10-year cumulative saving: {:.1}% (paper: ~16%)",
+             100.0 * (1.0 - eco.cumulative_total() / base.cumulative_total()));
+}

@@ -1,0 +1,73 @@
+//! Performance microbenches for the real serving stack (EXPERIMENTS.md
+//! §Perf): engine prefill/decode step latency, batched-vs-single decode
+//! amortization, Pallas-vs-XLA GEMM artifacts, solver and simulator speed.
+use ecoserve::bench::{run, BenchConfig};
+use ecoserve::runtime::engine::Engine;
+use ecoserve::runtime::tokenizer;
+use std::path::PathBuf;
+
+fn main() {
+    let cfg = BenchConfig::quick();
+
+    // Solver microbench.
+    let r = run("milp_assignment_20x6", &cfg, || {
+        use ecoserve::solver::*;
+        let mut pb = ProblemBuilder::new();
+        let bs: Vec<Var> = (0..6).map(|j| pb.var(&format!("b{j}"), 1.0, true)).collect();
+        for s in 0..20 {
+            let avars: Vec<Var> = (0..6)
+                .map(|j| pb.binary(&format!("a{s}_{j}"), (s * j) as f64 * 0.01))
+                .collect();
+            let terms: Vec<(Var, f64)> = avars.iter().map(|v| (*v, 1.0)).collect();
+            pb.eq(&terms, 1.0);
+            for (j, a) in avars.iter().enumerate() {
+                pb.le(&[(*a, 0.4), (bs[j], -1.0)], 0.0);
+            }
+        }
+        std::hint::black_box(pb.solve(&MilpConfig::default()));
+    });
+    println!("{}", r.report());
+
+    // Simulator throughput.
+    let r = run("sim_2min_trace_8gpus", &cfg, || {
+        use ecoserve::models;
+        use ecoserve::sim::*;
+        use ecoserve::workload::*;
+        let m = models::llm("llama-8b").unwrap();
+        let tr = generate_trace(Arrivals::Poisson { rate: 4.0 },
+                                LengthDist::ShareGpt, RequestClass::Online,
+                                120.0, 1);
+        let servers = homogeneous_fleet("A100-40", 8, m, 2048);
+        let cfg2 = SimConfig { emb_kg_per_hr: vec![0.005; 8], servers,
+                               router: Router::WorkloadAware, ci: 261.0,
+                               kv_transfer_bw: 64e9 };
+        std::hint::black_box(simulate(m, &tr, &cfg2, 0.5, 0.1));
+    });
+    println!("{}", r.report());
+
+    // Engine benches require artifacts.
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("model_config.json").exists() {
+        println!("SKIP engine benches: run `make artifacts`");
+        return;
+    }
+    let eng = Engine::load(&dir).expect("engine");
+    let prompt = tokenizer::encode("a benchmark prompt for ecoserve");
+
+    let r = run("prefill_b1_s32", &cfg, || {
+        std::hint::black_box(eng.prefill(std::slice::from_ref(&prompt)).unwrap());
+    });
+    println!("{}", r.report());
+
+    for b in eng.decode_buckets().to_vec() {
+        let mut cache = eng.empty_cache(b);
+        let toks = vec![5i32; b];
+        let pos: Vec<i32> = (0..b as i32).map(|i| 40 + i).collect();
+        let r = run(&format!("decode_step_b{b}"), &cfg, || {
+            std::hint::black_box(
+                eng.decode_step(&mut cache, &toks, &pos).unwrap());
+        });
+        println!("{} | per-seq {}", r.report(),
+                 ecoserve::util::table::ftime(r.mean_s / b as f64));
+    }
+}

@@ -1,0 +1,21 @@
+//! Table 2: power/latency/cost/carbon/energy when doubling tensor
+//! parallelism.
+use ecoserve::hw;
+use ecoserve::models;
+use ecoserve::perf::roofline::Device;
+use ecoserve::strategies::tp_scaling;
+use ecoserve::util::table::{fnum, Table};
+
+fn main() {
+    println!("== Table 2: relative metrics for TP n -> 2n (Llama-70B, A100-80) ==");
+    let m = models::llm("llama-70b").unwrap();
+    let dev = Device::from_gpu(hw::gpu("A100-80").unwrap());
+    let mut t = Table::new(&["n", "power", "latency", "cost", "carbon", "energy"]);
+    for n in [1usize, 2, 4] {
+        let s = tp_scaling(m, &dev, n, 700.0, 800.0, 119.0, 0.08);
+        t.row(&[format!("{n}->{}", 2 * n), fnum(s.power_ratio), fnum(s.latency_ratio),
+                fnum(s.cost_ratio), fnum(s.carbon_ratio), fnum(s.energy_ratio)]);
+    }
+    t.print();
+    println!("(latency ~0.5+comm; carbon improves with higher CPU/GPU emb ratio)");
+}

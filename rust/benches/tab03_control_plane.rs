@@ -1,0 +1,38 @@
+//! Table 3: ILP control-plane wall-clock vs cluster size and load.
+use ecoserve::models;
+use ecoserve::planner::slicing::{cluster_slices, slice_trace};
+use ecoserve::planner::{plan, PlanConfig};
+use ecoserve::util::table::{fnum, Table};
+use ecoserve::workload::slo::Slo;
+use ecoserve::workload::{generate_trace, Arrivals, LengthDist, RequestClass};
+
+fn main() {
+    let m = models::llm("llama-8b").unwrap();
+    println!("== Table 3: planner solve time (s) vs cluster size ==");
+    let mut t = Table::new(&["cluster", "online (low)", "offline (low)",
+                             "online (high)", "offline (high)"]);
+    for &nodes in &[10usize, 20, 40, 80, 160] {
+        let mut cells = vec![format!("{nodes}")];
+        for (class, load) in [(RequestClass::Online, 0.3), (RequestClass::Offline, 0.3),
+                              (RequestClass::Online, 0.8), (RequestClass::Offline, 0.8)] {
+            // Rate scaled so the fleet lands near `nodes` devices at `load`.
+            let rate = load * nodes as f64 * 1.2;
+            let dist = if class == RequestClass::Offline {
+                LengthDist::LongBench
+            } else {
+                LengthDist::ShareGpt
+            };
+            let tr = generate_trace(Arrivals::Poisson { rate }, dist, class,
+                                    120.0, nodes as u64);
+            let f = if load > 0.5 { 4 } else { 2 };
+            let slices = cluster_slices(&slice_trace(
+                m, &tr, 120.0, Slo { ttft_s: 0.5, tpot_s: 0.1 }, f));
+            let cfg = PlanConfig::default();
+            let p = plan(&slices, &cfg);
+            cells.push(fnum(p.solve_s));
+        }
+        t.row(&cells);
+    }
+    t.print();
+    println!("(clustered slices keep growth sub-linear; paper: <2 s at 160)");
+}

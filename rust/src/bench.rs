@@ -1,0 +1,176 @@
+//! Criterion-like measurement harness substrate (criterion is not in the
+//! offline vendor set). Warmup, timed sampling, MAD-based outlier rejection,
+//! and a compact report. All `cargo bench` targets (`harness = false`) use
+//! this, then print the paper's table/figure rows.
+
+use crate::util::stats::Samples;
+use crate::util::table::ftime;
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_samples: usize,
+    pub max_samples: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(1000),
+            min_samples: 10,
+            max_samples: 10_000,
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Faster profile for heavyweight end-to-end benches.
+    pub fn quick() -> Self {
+        BenchConfig {
+            warmup: Duration::from_millis(50),
+            measure: Duration::from_millis(300),
+            min_samples: 3,
+            max_samples: 1_000,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p90_s: f64,
+    pub std_s: f64,
+    pub outliers: usize,
+}
+
+impl BenchResult {
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.mean_s
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} mean {:>10}  p50 {:>10}  p90 {:>10}  n={} ({} outliers)",
+            self.name, ftime(self.mean_s), ftime(self.p50_s),
+            ftime(self.p90_s), self.samples, self.outliers
+        )
+    }
+}
+
+/// Measure a closure. The closure runs once per sample; use
+/// [`run_batched`] when one invocation is too fast to time.
+pub fn run<F: FnMut()>(name: &str, cfg: &BenchConfig, mut f: F) -> BenchResult {
+    // Warmup.
+    let start = Instant::now();
+    while start.elapsed() < cfg.warmup {
+        f();
+    }
+    // Sample.
+    let mut raw = Vec::new();
+    let start = Instant::now();
+    while (start.elapsed() < cfg.measure || raw.len() < cfg.min_samples)
+        && raw.len() < cfg.max_samples
+    {
+        let t0 = Instant::now();
+        f();
+        raw.push(t0.elapsed().as_secs_f64());
+    }
+    summarize(name, raw)
+}
+
+/// Measure `f(iters)` where the closure runs the workload `iters` times —
+/// for sub-microsecond bodies.
+pub fn run_batched<F: FnMut(u64)>(
+    name: &str, cfg: &BenchConfig, iters: u64, mut f: F,
+) -> BenchResult {
+    let start = Instant::now();
+    while start.elapsed() < cfg.warmup {
+        f(iters);
+    }
+    let mut raw = Vec::new();
+    let start = Instant::now();
+    while (start.elapsed() < cfg.measure || raw.len() < cfg.min_samples)
+        && raw.len() < cfg.max_samples
+    {
+        let t0 = Instant::now();
+        f(iters);
+        raw.push(t0.elapsed().as_secs_f64() / iters as f64);
+    }
+    summarize(name, raw)
+}
+
+fn summarize(name: &str, raw: Vec<f64>) -> BenchResult {
+    let mut s = Samples::new();
+    s.extend(&raw);
+    let med = s.p50();
+    let mad = s.mad().max(f64::MIN_POSITIVE);
+    // Reject samples beyond 5 MADs (≈ 3.4 sigma for normal data).
+    let kept: Vec<f64> = raw.iter().copied()
+        .filter(|x| (x - med).abs() <= 5.0 * 1.4826 * mad)
+        .collect();
+    let outliers = raw.len() - kept.len();
+    let mut ks = Samples::new();
+    ks.extend(&kept);
+    let mean = ks.mean();
+    let std = (kept.iter().map(|x| (x - mean).powi(2)).sum::<f64>()
+        / kept.len().max(1) as f64).sqrt();
+    BenchResult {
+        name: name.to_string(),
+        samples: kept.len(),
+        mean_s: mean,
+        p50_s: ks.p50(),
+        p90_s: ks.p90(),
+        std_s: std,
+        outliers,
+    }
+}
+
+/// Prevent the optimizer from discarding a value (std::hint based).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_sleep_scale() {
+        let cfg = BenchConfig {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(50),
+            min_samples: 5,
+            max_samples: 100,
+        };
+        let r = run("sleep1ms", &cfg, || std::thread::sleep(Duration::from_millis(1)));
+        assert!(r.mean_s > 0.0008 && r.mean_s < 0.01, "mean {}", r.mean_s);
+        assert!(r.samples >= 5);
+    }
+
+    #[test]
+    fn batched_divides() {
+        let cfg = BenchConfig::quick();
+        let r = run_batched("noop", &cfg, 1000, |n| {
+            let mut acc = 0u64;
+            for i in 0..n { acc = acc.wrapping_add(black_box(i)); }
+            black_box(acc);
+        });
+        assert!(r.mean_s < 1e-5);
+    }
+
+    #[test]
+    fn outlier_rejection() {
+        let mut raw: Vec<f64> = vec![1.0; 50];
+        raw.push(100.0);
+        let r = summarize("x", raw);
+        assert_eq!(r.outliers, 1);
+        assert!((r.mean_s - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,175 @@
+//! Grid carbon intensity (CI): regional constants + diurnal traces.
+//!
+//! The paper samples WattTime / GreenSKU for regional CI; offline we encode
+//! the regions it names with their published averages (gCO₂e/kWh): North
+//! Central Sweden 17 (Low), California 261 (Mid), Midcontinent 501 (High),
+//! plus the Fig 6 regions. Diurnal traces model solar-driven intra-day
+//! swing for runtime carbon-aware scheduling studies.
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Region {
+    SwedenNorth,
+    California,
+    Midcontinent,
+    UsEast,
+    Europe,
+    UsCentral,
+    HyperscaleRenewable,
+}
+
+impl Region {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Region::SwedenNorth => "SE-North (Low)",
+            Region::California => "CAISO (Mid)",
+            Region::Midcontinent => "MISO (High)",
+            Region::UsEast => "US-East",
+            Region::Europe => "EU-Central",
+            Region::UsCentral => "US-Central/South",
+            Region::HyperscaleRenewable => "Hyperscale-PPA",
+        }
+    }
+
+    /// Average CI, gCO₂e/kWh.
+    pub fn avg_ci(&self) -> f64 {
+        match self {
+            Region::SwedenNorth => 17.0,
+            Region::California => 261.0,
+            Region::Midcontinent => 501.0,
+            Region::UsEast => 390.0,
+            Region::Europe => 300.0,
+            Region::UsCentral => 420.0,
+            Region::HyperscaleRenewable => 50.0,
+        }
+    }
+
+    /// Fraction of the day-night CI swing (solar share proxy).
+    fn diurnal_swing(&self) -> f64 {
+        match self {
+            Region::SwedenNorth => 0.05,
+            Region::California => 0.45, // duck curve
+            Region::Midcontinent => 0.15,
+            Region::UsEast => 0.20,
+            Region::Europe => 0.30,
+            Region::UsCentral => 0.20,
+            Region::HyperscaleRenewable => 0.35,
+        }
+    }
+
+    pub fn all() -> &'static [Region] {
+        &[
+            Region::SwedenNorth,
+            Region::California,
+            Region::Midcontinent,
+            Region::UsEast,
+            Region::Europe,
+            Region::UsCentral,
+            Region::HyperscaleRenewable,
+        ]
+    }
+
+    /// The three-level setup from §6.2.1.
+    pub fn low_mid_high() -> [Region; 3] {
+        [Region::SwedenNorth, Region::California, Region::Midcontinent]
+    }
+}
+
+/// A CI time series at fixed resolution.
+#[derive(Debug, Clone)]
+pub struct CiTrace {
+    pub region: Region,
+    pub step_s: f64,
+    pub values: Vec<f64>,
+}
+
+impl CiTrace {
+    /// Synthesize a diurnal trace: CI dips mid-day with solar, peaks in the
+    /// evening ramp, plus small AR(1) noise. Values stay positive.
+    pub fn diurnal(region: Region, days: usize, step_s: f64, seed: u64) -> CiTrace {
+        let mut rng = Rng::new(seed ^ 0xC1);
+        let n = ((days as f64 * 86_400.0) / step_s).ceil() as usize;
+        let avg = region.avg_ci();
+        let swing = region.diurnal_swing();
+        let mut noise = 0.0f64;
+        let values = (0..n)
+            .map(|i| {
+                let t = i as f64 * step_s;
+                let hour = (t / 3600.0) % 24.0;
+                // Solar dip centred at 13:00, evening peak at 19:00.
+                let solar = (-((hour - 13.0) / 3.5).powi(2)).exp();
+                let evening = (-((hour - 19.5) / 2.0).powi(2)).exp();
+                noise = 0.9 * noise + 0.1 * rng.normal() * 0.05;
+                let v = avg * (1.0 - swing * solar + 0.5 * swing * evening + noise);
+                v.max(1.0)
+            })
+            .collect();
+        CiTrace { region, step_s, values }
+    }
+
+    /// Flat trace at the regional average (for aggregate studies).
+    pub fn flat(region: Region, days: usize, step_s: f64) -> CiTrace {
+        let n = ((days as f64 * 86_400.0) / step_s).ceil() as usize;
+        CiTrace { region, step_s, values: vec![region.avg_ci(); n] }
+    }
+
+    /// CI at time t (seconds), clamped to the trace extent.
+    pub fn at(&self, t_s: f64) -> f64 {
+        if self.values.is_empty() {
+            return self.region.avg_ci();
+        }
+        let idx = ((t_s / self.step_s) as usize).min(self.values.len() - 1);
+        self.values[idx]
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.values.is_empty() {
+            return self.region.avg_ci();
+        }
+        self.values.iter().sum::<f64>() / self.values.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_ordered() {
+        let [lo, mid, hi] = Region::low_mid_high();
+        assert!(lo.avg_ci() < mid.avg_ci() && mid.avg_ci() < hi.avg_ci());
+        assert_eq!(lo.avg_ci(), 17.0);
+        assert_eq!(mid.avg_ci(), 261.0);
+        assert_eq!(hi.avg_ci(), 501.0);
+    }
+
+    #[test]
+    fn diurnal_mean_near_average() {
+        let tr = CiTrace::diurnal(Region::California, 7, 900.0, 7);
+        let rel = (tr.mean() - 261.0).abs() / 261.0;
+        assert!(rel < 0.15, "mean {} off by {rel}", tr.mean());
+    }
+
+    #[test]
+    fn diurnal_has_midday_dip() {
+        let tr = CiTrace::diurnal(Region::California, 1, 900.0, 3);
+        let noon = tr.at(13.0 * 3600.0);
+        let night = tr.at(3.0 * 3600.0);
+        assert!(noon < night, "noon {noon} night {night}");
+    }
+
+    #[test]
+    fn trace_positive_and_clamped() {
+        let tr = CiTrace::diurnal(Region::SwedenNorth, 2, 600.0, 5);
+        assert!(tr.values.iter().all(|&v| v > 0.0));
+        assert_eq!(tr.at(1e12), *tr.values.last().unwrap());
+    }
+
+    #[test]
+    fn flat_trace() {
+        let tr = CiTrace::flat(Region::Midcontinent, 1, 3600.0);
+        assert_eq!(tr.at(0.0), 501.0);
+        assert_eq!(tr.mean(), 501.0);
+    }
+}

@@ -1,0 +1,177 @@
+//! Hardware lifecycle / upgrade-schedule modeling (paper §4.1.4 "Recycle",
+//! Figs 13/14/21).
+//!
+//! Models cumulative (embodied + operational) carbon under replacement
+//! schedules where hosts and GPUs upgrade on *different* cadences, with GPU
+//! energy efficiency doubling every `eff_doubling_years` (paper: 3.5, citing
+//! product-data trends).
+
+/// Parameters for an upgrade-schedule study (Fig 21 defaults).
+#[derive(Debug, Clone)]
+pub struct LifecycleParams {
+    /// Host embodied per replacement, kgCO₂e (paper baseline: 800).
+    pub host_emb_kg: f64,
+    /// GPU embodied per replacement, kgCO₂e (paper baseline: 120).
+    pub gpu_emb_kg: f64,
+    /// Yearly operational emissions with a generation-0 GPU, kgCO₂e
+    /// (paper baseline: 600 total).
+    pub op_kg_per_year: f64,
+    /// Fraction of operational emissions attributable to the GPU (which
+    /// improves with upgrades); the host share stays flat.
+    pub gpu_op_fraction: f64,
+    /// Years for GPU energy efficiency to double.
+    pub eff_doubling_years: f64,
+}
+
+impl Default for LifecycleParams {
+    fn default() -> Self {
+        LifecycleParams {
+            host_emb_kg: 800.0,
+            gpu_emb_kg: 120.0,
+            op_kg_per_year: 600.0,
+            gpu_op_fraction: 0.85,
+            eff_doubling_years: 3.5,
+        }
+    }
+}
+
+/// Year-by-year carbon under a (host every `host_period`, GPU every
+/// `gpu_period`) replacement schedule.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    pub years: usize,
+    pub host_period: usize,
+    pub gpu_period: usize,
+    /// Per-year embodied emissions (replacement charges), kgCO₂e.
+    pub emb_by_year: Vec<f64>,
+    /// Per-year operational emissions, kgCO₂e.
+    pub op_by_year: Vec<f64>,
+}
+
+impl Schedule {
+    pub fn cumulative_total(&self) -> f64 {
+        self.emb_by_year.iter().sum::<f64>() + self.op_by_year.iter().sum::<f64>()
+    }
+
+    pub fn total_by_year(&self) -> Vec<f64> {
+        let mut acc = 0.0;
+        self.emb_by_year
+            .iter()
+            .zip(&self.op_by_year)
+            .map(|(e, o)| {
+                acc += e + o;
+                acc
+            })
+            .collect()
+    }
+}
+
+/// Simulate a replacement schedule over `years`.
+pub fn simulate_schedule(
+    p: &LifecycleParams,
+    years: usize,
+    host_period: usize,
+    gpu_period: usize,
+) -> Schedule {
+    assert!(host_period > 0 && gpu_period > 0);
+    let op_host = p.op_kg_per_year * (1.0 - p.gpu_op_fraction);
+    let op_gpu0 = p.op_kg_per_year * p.gpu_op_fraction;
+    let mut emb = vec![0.0; years];
+    let mut op = vec![0.0; years];
+    let mut gpu_gen_year = 0usize;
+    for (y, (e, o)) in emb.iter_mut().zip(op.iter_mut()).enumerate() {
+        if y % host_period == 0 {
+            *e += p.host_emb_kg;
+        }
+        if y % gpu_period == 0 {
+            *e += p.gpu_emb_kg;
+            gpu_gen_year = y;
+        }
+        // GPU bought in year g is 2^(g/T) more efficient than gen-0.
+        let eff = 2f64.powf(gpu_gen_year as f64 / p.eff_doubling_years);
+        *o = op_host + op_gpu0 / eff;
+    }
+    Schedule { years, host_period, gpu_period, emb_by_year: emb, op_by_year: op }
+}
+
+/// Fig 21: baseline (both every 4y) vs EcoServe (host 9y, GPU 3y).
+pub fn fig21_comparison(p: &LifecycleParams, years: usize) -> (Schedule, Schedule) {
+    (
+        simulate_schedule(p, years, 4, 4),
+        simulate_schedule(p, years, 9, 3),
+    )
+}
+
+/// Optimal GPU usage duration (years) before an upgrade pays back, as a
+/// function of CI — the Fig 13 question. A replacement's embodied cost
+/// `gpu_emb_kg` is recouped by the op savings of a 2^(T/3.5)× more
+/// efficient card; returns the break-even holding time.
+pub fn optimal_gpu_holding_years(p: &LifecycleParams, ci_scale: f64) -> f64 {
+    // Search holding periods 1..=12y for min average yearly carbon.
+    let op_gpu0 = p.op_kg_per_year * p.gpu_op_fraction * ci_scale;
+    let mut best = (f64::INFINITY, 1usize);
+    for hold in 1..=12usize {
+        // Steady-state: each generation is 2^(hold/T) better than the last;
+        // geometric improvement means long-run average per-cycle op equals
+        // op of the current gen; approximate with first two cycles.
+        let eff1 = 2f64.powf(hold as f64 / p.eff_doubling_years);
+        let cycle_op = (0..hold).map(|_| op_gpu0).sum::<f64>()
+            + (0..hold).map(|_| op_gpu0 / eff1).sum::<f64>();
+        let avg = (2.0 * p.gpu_emb_kg + cycle_op) / (2.0 * hold as f64);
+        if avg < best.0 {
+            best = (avg, hold);
+        }
+    }
+    best.1 as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig21_savings_band() {
+        // Paper: asymmetric (host 9y / GPU 3y) saves ≈16% cumulative over
+        // 10 years vs fixed 4y/4y.
+        let p = LifecycleParams::default();
+        let (base, eco) = fig21_comparison(&p, 10);
+        let savings = 1.0 - eco.cumulative_total() / base.cumulative_total();
+        assert!(savings > 0.10 && savings < 0.25, "savings {savings}");
+    }
+
+    #[test]
+    fn schedule_charges_on_period() {
+        let p = LifecycleParams::default();
+        let s = simulate_schedule(&p, 10, 4, 4);
+        // Replacements at years 0, 4, 8.
+        assert!(s.emb_by_year[0] > 0.0 && s.emb_by_year[4] > 0.0 && s.emb_by_year[8] > 0.0);
+        assert_eq!(s.emb_by_year[1], 0.0);
+    }
+
+    #[test]
+    fn op_decreases_after_gpu_upgrade() {
+        let p = LifecycleParams::default();
+        let s = simulate_schedule(&p, 10, 9, 3);
+        assert!(s.op_by_year[3] < s.op_by_year[2]);
+        assert!(s.op_by_year[6] < s.op_by_year[3]);
+    }
+
+    #[test]
+    fn cumulative_monotone() {
+        let p = LifecycleParams::default();
+        let s = simulate_schedule(&p, 10, 4, 4);
+        let cum = s.total_by_year();
+        assert!(cum.windows(2).all(|w| w[1] > w[0]));
+    }
+
+    #[test]
+    fn high_ci_shortens_gpu_holding() {
+        // Fig 13: at high CI (operational dominates) upgrades pay back
+        // sooner than at low CI.
+        let p = LifecycleParams::default();
+        let hold_low = optimal_gpu_holding_years(&p, 50.0 / 400.0);
+        let hold_high = optimal_gpu_holding_years(&p, 400.0 / 400.0);
+        assert!(hold_high <= hold_low, "high {hold_high} low {hold_low}");
+        assert!(hold_high >= 2.0 && hold_low <= 12.0);
+    }
+}

@@ -1,0 +1,13 @@
+//! Carbon models: embodied (Table 1 / ACT-style), operational (power × CI),
+//! grid carbon-intensity traces, component aging, and lifecycle/upgrade
+//! schedules. See DESIGN.md §3 and paper §3-4.
+
+pub mod embodied;
+pub mod intensity;
+pub mod lifecycle;
+pub mod operational;
+pub mod reliability;
+
+pub use embodied::{gpu_embodied, host_embodied, platform_embodied, Breakdown};
+pub use intensity::{CiTrace, Region};
+pub use operational::{device_power, op_kg, task_carbon, TaskCarbon};

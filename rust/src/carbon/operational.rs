@@ -1,0 +1,141 @@
+//! Operational carbon: power × time × grid CI, plus task-level total-carbon
+//! accounting (paper §3, the CF_task equation):
+//!
+//!   CF_task = (P_host + P_gpu)·t·CI + CF_emb_host·t/LT + CF_emb_gpu·t/LT
+
+use super::intensity::CiTrace;
+
+/// Joules → kWh.
+pub fn j_to_kwh(joules: f64) -> f64 {
+    joules / 3.6e6
+}
+
+/// Operational carbon (kgCO₂e) of drawing `power_w` for `dur_s` seconds at
+/// a flat CI (gCO₂e/kWh).
+pub fn op_kg(power_w: f64, dur_s: f64, ci_g_per_kwh: f64) -> f64 {
+    j_to_kwh(power_w * dur_s) * ci_g_per_kwh / 1000.0
+}
+
+/// Operational carbon integrating a CI trace from `t0_s` for `dur_s`.
+pub fn op_kg_traced(power_w: f64, t0_s: f64, dur_s: f64, trace: &CiTrace) -> f64 {
+    if dur_s <= 0.0 {
+        return 0.0;
+    }
+    // Integrate at the trace resolution.
+    let step = trace.step_s.min(dur_s);
+    let n = (dur_s / step).ceil() as usize;
+    let mut kg = 0.0;
+    for i in 0..n {
+        let t = t0_s + i as f64 * step;
+        let dt = step.min(dur_s - i as f64 * step);
+        kg += op_kg(power_w, dt, trace.at(t));
+    }
+    kg
+}
+
+/// Amortized embodied carbon (kgCO₂e) attributed to a task of `dur_s`
+/// seconds on hardware with total embodied `emb_kg` and lifetime `lt_years`.
+pub fn amortized_emb_kg(emb_kg: f64, dur_s: f64, lt_years: f64) -> f64 {
+    emb_kg * dur_s / (lt_years * 365.25 * 86_400.0)
+}
+
+/// Task-level total carbon (the paper's CF_task).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TaskCarbon {
+    pub op_kg: f64,
+    pub emb_host_kg: f64,
+    pub emb_gpu_kg: f64,
+}
+
+impl TaskCarbon {
+    pub fn total(&self) -> f64 {
+        self.op_kg + self.emb_host_kg + self.emb_gpu_kg
+    }
+}
+
+/// Compute CF_task for a workload segment.
+#[allow(clippy::too_many_arguments)]
+pub fn task_carbon(
+    p_host_w: f64,
+    p_gpu_w: f64,
+    dur_s: f64,
+    ci: f64,
+    emb_host_kg: f64,
+    emb_gpu_kg: f64,
+    lt_host_years: f64,
+    lt_gpu_years: f64,
+) -> TaskCarbon {
+    TaskCarbon {
+        op_kg: op_kg(p_host_w + p_gpu_w, dur_s, ci),
+        emb_host_kg: amortized_emb_kg(emb_host_kg, dur_s, lt_host_years),
+        emb_gpu_kg: amortized_emb_kg(emb_gpu_kg, dur_s, lt_gpu_years),
+    }
+}
+
+/// Utilization-dependent device power: idle + (tdp − idle)·util^γ.
+/// γ < 1 models poor energy proportionality (paper §6.3: "the CPU's lack of
+/// energy proportionality"); γ = 1 is linear.
+pub fn device_power(idle_w: f64, tdp_w: f64, util: f64, gamma: f64) -> f64 {
+    let u = util.clamp(0.0, 1.0);
+    idle_w + (tdp_w - idle_w) * u.powf(gamma)
+}
+
+/// Default non-proportionality exponents.
+pub const GPU_POWER_GAMMA: f64 = 0.85;
+pub const CPU_POWER_GAMMA: f64 = 0.5;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::carbon::intensity::{CiTrace, Region};
+
+    #[test]
+    fn one_kwh_at_unit_ci() {
+        // 1000 W for 1 hour at 1000 g/kWh = 1 kg.
+        assert!((op_kg(1000.0, 3600.0, 1000.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn traced_matches_flat_for_flat_trace() {
+        let tr = CiTrace::flat(Region::California, 1, 900.0);
+        let a = op_kg_traced(500.0, 0.0, 7200.0, &tr);
+        let b = op_kg(500.0, 7200.0, 261.0);
+        assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+    }
+
+    #[test]
+    fn amortization_full_lifetime() {
+        // Using hardware for its whole lifetime attributes all of it.
+        let lt_s = 4.0 * 365.25 * 86_400.0;
+        assert!((amortized_emb_kg(100.0, lt_s, 4.0) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn task_carbon_totals() {
+        let tc = task_carbon(300.0, 400.0, 3600.0, 261.0, 800.0, 120.0, 4.0, 4.0);
+        assert!((tc.op_kg - op_kg(700.0, 3600.0, 261.0)).abs() < 1e-12);
+        assert!(tc.emb_host_kg > tc.emb_gpu_kg); // 800 vs 120 kg amortized
+        assert!(tc.total() > 0.0);
+    }
+
+    #[test]
+    fn embodied_dominates_in_clean_grids() {
+        // Fig 6: at low CI, embodied > operational; at high CI, reversed.
+        let mk = |ci: f64| task_carbon(300.0, 400.0, 3600.0, ci, 800.0, 120.0, 4.0, 4.0);
+        let clean = mk(17.0);
+        let dirty = mk(501.0);
+        assert!(clean.emb_host_kg + clean.emb_gpu_kg > clean.op_kg);
+        assert!(dirty.op_kg > dirty.emb_host_kg + dirty.emb_gpu_kg);
+    }
+
+    #[test]
+    fn power_model_monotone_and_bounded() {
+        for util in [0.0, 0.2, 0.5, 1.0] {
+            let p = device_power(50.0, 400.0, util, GPU_POWER_GAMMA);
+            assert!(p >= 50.0 && p <= 400.0);
+        }
+        // Non-proportionality: 20% util costs far more than 20% of dynamic.
+        let p20 = device_power(100.0, 700.0, 0.2, CPU_POWER_GAMMA);
+        assert!(p20 - 100.0 > 0.2 * 600.0);
+    }
+}

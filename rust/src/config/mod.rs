@@ -1,0 +1,237 @@
+//! Deployment configuration: a JSON file describing the workloads, SLO
+//! overrides, region, and strategy knobs that drive the planner — the
+//! "framework ingests hardware specs, LLM characteristics, and production
+//! traces alongside carbon intensity data" front door of Fig 7.
+//!
+//! Example (see `ecoserve plan --config deploy.json`):
+//! ```json
+//! {
+//!   "region": "california",
+//!   "strategy": {"reuse": true, "rightsize": true,
+//!                "reduce": true, "recycle": true, "alpha": 1.0},
+//!   "workloads": [
+//!     {"model": "llama-8b", "rate": 20.0, "dataset": "sharegpt",
+//!      "class": "online", "ttft_s": 0.5, "tpot_s": 0.1},
+//!     {"model": "llama-8b", "rate": 8.0, "dataset": "longbench",
+//!      "class": "offline"}
+//!   ],
+//!   "gpu_menu": ["L4", "A100-40", "A100-80", "H100"],
+//!   "slice_factor": 2
+//! }
+//! ```
+
+use crate::carbon::intensity::Region;
+use crate::planner::PlanConfig;
+use crate::util::json::Json;
+use crate::workload::slo::{slo_for, Slo, OFFLINE_DEADLINE_S};
+use crate::workload::{LengthDist, RequestClass};
+use anyhow::{anyhow, bail, Context, Result};
+
+#[derive(Debug, Clone)]
+pub struct WorkloadCfg {
+    pub model: String,
+    pub rate: f64,
+    pub dataset: LengthDist,
+    pub class: RequestClass,
+    pub slo: Slo,
+}
+
+#[derive(Debug, Clone)]
+pub struct DeployConfig {
+    pub region: Region,
+    pub workloads: Vec<WorkloadCfg>,
+    pub plan: PlanConfig,
+    pub slice_factor: usize,
+}
+
+pub fn parse_region(name: &str) -> Result<Region> {
+    Ok(match name.to_ascii_lowercase().as_str() {
+        "sweden" | "se-north" | "low" => Region::SwedenNorth,
+        "california" | "caiso" | "mid" => Region::California,
+        "midcontinent" | "miso" | "high" => Region::Midcontinent,
+        "us-east" => Region::UsEast,
+        "europe" | "eu-central" => Region::Europe,
+        "us-central" | "us-south" => Region::UsCentral,
+        "renewable" | "hyperscale" => Region::HyperscaleRenewable,
+        other => bail!("unknown region '{other}'"),
+    })
+}
+
+fn parse_dataset(name: &str) -> Result<LengthDist> {
+    Ok(match name.to_ascii_lowercase().as_str() {
+        "sharegpt" => LengthDist::ShareGpt,
+        "longbench" => LengthDist::LongBench,
+        "azure" | "aft" | "azurecode" => LengthDist::AzureCode,
+        other => bail!("unknown dataset '{other}'"),
+    })
+}
+
+impl DeployConfig {
+    pub fn from_json(text: &str) -> Result<DeployConfig> {
+        let j = Json::parse(text).map_err(|e| anyhow!("{e}"))?;
+        let region = parse_region(
+            j.get("region").and_then(|r| r.as_str()).unwrap_or("california"))?;
+
+        let mut plan = PlanConfig::default();
+        plan.ci = region.avg_ci();
+        if let Some(s) = j.get("strategy") {
+            let flag = |k: &str, d: bool| s.get(k).and_then(|v| v.as_bool()).unwrap_or(d);
+            plan = PlanConfig::ecoserve(
+                flag("reuse", true), flag("rightsize", true),
+                flag("reduce", true), flag("recycle", true));
+            plan.ci = region.avg_ci();
+            if let Some(a) = s.get("alpha").and_then(|v| v.as_f64()) {
+                if !(0.0..=1.0).contains(&a) {
+                    bail!("alpha {a} out of [0,1]");
+                }
+                plan.alpha = a;
+            }
+        }
+        if let Some(menu) = j.get("gpu_menu").and_then(|m| m.as_arr()) {
+            let mut names = Vec::new();
+            for g in menu {
+                let n = g.as_str().ok_or_else(|| anyhow!("gpu_menu entry not a string"))?;
+                let spec = crate::hw::gpu(n)
+                    .ok_or_else(|| anyhow!("unknown GPU '{n}' in gpu_menu"))?;
+                names.push(spec.name);
+            }
+            if names.is_empty() {
+                bail!("gpu_menu is empty");
+            }
+            plan.gpu_menu = names;
+        }
+
+        let wl = j.get("workloads").and_then(|w| w.as_arr())
+            .ok_or_else(|| anyhow!("missing 'workloads' array"))?;
+        if wl.is_empty() {
+            bail!("'workloads' is empty");
+        }
+        let mut workloads = Vec::new();
+        for (i, w) in wl.iter().enumerate() {
+            let ctx = || format!("workloads[{i}]");
+            let model = w.get("model").and_then(|m| m.as_str())
+                .ok_or_else(|| anyhow!("{}: missing model", ctx()))?.to_string();
+            crate::models::llm(&model)
+                .ok_or_else(|| anyhow!("{}: unknown model '{model}'", ctx()))?;
+            let rate = w.get("rate").and_then(|r| r.as_f64())
+                .ok_or_else(|| anyhow!("{}: missing rate", ctx()))?;
+            if rate <= 0.0 {
+                bail!("{}: rate must be positive", ctx());
+            }
+            let class = match w.get("class").and_then(|c| c.as_str()).unwrap_or("online") {
+                "online" => RequestClass::Online,
+                "offline" => RequestClass::Offline,
+                other => bail!("{}: unknown class '{other}'", ctx()),
+            };
+            let dataset = parse_dataset(
+                w.get("dataset").and_then(|d| d.as_str()).unwrap_or("sharegpt"))?;
+            // SLO: explicit override > §5 table default > generic.
+            let table = slo_for(&model, class == RequestClass::Offline).map(|t| t.slo);
+            let default = if class == RequestClass::Offline {
+                Slo { ttft_s: OFFLINE_DEADLINE_S, tpot_s: f64::INFINITY }
+            } else {
+                table.unwrap_or(Slo { ttft_s: 2.0, tpot_s: 0.2 })
+            };
+            let slo = Slo {
+                ttft_s: w.get("ttft_s").and_then(|v| v.as_f64()).unwrap_or(default.ttft_s),
+                tpot_s: w.get("tpot_s").and_then(|v| v.as_f64()).unwrap_or(default.tpot_s),
+            };
+            workloads.push(WorkloadCfg { model, rate, dataset, class, slo });
+        }
+
+        let slice_factor = j.get("slice_factor").and_then(|v| v.as_usize()).unwrap_or(1);
+        if slice_factor == 0 {
+            bail!("slice_factor must be >= 1");
+        }
+        Ok(DeployConfig { region, workloads, plan, slice_factor })
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<DeployConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_json(&text)
+    }
+
+    /// Expand workloads into planner slices via synthetic traces at each
+    /// workload's rate/dataset (deterministic per seed).
+    pub fn to_slices(&self, duration_s: f64, seed: u64)
+        -> Vec<crate::planner::slicing::Slice> {
+        use crate::planner::slicing::{cluster_slices, slice_trace};
+        use crate::workload::{generate_trace, Arrivals};
+        let mut all = Vec::new();
+        for (i, w) in self.workloads.iter().enumerate() {
+            let m = crate::models::llm(&w.model).unwrap();
+            let tr = generate_trace(Arrivals::Poisson { rate: w.rate }, w.dataset,
+                                    w.class, duration_s, seed ^ i as u64);
+            let mut slices = slice_trace(m, &tr, duration_s, w.slo, self.slice_factor);
+            // slice_trace derives offline SLOs itself; online keep w.slo.
+            all.append(&mut slices);
+        }
+        cluster_slices(&all)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GOOD: &str = r#"{
+        "region": "california",
+        "strategy": {"reuse": true, "rightsize": false, "reduce": true,
+                     "recycle": true, "alpha": 0.8},
+        "workloads": [
+            {"model": "llama-8b", "rate": 10.0, "dataset": "sharegpt",
+             "class": "online", "ttft_s": 0.4},
+            {"model": "llama-8b", "rate": 4.0, "dataset": "longbench",
+             "class": "offline"}
+        ],
+        "gpu_menu": ["L4", "H100"],
+        "slice_factor": 2
+    }"#;
+
+    #[test]
+    fn parses_full_config() {
+        let c = DeployConfig::from_json(GOOD).unwrap();
+        assert_eq!(c.region, Region::California);
+        assert_eq!(c.plan.ci, 261.0);
+        assert_eq!(c.plan.alpha, 0.8);
+        assert!(c.plan.cpu_reuse && !c.plan.gpu_menu.contains(&"A100-40"));
+        assert_eq!(c.plan.gpu_menu, vec!["L4", "H100"]);
+        assert_eq!(c.workloads.len(), 2);
+        assert_eq!(c.workloads[0].slo.ttft_s, 0.4);   // override
+        assert_eq!(c.workloads[0].slo.tpot_s, 0.1);   // table default
+        assert_eq!(c.workloads[1].slo.ttft_s, OFFLINE_DEADLINE_S);
+        assert_eq!(c.slice_factor, 2);
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        assert!(DeployConfig::from_json("{}").is_err());
+        let bad_model = GOOD.replace("llama-8b", "gpt-9");
+        assert!(DeployConfig::from_json(&bad_model).is_err());
+        let bad_gpu = GOOD.replace("\"H100\"", "\"B200\"");
+        assert!(DeployConfig::from_json(&bad_gpu).is_err());
+        let bad_alpha = GOOD.replace("0.8", "1.8");
+        assert!(DeployConfig::from_json(&bad_alpha).is_err());
+        let bad_rate = GOOD.replace("10.0", "-1");
+        assert!(DeployConfig::from_json(&bad_rate).is_err());
+    }
+
+    #[test]
+    fn slices_and_plan_end_to_end() {
+        let c = DeployConfig::from_json(GOOD).unwrap();
+        let slices = c.to_slices(120.0, 42);
+        assert!(!slices.is_empty());
+        let total: f64 = slices.iter().map(|s| s.rate).sum();
+        assert!(total > 5.0, "rate lost in slicing: {total}");
+        let p = crate::planner::plan(&slices, &c.plan);
+        assert!(p.total_gpus() > 0);
+    }
+
+    #[test]
+    fn region_aliases() {
+        assert_eq!(parse_region("LOW").unwrap(), Region::SwedenNorth);
+        assert_eq!(parse_region("miso").unwrap(), Region::Midcontinent);
+        assert!(parse_region("mars").is_err());
+    }
+}

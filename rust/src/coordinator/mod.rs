@@ -1,0 +1,297 @@
+//! L3 serving coordinator: admission, continuous batching, and metrics over
+//! the AOT engine (runtime/).
+//!
+//! This is the *real* (non-simulated) request path used by the end-to-end
+//! example: requests enter online/offline queues, the scheduler admits them
+//! into free KV slots (online first — the paper's pool priority), prefill
+//! runs on the smallest fitting bucket, and all active slots advance
+//! together through batched decode steps — vLLM-style iteration-level
+//! continuous batching, sized to the AOT decode bucket.
+
+use crate::runtime::engine::{argmax, sample_topk, Engine, KvCache};
+use crate::runtime::tokenizer;
+use crate::util::rng::Rng;
+use crate::workload::RequestClass;
+use anyhow::Result;
+use std::collections::VecDeque;
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct ServeRequest {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    pub max_new_tokens: usize,
+    pub class: RequestClass,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    Eos,
+    MaxTokens,
+    MaxSeq,
+    Rejected,
+}
+
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub id: u64,
+    pub class: RequestClass,
+    pub output: Vec<i32>,
+    pub prompt_len: usize,
+    /// Submit → first token.
+    pub ttft_s: f64,
+    /// Submit → finish.
+    pub e2e_s: f64,
+    /// Mean time per output token after the first.
+    pub tpot_s: f64,
+    pub finish: FinishReason,
+}
+
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// Decode bucket (batch slots). Must be one of the AOT decode buckets.
+    pub decode_batch: usize,
+    pub temperature: f32,
+    pub top_k: usize,
+    pub seed: u64,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig { decode_batch: 8, temperature: 0.0, top_k: 1, seed: 0 }
+    }
+}
+
+struct Active {
+    id: u64,
+    class: RequestClass,
+    prompt_len: usize,
+    submit: Instant,
+    first_token_at: Instant,
+    /// Next decode position (index of the slot the next token's KV writes).
+    pos: i32,
+    last_token: i32,
+    output: Vec<i32>,
+    max_new: usize,
+}
+
+/// Aggregate serving metrics.
+#[derive(Debug, Clone, Default)]
+pub struct ServeStats {
+    pub completed: usize,
+    pub generated_tokens: usize,
+    pub decode_steps: usize,
+    /// Sum over steps of active slots (for mean batch occupancy).
+    pub occupancy_sum: usize,
+    pub prefill_exec_s: f64,
+    pub decode_exec_s: f64,
+    pub marshal_s: f64,
+}
+
+impl ServeStats {
+    pub fn mean_batch_occupancy(&self) -> f64 {
+        if self.decode_steps == 0 {
+            return 0.0;
+        }
+        self.occupancy_sum as f64 / self.decode_steps as f64
+    }
+}
+
+pub struct Coordinator<'e> {
+    engine: &'e Engine,
+    cfg: CoordinatorConfig,
+    cache: KvCache,
+    slots: Vec<Option<Active>>,
+    online_q: VecDeque<(ServeRequest, Instant)>,
+    offline_q: VecDeque<(ServeRequest, Instant)>,
+    rng: Rng,
+    pub stats: ServeStats,
+    completions: Vec<Completion>,
+}
+
+impl<'e> Coordinator<'e> {
+    pub fn new(engine: &'e Engine, cfg: CoordinatorConfig) -> Result<Self> {
+        anyhow::ensure!(
+            engine.decode_buckets().contains(&cfg.decode_batch),
+            "decode bucket {} not AOT-compiled (have {:?})",
+            cfg.decode_batch, engine.decode_buckets()
+        );
+        let cache = engine.empty_cache(cfg.decode_batch);
+        let slots = (0..cfg.decode_batch).map(|_| None).collect();
+        Ok(Coordinator {
+            engine,
+            rng: Rng::new(cfg.seed),
+            cfg,
+            cache,
+            slots,
+            online_q: VecDeque::new(),
+            offline_q: VecDeque::new(),
+            stats: ServeStats::default(),
+            completions: Vec::new(),
+        })
+    }
+
+    /// Enqueue a request (timestamped now).
+    pub fn submit(&mut self, req: ServeRequest) {
+        let entry = (req, Instant::now());
+        match entry.0.class {
+            RequestClass::Online => self.online_q.push_back(entry),
+            RequestClass::Offline => self.offline_q.push_back(entry),
+        }
+    }
+
+    pub fn pending(&self) -> usize {
+        self.online_q.len() + self.offline_q.len()
+    }
+
+    pub fn active(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.pending() == 0 && self.active() == 0
+    }
+
+    fn free_slot(&self) -> Option<usize> {
+        self.slots.iter().position(|s| s.is_none())
+    }
+
+    fn next_queued(&mut self) -> Option<(ServeRequest, Instant)> {
+        // Online pool drains first (paper's priority admission).
+        self.online_q.pop_front().or_else(|| self.offline_q.pop_front())
+    }
+
+    /// Admit as many queued requests as fit into free slots.
+    fn admit(&mut self) -> Result<()> {
+        while self.free_slot().is_some() && self.pending() > 0 {
+            let (req, submit) = self.next_queued().unwrap();
+            let slot = self.free_slot().unwrap();
+            // Reject prompts no prefill bucket can hold.
+            if self.engine.manifest.pick_prefill_bucket(1, req.tokens.len()).is_none() {
+                self.completions.push(Completion {
+                    id: req.id,
+                    class: req.class,
+                    output: Vec::new(),
+                    prompt_len: req.tokens.len(),
+                    ttft_s: 0.0,
+                    e2e_s: 0.0,
+                    tpot_s: 0.0,
+                    finish: FinishReason::Rejected,
+                });
+                continue;
+            }
+            let out = self.engine.prefill(std::slice::from_ref(&req.tokens))?;
+            self.stats.prefill_exec_s += out.timing.exec_s;
+            self.stats.marshal_s += out.timing.marshal_s;
+            self.cache.copy_slot_from(slot, &out.cache, 0);
+            let first = self.sample(&out.logits[0]);
+            let now = Instant::now();
+            self.slots[slot] = Some(Active {
+                id: req.id,
+                class: req.class,
+                prompt_len: req.tokens.len(),
+                submit,
+                first_token_at: now,
+                pos: req.tokens.len() as i32,
+                last_token: first,
+                output: vec![first],
+                max_new: req.max_new_tokens.max(1),
+            });
+        }
+        Ok(())
+    }
+
+    fn sample(&mut self, logits: &[f32]) -> i32 {
+        if self.cfg.temperature <= 0.0 || self.cfg.top_k <= 1 {
+            argmax(logits)
+        } else {
+            sample_topk(logits, self.cfg.temperature, self.cfg.top_k, self.rng.f64())
+        }
+    }
+
+    /// One scheduler iteration: admit, then one batched decode step.
+    /// Returns the number of tokens generated this step.
+    pub fn step(&mut self) -> Result<usize> {
+        self.admit()?;
+        let occupancy = self.active();
+        if occupancy == 0 {
+            return Ok(0);
+        }
+
+        let b = self.cfg.decode_batch;
+        let mut tokens = vec![tokenizer::PAD; b];
+        let mut pos = vec![0i32; b];
+        for (i, s) in self.slots.iter().enumerate() {
+            if let Some(a) = s {
+                tokens[i] = a.last_token;
+                pos[i] = a.pos;
+            }
+        }
+        let (logits, timing) = self.engine.decode_step(&mut self.cache, &tokens, &pos)?;
+        self.stats.decode_exec_s += timing.exec_s;
+        self.stats.marshal_s += timing.marshal_s;
+        self.stats.decode_steps += 1;
+        self.stats.occupancy_sum += occupancy;
+
+        let max_seq = self.engine.max_seq() as i32;
+        let mut produced = 0;
+        for i in 0..b {
+            // Sample next token for live slots; detach finished ones.
+            let Some(a) = self.slots[i].as_mut() else { continue };
+            let tok = if self.cfg.temperature <= 0.0 || self.cfg.top_k <= 1 {
+                argmax(&logits[i])
+            } else {
+                sample_topk(&logits[i], self.cfg.temperature, self.cfg.top_k,
+                            self.rng.f64())
+            };
+            a.output.push(tok);
+            a.last_token = tok;
+            a.pos += 1;
+            produced += 1;
+            self.stats.generated_tokens += 1;
+
+            let finish = if tok == tokenizer::EOS {
+                Some(FinishReason::Eos)
+            } else if a.output.len() >= a.max_new {
+                Some(FinishReason::MaxTokens)
+            } else if a.pos + 1 >= max_seq {
+                Some(FinishReason::MaxSeq)
+            } else {
+                None
+            };
+            if let Some(f) = finish {
+                let a = self.slots[i].take().unwrap();
+                let now = Instant::now();
+                let ttft = (a.first_token_at - a.submit).as_secs_f64();
+                let e2e = (now - a.submit).as_secs_f64();
+                let n = a.output.len();
+                self.completions.push(Completion {
+                    id: a.id,
+                    class: a.class,
+                    tpot_s: if n > 1 { (e2e - ttft) / (n - 1) as f64 } else { 0.0 },
+                    output: a.output,
+                    prompt_len: a.prompt_len,
+                    ttft_s: ttft,
+                    e2e_s: e2e,
+                    finish: f,
+                });
+                self.stats.completed += 1;
+                self.cache.clear_slot(i);
+            }
+        }
+        Ok(produced)
+    }
+
+    /// Drive until every submitted request completes; returns completions.
+    pub fn run_to_completion(&mut self) -> Result<Vec<Completion>> {
+        while !self.is_idle() {
+            self.step()?;
+        }
+        Ok(std::mem::take(&mut self.completions))
+    }
+
+    /// Drain currently-finished completions without waiting.
+    pub fn take_completions(&mut self) -> Vec<Completion> {
+        std::mem::take(&mut self.completions)
+    }
+}

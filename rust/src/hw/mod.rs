@@ -1,0 +1,192 @@
+//! Hardware catalog: GPU / CPU / platform specs driving the carbon and
+//! performance models.
+//!
+//! The paper's evaluation spans PCIe H100, A100, A6000, L4, A40 (plus T4,
+//! V100, GH200 in the lifecycle studies) and dual-socket Sapphire Rapids
+//! hosts. With no physical fleet available (DESIGN.md §1) the catalog holds
+//! published specs: peak compute, memory technology/capacity/bandwidth, TDP,
+//! idle power, die area + process node, PCB area, and cloud cost — exactly
+//! the inputs the paper's offline profiling feeds its planner.
+
+pub mod platform;
+
+/// Memory technologies with distinct embodied-carbon intensities (Table 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MemTech {
+    Ddr4,
+    Ddr5,
+    Lpddr5,
+    Gddr5,
+    Gddr6,
+    Hbm2,
+    Hbm2e,
+    Hbm3,
+    Hbm3e,
+}
+
+/// One GPU SKU.
+#[derive(Debug, Clone)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    pub year: u32,
+    /// Peak dense FP16/BF16 tensor throughput, TFLOP/s.
+    pub fp16_tflops: f64,
+    pub mem_gb: f64,
+    pub mem_tech: MemTech,
+    pub mem_bw_gbs: f64,
+    pub tdp_w: f64,
+    pub idle_w: f64,
+    pub die_mm2: f64,
+    /// Logic process node in nm (drives the ACT-style die model).
+    pub process_nm: f64,
+    /// Board PCB area, cm².
+    pub pcb_cm2: f64,
+    /// Representative cloud price, $/hr.
+    pub cost_hr: f64,
+}
+
+/// One CPU host SKU (socket-level).
+#[derive(Debug, Clone)]
+pub struct CpuSpec {
+    pub name: &'static str,
+    pub cores: usize,
+    /// Sustained BF16/AMX throughput across all cores, TFLOP/s.
+    pub bf16_tflops: f64,
+    /// Aggregate DRAM bandwidth, GB/s.
+    pub mem_bw_gbs: f64,
+    pub tdp_w: f64,
+    pub idle_w: f64,
+    pub die_mm2: f64,
+    pub process_nm: f64,
+}
+
+pub const fn gpu_catalog() -> &'static [GpuSpec] {
+    &[
+        GpuSpec { name: "K80", year: 2014, fp16_tflops: 8.7, mem_gb: 24.0,
+                  mem_tech: MemTech::Gddr5, mem_bw_gbs: 480.0, tdp_w: 300.0,
+                  idle_w: 60.0, die_mm2: 1122.0, process_nm: 28.0,
+                  pcb_cm2: 580.0, cost_hr: 0.45 },
+        GpuSpec { name: "P100", year: 2016, fp16_tflops: 21.2, mem_gb: 16.0,
+                  mem_tech: MemTech::Hbm2, mem_bw_gbs: 732.0, tdp_w: 300.0,
+                  idle_w: 30.0, die_mm2: 610.0, process_nm: 16.0,
+                  pcb_cm2: 540.0, cost_hr: 0.95 },
+        GpuSpec { name: "V100", year: 2017, fp16_tflops: 125.0, mem_gb: 32.0,
+                  mem_tech: MemTech::Hbm2, mem_bw_gbs: 900.0, tdp_w: 300.0,
+                  idle_w: 35.0, die_mm2: 815.0, process_nm: 12.0,
+                  pcb_cm2: 540.0, cost_hr: 1.46 },
+        GpuSpec { name: "T4", year: 2018, fp16_tflops: 65.0, mem_gb: 16.0,
+                  mem_tech: MemTech::Gddr6, mem_bw_gbs: 320.0, tdp_w: 70.0,
+                  idle_w: 10.0, die_mm2: 545.0, process_nm: 12.0,
+                  pcb_cm2: 320.0, cost_hr: 0.35 },
+        GpuSpec { name: "A40", year: 2020, fp16_tflops: 149.7, mem_gb: 48.0,
+                  mem_tech: MemTech::Gddr6, mem_bw_gbs: 696.0, tdp_w: 300.0,
+                  idle_w: 28.0, die_mm2: 628.0, process_nm: 8.0,
+                  pcb_cm2: 560.0, cost_hr: 1.10 },
+        GpuSpec { name: "A6000", year: 2020, fp16_tflops: 154.8, mem_gb: 48.0,
+                  mem_tech: MemTech::Gddr6, mem_bw_gbs: 768.0, tdp_w: 300.0,
+                  idle_w: 25.0, die_mm2: 628.0, process_nm: 8.0,
+                  pcb_cm2: 560.0, cost_hr: 1.28 },
+        GpuSpec { name: "A100-40", year: 2020, fp16_tflops: 312.0, mem_gb: 40.0,
+                  mem_tech: MemTech::Hbm2, mem_bw_gbs: 1555.0, tdp_w: 400.0,
+                  idle_w: 50.0, die_mm2: 826.0, process_nm: 7.0,
+                  pcb_cm2: 600.0, cost_hr: 2.25 },
+        GpuSpec { name: "A100-80", year: 2021, fp16_tflops: 312.0, mem_gb: 80.0,
+                  mem_tech: MemTech::Hbm2e, mem_bw_gbs: 2039.0, tdp_w: 400.0,
+                  idle_w: 52.0, die_mm2: 826.0, process_nm: 7.0,
+                  pcb_cm2: 600.0, cost_hr: 3.05 },
+        GpuSpec { name: "L4", year: 2023, fp16_tflops: 121.0, mem_gb: 24.0,
+                  mem_tech: MemTech::Gddr6, mem_bw_gbs: 300.0, tdp_w: 72.0,
+                  idle_w: 13.0, die_mm2: 294.0, process_nm: 5.0,
+                  pcb_cm2: 320.0, cost_hr: 0.70 },
+        GpuSpec { name: "H100", year: 2022, fp16_tflops: 756.0, mem_gb: 80.0,
+                  mem_tech: MemTech::Hbm3, mem_bw_gbs: 2000.0, tdp_w: 350.0,
+                  idle_w: 60.0, die_mm2: 814.0, process_nm: 4.0,
+                  pcb_cm2: 600.0, cost_hr: 4.76 },
+        GpuSpec { name: "GH200", year: 2023, fp16_tflops: 989.0, mem_gb: 96.0,
+                  mem_tech: MemTech::Hbm3e, mem_bw_gbs: 4000.0, tdp_w: 700.0,
+                  idle_w: 90.0, die_mm2: 814.0, process_nm: 4.0,
+                  pcb_cm2: 800.0, cost_hr: 5.99 },
+    ]
+}
+
+pub const fn cpu_catalog() -> &'static [CpuSpec] {
+    &[
+        // Dual-socket SPR 8480+ (2x56 cores); the paper's host testbed.
+        CpuSpec { name: "SPR-112", cores: 112, bf16_tflops: 40.0,
+                  mem_bw_gbs: 614.0, tdp_w: 700.0, idle_w: 160.0,
+                  die_mm2: 1510.0, process_nm: 7.0 },
+        // Single-socket 56-core variant (Fig 18's 56-core sweep).
+        CpuSpec { name: "SPR-56", cores: 56, bf16_tflops: 20.0,
+                  mem_bw_gbs: 307.0, tdp_w: 350.0, idle_w: 85.0,
+                  die_mm2: 755.0, process_nm: 7.0 },
+        // Older host generations (Recycle studies).
+        CpuSpec { name: "SKX-48", cores: 48, bf16_tflops: 4.5,
+                  mem_bw_gbs: 256.0, tdp_w: 330.0, idle_w: 80.0,
+                  die_mm2: 1400.0, process_nm: 14.0 },
+    ]
+}
+
+pub fn gpu(name: &str) -> Option<&'static GpuSpec> {
+    gpu_catalog().iter().find(|g| g.name == name)
+}
+
+pub fn cpu(name: &str) -> Option<&'static CpuSpec> {
+    cpu_catalog().iter().find(|c| c.name == name)
+}
+
+/// The GPU pool the planner chooses from by default (paper §5).
+pub fn serving_gpus() -> Vec<&'static GpuSpec> {
+    ["L4", "A40", "A6000", "A100-40", "A100-80", "H100"]
+        .iter()
+        .map(|n| gpu(n).unwrap())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_lookup() {
+        assert_eq!(gpu("A100-40").unwrap().mem_gb, 40.0);
+        assert_eq!(cpu("SPR-112").unwrap().cores, 112);
+        assert!(gpu("B300").is_none());
+    }
+
+    #[test]
+    fn generations_trend_upward() {
+        // Fig 4's premise: newer generations raise compute AND embodied
+        // inputs (die on denser nodes, more advanced memory).
+        let v100 = gpu("V100").unwrap();
+        let h100 = gpu("H100").unwrap();
+        assert!(h100.fp16_tflops > 4.0 * v100.fp16_tflops);
+        assert!(h100.process_nm < v100.process_nm);
+    }
+
+    #[test]
+    fn l4_is_lean() {
+        // Paper: "compared to an NVIDIA H100, an NVIDIA L4 incurs 3x lower
+        // embodied carbon" — requires much smaller die/board/TDP.
+        let l4 = gpu("L4").unwrap();
+        let h100 = gpu("H100").unwrap();
+        assert!(l4.die_mm2 < 0.4 * h100.die_mm2);
+        assert!(l4.tdp_w < 0.25 * h100.tdp_w);
+    }
+
+    #[test]
+    fn cpu_gpu_bandwidth_gap_smaller_than_compute_gap() {
+        // Fig 8's premise: the CPU/GPU memory-bandwidth gap is far smaller
+        // than the compute gap, which is what makes decode CPU-viable.
+        let spr = cpu("SPR-112").unwrap();
+        let a100 = gpu("A100-40").unwrap();
+        let bw_gap = a100.mem_bw_gbs / spr.mem_bw_gbs;
+        let compute_gap = a100.fp16_tflops / spr.bf16_tflops;
+        assert!(bw_gap < 3.0, "bw gap {bw_gap}");
+        assert!(compute_gap > 2.0 * bw_gap, "compute {compute_gap} bw {bw_gap}");
+    }
+
+    #[test]
+    fn serving_pool_complete() {
+        assert_eq!(serving_gpus().len(), 6);
+    }
+}

@@ -1,0 +1,157 @@
+//! Full inference platforms: host system + attached GPUs.
+//!
+//! Mirrors the cloud offerings the paper analyzes in Fig 5 (Azure /
+//! LambdaLabs instances with 1-8 GPUs) and the lean "Reduce" SKUs EcoServe
+//! proposes (§4.1.3).
+
+use super::{CpuSpec, GpuSpec, MemTech, cpu, gpu};
+
+/// Host-side configuration (everything that is not the accelerator).
+#[derive(Debug, Clone)]
+pub struct HostSpec {
+    pub cpu: CpuSpec,
+    pub dram_gb: f64,
+    pub dram_tech: MemTech,
+    pub ssd_gb: f64,
+    pub hdd_count: usize,
+    pub nic_count: usize,
+    /// Mainboard printed-wiring-board area, cm² (Dell R740: 1925).
+    pub pcb_cm2: f64,
+}
+
+impl HostSpec {
+    /// DRAM+SSD idle draw (paper: SSD ≈ 2.8 W/TB idle; DRAM ≈ 0.375 W/GB
+    /// self-refresh+background, a standard DDR4/5 figure).
+    pub fn mem_idle_w(&self) -> f64 {
+        self.ssd_gb / 1000.0 * 2.8 + self.dram_gb * 0.375
+    }
+
+    pub fn idle_w(&self) -> f64 {
+        self.cpu.idle_w + self.mem_idle_w()
+    }
+
+    pub fn tdp_w(&self) -> f64 {
+        self.cpu.tdp_w + self.mem_idle_w() * 2.0
+    }
+}
+
+/// A complete platform: one host + `gpu_count` × `gpu`.
+#[derive(Debug, Clone)]
+pub struct Platform {
+    pub name: String,
+    pub host: HostSpec,
+    pub gpu: GpuSpec,
+    pub gpu_count: usize,
+}
+
+impl Platform {
+    pub fn tdp_w(&self) -> f64 {
+        self.host.tdp_w() + self.gpu.tdp_w * self.gpu_count as f64
+    }
+
+    pub fn idle_w(&self) -> f64 {
+        self.host.idle_w() + self.gpu.idle_w * self.gpu_count as f64
+    }
+}
+
+/// Azure ND96asr-A100-v4-like: 8×A100-40, ~900 GB DRAM, 6.5 TB NVMe.
+pub fn azure_nd96_a100() -> Platform {
+    Platform {
+        name: "ND96asr-A100-v4".into(),
+        host: HostSpec {
+            cpu: cpu("SPR-112").unwrap().clone(),
+            dram_gb: 900.0,
+            dram_tech: MemTech::Ddr4,
+            ssd_gb: 6500.0,
+            hdd_count: 1,
+            nic_count: 2,
+            pcb_cm2: 1925.0,
+        },
+        gpu: gpu("A100-40").unwrap().clone(),
+        gpu_count: 8,
+    }
+}
+
+/// A standard host scaled to the number/size of the attached GPUs — how
+/// cloud SKUs are actually provisioned (host memory ≈ 2× aggregate HBM,
+/// SSD ≈ 10× HBM for model/dataset staging).
+pub fn standard_platform(gpu_name: &str, gpu_count: usize) -> Platform {
+    let g = gpu(gpu_name).unwrap_or_else(|| panic!("unknown gpu {gpu_name}")).clone();
+    let hbm_total = g.mem_gb * gpu_count as f64;
+    let host_cpu = if gpu_count > 4 { "SPR-112" } else { "SPR-56" };
+    Platform {
+        name: format!("{gpu_name}x{gpu_count}"),
+        host: HostSpec {
+            cpu: cpu(host_cpu).unwrap().clone(),
+            dram_gb: (2.0 * hbm_total).max(128.0),
+            dram_tech: MemTech::Ddr4,
+            ssd_gb: (10.0 * hbm_total).max(1000.0),
+            hdd_count: 1,
+            nic_count: if gpu_count > 4 { 2 } else { 1 },
+            pcb_cm2: if gpu_count > 4 { 1925.0 } else { 1200.0 },
+        },
+        gpu: g,
+        gpu_count,
+    }
+}
+
+/// EcoServe "Reduce" SKU (§4.1.3): DRAM sized by Eq. 1 (KV working set, not
+/// 2× HBM), SSD sized by Eq. 2 (1.2× GPU memory), no HDD, single NIC.
+///
+/// `kv_working_set_gb` is the P90 aggregated-context KV footprint the
+/// planner profiles per workload (models::LlmSpec::kv_bytes_per_token).
+pub fn reduced_platform(gpu_name: &str, gpu_count: usize,
+                        model_weight_gb: f64, kv_working_set_gb: f64) -> Platform {
+    let mut p = standard_platform(gpu_name, gpu_count);
+    let hbm_total = p.gpu.mem_gb * gpu_count as f64;
+    p.name = format!("{gpu_name}x{gpu_count}-reduced");
+    // Eq 1: weights (one layer pinned is enough for streaming, but keep the
+    // full model resident for robustness) + KV offload working set.
+    p.host.dram_gb = (model_weight_gb + kv_working_set_gb).max(32.0);
+    // Eq 2: min SSD = 1.2 x GPU memory.
+    p.host.ssd_gb = 1.2 * hbm_total;
+    p.host.hdd_count = 0;
+    p.host.nic_count = 1;
+    p.host.pcb_cm2 *= 0.85; // fewer DIMM slots / drive bays
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn azure_instance_shape() {
+        let p = azure_nd96_a100();
+        assert_eq!(p.gpu_count, 8);
+        assert!(p.host.dram_gb >= 900.0);
+        assert!(p.tdp_w() > 8.0 * 400.0);
+    }
+
+    #[test]
+    fn standard_scales_with_gpus() {
+        let small = standard_platform("L4", 1);
+        let big = standard_platform("H100", 8);
+        assert!(big.host.dram_gb > small.host.dram_gb);
+        assert!(big.host.ssd_gb > small.host.ssd_gb);
+    }
+
+    #[test]
+    fn reduce_shrinks_memory_subsystem() {
+        let std = standard_platform("A100-80", 8);
+        let red = reduced_platform("A100-80", 8, 140.0, 80.0);
+        assert!(red.host.dram_gb < std.host.dram_gb);
+        assert!(red.host.ssd_gb < std.host.ssd_gb);
+        assert_eq!(red.host.hdd_count, 0);
+        // Eq 2: 1.2 x 640 GB HBM.
+        assert!((red.host.ssd_gb - 768.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn idle_power_accounts_for_memory() {
+        let p = azure_nd96_a100();
+        // 6.5 TB SSD alone is ~18 W idle; with 900 GB DRAM the host memory
+        // subsystem must dominate CPU idle.
+        assert!(p.host.mem_idle_w() > 300.0);
+    }
+}

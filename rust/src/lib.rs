@@ -1,0 +1,26 @@
+//! # EcoServe — carbon-aware AI inference systems
+//!
+//! Reproduction of "EcoServe: Designing Carbon-Aware AI Inference Systems"
+//! (CS.DC 2025) as a three-layer Rust + JAX + Pallas serving stack:
+//! Layer 1/2 (Pallas kernels + JAX model) are AOT-lowered to HLO text at
+//! build time; Layer 3 (this crate) owns the request path, the carbon and
+//! performance models, the 4R strategies, the ILP planner, and the cluster
+//! simulator. See DESIGN.md for the system inventory and experiment index.
+
+pub mod bench;
+pub mod carbon;
+pub mod config;
+pub mod coordinator;
+pub mod runtime;
+pub mod hw;
+pub mod models;
+pub mod planner;
+pub mod perf;
+pub mod workload;
+pub mod sim;
+pub mod solver;
+pub mod strategies;
+pub mod testkit;
+pub mod util;
+
+pub fn version() -> &'static str { env!("CARGO_PKG_VERSION") }

@@ -1,0 +1,117 @@
+//! `ecoserve` CLI: serve (real AOT model), plan (capacity planner),
+//! simulate (cluster sim), report (carbon models).
+
+use ecoserve::util::cli::Args;
+
+const USAGE: &str = "\
+ecoserve <command> [--flags]
+
+commands:
+  serve     --artifacts DIR --requests N --rate R   serve the AOT model
+  plan      --model NAME --rate R --ci CI [--config F]  run the capacity planner
+  simulate  --model NAME --gpus N --gpu SKU --rate R  run the cluster sim
+  report    --gpu SKU                               embodied-carbon breakdown
+";
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    match args.subcommand() {
+        Some("serve") => serve(&args),
+        Some("plan") => { plan(&args); Ok(()) }
+        Some("simulate") => { simulate(&args); Ok(()) }
+        Some("report") => { report(&args); Ok(()) }
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn serve(args: &Args) -> anyhow::Result<()> {
+    use ecoserve::coordinator::{Coordinator, CoordinatorConfig, ServeRequest};
+    use ecoserve::runtime::{engine::Engine, tokenizer};
+    use ecoserve::workload::RequestClass;
+    let dir = std::path::PathBuf::from(args.str("artifacts", "artifacts"));
+    let eng = Engine::load(&dir)?;
+    let mut coord = Coordinator::new(&eng, CoordinatorConfig::default())?;
+    let n = args.usize("requests", 8);
+    for i in 0..n {
+        coord.submit(ServeRequest {
+            id: i as u64,
+            tokens: tokenizer::encode(&format!("request {i}: carbon-aware serving")),
+            max_new_tokens: args.usize("max-new-tokens", 16),
+            class: RequestClass::Online,
+        });
+    }
+    let done = coord.run_to_completion()?;
+    for c in &done {
+        println!("req {}: {} tokens, ttft {:.1} ms, tpot {:.2} ms",
+                 c.id, c.output.len(), c.ttft_s * 1e3, c.tpot_s * 1e3);
+    }
+    println!("mean batch occupancy: {:.2}", coord.stats.mean_batch_occupancy());
+    Ok(())
+}
+
+fn plan(args: &Args) {
+    use ecoserve::planner::slicing::{cluster_slices, slice_trace};
+    use ecoserve::strategies::Strategy;
+    use ecoserve::workload::slo::{slo_for, Slo};
+    use ecoserve::workload::*;
+    if let Some(path) = args.opt_str("config") {
+        // Config-file driven planning (config::DeployConfig).
+        let cfg = ecoserve::config::DeployConfig::load(std::path::Path::new(path))
+            .expect("config");
+        let slices = cfg.to_slices(300.0, args.u64("seed", 42));
+        let p = ecoserve::planner::plan(&slices, &cfg.plan);
+        println!("region {} (CI {} g/kWh), {} slices",
+                 cfg.region.name(), cfg.region.avg_ci(), slices.len());
+        println!("fleet: {:?}", p.counts);
+        println!("carbon: {:.3} kg/hr (op {:.3} + emb {:.3}), cost ${:.2}/hr",
+                 p.carbon_kg_per_hr(), p.op_kg_per_hr, p.emb_kg_per_hr, p.cost_hr);
+        return;
+    }
+    let model = args.str("model", "llama-8b");
+    let m = ecoserve::models::llm(&model).expect("unknown model");
+    let slo = slo_for(&model, false).map(|w| w.slo)
+        .unwrap_or(Slo { ttft_s: 2.0, tpot_s: 0.2 });
+    let tr = generate_trace(Arrivals::Poisson { rate: args.f64("rate", 10.0) },
+                            LengthDist::ShareGpt, RequestClass::Online, 300.0, 1);
+    let slices = cluster_slices(&slice_trace(m, &tr, 300.0, slo, 1));
+    let p = Strategy::EcoFull.plan(&slices, args.f64("ci", 261.0));
+    println!("fleet: {:?}", p.counts);
+    println!("carbon: {:.3} kg/hr (op {:.3} + emb {:.3}), cost ${:.2}/hr",
+             p.carbon_kg_per_hr(), p.op_kg_per_hr, p.emb_kg_per_hr, p.cost_hr);
+    println!("solved in {:.0} ms / {} nodes", p.solve_s * 1e3, p.nodes);
+}
+
+fn simulate(args: &Args) {
+    use ecoserve::sim::*;
+    use ecoserve::workload::*;
+    let model = args.str("model", "llama-8b");
+    let m = ecoserve::models::llm(&model).expect("unknown model");
+    let tr = generate_trace(Arrivals::Poisson { rate: args.f64("rate", 4.0) },
+                            LengthDist::ShareGpt, RequestClass::Online,
+                            args.f64("duration", 120.0), 1);
+    let n = args.usize("gpus", 4);
+    let servers = homogeneous_fleet(&args.str("gpu", "A100-40"), n, m, 2048);
+    let cfg = SimConfig { emb_kg_per_hr: vec![0.005; n], servers,
+                          router: Router::WorkloadAware,
+                          ci: args.f64("ci", 261.0), kv_transfer_bw: 64e9 };
+    let mut r = simulate(m, &tr, &cfg, 0.5, 0.1);
+    println!("completed {} | TTFT p50 {:.0} ms p90 {:.0} ms | TPOT p50 {:.1} ms",
+             r.completed, r.ttft.p50() * 1e3, r.ttft.p90() * 1e3,
+             r.tpot.p50() * 1e3);
+    println!("throughput {:.1} tok/s | energy {:.1} kJ | carbon {:.4} kg (op {:.4} emb {:.4}) | SLO {:.1}%",
+             r.throughput_tok_s(), r.energy_j / 1e3, r.carbon_kg(), r.op_kg,
+             r.emb_kg, 100.0 * r.slo_attainment);
+}
+
+fn report(args: &Args) {
+    use ecoserve::carbon::embodied::*;
+    let gpu = args.str("gpu", "A100-40");
+    let g = ecoserve::hw::gpu(&gpu).expect("unknown gpu");
+    let b = gpu_embodied(g);
+    println!("{gpu} embodied breakdown (kgCO2e):");
+    println!("  soc {:.1} | memory {:.1} | pcb {:.1} | cooling {:.1} | pdn {:.1} | total {:.1}",
+             b.soc, b.memory, b.pcb, b.cooling, b.pdn, b.total());
+}

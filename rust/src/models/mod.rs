@@ -1,0 +1,185 @@
+//! LLM descriptors: the model suite the paper evaluates (§5), with the
+//! per-phase FLOPs / bytes / KV-footprint arithmetic the roofline
+//! performance model consumes.
+
+/// Architecture descriptor. `active_params_b` differs from `params_b` for
+/// MoE models (Mixtral activates 2 of 8 experts).
+#[derive(Debug, Clone)]
+pub struct LlmSpec {
+    pub name: &'static str,
+    /// Total parameters, billions.
+    pub params_b: f64,
+    /// Parameters active per token, billions.
+    pub active_params_b: f64,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    /// FP16/BF16 weight bytes.
+    pub dtype_bytes: f64,
+}
+
+impl LlmSpec {
+    pub fn weight_gb(&self) -> f64 {
+        self.params_b * self.dtype_bytes
+    }
+
+    /// KV-cache bytes per token per sequence (both K and V, all layers).
+    pub fn kv_bytes_per_token(&self) -> f64 {
+        2.0 * self.n_layers as f64 * self.n_kv_heads as f64
+            * self.head_dim as f64 * self.dtype_bytes
+    }
+
+    /// Prefill FLOPs for a batch of `batch` prompts of length `prompt`.
+    /// 2·P per token for the dense path plus the quadratic attention term
+    /// (×2 matmuls, ×0.5 causal).
+    pub fn prefill_flops(&self, batch: usize, prompt: usize) -> f64 {
+        let tok = (batch * prompt) as f64;
+        let dense = 2.0 * self.active_params_b * 1e9 * tok;
+        let attn = 2.0 * self.n_layers as f64 * (batch as f64)
+            * (prompt as f64).powi(2) * self.d_model as f64;
+        dense + attn
+    }
+
+    /// HBM bytes moved during prefill (weights once per batch pass; the
+    /// activations are small relative to weights at serving batch sizes).
+    pub fn prefill_bytes(&self, batch: usize, prompt: usize) -> f64 {
+        let weights = self.params_b * 1e9 * self.dtype_bytes;
+        let kv_write = batch as f64 * prompt as f64 * self.kv_bytes_per_token();
+        weights + kv_write
+    }
+
+    /// FLOPs for one decode step across a batch at context length `ctx`.
+    pub fn decode_step_flops(&self, batch: usize, ctx: usize) -> f64 {
+        let dense = 2.0 * self.active_params_b * 1e9 * batch as f64;
+        // Attention: QK^T and PV, each 2·ctx·(kv_heads·head_dim)·group reads
+        // ≈ 4·ctx·d_model per layer per sequence.
+        let attn = 4.0 * self.n_layers as f64 * batch as f64 * ctx as f64
+            * self.d_model as f64;
+        dense + attn
+    }
+
+    /// HBM bytes for one decode step: full weight read + KV history read.
+    pub fn decode_step_bytes(&self, batch: usize, ctx: usize) -> f64 {
+        let weights = self.params_b * 1e9 * self.dtype_bytes;
+        let kv = batch as f64 * ctx as f64 * self.kv_bytes_per_token();
+        weights + kv
+    }
+
+    /// Arithmetic intensity (FLOPs/byte) of a decode step.
+    pub fn decode_intensity(&self, batch: usize, ctx: usize) -> f64 {
+        self.decode_step_flops(batch, ctx) / self.decode_step_bytes(batch, ctx)
+    }
+
+    /// Max batch fitting in `mem_gb` at context `ctx` (capacity model).
+    /// The 0.5 reserve covers activations, fragmentation, and runtime
+    /// buffers — calibrated to the paper's Fig 8 datapoint (A100-40 holds
+    /// batch ≈16 for Llama-8B at ctx 2048 in FP16).
+    pub fn max_batch(&self, mem_gb: f64, ctx: usize, tp: usize) -> usize {
+        let reserve = 0.5;
+        let avail = (mem_gb * tp as f64 * reserve - self.weight_gb()) * 1e9;
+        if avail <= 0.0 {
+            return 0;
+        }
+        (avail / (ctx as f64 * self.kv_bytes_per_token())) as usize
+    }
+}
+
+pub fn catalog() -> &'static [LlmSpec] {
+    &[
+        LlmSpec { name: "opt-125m", params_b: 0.125, active_params_b: 0.125,
+                  n_layers: 12, d_model: 768, n_heads: 12, n_kv_heads: 12,
+                  head_dim: 64, dtype_bytes: 2.0 },
+        LlmSpec { name: "gemma-2b", params_b: 2.6, active_params_b: 2.6,
+                  n_layers: 26, d_model: 2304, n_heads: 8, n_kv_heads: 4,
+                  head_dim: 256, dtype_bytes: 2.0 },
+        LlmSpec { name: "llama-8b", params_b: 8.0, active_params_b: 8.0,
+                  n_layers: 32, d_model: 4096, n_heads: 32, n_kv_heads: 8,
+                  head_dim: 128, dtype_bytes: 2.0 },
+        LlmSpec { name: "llama-13b", params_b: 13.0, active_params_b: 13.0,
+                  n_layers: 40, d_model: 5120, n_heads: 40, n_kv_heads: 40,
+                  head_dim: 128, dtype_bytes: 2.0 },
+        LlmSpec { name: "gemma-27b", params_b: 27.2, active_params_b: 27.2,
+                  n_layers: 46, d_model: 4608, n_heads: 32, n_kv_heads: 16,
+                  head_dim: 128, dtype_bytes: 2.0 },
+        LlmSpec { name: "mixtral-8x7b", params_b: 46.7, active_params_b: 12.9,
+                  n_layers: 32, d_model: 4096, n_heads: 32, n_kv_heads: 8,
+                  head_dim: 128, dtype_bytes: 2.0 },
+        LlmSpec { name: "llama-70b", params_b: 70.0, active_params_b: 70.0,
+                  n_layers: 80, d_model: 8192, n_heads: 64, n_kv_heads: 8,
+                  head_dim: 128, dtype_bytes: 2.0 },
+        LlmSpec { name: "bloom-176b", params_b: 176.0, active_params_b: 176.0,
+                  n_layers: 70, d_model: 14336, n_heads: 112, n_kv_heads: 112,
+                  head_dim: 128, dtype_bytes: 2.0 },
+    ]
+}
+
+pub fn llm(name: &str) -> Option<&'static LlmSpec> {
+    catalog().iter().find(|m| m.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup() {
+        assert_eq!(llm("llama-8b").unwrap().n_layers, 32);
+        assert!(llm("gpt-5").is_none());
+    }
+
+    #[test]
+    fn weight_sizes_sane() {
+        assert!((llm("llama-8b").unwrap().weight_gb() - 16.0).abs() < 0.1);
+        assert!((llm("llama-70b").unwrap().weight_gb() - 140.0).abs() < 0.5);
+    }
+
+    #[test]
+    fn gqa_shrinks_kv() {
+        // llama-8b GQA (8 kv heads of 32) vs llama-13b MHA.
+        let l8 = llm("llama-8b").unwrap();
+        let l13 = llm("llama-13b").unwrap();
+        assert!(l8.kv_bytes_per_token() < l13.kv_bytes_per_token());
+        // 2*32*8*128*2 = 131072 B/token.
+        assert!((l8.kv_bytes_per_token() - 131072.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn decode_is_memory_bound_at_small_batch() {
+        // AI ≈ batch at small ctx — far below any GPU's knee (~100s).
+        let m = llm("llama-8b").unwrap();
+        assert!(m.decode_intensity(1, 512) < 2.0);
+        assert!(m.decode_intensity(64, 512) > 20.0);
+    }
+
+    #[test]
+    fn moe_activates_fewer_flops() {
+        let mx = llm("mixtral-8x7b").unwrap();
+        let dense_like = mx.decode_step_flops(1, 128);
+        assert!(dense_like < 2.0 * 46.7e9 * 1.1); // ≈ active 12.9B, not 46.7B
+    }
+
+    #[test]
+    fn max_batch_capacity() {
+        let m = llm("llama-8b").unwrap();
+        // A100-40 at ctx 2048: ≈16 seqs (Fig 8's ★ capacity bound).
+        let b = m.max_batch(40.0, 2048, 1);
+        assert!(b >= 10 && b <= 24, "batch {b}");
+        // Model too large for the card → 0.
+        assert_eq!(llm("llama-70b").unwrap().max_batch(40.0, 2048, 1), 0);
+        // TP=4 makes it fit.
+        assert!(llm("llama-70b").unwrap().max_batch(40.0, 2048, 8) > 0);
+    }
+
+    #[test]
+    fn flops_scale_with_tokens() {
+        let m = llm("gemma-27b").unwrap();
+        let f1 = m.prefill_flops(1, 512);
+        let f2 = m.prefill_flops(2, 512);
+        assert!((f2 / f1 - 2.0).abs() < 0.01);
+        let d1 = m.decode_step_flops(4, 100);
+        let d2 = m.decode_step_flops(8, 100);
+        assert!((d2 / d1 - 2.0).abs() < 0.01);
+    }
+}

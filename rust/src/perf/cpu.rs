@@ -1,0 +1,221 @@
+//! CPU decode performance model: threading × tiling co-selection
+//! (paper §4.1.1, Figs 9/18/19).
+//!
+//! Models the paper's core CPU insight: a llama.cpp-style engine
+//! parallelizes attention only over (batch × heads), leaving most cores —
+//! and therefore most of the socket's DRAM bandwidth — idle for small
+//! batches. EcoServe adds the KV *sequence-length* dimension (the same
+//! split-KV schedule our Pallas kernel expresses on the grid, see
+//! python/compile/kernels/decode_attention.py) and picks Linear-op tile
+//! sizes by arithmetic intensity, recovering near-saturated bandwidth.
+//!
+//! Bandwidth scaling uses the standard per-core DRAM-concurrency model:
+//! a single core sustains only `PER_CORE_BW` of the socket's bandwidth
+//! (limited by outstanding misses), so effective BW ≈ min(total,
+//! n_active_cores × per_core).
+
+use crate::hw::CpuSpec;
+use crate::models::LlmSpec;
+
+/// Sustainable DRAM bandwidth per active core, B/s (SPR-class).
+pub const PER_CORE_BW: f64 = 12e9;
+
+/// CPU execution strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CpuStrategy {
+    /// llama.cpp-like: attention parallel over batch × kv-heads; default
+    /// row-major GEMM tiling.
+    Naive,
+    /// EcoServe: + KV sequence-dim parallelism (chunked), AI-driven tiles.
+    Optimized,
+}
+
+/// KV chunk length used by the optimized sequence-dimension split.
+pub const KV_CHUNK: usize = 64;
+
+/// Number of cores the attention phase can keep busy.
+pub fn attn_active_cores(m: &LlmSpec, cpu: &CpuSpec, batch: usize, ctx: usize,
+                         strategy: CpuStrategy) -> usize {
+    let units = match strategy {
+        // llama.cpp shards attention per KV head (the unit that owns a
+        // contiguous KV stream): batch × kv_heads busy cores.
+        CpuStrategy::Naive => batch * m.n_kv_heads,
+        CpuStrategy::Optimized => batch * m.n_heads * ctx.div_ceil(KV_CHUNK),
+    };
+    units.min(cpu.cores)
+}
+
+/// Fraction of stream bandwidth a default (untiled) weight-streaming GEMV
+/// achieves vs an AI-tuned tiling (prefetch distance / NT loads).
+fn dense_bw_frac(strategy: CpuStrategy) -> f64 {
+    match strategy {
+        CpuStrategy::Naive => 0.60,
+        CpuStrategy::Optimized => 1.0,
+    }
+}
+
+/// Effective bandwidth with `active` cores generating misses.
+pub fn effective_bw(cpu: &CpuSpec, active: usize) -> f64 {
+    (active as f64 * PER_CORE_BW).min(cpu.mem_bw_gbs * 1e9)
+}
+
+/// GEMM efficiency: fraction of peak AMX/AVX FLOPs by tiling quality.
+fn gemm_mfu(strategy: CpuStrategy) -> f64 {
+    match strategy {
+        // Default tiles thrash L2 for skinny decode GEMVs.
+        CpuStrategy::Naive => 0.35,
+        // AI-selected tiles (Fig 9) keep the inner kernel resident.
+        CpuStrategy::Optimized => 0.70,
+    }
+}
+
+/// One decode step latency (seconds) for the whole batch on CPU.
+pub fn decode_step_time(m: &LlmSpec, cpu: &CpuSpec, batch: usize, ctx: usize,
+                        strategy: CpuStrategy) -> f64 {
+    let peak_flops = cpu.bf16_tflops * 1e12;
+    // Dense limb: weight-streaming GEMM. Batched across sequences, so the
+    // weight read amortizes; bound by max(weight bytes / bw, flops / mfu).
+    let dense_flops = 2.0 * m.active_params_b * 1e9 * batch as f64;
+    let weight_bytes = m.params_b * 1e9 * m.dtype_bytes;
+    // Dense GEMMs tile over output channels: plenty of parallel units.
+    let dense_bw = effective_bw(cpu, cpu.cores) * dense_bw_frac(strategy);
+    let t_dense = (dense_flops / (peak_flops * gemm_mfu(strategy)))
+        .max(weight_bytes / dense_bw);
+    // Attention limb: KV streaming, bandwidth-bound, parallelism-limited.
+    let kv_bytes = batch as f64 * ctx as f64 * m.kv_bytes_per_token();
+    let active = attn_active_cores(m, cpu, batch, ctx, strategy);
+    let t_attn = kv_bytes / effective_bw(cpu, active.max(1));
+    t_dense + t_attn
+}
+
+/// Decode throughput, tokens/s.
+pub fn decode_throughput(m: &LlmSpec, cpu: &CpuSpec, batch: usize, ctx: usize,
+                         strategy: CpuStrategy) -> f64 {
+    batch as f64 / decode_step_time(m, cpu, batch, ctx, strategy)
+}
+
+/// Max CPU batch at a context length given DRAM capacity (Fig 8: 512 at
+/// ctx 2048 vs the GPU's 16-74).
+pub fn max_batch(m: &LlmSpec, dram_gb: f64, ctx: usize) -> usize {
+    let avail = (dram_gb * 0.9 - m.weight_gb()) * 1e9;
+    if avail <= 0.0 {
+        return 0;
+    }
+    (avail / (ctx as f64 * m.kv_bytes_per_token())) as usize
+}
+
+/// Arithmetic intensity (FLOPs/byte) of a Linear-op slice when the output
+/// dimension is split `pd` ways (Fig 9's PD × AI tradeoff): each slice
+/// re-reads the full input but only 1/pd of the weights.
+pub fn linear_slice_ai(d_in: usize, d_out: usize, batch: usize, pd: usize,
+                       dtype_bytes: f64) -> f64 {
+    let pd = pd.max(1) as f64;
+    let flops = 2.0 * d_in as f64 * d_out as f64 / pd * batch as f64;
+    let bytes = (d_in as f64 * batch as f64          // input slice (re-read)
+        + d_in as f64 * d_out as f64 / pd            // weight slice
+        + d_out as f64 / pd * batch as f64)          // output slice
+        * dtype_bytes;
+    flops / bytes
+}
+
+/// Pick the parallelism degree maximizing throughput for a Linear op:
+/// enough slices to keep all cores busy, but not so many that per-slice AI
+/// falls below the CPU's roofline knee (Fig 9's co-design rule).
+pub fn best_linear_pd(cpu: &CpuSpec, d_in: usize, d_out: usize, batch: usize,
+                      dtype_bytes: f64) -> usize {
+    let knee = cpu.bf16_tflops * 1e12 / (cpu.mem_bw_gbs * 1e9);
+    let mut best = (1usize, f64::NEG_INFINITY);
+    for pd in 1..=cpu.cores {
+        let ai = linear_slice_ai(d_in, d_out, batch, pd, dtype_bytes);
+        // Throughput proxy: core utilization × min(1, AI/knee).
+        let util = (pd as f64 / cpu.cores as f64).min(1.0);
+        let score = util * (ai / knee).min(1.0);
+        if score > best.1 {
+            best = (pd, score);
+        }
+    }
+    best.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw;
+    use crate::models;
+
+    fn spr() -> &'static CpuSpec { hw::cpu("SPR-112").unwrap() }
+
+    #[test]
+    fn optimized_beats_naive() {
+        let m = models::llm("gemma-27b").unwrap();
+        for &(b, ctx) in &[(1usize, 2048usize), (4, 2048), (16, 512)] {
+            let n = decode_throughput(m, spr(), b, ctx, CpuStrategy::Naive);
+            let o = decode_throughput(m, spr(), b, ctx, CpuStrategy::Optimized);
+            assert!(o > n, "b={b} ctx={ctx}: {o} <= {n}");
+        }
+    }
+
+    #[test]
+    fn speedup_band_matches_fig18() {
+        // Paper: up to 4.03x, average 1.34x across batch sizes / dims.
+        let mut speedups = Vec::new();
+        for model in ["gemma-2b", "gemma-27b"] {
+            let m = models::llm(model).unwrap();
+            for &b in &[1usize, 2, 4, 8, 16, 32] {
+                for &ctx in &[256usize, 1024, 4096, 8192] {
+                    let n = decode_throughput(m, spr(), b, ctx, CpuStrategy::Naive);
+                    let o = decode_throughput(m, spr(), b, ctx, CpuStrategy::Optimized);
+                    speedups.push(o / n);
+                }
+            }
+        }
+        let max = speedups.iter().cloned().fold(0.0, f64::max);
+        let mean = speedups.iter().sum::<f64>() / speedups.len() as f64;
+        assert!(max > 2.5 && max < 7.0, "max speedup {max}");
+        assert!(mean > 1.2 && mean < 2.2, "mean speedup {mean}");
+    }
+
+    #[test]
+    fn long_context_small_batch_benefits_most() {
+        // Sequence-dim parallelism matters exactly when batch × heads
+        // under-fills the socket.
+        let m = models::llm("gemma-2b").unwrap();
+        let s_small = decode_throughput(m, spr(), 1, 8192, CpuStrategy::Optimized)
+            / decode_throughput(m, spr(), 1, 8192, CpuStrategy::Naive);
+        let s_big = decode_throughput(m, spr(), 32, 8192, CpuStrategy::Optimized)
+            / decode_throughput(m, spr(), 32, 8192, CpuStrategy::Naive);
+        assert!(s_small > s_big, "small {s_small} big {s_big}");
+    }
+
+    #[test]
+    fn cpu_batch_capacity_dwarfs_gpu() {
+        // Fig 8: ~512 sequences at ctx 2048 for llama-8b in 512 GB DRAM.
+        let m = models::llm("llama-8b").unwrap();
+        let b = max_batch(m, 512.0, 2048);
+        assert!(b >= 400, "cpu batch {b}");
+    }
+
+    #[test]
+    fn slice_ai_decreases_with_pd() {
+        let a1 = linear_slice_ai(4096, 4096, 8, 1, 2.0);
+        let a16 = linear_slice_ai(4096, 4096, 8, 16, 2.0);
+        let a112 = linear_slice_ai(4096, 4096, 8, 112, 2.0);
+        assert!(a1 > a16 && a16 > a112);
+    }
+
+    #[test]
+    fn best_pd_balances_cores_and_ai() {
+        let pd = best_linear_pd(spr(), 4608, 36864, 16, 2.0);
+        assert!(pd > 8, "pd {pd} should engage many cores");
+        // Tiny op: don't shard to all cores at worthless AI.
+        let pd_small = best_linear_pd(spr(), 256, 256, 1, 2.0);
+        assert!(pd_small <= spr().cores);
+    }
+
+    #[test]
+    fn effective_bw_saturates() {
+        let c = spr();
+        assert!(effective_bw(c, 1) < 0.1 * c.mem_bw_gbs * 1e9);
+        assert_eq!(effective_bw(c, c.cores), c.mem_bw_gbs * 1e9);
+    }
+}

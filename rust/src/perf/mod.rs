@@ -1,0 +1,8 @@
+//! Performance models: GPU/CPU rooflines (Fig 8), per-phase latency/energy
+//! (the planner's MaxTput inputs), and the CPU threading/tiling model
+//! behind the Reuse strategy (Figs 9/18/19).
+
+pub mod cpu;
+pub mod roofline;
+
+pub use roofline::{decode_step_perf, prefill_perf, Bound, Device, PhasePerf};

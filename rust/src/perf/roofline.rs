@@ -1,0 +1,271 @@
+//! Roofline performance / energy model (paper Fig 8, §4.1.2).
+//!
+//! The paper's planner consumes *offline profiling models* of per-phase
+//! latency and energy; with no fleet available these are analytical
+//! rooflines over the hw catalog: time = max(compute, memory) with
+//! device-and-phase efficiency caps, plus a TP communication term for
+//! PCIe-attached GPUs. Calibrated to the published shape: prefill is
+//! compute-bound, decode is bandwidth-bound, H100 wins large prompts,
+//! A100 wins decode carbon (Fig 12), CPUs are decode-viable (Fig 8).
+
+use crate::carbon::operational::{device_power, CPU_POWER_GAMMA, GPU_POWER_GAMMA};
+use crate::hw::{CpuSpec, GpuSpec};
+use crate::models::LlmSpec;
+
+/// Which roofline limb binds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Bound {
+    Compute,
+    Memory,
+}
+
+/// Device abstraction shared by GPUs and CPUs.
+#[derive(Debug, Clone)]
+pub struct Device {
+    pub name: String,
+    /// Peak dense FP16/BF16, FLOP/s.
+    pub peak_flops: f64,
+    /// Peak memory bandwidth, B/s.
+    pub mem_bw: f64,
+    pub mem_gb: f64,
+    pub tdp_w: f64,
+    pub idle_w: f64,
+    /// Achievable fraction of peak FLOPs (prefill-like GEMMs).
+    pub mfu_cap: f64,
+    /// Achievable fraction of peak bandwidth (decode-like streaming).
+    pub mbu_cap: f64,
+    pub power_gamma: f64,
+}
+
+impl Device {
+    pub fn from_gpu(g: &GpuSpec) -> Device {
+        // H100's HBM3 at low arithmetic intensity sustains a smaller
+        // fraction of peak than A100's HBM2 (the paper's "low MBU"
+        // observation, Fig 12); leaner GDDR cards sit lower still.
+        let (mfu, mbu) = match g.name {
+            "H100" => (0.60, 0.55),
+            "GH200" => (0.62, 0.60),
+            "A100-40" | "A100-80" => (0.55, 0.70),
+            "L4" | "T4" => (0.45, 0.60),
+            _ => (0.50, 0.65),
+        };
+        Device {
+            name: g.name.to_string(),
+            peak_flops: g.fp16_tflops * 1e12,
+            mem_bw: g.mem_bw_gbs * 1e9,
+            mem_gb: g.mem_gb,
+            tdp_w: g.tdp_w,
+            idle_w: g.idle_w,
+            mfu_cap: mfu,
+            mbu_cap: mbu,
+            power_gamma: GPU_POWER_GAMMA,
+        }
+    }
+
+    pub fn from_cpu(c: &CpuSpec, dram_gb: f64) -> Device {
+        Device {
+            name: c.name.to_string(),
+            peak_flops: c.bf16_tflops * 1e12,
+            mem_bw: c.mem_bw_gbs * 1e9,
+            mem_gb: dram_gb,
+            tdp_w: c.tdp_w,
+            idle_w: c.idle_w,
+            mfu_cap: 0.65,
+            mbu_cap: 0.80,
+            power_gamma: CPU_POWER_GAMMA,
+        }
+    }
+}
+
+/// Performance of one phase execution.
+#[derive(Debug, Clone, Copy)]
+pub struct PhasePerf {
+    pub latency_s: f64,
+    pub energy_j: f64,
+    /// Achieved fraction of device peak FLOPs.
+    pub mfu: f64,
+    /// Achieved fraction of device peak bandwidth.
+    pub mbu: f64,
+    pub bound: Bound,
+}
+
+/// PCIe interconnect bandwidth for TP collectives (paper uses PCIe GPUs).
+pub const TP_LINK_BW: f64 = 64e9;
+/// Saturation constant: tokens needed to reach peak MFU grow roughly
+/// quadratically with chip size (tile + wave quantization on more SMs) —
+/// this is what makes the A100 preferable for small prompts and the H100
+/// for large ones (paper Fig 12).
+pub const SAT_TOKENS_PER_TFLOP2: f64 = 0.014;
+
+/// Fraction of the MFU cap achievable with `tokens` of prefill work.
+pub fn prefill_saturation(dev: &Device, tokens: usize) -> f64 {
+    let t0 = SAT_TOKENS_PER_TFLOP2 * (dev.peak_flops / 1e12).powi(2);
+    tokens as f64 / (tokens as f64 + t0)
+}
+/// Fixed per-kernel-launch / framework overhead.
+pub const DISPATCH_OVERHEAD_S: f64 = 40e-6;
+
+/// Core roofline: time for (flops, bytes) on `dev`, with TP sharding and
+/// an all-reduce term of `comm_bytes` per device pair hop.
+pub fn phase_time(dev: &Device, flops: f64, bytes: f64, tp: usize,
+                  comm_bytes: f64) -> (f64, Bound) {
+    let tp_f = tp as f64;
+    let t_compute = flops / tp_f / (dev.peak_flops * dev.mfu_cap);
+    let t_memory = bytes / tp_f / (dev.mem_bw * dev.mbu_cap);
+    let t_comm = if tp > 1 {
+        2.0 * comm_bytes * (tp_f - 1.0) / tp_f / TP_LINK_BW
+    } else {
+        0.0
+    };
+    let bound = if t_compute >= t_memory { Bound::Compute } else { Bound::Memory };
+    (t_compute.max(t_memory) + t_comm + DISPATCH_OVERHEAD_S, bound)
+}
+
+fn perf(dev: &Device, flops: f64, bytes: f64, tp: usize, comm_bytes: f64) -> PhasePerf {
+    let (latency, bound) = phase_time(dev, flops, bytes, tp, comm_bytes);
+    let tp_f = tp as f64;
+    let mfu = flops / tp_f / latency / dev.peak_flops;
+    let mbu = bytes / tp_f / latency / dev.mem_bw;
+    let util = (mfu / dev.mfu_cap).max(mbu / dev.mbu_cap).min(1.0);
+    let power = device_power(dev.idle_w, dev.tdp_w, util, dev.power_gamma) * tp_f;
+    PhasePerf { latency_s: latency, energy_j: power * latency, mfu, mbu, bound }
+}
+
+/// TTFT-phase performance: prefill a batch of prompts.
+pub fn prefill_perf(m: &LlmSpec, dev: &Device, batch: usize, prompt: usize,
+                    tp: usize) -> PhasePerf {
+    let comm = m.n_layers as f64 * 2.0 * (batch * prompt * m.d_model) as f64
+        * m.dtype_bytes;
+    let sat = prefill_saturation(dev, batch * prompt);
+    let mut sat_dev = dev.clone();
+    sat_dev.mfu_cap = dev.mfu_cap * sat;
+    perf(&sat_dev, m.prefill_flops(batch, prompt), m.prefill_bytes(batch, prompt),
+         tp, comm)
+}
+
+/// One decode step across the batch (TPOT when divided by 1).
+pub fn decode_step_perf(m: &LlmSpec, dev: &Device, batch: usize, ctx: usize,
+                        tp: usize) -> PhasePerf {
+    let comm = m.n_layers as f64 * 2.0 * (batch * m.d_model) as f64 * m.dtype_bytes;
+    perf(dev, m.decode_step_flops(batch, ctx), m.decode_step_bytes(batch, ctx),
+         tp, comm)
+}
+
+/// Decode throughput, tokens/s, at a steady context length.
+pub fn decode_throughput(m: &LlmSpec, dev: &Device, batch: usize, ctx: usize,
+                         tp: usize) -> f64 {
+    let p = decode_step_perf(m, dev, batch, ctx, tp);
+    batch as f64 / p.latency_s
+}
+
+/// Prefill throughput, prompt tokens/s.
+pub fn prefill_throughput(m: &LlmSpec, dev: &Device, batch: usize, prompt: usize,
+                          tp: usize) -> f64 {
+    let p = prefill_perf(m, dev, batch, prompt, tp);
+    (batch * prompt) as f64 / p.latency_s
+}
+
+/// Energy per generated token (J/token) at steady state.
+pub fn decode_energy_per_token(m: &LlmSpec, dev: &Device, batch: usize,
+                               ctx: usize, tp: usize) -> f64 {
+    let p = decode_step_perf(m, dev, batch, ctx, tp);
+    p.energy_j / batch as f64
+}
+
+/// Roofline "knee": arithmetic intensity where compute == memory limb.
+pub fn knee_intensity(dev: &Device) -> f64 {
+    (dev.peak_flops * dev.mfu_cap) / (dev.mem_bw * dev.mbu_cap)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw;
+    use crate::models;
+
+    fn a100() -> Device { Device::from_gpu(hw::gpu("A100-40").unwrap()) }
+    fn h100() -> Device { Device::from_gpu(hw::gpu("H100").unwrap()) }
+    fn spr() -> Device { Device::from_cpu(hw::cpu("SPR-112").unwrap(), 512.0) }
+
+    #[test]
+    fn prefill_compute_bound_decode_memory_bound() {
+        let m = models::llm("llama-8b").unwrap();
+        let pf = prefill_perf(m, &a100(), 4, 2048, 1);
+        let dc = decode_step_perf(m, &a100(), 4, 2048, 1);
+        assert_eq!(pf.bound, Bound::Compute);
+        assert_eq!(dc.bound, Bound::Memory);
+        assert!(pf.mfu > 0.3, "prefill mfu {}", pf.mfu);
+        assert!(dc.mbu > 0.3, "decode mbu {}", dc.mbu);
+    }
+
+    #[test]
+    fn latencies_in_published_ballpark() {
+        // llama-8b on A100-40: decode TPOT at batch 1 ≈ weights/bw
+        // = 16 GB / (1555·0.7 GB/s) ≈ 15 ms.
+        let m = models::llm("llama-8b").unwrap();
+        let d = decode_step_perf(m, &a100(), 1, 512, 1);
+        assert!(d.latency_s > 0.008 && d.latency_s < 0.03, "{}", d.latency_s);
+        // Prefill 2048 tokens ≈ 2·8e9·2048 / (312e12·0.55) ≈ 0.19 s.
+        let p = prefill_perf(m, &a100(), 1, 2048, 1);
+        assert!(p.latency_s > 0.1 && p.latency_s < 0.4, "{}", p.latency_s);
+    }
+
+    #[test]
+    fn h100_wins_prefill_a100_wins_decode_carbon_shape() {
+        // Fig 12's crossover: H100 clearly faster on large prompts; on
+        // decode the speedup is much smaller than its TDP/embodied premium.
+        let m = models::llm("gemma-27b").unwrap();
+        let pf_a = prefill_perf(m, &a100(), 8, 4096, 2).latency_s;
+        let pf_h = prefill_perf(m, &h100(), 8, 4096, 2).latency_s;
+        assert!(pf_a / pf_h > 1.8, "prefill speedup {}", pf_a / pf_h);
+        let dc_a = decode_step_perf(m, &a100(), 8, 1024, 2).latency_s;
+        let dc_h = decode_step_perf(m, &h100(), 8, 1024, 2).latency_s;
+        let decode_speedup = dc_a / dc_h;
+        assert!(decode_speedup < 1.3, "decode speedup {decode_speedup}");
+    }
+
+    #[test]
+    fn cpu_decode_viable_gpu_prefill_dominates() {
+        // Fig 8: CPU within ~4x of GPU on decode (bw-bound), but an order
+        // of magnitude off on prefill (compute-bound).
+        let m = models::llm("llama-8b").unwrap();
+        let gpu_tput = decode_throughput(m, &a100(), 16, 2048, 1);
+        let cpu_tput = decode_throughput(m, &spr(), 16, 2048, 1);
+        let decode_gap = gpu_tput / cpu_tput;
+        assert!(decode_gap < 4.0, "decode gap {decode_gap}");
+        // At saturating prefill work the GPU's compute advantage shows.
+        let gpu_pf = prefill_throughput(m, &a100(), 8, 2048, 1);
+        let cpu_pf = prefill_throughput(m, &spr(), 8, 2048, 1);
+        assert!(gpu_pf / cpu_pf > 5.0, "prefill gap {}", gpu_pf / cpu_pf);
+    }
+
+    #[test]
+    fn tp_reduces_latency_with_overhead() {
+        let m = models::llm("llama-70b").unwrap();
+        let t1 = decode_step_perf(m, &a100(), 8, 1024, 4).latency_s;
+        let t2 = decode_step_perf(m, &a100(), 8, 1024, 8).latency_s;
+        assert!(t2 < t1);
+        // Sub-linear: 2x devices must give < 2x speedup (Table 2).
+        assert!(t1 / t2 < 2.0);
+    }
+
+    #[test]
+    fn energy_positive_and_batch_efficient() {
+        let m = models::llm("llama-8b").unwrap();
+        let e1 = decode_energy_per_token(m, &a100(), 1, 512, 1);
+        let e32 = decode_energy_per_token(m, &a100(), 32, 512, 1);
+        assert!(e32 < e1, "batching must amortize energy: {e1} vs {e32}");
+        assert!(e1 > 0.0);
+    }
+
+    #[test]
+    fn knee_between_decode_and_prefill_intensity() {
+        let m = models::llm("llama-8b").unwrap();
+        let dev = a100();
+        let knee = knee_intensity(&dev);
+        assert!(m.decode_intensity(1, 2048) < knee);
+        // Prefill AI ≈ params·2/bytes ≈ large.
+        let pf_ai = m.prefill_flops(1, 2048) / m.prefill_bytes(1, 2048);
+        assert!(pf_ai > knee);
+    }
+}

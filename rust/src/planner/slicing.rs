@@ -1,0 +1,164 @@
+//! Workload slicing: histogram bucketing of a request trace into the
+//! planner's (prompt, output) slices (paper §4.2.2, "Workload Slicing and
+//! Disaggregation").
+
+use crate::models::LlmSpec;
+use crate::workload::slo::Slo;
+use crate::workload::{Request, RequestClass};
+
+/// One planner slice: a (length-bucket, SLO-class) aggregate with a rate.
+#[derive(Debug, Clone)]
+pub struct Slice {
+    pub model: &'static LlmSpec,
+    /// Requests per second.
+    pub rate: f64,
+    /// Representative prompt length (bucket geometric mean).
+    pub prompt: usize,
+    /// Representative output length.
+    pub output: usize,
+    pub slo: Slo,
+    pub offline: bool,
+}
+
+/// Histogram bucket edges (tokens) for prompt and output dimensions.
+pub const PROMPT_EDGES: &[usize] = &[0, 128, 512, 2048, 8192, 40_000];
+pub const OUTPUT_EDGES: &[usize] = &[0, 64, 256, 1024, 8_192];
+
+fn bucket_of(x: usize, edges: &[usize]) -> usize {
+    for (i, w) in edges.windows(2).enumerate() {
+        if x >= w[0] && x < w[1] {
+            return i;
+        }
+    }
+    edges.len().saturating_sub(2)
+}
+
+fn representative(edges: &[usize], idx: usize) -> usize {
+    let lo = edges[idx].max(1);
+    let hi = edges[idx + 1];
+    ((lo as f64 * hi as f64).sqrt()) as usize
+}
+
+/// Bucket a trace into slices. `slice_factor` ≥ 1 subdivides each bucket's
+/// rate into f equal slices for finer-grained allocation (the paper's f).
+pub fn slice_trace(
+    model: &'static LlmSpec,
+    trace: &[Request],
+    duration_s: f64,
+    online_slo: Slo,
+    slice_factor: usize,
+) -> Vec<Slice> {
+    assert!(duration_s > 0.0 && slice_factor >= 1);
+    let np = PROMPT_EDGES.len() - 1;
+    let no = OUTPUT_EDGES.len() - 1;
+    // counts[class][p][o]
+    let mut counts = vec![vec![vec![0usize; no]; np]; 2];
+    for r in trace {
+        let ci = match r.class { RequestClass::Online => 0, RequestClass::Offline => 1 };
+        let p = bucket_of(r.prompt_tokens, PROMPT_EDGES);
+        let o = bucket_of(r.output_tokens, OUTPUT_EDGES);
+        counts[ci][p][o] += 1;
+    }
+    let mut out = Vec::new();
+    for (ci, class_counts) in counts.iter().enumerate() {
+        let offline = ci == 1;
+        for (p, row) in class_counts.iter().enumerate() {
+            for (o, &n) in row.iter().enumerate() {
+                if n == 0 {
+                    continue;
+                }
+                let total_rate = n as f64 / duration_s;
+                let slo = if offline {
+                    Slo { ttft_s: crate::workload::slo::OFFLINE_DEADLINE_S,
+                          tpot_s: f64::INFINITY }
+                } else {
+                    online_slo
+                };
+                for _ in 0..slice_factor {
+                    out.push(Slice {
+                        model,
+                        rate: total_rate / slice_factor as f64,
+                        prompt: representative(PROMPT_EDGES, p),
+                        output: representative(OUTPUT_EDGES, o),
+                        slo,
+                        offline,
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Merge slices that are identical (bucket, class) — the clustering that
+/// gives the control plane its sub-linear scaling (paper §6.2.2).
+pub fn cluster_slices(slices: &[Slice]) -> Vec<Slice> {
+    let mut out: Vec<Slice> = Vec::new();
+    for s in slices {
+        if let Some(e) = out.iter_mut().find(|e| {
+            e.prompt == s.prompt && e.output == s.output && e.offline == s.offline
+                && e.model.name == s.model.name
+        }) {
+            e.rate += s.rate;
+        } else {
+            out.push(s.clone());
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+    use crate::workload::{generate_trace, Arrivals, LengthDist};
+
+    fn trace() -> Vec<Request> {
+        generate_trace(Arrivals::Poisson { rate: 10.0 }, LengthDist::ShareGpt,
+                       RequestClass::Online, 600.0, 11)
+    }
+
+    #[test]
+    fn rates_conserved() {
+        let m = models::llm("llama-8b").unwrap();
+        let tr = trace();
+        let slo = Slo { ttft_s: 0.5, tpot_s: 0.1 };
+        let slices = slice_trace(m, &tr, 600.0, slo, 1);
+        let total: f64 = slices.iter().map(|s| s.rate).sum();
+        assert!((total - tr.len() as f64 / 600.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn slice_factor_subdivides() {
+        let m = models::llm("llama-8b").unwrap();
+        let tr = trace();
+        let slo = Slo { ttft_s: 0.5, tpot_s: 0.1 };
+        let s1 = slice_trace(m, &tr, 600.0, slo, 1);
+        let s4 = slice_trace(m, &tr, 600.0, slo, 4);
+        assert_eq!(s4.len(), 4 * s1.len());
+        let t1: f64 = s1.iter().map(|s| s.rate).sum();
+        let t4: f64 = s4.iter().map(|s| s.rate).sum();
+        assert!((t1 - t4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn clustering_inverts_slicing() {
+        let m = models::llm("llama-8b").unwrap();
+        let tr = trace();
+        let slo = Slo { ttft_s: 0.5, tpot_s: 0.1 };
+        let s4 = slice_trace(m, &tr, 600.0, slo, 4);
+        let clustered = cluster_slices(&s4);
+        let s1 = slice_trace(m, &tr, 600.0, slo, 1);
+        assert_eq!(clustered.len(), s1.len());
+    }
+
+    #[test]
+    fn bucket_edges() {
+        assert_eq!(bucket_of(0, PROMPT_EDGES), 0);
+        assert_eq!(bucket_of(127, PROMPT_EDGES), 0);
+        assert_eq!(bucket_of(128, PROMPT_EDGES), 1);
+        assert_eq!(bucket_of(1_000_000, PROMPT_EDGES), PROMPT_EDGES.len() - 2);
+        let rep = representative(PROMPT_EDGES, 1);
+        assert!(rep >= 128 && rep < 512);
+    }
+}

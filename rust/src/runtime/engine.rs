@@ -1,0 +1,357 @@
+//! Inference engine: loads AOT HLO-text artifacts via the PJRT CPU client
+//! and owns the per-bucket executables, the weight literals, and the
+//! rust-side KV cache.
+//!
+//! Python never runs here: `make artifacts` produced the HLO + weights at
+//! build time; this engine is the whole request-path compute layer.
+
+use super::manifest::Manifest;
+use super::weights;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Batched KV cache, rust-owned, shaped [L, B, max_seq, KVH, Dh].
+#[derive(Debug, Clone)]
+pub struct KvCache {
+    pub batch: usize,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    layers: usize,
+    max_seq: usize,
+    kvh: usize,
+    dh: usize,
+}
+
+impl KvCache {
+    fn new(layers: usize, batch: usize, max_seq: usize, kvh: usize, dh: usize) -> Self {
+        let n = layers * batch * max_seq * kvh * dh;
+        KvCache { batch, k: vec![0.0; n], v: vec![0.0; n], layers, max_seq, kvh, dh }
+    }
+
+    pub fn dims(&self) -> [usize; 5] {
+        [self.layers, self.batch, self.max_seq, self.kvh, self.dh]
+    }
+
+    /// Per-(layer, sequence) contiguous extent.
+    fn seq_stride(&self) -> usize {
+        self.max_seq * self.kvh * self.dh
+    }
+
+    /// Copy sequence `src_idx` of `src` into slot `dst_idx` of `self`.
+    pub fn copy_slot_from(&mut self, dst_idx: usize, src: &KvCache, src_idx: usize) {
+        assert_eq!(self.seq_stride(), src.seq_stride(), "cache geometry mismatch");
+        assert!(dst_idx < self.batch && src_idx < src.batch);
+        let stride = self.seq_stride();
+        for l in 0..self.layers {
+            let dst_off = (l * self.batch + dst_idx) * stride;
+            let src_off = (l * src.batch + src_idx) * stride;
+            self.k[dst_off..dst_off + stride]
+                .copy_from_slice(&src.k[src_off..src_off + stride]);
+            self.v[dst_off..dst_off + stride]
+                .copy_from_slice(&src.v[src_off..src_off + stride]);
+        }
+    }
+
+    /// Zero a slot (freed sequence).
+    pub fn clear_slot(&mut self, idx: usize) {
+        let stride = self.seq_stride();
+        for l in 0..self.layers {
+            let off = (l * self.batch + idx) * stride;
+            self.k[off..off + stride].fill(0.0);
+            self.v[off..off + stride].fill(0.0);
+        }
+    }
+}
+
+/// Timing for one engine call (feeds the serving metrics).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StepTiming {
+    pub exec_s: f64,
+    pub marshal_s: f64,
+}
+
+pub struct Engine {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    /// Weight literals in HLO parameter order.
+    weights: Vec<xla::Literal>,
+    prefill_exes: BTreeMap<(usize, usize), xla::PjRtLoadedExecutable>,
+    decode_exes: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    /// Cumulative timings.
+    pub decode_steps: std::cell::Cell<u64>,
+}
+
+/// Prefill result for a batch of prompts.
+pub struct PrefillOut {
+    /// Per-prompt logits at the last prompt token ([vocab] each).
+    pub logits: Vec<Vec<f32>>,
+    /// Bucket-sized KV cache holding the prefilled sequences.
+    pub cache: KvCache,
+    pub bucket: (usize, usize),
+    pub timing: StepTiming,
+}
+
+impl Engine {
+    /// Load artifacts from a directory (compiles all buckets eagerly).
+    pub fn load(dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(wrap)?;
+
+        let tensors = weights::load(&manifest.weights_path())?;
+        if tensors.len() != manifest.params.len() {
+            bail!("weights.bin has {} tensors, manifest expects {}",
+                  tensors.len(), manifest.params.len());
+        }
+        let mut wlits = Vec::with_capacity(tensors.len());
+        for (t, p) in tensors.iter().zip(&manifest.params) {
+            if t.name != p.name || t.dims != p.shape {
+                bail!("weight order mismatch: {} {:?} vs manifest {} {:?}",
+                      t.name, t.dims, p.name, p.shape);
+            }
+            wlits.push(literal_f32(&t.data, &t.dims)?);
+        }
+
+        let mut prefill_exes = BTreeMap::new();
+        for &(b, s) in &manifest.prefill_buckets {
+            let path = manifest.prefill_path(b, s);
+            prefill_exes.insert((b, s), compile(&client, &path)?);
+        }
+        let mut decode_exes = BTreeMap::new();
+        for &b in &manifest.decode_buckets {
+            let path = manifest.decode_path(b);
+            decode_exes.insert(b, compile(&client, &path)?);
+        }
+        Ok(Engine {
+            client,
+            manifest,
+            weights: wlits,
+            prefill_exes,
+            decode_exes,
+            decode_steps: std::cell::Cell::new(0),
+        })
+    }
+
+    pub fn max_seq(&self) -> usize {
+        self.manifest.model.max_seq
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.manifest.model.vocab
+    }
+
+    pub fn decode_buckets(&self) -> &[usize] {
+        &self.manifest.decode_buckets
+    }
+
+    pub fn empty_cache(&self, batch: usize) -> KvCache {
+        let m = &self.manifest.model;
+        KvCache::new(m.n_layers, batch, m.max_seq, m.n_kv_heads, m.head_dim)
+    }
+
+    /// Run prefill over `prompts` (token id sequences). Picks the smallest
+    /// bucket that fits; prompts longer than the largest bucket are an error
+    /// (callers chunk or reject upstream).
+    pub fn prefill(&self, prompts: &[Vec<i32>]) -> Result<PrefillOut> {
+        let t0 = std::time::Instant::now();
+        let batch = prompts.len();
+        let longest = prompts.iter().map(|p| p.len()).max().unwrap_or(0);
+        if longest == 0 {
+            bail!("empty prompt batch");
+        }
+        let bucket = self.manifest.pick_prefill_bucket(batch, longest)
+            .ok_or_else(|| anyhow!(
+                "no prefill bucket fits batch={batch} len={longest}"))?;
+        let (bb, bs) = bucket;
+        let exe = &self.prefill_exes[&bucket];
+
+        // Pad prompts to the bucket.
+        let pad = self.manifest.model.pad;
+        let mut tokens = vec![pad; bb * bs];
+        let mut lengths = vec![1i32; bb]; // dummy rows get length 1
+        for (i, p) in prompts.iter().enumerate() {
+            tokens[i * bs..i * bs + p.len()].copy_from_slice(p);
+            lengths[i] = p.len() as i32;
+        }
+        let tok_lit = literal_i32(&tokens, &[bb, bs])?;
+        let len_lit = literal_i32(&lengths, &[bb])?;
+
+        let mut args: Vec<&xla::Literal> = self.weights.iter().collect();
+        args.push(&tok_lit);
+        args.push(&len_lit);
+        let marshal_s = t0.elapsed().as_secs_f64();
+
+        let t1 = std::time::Instant::now();
+        let result = exe.execute::<&xla::Literal>(&args).map_err(wrap)?;
+        let out = result[0][0].to_literal_sync().map_err(wrap)?;
+        let exec_s = t1.elapsed().as_secs_f64();
+
+        let parts = tuple_parts(out, 3)?;
+        let (logits_l, k_l, v_l) = (&parts[0], &parts[1], &parts[2]);
+
+        let vocab = self.vocab();
+        let flat: Vec<f32> = logits_l.to_vec::<f32>().map_err(wrap)?;
+        let logits = prompts.iter().enumerate()
+            .map(|(i, _)| flat[i * vocab..(i + 1) * vocab].to_vec())
+            .collect();
+
+        let mut cache = self.empty_cache(bb);
+        k_l.copy_raw_to::<f32>(&mut cache.k).map_err(wrap)?;
+        v_l.copy_raw_to::<f32>(&mut cache.v).map_err(wrap)?;
+
+        Ok(PrefillOut { logits, cache, bucket, timing: StepTiming { exec_s, marshal_s } })
+    }
+
+    /// One decode step over the whole cache batch. `tokens[i]` is fed at
+    /// position `pos[i]` for slot i (PAD for inactive slots). Returns
+    /// per-slot logits and updates the cache in place.
+    pub fn decode_step(&self, cache: &mut KvCache, tokens: &[i32], pos: &[i32])
+        -> Result<(Vec<Vec<f32>>, StepTiming)> {
+        let b = cache.batch;
+        if tokens.len() != b || pos.len() != b {
+            bail!("decode arity: cache batch {b}, tokens {}, pos {}",
+                  tokens.len(), pos.len());
+        }
+        let exe = self.decode_exes.get(&b)
+            .ok_or_else(|| anyhow!("no decode bucket for batch {b}"))?;
+        let dims = cache.dims();
+        let dim_slice = [dims[0], dims[1], dims[2], dims[3], dims[4]];
+
+        let t0 = std::time::Instant::now();
+        let k_lit = literal_f32(&cache.k, &dim_slice)?;
+        let v_lit = literal_f32(&cache.v, &dim_slice)?;
+        let tok_lit = literal_i32(tokens, &[b])?;
+        let pos_lit = literal_i32(pos, &[b])?;
+        let mut args: Vec<&xla::Literal> = self.weights.iter().collect();
+        args.extend([&k_lit, &v_lit, &tok_lit, &pos_lit]);
+        let marshal0 = t0.elapsed().as_secs_f64();
+
+        let t1 = std::time::Instant::now();
+        let result = exe.execute::<&xla::Literal>(&args).map_err(wrap)?;
+        let out = result[0][0].to_literal_sync().map_err(wrap)?;
+        let exec_s = t1.elapsed().as_secs_f64();
+
+        let t2 = std::time::Instant::now();
+        let parts = tuple_parts(out, 3)?;
+        let vocab = self.vocab();
+        let flat: Vec<f32> = parts[0].to_vec::<f32>().map_err(wrap)?;
+        let logits = (0..b)
+            .map(|i| flat[i * vocab..(i + 1) * vocab].to_vec())
+            .collect();
+        parts[1].copy_raw_to::<f32>(&mut cache.k).map_err(wrap)?;
+        parts[2].copy_raw_to::<f32>(&mut cache.v).map_err(wrap)?;
+        let marshal_s = marshal0 + t2.elapsed().as_secs_f64();
+
+        self.decode_steps.set(self.decode_steps.get() + 1);
+        Ok((logits, StepTiming { exec_s, marshal_s }))
+    }
+}
+
+fn compile(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+    ).map_err(wrap).with_context(|| format!("parsing {}", path.display()))?;
+    client.compile(&xla::XlaComputation::from_proto(&proto))
+        .map_err(wrap)
+        .with_context(|| format!("compiling {}", path.display()))
+}
+
+fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data).reshape(&dims_i64).map_err(wrap)
+}
+
+fn literal_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data).reshape(&dims_i64).map_err(wrap)
+}
+
+fn tuple_parts(lit: xla::Literal, n: usize) -> Result<Vec<xla::Literal>> {
+    let mut l = lit;
+    let parts = l.decompose_tuple().map_err(wrap)?;
+    if parts.len() != n {
+        bail!("expected {n}-tuple output, got {}", parts.len());
+    }
+    Ok(parts)
+}
+
+fn wrap(e: xla::Error) -> anyhow::Error {
+    anyhow!("xla: {e}")
+}
+
+/// Greedy argmax over logits.
+pub fn argmax(logits: &[f32]) -> i32 {
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > best_v {
+            best_v = v;
+            best = i;
+        }
+    }
+    best as i32
+}
+
+/// Temperature + top-k sampling (deterministic given `u` in [0,1)).
+pub fn sample_topk(logits: &[f32], temperature: f32, k: usize, u: f64) -> i32 {
+    if temperature <= 0.0 || k <= 1 {
+        return argmax(logits);
+    }
+    let mut idx: Vec<usize> = (0..logits.len()).collect();
+    idx.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+    idx.truncate(k);
+    let max = logits[idx[0]];
+    let weights: Vec<f64> = idx.iter()
+        .map(|&i| (((logits[i] - max) / temperature) as f64).exp())
+        .collect();
+    let total: f64 = weights.iter().sum();
+    let mut x = u * total;
+    for (i, w) in idx.iter().zip(&weights) {
+        x -= w;
+        if x <= 0.0 {
+            return *i as i32;
+        }
+    }
+    idx[k - 1] as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kv_cache_slot_copy() {
+        let mut dst = KvCache::new(2, 4, 8, 2, 4);
+        let mut src = KvCache::new(2, 1, 8, 2, 4);
+        for (i, x) in src.k.iter_mut().enumerate() {
+            *x = i as f32;
+        }
+        src.v.copy_from_slice(&src.k);
+        dst.copy_slot_from(2, &src, 0);
+        let stride = 8 * 2 * 4;
+        // Layer 0, slot 2 of dst == layer 0 of src.
+        assert_eq!(dst.k[2 * stride..3 * stride], src.k[0..stride]);
+        // Layer 1, slot 2.
+        let d_off = (4 + 2) * stride;
+        let s_off = stride;
+        assert_eq!(dst.k[d_off..d_off + stride], src.k[s_off..s_off + stride]);
+        // Other slots untouched.
+        assert!(dst.k[..2 * stride].iter().all(|&x| x == 0.0));
+        dst.clear_slot(2);
+        assert!(dst.k.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn argmax_and_topk() {
+        let logits = [0.1f32, 2.0, -1.0, 0.5];
+        assert_eq!(argmax(&logits), 1);
+        assert_eq!(sample_topk(&logits, 0.0, 5, 0.3), 1);
+        // top-1 is argmax regardless of u.
+        assert_eq!(sample_topk(&logits, 1.0, 1, 0.99), 1);
+        // top-2, u near 0 → most likely token.
+        assert_eq!(sample_topk(&logits, 1.0, 2, 0.0), 1);
+        let t = sample_topk(&logits, 1.0, 2, 0.999);
+        assert!(t == 1 || t == 3);
+    }
+}

@@ -1,0 +1,168 @@
+//! Artifact manifest: parses artifacts/model_config.json (written by
+//! aot.py) — model dims, parameter order, available prefill/decode buckets.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone)]
+pub struct ModelDims {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub ffn_hidden: usize,
+    pub max_seq: usize,
+    pub pad: i32,
+    pub bos: i32,
+    pub eos: i32,
+}
+
+#[derive(Debug, Clone)]
+pub struct ParamInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelDims,
+    pub params: Vec<ParamInfo>,
+    /// (batch, seq) prefill buckets, ascending.
+    pub prefill_buckets: Vec<(usize, usize)>,
+    /// decode batch buckets, ascending.
+    pub decode_buckets: Vec<usize>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("model_config.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+        let m = j.get("model").ok_or_else(|| anyhow!("missing model"))?;
+        let get = |k: &str| -> Result<usize> {
+            m.get(k).and_then(|v| v.as_usize())
+                .ok_or_else(|| anyhow!("missing model.{k}"))
+        };
+        let model = ModelDims {
+            vocab: get("vocab")?,
+            d_model: get("d_model")?,
+            n_layers: get("n_layers")?,
+            n_heads: get("n_heads")?,
+            n_kv_heads: get("n_kv_heads")?,
+            head_dim: get("head_dim")?,
+            ffn_hidden: get("ffn_hidden")?,
+            max_seq: get("max_seq")?,
+            pad: get("pad")? as i32,
+            bos: get("bos")? as i32,
+            eos: get("eos")? as i32,
+        };
+        let params = j.get("params").and_then(|p| p.as_arr())
+            .ok_or_else(|| anyhow!("missing params"))?
+            .iter()
+            .map(|p| -> Result<ParamInfo> {
+                Ok(ParamInfo {
+                    name: p.get("name").and_then(|n| n.as_str())
+                        .ok_or_else(|| anyhow!("param missing name"))?.to_string(),
+                    shape: p.get("shape").and_then(|s| s.as_arr())
+                        .ok_or_else(|| anyhow!("param missing shape"))?
+                        .iter()
+                        .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                        .collect::<Result<_>>()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let mut prefill_buckets: Vec<(usize, usize)> = j.get("prefill_buckets")
+            .and_then(|b| b.as_arr())
+            .ok_or_else(|| anyhow!("missing prefill_buckets"))?
+            .iter()
+            .map(|b| -> Result<(usize, usize)> {
+                Ok((
+                    b.idx(0).and_then(|v| v.as_usize()).ok_or_else(|| anyhow!("bad bucket"))?,
+                    b.idx(1).and_then(|v| v.as_usize()).ok_or_else(|| anyhow!("bad bucket"))?,
+                ))
+            })
+            .collect::<Result<_>>()?;
+        prefill_buckets.sort_unstable();
+        let mut decode_buckets: Vec<usize> = j.get("decode_buckets")
+            .and_then(|b| b.as_arr())
+            .ok_or_else(|| anyhow!("missing decode_buckets"))?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad decode bucket")))
+            .collect::<Result<_>>()?;
+        decode_buckets.sort_unstable();
+        Ok(Manifest { dir: dir.to_path_buf(), model, params, prefill_buckets, decode_buckets })
+    }
+
+    pub fn prefill_path(&self, batch: usize, seq: usize) -> PathBuf {
+        self.dir.join(format!("prefill_b{batch}_s{seq}.hlo.txt"))
+    }
+
+    pub fn decode_path(&self, batch: usize) -> PathBuf {
+        self.dir.join(format!("decode_b{batch}.hlo.txt"))
+    }
+
+    pub fn weights_path(&self) -> PathBuf {
+        self.dir.join("weights.bin")
+    }
+
+    /// Smallest prefill bucket that fits (batch, prompt_len), if any.
+    pub fn pick_prefill_bucket(&self, batch: usize, prompt: usize) -> Option<(usize, usize)> {
+        self.prefill_buckets
+            .iter()
+            .copied()
+            .filter(|&(b, s)| b >= batch && s >= prompt)
+            .min_by_key(|&(b, s)| (s, b))
+    }
+
+    /// KV-cache element count for a decode bucket.
+    pub fn kv_numel(&self, batch: usize) -> usize {
+        self.model.n_layers * batch * self.model.max_seq
+            * self.model.n_kv_heads * self.model.head_dim
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fixture(dir: &Path) {
+        std::fs::write(dir.join("model_config.json"), r#"{
+            "model": {"vocab":259,"d_model":256,"n_layers":4,"n_heads":8,
+                      "n_kv_heads":2,"head_dim":32,"ffn_hidden":512,
+                      "max_seq":512,"pad":0,"bos":1,"eos":2},
+            "params": [{"name":"embed","shape":[259,256]}],
+            "prefill_buckets": [[4,32],[1,32],[1,128]],
+            "decode_buckets": [8,1]
+        }"#).unwrap();
+    }
+
+    #[test]
+    fn parses_and_sorts() {
+        let dir = std::env::temp_dir().join("ecoserve_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        fixture(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.model.vocab, 259);
+        assert_eq!(m.prefill_buckets, vec![(1, 32), (1, 128), (4, 32)]);
+        assert_eq!(m.decode_buckets, vec![1, 8]);
+        assert_eq!(m.kv_numel(8), 4 * 8 * 512 * 2 * 32);
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let dir = std::env::temp_dir().join("ecoserve_manifest_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        fixture(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.pick_prefill_bucket(1, 20), Some((1, 32)));
+        assert_eq!(m.pick_prefill_bucket(1, 100), Some((1, 128)));
+        assert_eq!(m.pick_prefill_bucket(2, 20), Some((4, 32)));
+        assert_eq!(m.pick_prefill_bucket(1, 4000), None);
+        assert_eq!(m.pick_prefill_bucket(8, 20), None);
+    }
+}

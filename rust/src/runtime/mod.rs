@@ -1,0 +1,11 @@
+//! Request-path runtime: PJRT engine over AOT HLO artifacts, weight loader,
+//! manifest, tokenizer. Python is build-time only — this module is the
+//! entire serving compute layer.
+
+pub mod engine;
+pub mod manifest;
+pub mod tokenizer;
+pub mod weights;
+
+pub use engine::{Engine, KvCache};
+pub use manifest::Manifest;

@@ -1,0 +1,60 @@
+//! Byte-level tokenizer for the served model: token = byte + 3, with
+//! PAD=0, BOS=1, EOS=2 (matching python/compile/model.py).
+
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+pub const BYTE_OFFSET: i32 = 3;
+
+/// Encode text as BOS + bytes.
+pub fn encode(text: &str) -> Vec<i32> {
+    let mut out = Vec::with_capacity(text.len() + 1);
+    out.push(BOS);
+    out.extend(text.as_bytes().iter().map(|&b| b as i32 + BYTE_OFFSET));
+    out
+}
+
+/// Decode tokens back to text, dropping specials and invalid UTF-8.
+pub fn decode(tokens: &[i32]) -> String {
+    let bytes: Vec<u8> = tokens
+        .iter()
+        .filter(|&&t| t >= BYTE_OFFSET && t < BYTE_OFFSET + 256)
+        .map(|&t| (t - BYTE_OFFSET) as u8)
+        .collect();
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+pub const VOCAB: usize = 259;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let toks = encode("hello, carbon!");
+        assert_eq!(toks[0], BOS);
+        assert_eq!(decode(&toks), "hello, carbon!");
+    }
+
+    #[test]
+    fn roundtrip_utf8() {
+        let s = "日本語 café";
+        assert_eq!(decode(&encode(s)), s);
+    }
+
+    #[test]
+    fn specials_dropped() {
+        let mut toks = encode("ab");
+        toks.push(EOS);
+        toks.push(PAD);
+        assert_eq!(decode(&toks), "ab");
+    }
+
+    #[test]
+    fn tokens_in_vocab() {
+        for t in encode("\u{0}\u{7f}xyz") {
+            assert!((0..VOCAB as i32).contains(&t));
+        }
+    }
+}

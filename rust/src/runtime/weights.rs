@@ -1,0 +1,147 @@
+//! Loader for the ECOW weights format emitted by python/compile/aot.py.
+//!
+//! Layout (little-endian): magic "ECOW", version:u32, count:u32, then per
+//! tensor: name_len:u16, name:utf8, dtype:u8 (0 = f32), ndim:u8,
+//! dims:u32 × ndim, data:f32 × prod(dims). Tensor order is the HLO
+//! parameter order (the contract recorded in model_config.json).
+
+use anyhow::{bail, Context, Result};
+use std::io::Read;
+use std::path::Path;
+
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+pub const MAGIC: &[u8; 4] = b"ECOW";
+pub const VERSION: u32 = 1;
+
+pub fn load(path: &Path) -> Result<Vec<Tensor>> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("reading weights {}", path.display()))?;
+    parse(&bytes)
+}
+
+pub fn parse(bytes: &[u8]) -> Result<Vec<Tensor>> {
+    let mut r = bytes;
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("bad magic {:?}", magic);
+    }
+    let version = read_u32(&mut r)?;
+    if version != VERSION {
+        bail!("unsupported ECOW version {version}");
+    }
+    let count = read_u32(&mut r)? as usize;
+    let mut out = Vec::with_capacity(count);
+    for i in 0..count {
+        let name_len = read_u16(&mut r)? as usize;
+        let mut name = vec![0u8; name_len];
+        r.read_exact(&mut name)?;
+        let name = String::from_utf8(name).context("tensor name not utf8")?;
+        let mut hdr = [0u8; 2];
+        r.read_exact(&mut hdr)?;
+        let (dtype, ndim) = (hdr[0], hdr[1] as usize);
+        if dtype != 0 {
+            bail!("tensor {i} ({name}): unsupported dtype {dtype}");
+        }
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            dims.push(read_u32(&mut r)? as usize);
+        }
+        let numel: usize = dims.iter().product();
+        let mut data = vec![0f32; numel];
+        {
+            // Bulk-read the raw f32 block.
+            let need = numel * 4;
+            if r.len() < need {
+                bail!("tensor {i} ({name}): truncated data");
+            }
+            let (raw, rest) = r.split_at(need);
+            for (o, c) in data.iter_mut().zip(raw.chunks_exact(4)) {
+                *o = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+            }
+            r = rest;
+        }
+        out.push(Tensor { name, dims, data });
+    }
+    if !r.is_empty() {
+        bail!("{} trailing bytes after {} tensors", r.len(), count);
+    }
+    Ok(out)
+}
+
+fn read_u32(r: &mut &[u8]) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u16(r: &mut &[u8]) -> Result<u16> {
+    let mut b = [0u8; 2];
+    r.read_exact(&mut b)?;
+    Ok(u16::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn encode(tensors: &[(&str, &[usize], &[f32])]) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
+        for (name, dims, data) in tensors {
+            out.extend_from_slice(&(name.len() as u16).to_le_bytes());
+            out.extend_from_slice(name.as_bytes());
+            out.push(0);
+            out.push(dims.len() as u8);
+            for d in *dims {
+                out.extend_from_slice(&(*d as u32).to_le_bytes());
+            }
+            for x in *data {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn roundtrip() {
+        let bytes = encode(&[
+            ("embed", &[2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]),
+            ("scalar", &[], &[7.5]),
+        ]);
+        let ts = parse(&bytes).unwrap();
+        assert_eq!(ts.len(), 2);
+        assert_eq!(ts[0].name, "embed");
+        assert_eq!(ts[0].dims, vec![2, 3]);
+        assert_eq!(ts[0].data[5], 6.0);
+        assert_eq!(ts[1].dims, Vec::<usize>::new());
+        assert_eq!(ts[1].data, vec![7.5]);
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_truncation() {
+        assert!(parse(b"NOPE").is_err());
+        let mut bytes = encode(&[("w", &[4], &[1.0, 2.0, 3.0, 4.0])]);
+        bytes.truncate(bytes.len() - 3);
+        assert!(parse(&bytes).is_err());
+        let good = encode(&[("w", &[1], &[1.0])]);
+        let mut trailing = good.clone();
+        trailing.push(0);
+        assert!(parse(&trailing).is_err());
+        assert!(parse(&good).is_ok());
+    }
+}

@@ -1,0 +1,345 @@
+//! Dense two-phase primal simplex.
+//!
+//! The LP core under the MILP branch-and-bound (solver/milp.rs) that
+//! implements EcoServe's allocation ILP (planner/). Scale target is the
+//! paper's control plane (Table 3): a few hundred columns / constraints per
+//! solve, well inside dense-tableau territory.
+//!
+//! Variables are x >= 0 with optional upper bounds (handled as rows by the
+//! builder in solver/mod.rs). Anti-cycling: Dantzig rule with a Bland
+//! fallback after a degeneracy streak.
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Cmp {
+    Le,
+    Ge,
+    Eq,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LpStatus {
+    Optimal,
+    Infeasible,
+    Unbounded,
+    IterLimit,
+}
+
+#[derive(Debug, Clone)]
+pub struct LpSolution {
+    pub status: LpStatus,
+    pub x: Vec<f64>,
+    pub objective: f64,
+}
+
+/// A constraint row in sparse form.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub coeffs: Vec<(usize, f64)>,
+    pub cmp: Cmp,
+    pub rhs: f64,
+}
+
+const EPS: f64 = 1e-9;
+
+/// Solve: minimize c·x  s.t. rows, x >= 0.
+pub fn solve(ncols: usize, c: &[f64], rows: &[Row]) -> LpSolution {
+    assert_eq!(c.len(), ncols);
+    let m = rows.len();
+    // Column layout: [structural 0..n) [slack/surplus n..n+m) [artificial ...]
+    // plus RHS last. Artificial columns are allocated only where needed.
+    let mut need_artificial = vec![false; m];
+    let mut slack_sign = vec![0.0f64; m];
+    for (i, r) in rows.iter().enumerate() {
+        let flip = r.rhs < 0.0;
+        let cmp = if flip {
+            match r.cmp {
+                Cmp::Le => Cmp::Ge,
+                Cmp::Ge => Cmp::Le,
+                Cmp::Eq => Cmp::Eq,
+            }
+        } else {
+            r.cmp
+        };
+        match cmp {
+            Cmp::Le => slack_sign[i] = 1.0,
+            Cmp::Ge => {
+                slack_sign[i] = -1.0;
+                need_artificial[i] = true;
+            }
+            Cmp::Eq => need_artificial[i] = true,
+        }
+    }
+    let n_art: usize = need_artificial.iter().filter(|&&b| b).count();
+    let width = ncols + m + n_art + 1; // + RHS
+    let rhs_col = width - 1;
+
+    let mut t = vec![vec![0.0f64; width]; m];
+    let mut basis = vec![usize::MAX; m];
+    let mut art_idx = ncols + m;
+    for (i, r) in rows.iter().enumerate() {
+        let flip = if r.rhs < 0.0 { -1.0 } else { 1.0 };
+        for &(j, v) in &r.coeffs {
+            assert!(j < ncols, "coefficient for unknown var {j}");
+            t[i][j] += flip * v;
+        }
+        t[i][rhs_col] = flip * r.rhs;
+        if slack_sign[i] != 0.0 {
+            t[i][ncols + i] = flip.signum() * slack_sign[i];
+            // After flipping the row the slack sign logic above already
+            // accounted for sense inversion; normalize:
+            t[i][ncols + i] = slack_sign[i];
+        }
+        if need_artificial[i] {
+            t[i][art_idx] = 1.0;
+            basis[i] = art_idx;
+            art_idx += 1;
+        } else {
+            basis[i] = ncols + i; // slack is basic
+        }
+    }
+
+    // Phase 1: minimize sum of artificials.
+    if n_art > 0 {
+        let mut obj = vec![0.0f64; width];
+        for j in ncols + m..ncols + m + n_art {
+            obj[j] = 1.0;
+        }
+        // Price out basic artificials.
+        for i in 0..m {
+            if basis[i] >= ncols + m {
+                for j in 0..width {
+                    obj[j] -= t[i][j];
+                }
+            }
+        }
+        let status = run_simplex(&mut t, &mut obj, &mut basis, ncols + m, rhs_col);
+        if status == LpStatus::IterLimit {
+            return LpSolution { status, x: vec![0.0; ncols], objective: f64::NAN };
+        }
+        let phase1_obj = -obj[rhs_col];
+        if phase1_obj > 1e-7 {
+            return LpSolution {
+                status: LpStatus::Infeasible,
+                x: vec![0.0; ncols],
+                objective: f64::NAN,
+            };
+        }
+        // Drive any artificials still basic (at zero) out of the basis.
+        for i in 0..m {
+            if basis[i] >= ncols + m {
+                if let Some(j) = (0..ncols + m).find(|&j| t[i][j].abs() > EPS) {
+                    pivot(&mut t, &mut basis, i, j, rhs_col);
+                } // else: redundant row, leave it (all-zero).
+            }
+        }
+    }
+
+    // Phase 2: minimize c over structural columns; artificial columns are
+    // barred from entering (treated as absent).
+    let mut obj = vec![0.0f64; width];
+    obj[..ncols].copy_from_slice(c);
+    for i in 0..m {
+        let b = basis[i];
+        if b < ncols + m && obj[b].abs() > 0.0 {
+            let coef = obj[b];
+            for j in 0..width {
+                obj[j] -= coef * t[i][j];
+            }
+        }
+    }
+    let status = run_simplex(&mut t, &mut obj, &mut basis, ncols + m, rhs_col);
+
+    let mut x = vec![0.0f64; ncols];
+    for i in 0..m {
+        if basis[i] < ncols {
+            x[basis[i]] = t[i][rhs_col];
+        }
+    }
+    let objective = c.iter().zip(&x).map(|(ci, xi)| ci * xi).sum();
+    LpSolution { status, x, objective }
+}
+
+/// Run simplex until optimal / unbounded / iteration cap. `limit_cols`
+/// bounds the entering-column search (to bar artificials in phase 2).
+fn run_simplex(
+    t: &mut [Vec<f64>],
+    obj: &mut [f64],
+    basis: &mut [usize],
+    limit_cols: usize,
+    rhs_col: usize,
+) -> LpStatus {
+    let m = t.len();
+    let max_iters = 200 + 50 * (m + limit_cols);
+    let mut degenerate_streak = 0usize;
+    for _ in 0..max_iters {
+        // Entering column: Dantzig (most negative), Bland under degeneracy.
+        let entering = if degenerate_streak < 12 {
+            let mut best = None;
+            let mut best_v = -EPS * 10.0;
+            for j in 0..limit_cols {
+                if obj[j] < best_v {
+                    best_v = obj[j];
+                    best = Some(j);
+                }
+            }
+            best
+        } else {
+            (0..limit_cols).find(|&j| obj[j] < -EPS * 10.0)
+        };
+        let Some(e) = entering else { return LpStatus::Optimal };
+
+        // Ratio test (Bland tie-break on basis index).
+        let mut leave: Option<usize> = None;
+        let mut best_ratio = f64::INFINITY;
+        for i in 0..m {
+            if t[i][e] > EPS {
+                let ratio = t[i][rhs_col] / t[i][e];
+                if ratio < best_ratio - EPS
+                    || (ratio < best_ratio + EPS
+                        && leave.map(|l| basis[i] < basis[l]).unwrap_or(false))
+                {
+                    best_ratio = ratio;
+                    leave = Some(i);
+                }
+            }
+        }
+        let Some(l) = leave else { return LpStatus::Unbounded };
+        if best_ratio < EPS {
+            degenerate_streak += 1;
+        } else {
+            degenerate_streak = 0;
+        }
+
+        // Pivot, including the objective row.
+        pivot_with_obj(t, obj, basis, l, e, rhs_col);
+    }
+    LpStatus::IterLimit
+}
+
+fn pivot(t: &mut [Vec<f64>], basis: &mut [usize], l: usize, e: usize, rhs_col: usize) {
+    let piv = t[l][e];
+    debug_assert!(piv.abs() > EPS);
+    let inv = 1.0 / piv;
+    for v in t[l].iter_mut() {
+        *v *= inv;
+    }
+    let lrow = t[l].clone();
+    for (i, row) in t.iter_mut().enumerate() {
+        if i != l && row[e].abs() > EPS {
+            let f = row[e];
+            for (v, lv) in row.iter_mut().zip(&lrow) {
+                *v -= f * lv;
+            }
+            row[e] = 0.0;
+        }
+    }
+    let _ = rhs_col;
+    basis[l] = e;
+}
+
+fn pivot_with_obj(
+    t: &mut [Vec<f64>],
+    obj: &mut [f64],
+    basis: &mut [usize],
+    l: usize,
+    e: usize,
+    rhs_col: usize,
+) {
+    pivot(t, basis, l, e, rhs_col);
+    if obj[e].abs() > EPS {
+        let f = obj[e];
+        for (v, lv) in obj.iter_mut().zip(&t[l]) {
+            *v -= f * lv;
+        }
+        obj[e] = 0.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(coeffs: &[(usize, f64)], cmp: Cmp, rhs: f64) -> Row {
+        Row { coeffs: coeffs.to_vec(), cmp, rhs }
+    }
+
+    #[test]
+    fn simple_min() {
+        // min x0 + x1 s.t. x0 + x1 >= 2, x0 >= 0.5 → obj 2
+        let s = solve(2, &[1.0, 1.0], &[
+            row(&[(0, 1.0), (1, 1.0)], Cmp::Ge, 2.0),
+            row(&[(0, 1.0)], Cmp::Ge, 0.5),
+        ]);
+        assert_eq!(s.status, LpStatus::Optimal);
+        assert!((s.objective - 2.0).abs() < 1e-6, "{s:?}");
+    }
+
+    #[test]
+    fn max_via_negation() {
+        // max 3x + 2y s.t. x + y <= 4, x + 3y <= 6 → x=4, y=0, obj 12.
+        let s = solve(2, &[-3.0, -2.0], &[
+            row(&[(0, 1.0), (1, 1.0)], Cmp::Le, 4.0),
+            row(&[(0, 1.0), (1, 3.0)], Cmp::Le, 6.0),
+        ]);
+        assert_eq!(s.status, LpStatus::Optimal);
+        assert!((s.objective + 12.0).abs() < 1e-6, "{s:?}");
+        assert!((s.x[0] - 4.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn equality_constraint() {
+        // min x + 2y s.t. x + y = 3, y >= 1 → x=2, y=1, obj 4.
+        let s = solve(2, &[1.0, 2.0], &[
+            row(&[(0, 1.0), (1, 1.0)], Cmp::Eq, 3.0),
+            row(&[(1, 1.0)], Cmp::Ge, 1.0),
+        ]);
+        assert_eq!(s.status, LpStatus::Optimal);
+        assert!((s.objective - 4.0).abs() < 1e-6, "{s:?}");
+    }
+
+    #[test]
+    fn infeasible_detected() {
+        let s = solve(1, &[1.0], &[
+            row(&[(0, 1.0)], Cmp::Le, 1.0),
+            row(&[(0, 1.0)], Cmp::Ge, 2.0),
+        ]);
+        assert_eq!(s.status, LpStatus::Infeasible);
+    }
+
+    #[test]
+    fn unbounded_detected() {
+        // min -x with no upper bound on x.
+        let s = solve(1, &[-1.0], &[row(&[(0, 1.0)], Cmp::Ge, 0.0)]);
+        assert_eq!(s.status, LpStatus::Unbounded);
+    }
+
+    #[test]
+    fn negative_rhs_normalized() {
+        // x0 - x1 <= -1  ⇔  x1 - x0 >= 1; min x1 → x1 = 1 (x0 = 0).
+        let s = solve(2, &[0.0, 1.0], &[row(&[(0, 1.0), (1, -1.0)], Cmp::Le, -1.0)]);
+        assert_eq!(s.status, LpStatus::Optimal);
+        assert!((s.objective - 1.0).abs() < 1e-6, "{s:?}");
+    }
+
+    #[test]
+    fn degenerate_does_not_cycle() {
+        // Klee–Minty-flavoured degenerate LP; just require termination.
+        let s = solve(3, &[-100.0, -10.0, -1.0], &[
+            row(&[(0, 1.0)], Cmp::Le, 1.0),
+            row(&[(0, 20.0), (1, 1.0)], Cmp::Le, 100.0),
+            row(&[(0, 200.0), (1, 20.0), (2, 1.0)], Cmp::Le, 10000.0),
+        ]);
+        assert_eq!(s.status, LpStatus::Optimal);
+        assert!((s.objective + 10000.0).abs() < 1e-4, "{s:?}");
+    }
+
+    #[test]
+    fn redundant_equalities() {
+        let s = solve(2, &[1.0, 1.0], &[
+            row(&[(0, 1.0), (1, 1.0)], Cmp::Eq, 2.0),
+            row(&[(0, 2.0), (1, 2.0)], Cmp::Eq, 4.0),
+        ]);
+        assert_eq!(s.status, LpStatus::Optimal);
+        assert!((s.objective - 2.0).abs() < 1e-6, "{s:?}");
+    }
+}

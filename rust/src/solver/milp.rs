@@ -1,0 +1,253 @@
+//! Branch-and-bound MILP on top of the simplex core (solver/lp.rs).
+//!
+//! Depth-first search branching on the most-fractional integer variable,
+//! pruning on the incumbent. Branch constraints are appended as rows
+//! (x_j <= floor / x_j >= ceil), so each node is an ordinary LP solve.
+//! Node and wall-clock limits make the planner's periodic re-solve
+//! (paper §6.2.2, Table 3) predictable.
+
+use super::lp::{self, Cmp, LpStatus, Row};
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MilpStatus {
+    Optimal,
+    /// Feasible incumbent found but search truncated by limits.
+    Feasible,
+    Infeasible,
+    /// No incumbent before hitting limits.
+    Unknown,
+}
+
+#[derive(Debug, Clone)]
+pub struct MilpSolution {
+    pub status: MilpStatus,
+    pub x: Vec<f64>,
+    pub objective: f64,
+    pub nodes: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct MilpConfig {
+    pub max_nodes: usize,
+    pub time_limit: Duration,
+    pub int_tol: f64,
+    /// Relative optimality gap at which search stops.
+    pub gap: f64,
+    /// Known upper bound (e.g. a heuristic incumbent's objective): nodes
+    /// whose relaxation can't beat it are pruned immediately.
+    pub cutoff: Option<f64>,
+}
+
+impl Default for MilpConfig {
+    fn default() -> Self {
+        MilpConfig {
+            max_nodes: 20_000,
+            time_limit: Duration::from_secs(20),
+            int_tol: 1e-6,
+            gap: 1e-6,
+            cutoff: None,
+        }
+    }
+}
+
+/// Minimize c·x with rows, x >= 0, and `integer[j]` flagging integrality.
+pub fn solve(
+    ncols: usize,
+    c: &[f64],
+    rows: &[Row],
+    integer: &[bool],
+    cfg: &MilpConfig,
+) -> MilpSolution {
+    assert_eq!(integer.len(), ncols);
+    let start = Instant::now();
+    let mut nodes = 0usize;
+    let mut incumbent: Option<(f64, Vec<f64>)> = None;
+    // DFS stack of extra branch rows.
+    let mut stack: Vec<Vec<Row>> = vec![Vec::new()];
+
+    while let Some(extra) = stack.pop() {
+        if nodes >= cfg.max_nodes || start.elapsed() > cfg.time_limit {
+            break;
+        }
+        nodes += 1;
+        let mut all = rows.to_vec();
+        all.extend(extra.iter().cloned());
+        let rel = lp::solve(ncols, c, &all);
+        match rel.status {
+            LpStatus::Infeasible | LpStatus::IterLimit => continue,
+            LpStatus::Unbounded => {
+                // Unbounded relaxation at the root means the MILP is
+                // unbounded or model error; deeper nodes: prune.
+                if extra.is_empty() && incumbent.is_none() {
+                    return MilpSolution {
+                        status: MilpStatus::Unknown,
+                        x: vec![0.0; ncols],
+                        objective: f64::NEG_INFINITY,
+                        nodes,
+                    };
+                }
+                continue;
+            }
+            LpStatus::Optimal => {}
+        }
+        // Bound: prune if not better than the incumbent / external cutoff.
+        let bound = incumbent.as_ref().map(|(b, _)| *b)
+            .or(cfg.cutoff)
+            .map(|b| incumbent.as_ref().map_or(b, |(i, _)| b.min(*i)));
+        if let Some(best) = bound {
+            if rel.objective >= best - cfg.gap * best.abs().max(1.0) {
+                continue;
+            }
+        }
+        // Find most-fractional integer variable.
+        let mut branch_var = None;
+        let mut best_frac = cfg.int_tol;
+        for j in 0..ncols {
+            if integer[j] {
+                let f = (rel.x[j] - rel.x[j].round()).abs();
+                if f > best_frac {
+                    best_frac = f;
+                    branch_var = Some(j);
+                }
+            }
+        }
+        match branch_var {
+            None => {
+                // Integral — candidate incumbent.
+                let mut x = rel.x.clone();
+                for j in 0..ncols {
+                    if integer[j] {
+                        x[j] = x[j].round();
+                    }
+                }
+                if incumbent.as_ref().map(|(b, _)| rel.objective < *b).unwrap_or(true) {
+                    incumbent = Some((rel.objective, x));
+                }
+            }
+            Some(j) => {
+                let v = rel.x[j];
+                let lo = v.floor();
+                // Push "up" branch first so DFS explores "down" (<= floor)
+                // first — tends to find feasible packings earlier.
+                let mut up = extra.clone();
+                up.push(Row { coeffs: vec![(j, 1.0)], cmp: Cmp::Ge, rhs: lo + 1.0 });
+                stack.push(up);
+                let mut down = extra;
+                down.push(Row { coeffs: vec![(j, 1.0)], cmp: Cmp::Le, rhs: lo });
+                stack.push(down);
+            }
+        }
+    }
+
+    match incumbent {
+        Some((obj, x)) => {
+            let truncated = !stack.is_empty();
+            MilpSolution {
+                status: if truncated { MilpStatus::Feasible } else { MilpStatus::Optimal },
+                x,
+                objective: obj,
+                nodes,
+            }
+        }
+        None => MilpSolution {
+            status: if stack.is_empty() { MilpStatus::Infeasible } else { MilpStatus::Unknown },
+            x: vec![0.0; ncols],
+            objective: f64::NAN,
+            nodes,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(coeffs: &[(usize, f64)], cmp: Cmp, rhs: f64) -> Row {
+        Row { coeffs: coeffs.to_vec(), cmp, rhs }
+    }
+
+    #[test]
+    fn knapsack() {
+        // max 8a + 11b + 6c + 4d, w = [5,7,4,3] <= 14, binary.
+        // Optimal: b + c + d = 21, w = 14.
+        let c = [-8.0, -11.0, -6.0, -4.0];
+        let mut rows = vec![row(
+            &[(0, 5.0), (1, 7.0), (2, 4.0), (3, 3.0)], Cmp::Le, 14.0)];
+        for j in 0..4 {
+            rows.push(row(&[(j, 1.0)], Cmp::Le, 1.0));
+        }
+        let s = solve(4, &c, &rows, &[true; 4], &MilpConfig::default());
+        assert_eq!(s.status, MilpStatus::Optimal);
+        assert!((s.objective + 21.0).abs() < 1e-6, "{s:?}");
+        assert_eq!(s.x, vec![0.0, 1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn integer_rounding_matters() {
+        // min y s.t. y >= 1.2 x, x >= 2.5, x integer → x = 3, y = 3.6.
+        let s = solve(
+            2,
+            &[0.0, 1.0],
+            &[
+                row(&[(1, 1.0), (0, -1.2)], Cmp::Ge, 0.0),
+                row(&[(0, 1.0)], Cmp::Ge, 2.5),
+            ],
+            &[true, false],
+            &MilpConfig::default(),
+        );
+        assert_eq!(s.status, MilpStatus::Optimal);
+        assert!((s.x[0] - 3.0).abs() < 1e-6);
+        assert!((s.objective - 3.6).abs() < 1e-6, "{s:?}");
+    }
+
+    #[test]
+    fn infeasible_integer() {
+        // 0.4 <= x <= 0.6, x integer → infeasible.
+        let s = solve(
+            1,
+            &[1.0],
+            &[
+                row(&[(0, 1.0)], Cmp::Ge, 0.4),
+                row(&[(0, 1.0)], Cmp::Le, 0.6),
+            ],
+            &[true],
+            &MilpConfig::default(),
+        );
+        assert_eq!(s.status, MilpStatus::Infeasible);
+    }
+
+    #[test]
+    fn assignment_problem() {
+        // 2 tasks × 2 machines, costs [[1, 10], [10, 1]]; each task on one
+        // machine → diagonal assignment, cost 2.
+        let costs = [1.0, 10.0, 10.0, 1.0]; // x[t*2+m]
+        let mut rows = Vec::new();
+        for t in 0..2 {
+            rows.push(row(&[(t * 2, 1.0), (t * 2 + 1, 1.0)], Cmp::Eq, 1.0));
+        }
+        for j in 0..4 {
+            rows.push(row(&[(j, 1.0)], Cmp::Le, 1.0));
+        }
+        let s = solve(4, &costs, &rows, &[true; 4], &MilpConfig::default());
+        assert_eq!(s.status, MilpStatus::Optimal);
+        assert!((s.objective - 2.0).abs() < 1e-6, "{s:?}");
+    }
+
+    #[test]
+    fn respects_node_limit() {
+        let cfg = MilpConfig { max_nodes: 1, ..Default::default() };
+        let s = solve(
+            2,
+            &[0.0, 1.0],
+            &[
+                row(&[(1, 1.0), (0, -1.2)], Cmp::Ge, 0.0),
+                row(&[(0, 1.0)], Cmp::Ge, 2.5),
+            ],
+            &[true, false],
+            &cfg,
+        );
+        assert!(s.nodes <= 1);
+        assert!(matches!(s.status, MilpStatus::Unknown | MilpStatus::Feasible));
+    }
+}

@@ -1,0 +1,133 @@
+//! Linear / mixed-integer optimization substrate (the offline CVXpy
+//! replacement). `ProblemBuilder` is the ergonomic front door used by
+//! planner/: named variables with bounds + integrality, sparse constraints,
+//! minimize or maximize.
+
+pub mod lp;
+pub mod milp;
+
+pub use lp::{Cmp, LpStatus};
+pub use milp::{MilpConfig, MilpSolution, MilpStatus};
+
+use lp::Row;
+
+/// Variable handle returned by [`ProblemBuilder::var`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Var(pub usize);
+
+#[derive(Debug, Default, Clone)]
+pub struct ProblemBuilder {
+    costs: Vec<f64>,
+    integer: Vec<bool>,
+    names: Vec<String>,
+    rows: Vec<Row>,
+}
+
+impl ProblemBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add a variable (x >= 0) with objective coefficient `cost`.
+    pub fn var(&mut self, name: &str, cost: f64, integer: bool) -> Var {
+        self.costs.push(cost);
+        self.integer.push(integer);
+        self.names.push(name.to_string());
+        Var(self.costs.len() - 1)
+    }
+
+    /// Add a variable with an upper bound (emitted as a row).
+    pub fn var_bounded(&mut self, name: &str, cost: f64, integer: bool, hi: f64) -> Var {
+        let v = self.var(name, cost, integer);
+        self.le(&[(v, 1.0)], hi);
+        v
+    }
+
+    /// Binary (0/1) variable.
+    pub fn binary(&mut self, name: &str, cost: f64) -> Var {
+        self.var_bounded(name, cost, true, 1.0)
+    }
+
+    pub fn num_vars(&self) -> usize {
+        self.costs.len()
+    }
+
+    pub fn num_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn name(&self, v: Var) -> &str {
+        &self.names[v.0]
+    }
+
+    fn cons(&mut self, terms: &[(Var, f64)], cmp: Cmp, rhs: f64) {
+        self.rows.push(Row {
+            coeffs: terms.iter().map(|(v, c)| (v.0, *c)).collect(),
+            cmp,
+            rhs,
+        });
+    }
+
+    pub fn le(&mut self, terms: &[(Var, f64)], rhs: f64) {
+        self.cons(terms, Cmp::Le, rhs);
+    }
+
+    pub fn ge(&mut self, terms: &[(Var, f64)], rhs: f64) {
+        self.cons(terms, Cmp::Ge, rhs);
+    }
+
+    pub fn eq(&mut self, terms: &[(Var, f64)], rhs: f64) {
+        self.cons(terms, Cmp::Eq, rhs);
+    }
+
+    /// Solve as LP (integrality relaxed).
+    pub fn solve_lp(&self) -> lp::LpSolution {
+        lp::solve(self.costs.len(), &self.costs, &self.rows)
+    }
+
+    /// Solve with integrality enforced via branch-and-bound.
+    pub fn solve(&self, cfg: &MilpConfig) -> MilpSolution {
+        milp::solve(self.costs.len(), &self.costs, &self.rows, &self.integer, cfg)
+    }
+
+    pub fn value(&self, sol: &MilpSolution, v: Var) -> f64 {
+        sol.x[v.0]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_end_to_end() {
+        // Facility location sketch: open machines (cost 5 each, integer),
+        // serve demand 7 with capacity 3/machine → 3 machines, cost 15.
+        let mut p = ProblemBuilder::new();
+        let machines = p.var("machines", 5.0, true);
+        p.ge(&[(machines, 3.0)], 7.0);
+        let s = p.solve(&MilpConfig::default());
+        assert_eq!(s.status, MilpStatus::Optimal);
+        assert_eq!(p.value(&s, machines), 3.0);
+        assert!((s.objective - 15.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn binary_bound_enforced() {
+        let mut p = ProblemBuilder::new();
+        let b = p.binary("b", -10.0); // maximize b → 1
+        let s = p.solve(&MilpConfig::default());
+        assert_eq!(p.value(&s, b), 1.0);
+    }
+
+    #[test]
+    fn lp_relaxation_leq_milp() {
+        let mut p = ProblemBuilder::new();
+        let x = p.var("x", 1.0, true);
+        p.ge(&[(x, 1.0)], 2.5);
+        let rel = p.solve_lp();
+        let int = p.solve(&MilpConfig::default());
+        assert!(rel.objective <= int.objective + 1e-9);
+        assert_eq!(int.x[x.0], 3.0);
+    }
+}

@@ -1,0 +1,295 @@
+//! Named provisioning strategies: EcoServe's 4R combinations and the
+//! paper's baselines (perf-opt, energy-opt, Melange, Splitwise), all
+//! evaluated through the same planner + simulator (Fig 15 / 17 / 20).
+
+use crate::models::LlmSpec;
+use crate::planner::{self, Plan, PlanConfig};
+use crate::planner::slicing::Slice;
+use crate::sim::{Role, Router, ServerSpec, SimConfig};
+use crate::perf::roofline::Device;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    PerfOpt,
+    EnergyOpt,
+    Melange,
+    Splitwise,
+    EcoReuse,
+    EcoRightsize,
+    EcoReduce,
+    EcoRecycle,
+    EcoFull,
+}
+
+impl Strategy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::PerfOpt => "perf-opt",
+            Strategy::EnergyOpt => "energy-opt",
+            Strategy::Melange => "melange",
+            Strategy::Splitwise => "splitwise",
+            Strategy::EcoReuse => "eco-reuse",
+            Strategy::EcoRightsize => "eco-rightsize",
+            Strategy::EcoReduce => "eco-reduce",
+            Strategy::EcoRecycle => "eco-recycle",
+            Strategy::EcoFull => "ecoserve",
+        }
+    }
+
+    pub fn all() -> &'static [Strategy] {
+        &[
+            Strategy::PerfOpt, Strategy::EnergyOpt, Strategy::Melange,
+            Strategy::Splitwise, Strategy::EcoReuse, Strategy::EcoRightsize,
+            Strategy::EcoReduce, Strategy::EcoRecycle, Strategy::EcoFull,
+        ]
+    }
+
+    /// Planner configuration for this strategy at a grid CI.
+    pub fn plan_config(&self, ci: f64) -> PlanConfig {
+        let mut cfg = match self {
+            Strategy::PerfOpt => PlanConfig::perf_opt(),
+            Strategy::EnergyOpt => PlanConfig::energy_opt(),
+            Strategy::Melange => PlanConfig::melange(),
+            // Splitwise restricts to its two SKUs; we model its fixed PD
+            // split in the simulator (splitwise_fleet).
+            Strategy::Splitwise => PlanConfig {
+                alpha: 0.0,
+                gpu_menu: vec!["H100", "A100-40"],
+                cpu_reuse: false,
+                reduce_host: false,
+                host_lifetime_y: 4.0,
+                gpu_lifetime_y: 4.0,
+                ..Default::default()
+            },
+            Strategy::EcoReuse => PlanConfig::ecoserve(true, false, false, false),
+            Strategy::EcoRightsize => PlanConfig::ecoserve(false, true, false, false),
+            Strategy::EcoReduce => PlanConfig::ecoserve(false, false, true, false),
+            Strategy::EcoRecycle => PlanConfig::ecoserve(false, false, false, true),
+            Strategy::EcoFull => PlanConfig::ecoserve(true, true, true, true),
+        };
+        if *self != Strategy::EnergyOpt {
+            cfg.ci = ci;
+        }
+        cfg
+    }
+
+    /// Plan under this strategy's objective, then report carbon under the
+    /// *true* grid CI so strategies are comparable. Energy-opt plans at
+    /// CI=1 with embodied ignored (its objective), so its operational term
+    /// is rescaled and its embodied recomputed at standard 4y/4y rates.
+    pub fn plan(&self, slices: &[Slice], ci: f64) -> Plan {
+        let cfg = self.plan_config(ci);
+        let mut p = planner::plan(slices, &cfg);
+        if *self == Strategy::EnergyOpt {
+            p.op_kg_per_hr *= ci / cfg.ci;
+            let acct = PlanConfig {
+                reduce_host: false,
+                host_lifetime_y: 4.0,
+                gpu_lifetime_y: 4.0,
+                ..Default::default()
+            };
+            let opts = planner::device_options(&acct, slices[0].model);
+            p.emb_kg_per_hr = p.counts.iter()
+                .filter_map(|(name, &n)| {
+                    opts.iter().find(|o| &o.name == name)
+                        .map(|o| o.emb_kg_per_hr * n as f64)
+                })
+                .sum();
+        }
+        p
+    }
+}
+
+/// Build a simulator fleet from a plan: per device type, create mixed
+/// servers; if the plan split a slice's phases across types, mark the
+/// prompt-heavy types as Prompt servers and decode-heavy as Decode.
+pub fn fleet_from_plan(plan: &Plan, model: &LlmSpec, ctx: usize) -> Vec<ServerSpec> {
+    let mut out = Vec::new();
+    for (name, &count) in &plan.counts {
+        if name == "cpu-host" {
+            continue; // CPU offload handled by capacity reduction
+        }
+        // Plan counts are GPUs; a simulator server is one TP group.
+        let g = crate::hw::gpu(name).unwrap();
+        let dev = Device::from_gpu(g);
+        let mut tp = 1usize;
+        while model.weight_gb() >= 0.45 * dev.mem_gb * tp as f64 && tp < 8 {
+            tp *= 2;
+        }
+        let n_servers = count.div_ceil(tp).max(1);
+        let mut base = crate::sim::homogeneous_fleet(name, n_servers, model, ctx);
+        // Role from the plan's phase loads on this type.
+        let ploads: f64 = plan.assignments.iter()
+            .filter(|a| &a.device == name && a.phase == planner::Phase::Prompt)
+            .map(|a| a.load)
+            .sum();
+        let dloads: f64 = plan.assignments.iter()
+            .filter(|a| &a.device == name && a.phase == planner::Phase::Decode)
+            .map(|a| a.load)
+            .sum();
+        let role = if ploads > 4.0 * dloads {
+            Role::Prompt
+        } else if dloads > 4.0 * ploads {
+            Role::Decode
+        } else {
+            Role::Mixed
+        };
+        for s in &mut base {
+            s.role = role;
+        }
+        out.extend(base);
+    }
+    // A fleet must always be able to prefill and decode; degenerate plans
+    // (e.g. everything shed or CPU-only) get one mixed fallback server.
+    if out.is_empty() {
+        out = crate::sim::homogeneous_fleet("A100-80", 1, model, ctx);
+    }
+    if !out.iter().any(|s| s.role != Role::Decode) {
+        out[0].role = Role::Mixed;
+    }
+    out
+}
+
+/// Splitwise-style fixed partition: `n_prompt` H100 prompt machines and
+/// `n_token` token machines (paper §6.2.1 uses 35P/8T at 40-H100-equiv).
+pub fn splitwise_fleet(model: &LlmSpec, n_prompt: usize, n_token: usize,
+                       ctx: usize) -> Vec<ServerSpec> {
+    let mut fleet = crate::sim::homogeneous_fleet("H100", n_prompt + n_token, model, ctx);
+    for (i, s) in fleet.iter_mut().enumerate() {
+        s.role = if i < n_prompt { Role::Prompt } else { Role::Decode };
+    }
+    fleet
+}
+
+/// SimConfig for a fleet under a strategy's carbon accounting.
+pub fn sim_config(fleet: Vec<ServerSpec>, plan: &Plan, ci: f64) -> SimConfig {
+    let n = fleet.len().max(1);
+    // Spread the plan's embodied rate across servers.
+    let per_server = plan.emb_kg_per_hr / n as f64;
+    SimConfig {
+        emb_kg_per_hr: vec![per_server; fleet.len()],
+        servers: fleet,
+        router: Router::WorkloadAware,
+        ci,
+        kv_transfer_bw: 64e9,
+    }
+}
+
+/// Iso-power fleet sizing: how many of `gpu` fit the power envelope of
+/// `n_ref` × `ref_gpu` (Fig 17's "iso-power deployment").
+pub fn iso_power_count(ref_gpu: &str, n_ref: usize, gpu: &str) -> usize {
+    let r = crate::hw::gpu(ref_gpu).unwrap().tdp_w;
+    let g = crate::hw::gpu(gpu).unwrap().tdp_w;
+    ((n_ref as f64 * r) / g).floor() as usize
+}
+
+/// TP-scaling desiderata (Table 2): relative metrics when doubling n → 2n.
+pub struct TpScaling {
+    pub power_ratio: f64,
+    pub latency_ratio: f64,
+    pub cost_ratio: f64,
+    pub carbon_ratio: f64,
+    pub energy_ratio: f64,
+}
+
+pub fn tp_scaling(model: &LlmSpec, dev: &Device, n: usize, p_cpu: f64,
+                  emb_cpu: f64, emb_gpu_each: f64, comm_overhead: f64) -> TpScaling {
+    let nf = n as f64;
+    let p_gpu = dev.tdp_w;
+    // Paper Table 2 formulas.
+    let power_ratio = (2.0 * nf * p_gpu + p_cpu) / (nf * p_gpu + p_cpu);
+    let latency_ratio = 0.5 + comm_overhead;
+    let cost_ratio = 1.0;
+    let carbon_ratio = (emb_cpu + 2.0 * nf * emb_gpu_each)
+        / (emb_cpu + nf * emb_gpu_each)
+        * latency_ratio;
+    let energy_ratio = power_ratio * latency_ratio;
+    let _ = model;
+    TpScaling { power_ratio, latency_ratio, cost_ratio, carbon_ratio, energy_ratio }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+    use crate::workload::slo::Slo;
+
+    fn slices(model: &'static LlmSpec) -> Vec<Slice> {
+        // Production-ish scale: integer fleet quantization is small
+        // relative to the totals (the paper's savings are fleet-scale).
+        vec![
+            Slice { model, rate: 30.0, prompt: 256, output: 128,
+                    slo: Slo { ttft_s: 1.0, tpot_s: 0.15 }, offline: false },
+            Slice { model, rate: 10.0, prompt: 2048, output: 256,
+                    slo: Slo { ttft_s: 2.0, tpot_s: 0.2 }, offline: false },
+            Slice { model, rate: 12.0, prompt: 4096, output: 256,
+                    slo: Slo { ttft_s: 86_400.0, tpot_s: f64::INFINITY },
+                    offline: true },
+        ]
+    }
+
+    #[test]
+    fn all_strategies_plan() {
+        let m = models::llm("llama-8b").unwrap();
+        let s = slices(m);
+        for strat in Strategy::all() {
+            let p = strat.plan(&s, 261.0);
+            assert!(p.total_gpus() > 0, "{} provisioned nothing", strat.name());
+        }
+    }
+
+    #[test]
+    fn ecoserve_dominates_on_carbon() {
+        // Fig 15's headline: EcoServe-full beats every baseline on carbon.
+        let m = models::llm("llama-8b").unwrap();
+        let s = slices(m);
+        let eco = Strategy::EcoFull.plan(&s, 261.0).carbon_kg_per_hr();
+        for strat in [Strategy::PerfOpt, Strategy::Melange] {
+            let c = strat.plan(&s, 261.0).carbon_kg_per_hr();
+            assert!(eco <= c * 1.001, "{}: eco {eco} vs {c}", strat.name());
+        }
+    }
+
+    #[test]
+    fn savings_band_vs_perf_opt() {
+        // Paper: combined strategies ≈ 1.4–2.2x total-carbon reduction.
+        let m = models::llm("llama-8b").unwrap();
+        let s = slices(m);
+        let eco = Strategy::EcoFull.plan(&s, 261.0).carbon_kg_per_hr();
+        let perf = Strategy::PerfOpt.plan(&s, 261.0).carbon_kg_per_hr();
+        let ratio = perf / eco;
+        assert!(ratio > 1.05 && ratio < 3.5, "reduction ratio {ratio}");
+        // Savings widen at low CI where embodied dominates (Fig 16).
+        let eco_lo = Strategy::EcoFull.plan(&s, 17.0).carbon_kg_per_hr();
+        let perf_lo = Strategy::PerfOpt.plan(&s, 17.0).carbon_kg_per_hr();
+        assert!(perf_lo / eco_lo > ratio, "low-CI ratio {} vs mid {}",
+                perf_lo / eco_lo, ratio);
+    }
+
+    #[test]
+    fn fleet_from_plan_nonempty_and_serves() {
+        let m = models::llm("llama-8b").unwrap();
+        let plan = Strategy::EcoFull.plan(&slices(m), 261.0);
+        let fleet = fleet_from_plan(&plan, m, 2048);
+        assert!(!fleet.is_empty());
+        assert!(fleet.iter().any(|s| s.role != Role::Decode));
+    }
+
+    #[test]
+    fn iso_power_math() {
+        // 40 H100 (350 W) ≈ 35 A100-40 (400 W).
+        assert_eq!(iso_power_count("H100", 40, "A100-40"), 35);
+        assert_eq!(iso_power_count("H100", 40, "H100"), 40);
+    }
+
+    #[test]
+    fn tp_scaling_table2_shape() {
+        let m = models::llm("llama-70b").unwrap();
+        let dev = Device::from_gpu(crate::hw::gpu("A100-80").unwrap());
+        let s = tp_scaling(m, &dev, 2, 700.0, 800.0, 119.0, 0.1);
+        assert!(s.power_ratio > 1.0 && s.power_ratio < 2.0);
+        assert!(s.latency_ratio < 1.0); // TP halves latency minus comm
+        assert!((s.cost_ratio - 1.0).abs() < 1e-9);
+        assert!(s.energy_ratio < 1.0); // energy improves with TP at fixed CI
+    }
+}

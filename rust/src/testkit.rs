@@ -1,0 +1,140 @@
+//! Property-testing substrate (proptest is not in the offline vendor set).
+//!
+//! Seeded random case generation with greedy shrinking: on failure, the
+//! harness tries progressively simpler inputs derived by the caller's
+//! `shrink` function and reports the smallest failing case. Used by the
+//! solver / coordinator / simulator property suites.
+
+use crate::util::rng::Rng;
+
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_steps: usize,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig { cases: 100, seed: 0xEC0_5E27E, max_shrink_steps: 500 }
+    }
+}
+
+/// Run `check` on `cases` random inputs produced by `gen`. On failure,
+/// repeatedly apply `shrink` (returning candidate simpler inputs) while the
+/// failure persists, then panic with the minimal case.
+pub fn forall<T, G, S, C>(cfg: &PropConfig, mut gen: G, shrink: S, check: C)
+where
+    T: std::fmt::Debug + Clone,
+    G: FnMut(&mut Rng) -> T,
+    S: Fn(&T) -> Vec<T>,
+    C: Fn(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(cfg.seed);
+    for case_idx in 0..cfg.cases {
+        let input = gen(&mut rng);
+        if let Err(first_msg) = check(&input) {
+            // Shrink.
+            let mut best = input.clone();
+            let mut best_msg = first_msg;
+            let mut steps = 0;
+            'outer: loop {
+                for cand in shrink(&best) {
+                    steps += 1;
+                    if steps > cfg.max_shrink_steps {
+                        break 'outer;
+                    }
+                    if let Err(msg) = check(&cand) {
+                        best = cand;
+                        best_msg = msg;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (case {case_idx}, seed {:#x}):\n  input: {:?}\n  error: {}",
+                cfg.seed, best, best_msg
+            );
+        }
+    }
+}
+
+/// Convenience: shrinker for vectors — tries removing halves and single
+/// elements, and element-wise shrinks via `elem`.
+pub fn shrink_vec<T: Clone>(xs: &[T], elem: impl Fn(&T) -> Vec<T>) -> Vec<Vec<T>> {
+    let mut out = Vec::new();
+    let n = xs.len();
+    if n > 0 {
+        out.push(xs[..n / 2].to_vec());
+        out.push(xs[n / 2..].to_vec());
+        for i in 0..n.min(8) {
+            let mut v = xs.to_vec();
+            v.remove(i);
+            out.push(v);
+        }
+        for i in 0..n.min(8) {
+            for e in elem(&xs[i]) {
+                let mut v = xs.to_vec();
+                v[i] = e;
+                out.push(v);
+            }
+        }
+    }
+    out
+}
+
+/// Shrink a positive f64 toward simpler magnitudes.
+pub fn shrink_f64(x: f64) -> Vec<f64> {
+    let mut out = Vec::new();
+    if x != 0.0 { out.push(0.0); }
+    if x.abs() > 1.0 { out.push(x / 2.0); out.push(x.trunc()); }
+    if x < 0.0 { out.push(-x); }
+    out
+}
+
+/// Shrink a usize toward zero.
+pub fn shrink_usize(x: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    if x > 0 { out.push(0); out.push(x / 2); out.push(x - 1); }
+    out.dedup();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_valid_property() {
+        forall(
+            &PropConfig { cases: 50, ..Default::default() },
+            |r| r.below(100),
+            |x| shrink_usize(*x),
+            |x| if *x < 100 { Ok(()) } else { Err("out of range".into()) },
+        );
+    }
+
+    #[test]
+    fn shrinks_to_minimal() {
+        let result = std::panic::catch_unwind(|| {
+            forall(
+                &PropConfig { cases: 100, max_shrink_steps: 10_000, ..Default::default() },
+                |r| r.below(1000),
+                |x| shrink_usize(*x),
+                |x| if *x < 500 { Ok(()) } else { Err(format!("{x} too big")) },
+            );
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // With an ample step budget, greedy shrink converges to the
+        // boundary case exactly.
+        assert!(msg.contains("input: 500"), "{msg}");
+    }
+
+    #[test]
+    fn shrink_vec_produces_smaller() {
+        let xs = vec![5usize, 6, 7, 8];
+        let cands = shrink_vec(&xs, |x| shrink_usize(*x));
+        assert!(cands.iter().any(|c| c.len() < xs.len()));
+        assert!(cands.iter().all(|c| c.len() <= xs.len()));
+    }
+}

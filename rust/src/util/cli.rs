@@ -1,0 +1,118 @@
+//! Tiny CLI argument parser substrate (no clap in the offline vendor set).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, positional args,
+//! and subcommands (first positional). Typed getters with defaults.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit argv slice (excluding argv[0]).
+    pub fn parse_from<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.flags.insert(body.to_string(), v);
+                } else {
+                    out.flags.insert(body.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse the process arguments.
+    pub fn parse() -> Args {
+        Args::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    pub fn positional(&self) -> &[String] { &self.positional }
+
+    pub fn has(&self, key: &str) -> bool { self.flags.contains_key(key) }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn opt_str(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> u64 {
+        self.flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.flags.get(key).map(|s| s.as_str()), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &[&str]) -> Args {
+        Args::parse_from(s.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn parses_kv_both_styles() {
+        let a = args(&["--rate", "2.5", "--model=llama-8b"]);
+        assert_eq!(a.f64("rate", 0.0), 2.5);
+        assert_eq!(a.str("model", ""), "llama-8b");
+    }
+
+    #[test]
+    fn bool_flags() {
+        let a = args(&["--verbose", "--offline"]);
+        assert!(a.bool("verbose") && a.bool("offline"));
+        assert!(!a.bool("quiet"));
+    }
+
+    #[test]
+    fn subcommand_and_positional() {
+        let a = args(&["serve", "--port", "8080", "extra"]);
+        assert_eq!(a.subcommand(), Some("serve"));
+        assert_eq!(a.positional(), &["serve".to_string(), "extra".to_string()]);
+        assert_eq!(a.usize("port", 0), 8080);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = args(&[]);
+        assert_eq!(a.f64("x", 1.25), 1.25);
+        assert_eq!(a.str("y", "d"), "d");
+        assert_eq!(a.subcommand(), None);
+    }
+
+    #[test]
+    fn flag_before_flag_is_boolean() {
+        let a = args(&["--a", "--b", "v"]);
+        assert!(a.bool("a"));
+        assert_eq!(a.str("b", ""), "v");
+    }
+}

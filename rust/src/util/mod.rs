@@ -1,0 +1,8 @@
+//! Std-only substrates: PRNG, statistics, JSON, tables, CLI parsing.
+//! These exist because the offline vendor set has no rand/serde/clap.
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,214 @@
+//! Summary-statistics substrate: means, percentiles, streaming accumulators.
+//!
+//! Used by the simulator's SLO accounting (TTFT/TPOT p50/p90/p99), the bench
+//! harness, and experiment reports.
+
+/// Streaming accumulator (Welford) for mean/variance plus min/max.
+#[derive(Debug, Clone, Default)]
+pub struct Accum {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Accum {
+    pub fn new() -> Self {
+        Accum { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 { self.n }
+    pub fn mean(&self) -> f64 { if self.n == 0 { f64::NAN } else { self.mean } }
+    pub fn min(&self) -> f64 { self.min }
+    pub fn max(&self) -> f64 { self.max }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 { 0.0 } else { self.m2 / (self.n - 1) as f64 }
+    }
+
+    pub fn std(&self) -> f64 { self.variance().sqrt() }
+
+    pub fn merge(&mut self, other: &Accum) {
+        if other.n == 0 { return; }
+        if self.n == 0 { *self = other.clone(); return; }
+        let n = (self.n + other.n) as f64;
+        let d = other.mean - self.mean;
+        self.m2 += other.m2 + d * d * self.n as f64 * other.n as f64 / n;
+        self.mean += d * other.n as f64 / n;
+        self.n += other.n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// A recorded sample set with percentile queries (sorts lazily).
+#[derive(Debug, Clone, Default)]
+pub struct Samples {
+    xs: Vec<f64>,
+    sorted: bool,
+}
+
+impl Samples {
+    pub fn new() -> Self { Samples { xs: Vec::new(), sorted: true } }
+
+    pub fn push(&mut self, x: f64) {
+        self.xs.push(x);
+        self.sorted = false;
+    }
+
+    pub fn extend(&mut self, xs: &[f64]) {
+        self.xs.extend_from_slice(xs);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize { self.xs.len() }
+    pub fn is_empty(&self) -> bool { self.xs.is_empty() }
+
+    pub fn mean(&self) -> f64 {
+        if self.xs.is_empty() { return f64::NAN; }
+        self.xs.iter().sum::<f64>() / self.xs.len() as f64
+    }
+
+    pub fn sum(&self) -> f64 { self.xs.iter().sum() }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+    }
+
+    /// Percentile by linear interpolation, q in [0, 100].
+    pub fn percentile(&mut self, q: f64) -> f64 {
+        if self.xs.is_empty() { return f64::NAN; }
+        self.ensure_sorted();
+        let rank = q / 100.0 * (self.xs.len() - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        if lo == hi { return self.xs[lo]; }
+        let frac = rank - lo as f64;
+        self.xs[lo] * (1.0 - frac) + self.xs[hi] * frac
+    }
+
+    pub fn p50(&mut self) -> f64 { self.percentile(50.0) }
+    pub fn p90(&mut self) -> f64 { self.percentile(90.0) }
+    pub fn p99(&mut self) -> f64 { self.percentile(99.0) }
+    pub fn max(&mut self) -> f64 { self.percentile(100.0) }
+    pub fn min(&mut self) -> f64 { self.percentile(0.0) }
+
+    /// Median absolute deviation — robust spread for outlier rejection.
+    pub fn mad(&mut self) -> f64 {
+        if self.xs.is_empty() { return f64::NAN; }
+        let med = self.p50();
+        let mut devs = Samples::new();
+        let xs = self.xs.clone();
+        for x in xs { devs.push((x - med).abs()); }
+        devs.p50()
+    }
+}
+
+/// Exponential moving average for runtime load tracking.
+#[derive(Debug, Clone)]
+pub struct Ema {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ema {
+    pub fn new(alpha: f64) -> Self {
+        assert!((0.0..=1.0).contains(&alpha));
+        Ema { alpha, value: None }
+    }
+
+    pub fn push(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(prev) => self.alpha * x + (1.0 - self.alpha) * prev,
+        };
+        self.value = Some(v);
+        v
+    }
+
+    pub fn get(&self) -> Option<f64> { self.value }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accum_basic() {
+        let mut a = Accum::new();
+        for x in [1.0, 2.0, 3.0, 4.0] { a.push(x); }
+        assert_eq!(a.count(), 4);
+        assert!((a.mean() - 2.5).abs() < 1e-12);
+        assert!((a.variance() - 5.0 / 3.0).abs() < 1e-12);
+        assert_eq!(a.min(), 1.0);
+        assert_eq!(a.max(), 4.0);
+    }
+
+    #[test]
+    fn accum_merge_matches_sequential() {
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64).sin() * 10.0).collect();
+        let mut whole = Accum::new();
+        for &x in &xs { whole.push(x); }
+        let mut left = Accum::new();
+        let mut right = Accum::new();
+        for &x in &xs[..37] { left.push(x); }
+        for &x in &xs[37..] { right.push(x); }
+        left.merge(&right);
+        assert!((left.mean() - whole.mean()).abs() < 1e-9);
+        assert!((left.variance() - whole.variance()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentiles() {
+        let mut s = Samples::new();
+        for i in 1..=100 { s.push(i as f64); }
+        assert!((s.p50() - 50.5).abs() < 1e-9);
+        assert!((s.percentile(0.0) - 1.0).abs() < 1e-9);
+        assert!((s.percentile(100.0) - 100.0).abs() < 1e-9);
+        assert!((s.p99() - 99.01).abs() < 0.02);
+    }
+
+    #[test]
+    fn percentile_single_sample() {
+        let mut s = Samples::new();
+        s.push(7.0);
+        assert_eq!(s.p50(), 7.0);
+        assert_eq!(s.p99(), 7.0);
+    }
+
+    #[test]
+    fn empty_samples_nan() {
+        let mut s = Samples::new();
+        assert!(s.p50().is_nan());
+        assert!(s.mean().is_nan());
+    }
+
+    #[test]
+    fn mad_robust() {
+        let mut s = Samples::new();
+        s.extend(&[1.0, 1.0, 1.0, 1.0, 1000.0]);
+        assert_eq!(s.mad(), 0.0);
+    }
+
+    #[test]
+    fn ema_converges() {
+        let mut e = Ema::new(0.5);
+        assert_eq!(e.push(10.0), 10.0);
+        let mut v = 0.0;
+        for _ in 0..50 { v = e.push(20.0); }
+        assert!((v - 20.0).abs() < 1e-6);
+    }
+}

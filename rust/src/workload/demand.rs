@@ -1,0 +1,136 @@
+//! Online/offline demand traces for the two production services (Fig 10).
+//!
+//! The paper reports, for Services A and B over a week: offline demand
+//! averages 21% (A) and 45% (B) of total serving capacity, peaking at 27%
+//! and 55%. The synthetic traces reproduce those aggregates with diurnal
+//! online load and anti-correlated offline backfill (batch jobs queue up
+//! and run preferentially off-peak).
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Service {
+    A,
+    B,
+}
+
+impl Service {
+    /// (average, peak) offline share of total capacity, per the paper.
+    pub fn offline_share(&self) -> (f64, f64) {
+        match self {
+            Service::A => (0.21, 0.27),
+            Service::B => (0.45, 0.55),
+        }
+    }
+}
+
+/// One point of the demand trace, in normalized capacity units
+/// (1.0 = service's mean total demand).
+#[derive(Debug, Clone, Copy)]
+pub struct DemandPoint {
+    pub t_s: f64,
+    pub online: f64,
+    pub offline: f64,
+}
+
+impl DemandPoint {
+    pub fn total(&self) -> f64 {
+        self.online + self.offline
+    }
+
+    pub fn offline_frac(&self) -> f64 {
+        self.offline / self.total().max(1e-12)
+    }
+}
+
+/// Synthesize a demand trace for `days` at `step_s` resolution.
+pub fn demand_trace(service: Service, days: usize, step_s: f64, seed: u64)
+    -> Vec<DemandPoint> {
+    let (avg_off, peak_off) = service.offline_share();
+    let mut rng = Rng::new(seed ^ match service { Service::A => 0xA, Service::B => 0xB });
+    let n = ((days as f64 * 86_400.0) / step_s).ceil() as usize;
+    // Solve for component scales: with online mean 1-avg_off and offline
+    // mean avg_off of a unit-total trace.
+    let on_mean = 1.0 - avg_off;
+    let off_mean = avg_off;
+    // Offline swing chosen so the *share* peaks near peak_off when online
+    // troughs (the share peak is driven mostly by the online trough, so a
+    // fraction of the raw ratio suffices).
+    let off_swing = (0.6 * (peak_off / avg_off - 1.0)).clamp(0.05, 0.5);
+    let mut noise_on = 0.0f64;
+    let mut noise_off = 0.0f64;
+    (0..n)
+        .map(|i| {
+            let t = i as f64 * step_s;
+            let hour = (t / 3600.0) % 24.0;
+            let dow = ((t / 86_400.0) as usize) % 7;
+            // Weekends scale total demand (both classes), not the mix.
+            let weekday = if dow < 5 { 1.0 } else { 0.85 };
+            // Online peaks mid-afternoon.
+            let diurnal_on = 1.0
+                + 0.25 * (((hour - 8.0) / 24.0) * std::f64::consts::TAU).sin();
+            // Offline backfill runs anti-cyclic (overnight batches).
+            let diurnal_off = 1.0
+                + off_swing * (((hour - 20.0) / 24.0) * std::f64::consts::TAU).sin();
+            noise_on = 0.85 * noise_on + 0.15 * rng.normal() * 0.05;
+            noise_off = 0.85 * noise_off + 0.15 * rng.normal() * 0.07;
+            DemandPoint {
+                t_s: t,
+                online: (on_mean * diurnal_on * weekday * (1.0 + noise_on)).max(0.01),
+                offline: (off_mean * diurnal_off * weekday * (1.0 + noise_off)).max(0.01),
+            }
+        })
+        .collect()
+}
+
+/// Aggregate statistics of a trace: (avg offline share, peak offline share,
+/// peak total demand).
+pub fn trace_stats(trace: &[DemandPoint]) -> (f64, f64, f64) {
+    let total: f64 = trace.iter().map(|p| p.total()).sum();
+    let off: f64 = trace.iter().map(|p| p.offline).sum();
+    let peak_share = trace.iter().map(|p| p.offline_frac()).fold(0.0, f64::max);
+    let peak_total = trace.iter().map(|p| p.total()).fold(0.0, f64::max);
+    (off / total, peak_share, peak_total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn service_a_matches_published_shares() {
+        let tr = demand_trace(Service::A, 7, 900.0, 42);
+        let (avg, peak, _) = trace_stats(&tr);
+        assert!((avg - 0.21).abs() < 0.04, "avg {avg}");
+        assert!(peak > 0.23 && peak < 0.36, "peak {peak}");
+    }
+
+    #[test]
+    fn service_b_matches_published_shares() {
+        let tr = demand_trace(Service::B, 7, 900.0, 42);
+        let (avg, peak, _) = trace_stats(&tr);
+        assert!((avg - 0.45).abs() < 0.05, "avg {avg}");
+        assert!(peak > 0.50 && peak < 0.65, "peak {peak}");
+    }
+
+    #[test]
+    fn offline_anticorrelated_with_online() {
+        let tr = demand_trace(Service::B, 3, 900.0, 7);
+        let on_mean = tr.iter().map(|p| p.online).sum::<f64>() / tr.len() as f64;
+        let off_mean = tr.iter().map(|p| p.offline).sum::<f64>() / tr.len() as f64;
+        let cov: f64 = tr.iter()
+            .map(|p| (p.online - on_mean) * (p.offline - off_mean))
+            .sum::<f64>() / tr.len() as f64;
+        assert!(cov < 0.0, "cov {cov} should be negative");
+    }
+
+    #[test]
+    fn demand_positive_and_daily_periodic() {
+        let tr = demand_trace(Service::A, 2, 3600.0, 9);
+        assert!(tr.iter().all(|p| p.online > 0.0 && p.offline > 0.0));
+        // Afternoon online exceeds small-hours online on both days.
+        let day = |d: usize, h: usize| tr[d * 24 + h].online;
+        assert!(day(0, 14) > day(0, 2));
+        assert!(day(1, 14) > day(1, 2));
+    }
+}

@@ -1,0 +1,230 @@
+//! Workload substrate: request length distributions, arrival processes,
+//! online/offline demand traces, and SLO definitions (paper §5, Fig 10).
+//!
+//! Public datasets (ShareGPT, LongBench, Azure Function Traces) and the
+//! production traces are not available offline; generators reproduce their
+//! *published summary statistics* — length mixes, burstiness, diurnal
+//! online/offline split — which is what the planner and simulator consume.
+
+pub mod demand;
+pub mod slo;
+
+use crate::util::rng::Rng;
+
+/// A single inference request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    /// Arrival time, seconds from trace start.
+    pub arrival_s: f64,
+    pub prompt_tokens: usize,
+    pub output_tokens: usize,
+    /// Online (interactive SLO) or offline (24 h batch SLO).
+    pub class: RequestClass,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum RequestClass {
+    Online,
+    Offline,
+}
+
+/// Token-length distribution families fit to the public datasets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LengthDist {
+    /// ShareGPT-like chat: short-to-medium prompts, medium outputs.
+    ShareGpt,
+    /// LongBench-like long-context: multi-k prompts, short outputs.
+    LongBench,
+    /// Azure-Functions-like short bursts.
+    AzureCode,
+}
+
+impl LengthDist {
+    /// Sample (prompt_tokens, output_tokens). Lognormal fits to published
+    /// means/long tails, clamped to serving-realistic ranges.
+    pub fn sample(&self, rng: &mut Rng) -> (usize, usize) {
+        let (p, o) = match self {
+            // mean ≈ 250 in / 320 out, heavy tail.
+            LengthDist::ShareGpt => (
+                rng.lognormal(5.0, 1.0),
+                rng.lognormal(5.4, 0.9),
+            ),
+            // mean ≈ 6k in / 130 out.
+            LengthDist::LongBench => (
+                rng.lognormal(8.5, 0.7),
+                rng.lognormal(4.5, 0.7),
+            ),
+            // mean ≈ 900 in / 180 out.
+            LengthDist::AzureCode => (
+                rng.lognormal(6.5, 0.8),
+                rng.lognormal(4.9, 0.8),
+            ),
+        };
+        (
+            (p as usize).clamp(8, 32_768),
+            (o as usize).clamp(4, 4_096),
+        )
+    }
+
+    pub fn mean_prompt(&self) -> f64 {
+        match self {
+            LengthDist::ShareGpt => (5.0f64 + 0.5).exp(),
+            LengthDist::LongBench => (8.5f64 + 0.245).exp(),
+            LengthDist::AzureCode => (6.5f64 + 0.32).exp(),
+        }
+    }
+}
+
+/// Arrival process.
+#[derive(Debug, Clone, Copy)]
+pub enum Arrivals {
+    /// Memoryless with the given rate (req/s).
+    Poisson { rate: f64 },
+    /// Gamma-renewal bursty arrivals (cv > 1 ⇒ burstier than Poisson) —
+    /// the scaled-AZF emulation from §6.1 ("bursty behavior of online
+    /// samples").
+    Bursty { rate: f64, cv: f64 },
+    /// Diurnal-modulated Poisson: rate(t) = rate·(1 + amp·sin) (Fig 10's
+    /// day shape).
+    Diurnal { rate: f64, amplitude: f64 },
+}
+
+impl Arrivals {
+    /// Next inter-arrival gap at absolute time `t_s`.
+    pub fn next_gap(&self, rng: &mut Rng, t_s: f64) -> f64 {
+        match *self {
+            Arrivals::Poisson { rate } => rng.exp(rate),
+            Arrivals::Bursty { rate, cv } => {
+                // Gamma renewal: shape k = 1/cv², scale = 1/(rate·k).
+                let k = 1.0 / (cv * cv);
+                rng.gamma(k, 1.0 / (rate * k))
+            }
+            Arrivals::Diurnal { rate, amplitude } => {
+                let hour = (t_s / 3600.0) % 24.0;
+                // Peak at 14:00 local, trough at 02:00.
+                let mod_rate = rate
+                    * (1.0 + amplitude * ((hour - 8.0) / 24.0
+                        * std::f64::consts::TAU).sin());
+                rng.exp(mod_rate.max(rate * 0.05))
+            }
+        }
+    }
+}
+
+/// Generate a request trace.
+pub fn generate_trace(
+    arrivals: Arrivals,
+    lengths: LengthDist,
+    class: RequestClass,
+    duration_s: f64,
+    seed: u64,
+) -> Vec<Request> {
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::new();
+    let mut t = 0.0;
+    let mut id = 0u64;
+    loop {
+        t += arrivals.next_gap(&mut rng, t);
+        if t >= duration_s {
+            break;
+        }
+        let (p, o) = lengths.sample(&mut rng);
+        out.push(Request { id, arrival_s: t, prompt_tokens: p, output_tokens: o, class });
+        id += 1;
+    }
+    out
+}
+
+/// Merge traces preserving arrival order.
+pub fn merge_traces(mut traces: Vec<Vec<Request>>) -> Vec<Request> {
+    let mut all: Vec<Request> = traces.drain(..).flatten().collect();
+    all.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+    for (i, r) in all.iter_mut().enumerate() {
+        r.id = i as u64;
+    }
+    all
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_rate_respected() {
+        let tr = generate_trace(Arrivals::Poisson { rate: 10.0 },
+                                LengthDist::ShareGpt, RequestClass::Online,
+                                300.0, 1);
+        let rate = tr.len() as f64 / 300.0;
+        assert!((rate - 10.0).abs() < 1.0, "rate {rate}");
+        assert!(tr.windows(2).all(|w| w[1].arrival_s >= w[0].arrival_s));
+    }
+
+    #[test]
+    fn sharegpt_lengths_in_band() {
+        let mut rng = Rng::new(2);
+        let n = 20_000;
+        let mut psum = 0.0;
+        let mut osum = 0.0;
+        for _ in 0..n {
+            let (p, o) = LengthDist::ShareGpt.sample(&mut rng);
+            psum += p as f64;
+            osum += o as f64;
+        }
+        let (pm, om) = (psum / n as f64, osum / n as f64);
+        assert!(pm > 150.0 && pm < 400.0, "prompt mean {pm}");
+        assert!(om > 200.0 && om < 500.0, "output mean {om}");
+    }
+
+    #[test]
+    fn longbench_much_longer_prompts() {
+        let mut rng = Rng::new(3);
+        let n = 5_000;
+        let mean: f64 = (0..n)
+            .map(|_| LengthDist::LongBench.sample(&mut rng).0 as f64)
+            .sum::<f64>() / n as f64;
+        assert!(mean > 3_000.0, "longbench mean {mean}");
+    }
+
+    #[test]
+    fn bursty_has_higher_cv() {
+        let gaps = |a: Arrivals, seed| -> Vec<f64> {
+            let tr = generate_trace(a, LengthDist::ShareGpt,
+                                    RequestClass::Online, 2_000.0, seed);
+            tr.windows(2).map(|w| w[1].arrival_s - w[0].arrival_s).collect()
+        };
+        let cv = |xs: &[f64]| {
+            let m = xs.iter().sum::<f64>() / xs.len() as f64;
+            let v = xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / xs.len() as f64;
+            v.sqrt() / m
+        };
+        let poisson_cv = cv(&gaps(Arrivals::Poisson { rate: 5.0 }, 4));
+        let bursty_cv = cv(&gaps(Arrivals::Bursty { rate: 5.0, cv: 3.0 }, 4));
+        assert!((poisson_cv - 1.0).abs() < 0.15, "poisson cv {poisson_cv}");
+        assert!(bursty_cv > 1.8, "bursty cv {bursty_cv}");
+    }
+
+    #[test]
+    fn diurnal_peaks_afternoon() {
+        let tr = generate_trace(Arrivals::Diurnal { rate: 5.0, amplitude: 0.8 },
+                                LengthDist::ShareGpt, RequestClass::Online,
+                                86_400.0, 5);
+        let count_in = |lo: f64, hi: f64| tr.iter()
+            .filter(|r| r.arrival_s >= lo * 3600.0 && r.arrival_s < hi * 3600.0)
+            .count();
+        let afternoon = count_in(12.0, 16.0);
+        let night = count_in(0.0, 4.0);
+        assert!(afternoon > night * 2, "afternoon {afternoon} night {night}");
+    }
+
+    #[test]
+    fn merge_sorted_and_reindexed() {
+        let a = generate_trace(Arrivals::Poisson { rate: 2.0 },
+                               LengthDist::ShareGpt, RequestClass::Online, 50.0, 6);
+        let b = generate_trace(Arrivals::Poisson { rate: 2.0 },
+                               LengthDist::LongBench, RequestClass::Offline, 50.0, 7);
+        let m = merge_traces(vec![a, b]);
+        assert!(m.windows(2).all(|w| w[1].arrival_s >= w[0].arrival_s));
+        assert!(m.iter().enumerate().all(|(i, r)| r.id == i as u64));
+    }
+}

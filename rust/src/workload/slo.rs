@@ -1,0 +1,76 @@
+//! Service-level objectives per model (the paper's §5 table).
+
+use super::LengthDist;
+
+/// SLO pair: TTFT (time to first token) and TPOT (time per output token).
+#[derive(Debug, Clone, Copy)]
+pub struct Slo {
+    pub ttft_s: f64,
+    pub tpot_s: f64,
+}
+
+/// Offline jobs carry a completion deadline instead of latency SLOs.
+pub const OFFLINE_DEADLINE_S: f64 = 24.0 * 3600.0;
+
+/// One row of the paper's §5 workload table.
+#[derive(Debug, Clone, Copy)]
+pub struct WorkloadSpec {
+    pub model: &'static str,
+    pub slo: Slo,
+    pub dataset: LengthDist,
+    pub offline: bool,
+}
+
+/// The paper's model/SLO/dataset matrix.
+pub fn workload_table() -> &'static [WorkloadSpec] {
+    &[
+        WorkloadSpec { model: "gemma-2b", slo: Slo { ttft_s: 0.25, tpot_s: 0.10 },
+                       dataset: LengthDist::ShareGpt, offline: false },
+        WorkloadSpec { model: "llama-8b", slo: Slo { ttft_s: 0.5, tpot_s: 0.10 },
+                       dataset: LengthDist::ShareGpt, offline: false },
+        WorkloadSpec { model: "llama-13b", slo: Slo { ttft_s: 1.5, tpot_s: 0.15 },
+                       dataset: LengthDist::AzureCode, offline: false },
+        WorkloadSpec { model: "llama-70b", slo: Slo { ttft_s: 15.0, tpot_s: 0.24 },
+                       dataset: LengthDist::AzureCode, offline: false },
+        WorkloadSpec { model: "mixtral-8x7b", slo: Slo { ttft_s: 2.5, tpot_s: 0.15 },
+                       dataset: LengthDist::ShareGpt, offline: false },
+        WorkloadSpec { model: "gemma-27b", slo: Slo { ttft_s: 10.0, tpot_s: 0.20 },
+                       dataset: LengthDist::AzureCode, offline: false },
+        WorkloadSpec { model: "gemma-27b", slo: Slo { ttft_s: OFFLINE_DEADLINE_S,
+                                                      tpot_s: f64::INFINITY },
+                       dataset: LengthDist::LongBench, offline: true },
+        WorkloadSpec { model: "bloom-176b", slo: Slo { ttft_s: 20.0, tpot_s: 0.27 },
+                       dataset: LengthDist::AzureCode, offline: false },
+    ]
+}
+
+pub fn slo_for(model: &str, offline: bool) -> Option<&'static WorkloadSpec> {
+    workload_table().iter().find(|w| w.model == model && w.offline == offline)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_complete() {
+        assert_eq!(workload_table().len(), 8);
+        assert!(slo_for("llama-70b", false).is_some());
+        assert!(slo_for("gemma-27b", true).unwrap().offline);
+    }
+
+    #[test]
+    fn bigger_models_get_looser_slos() {
+        let small = slo_for("gemma-2b", false).unwrap().slo;
+        let big = slo_for("bloom-176b", false).unwrap().slo;
+        assert!(big.ttft_s > small.ttft_s);
+        assert!(big.tpot_s > small.tpot_s);
+    }
+
+    #[test]
+    fn offline_deadline_is_24h() {
+        assert_eq!(OFFLINE_DEADLINE_S, 86_400.0);
+        let off = slo_for("gemma-27b", true).unwrap();
+        assert_eq!(off.slo.ttft_s, OFFLINE_DEADLINE_S);
+    }
+}

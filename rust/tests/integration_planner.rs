@@ -1,0 +1,109 @@
+//! Planner integration: full trace -> slices -> ILP -> plan pipeline across
+//! models, strategies, and CI levels; fleet feasibility checks.
+
+use ecoserve::models;
+use ecoserve::planner::slicing::{cluster_slices, slice_trace};
+use ecoserve::planner::{plan, Phase, PlanConfig};
+use ecoserve::solver::MilpStatus;
+use ecoserve::strategies::Strategy;
+use ecoserve::workload::slo::{slo_for, Slo};
+use ecoserve::workload::{generate_trace, merge_traces, Arrivals, LengthDist,
+                         RequestClass};
+
+fn workload(model: &'static ecoserve::models::LlmSpec, rate: f64)
+    -> Vec<ecoserve::planner::slicing::Slice> {
+    let online = generate_trace(Arrivals::Bursty { rate, cv: 2.0 },
+                                LengthDist::ShareGpt, RequestClass::Online,
+                                300.0, 3);
+    let offline = generate_trace(Arrivals::Poisson { rate: rate / 2.0 },
+                                 LengthDist::LongBench, RequestClass::Offline,
+                                 300.0, 4);
+    let tr = merge_traces(vec![online, offline]);
+    let slo = slo_for(model.name, false).map(|w| w.slo)
+        .unwrap_or(Slo { ttft_s: 2.0, tpot_s: 0.2 });
+    cluster_slices(&slice_trace(model, &tr, 300.0, slo, 1))
+}
+
+#[test]
+fn full_pipeline_for_model_suite() {
+    for name in ["gemma-2b", "llama-8b", "gemma-27b", "llama-70b"] {
+        let m = models::llm(name).unwrap();
+        let slices = workload(m, 6.0);
+        let p = plan(&slices, &PlanConfig::default());
+        assert!(matches!(p.status, MilpStatus::Optimal | MilpStatus::Feasible),
+                "{name}: {:?}", p.status);
+        assert!(p.total_gpus() > 0, "{name}: empty fleet");
+        // Every slice-phase routed.
+        let expected = slices.len() * 2;
+        assert_eq!(p.assignments.len(), expected, "{name}");
+        // Capacity: load per device type never exceeds count.
+        for (dev, &count) in &p.counts {
+            if dev == "cpu-host" { continue; }
+            let load: f64 = p.assignments.iter()
+                .filter(|a| &a.device == dev)
+                .map(|a| a.load)
+                .sum();
+            assert!(load <= count as f64 + 1e-6,
+                    "{name}: {dev} load {load} > count {count}");
+        }
+    }
+}
+
+#[test]
+fn slo_respected_in_assignments() {
+    let m = models::llm("llama-8b").unwrap();
+    let slices = workload(m, 8.0);
+    let p = plan(&slices, &PlanConfig::default());
+    // Best-effort fallback columns are allowed to exceed the SLO; the
+    // overwhelming majority must meet it.
+    let total = p.assignments.len();
+    let ok = p.assignments.iter().filter(|a| {
+        let s = &slices[a.slice_idx];
+        match a.phase {
+            Phase::Prompt => a.latency_s <= s.slo.ttft_s + 1e-9,
+            Phase::Decode => s.offline || a.latency_s <= s.slo.tpot_s + 1e-9,
+        }
+    }).count();
+    assert!(ok as f64 >= 0.9 * total as f64, "only {ok}/{total} within SLO");
+}
+
+#[test]
+fn alpha_sweeps_cost_carbon_tradeoff() {
+    let m = models::llm("llama-8b").unwrap();
+    let slices = workload(m, 8.0);
+    let carbon_heavy = plan(&slices, &PlanConfig { alpha: 1.0, ..Default::default() });
+    let cost_heavy = plan(&slices, &PlanConfig { alpha: 0.0, ..Default::default() });
+    assert!(carbon_heavy.carbon_kg_per_hr() <= cost_heavy.carbon_kg_per_hr() + 1e-9);
+    // Cost ordering holds up to heuristic-incumbent slack (the solver may
+    // return the greedy warm start when search truncates).
+    assert!(cost_heavy.cost_hr <= carbon_heavy.cost_hr * 1.25 + 1e-9,
+            "cost α=0 {} vs α=1 {}", cost_heavy.cost_hr, carbon_heavy.cost_hr);
+}
+
+#[test]
+fn strategies_rank_consistently_across_ci() {
+    let m = models::llm("llama-8b").unwrap();
+    let slices = workload(m, 8.0);
+    for ci in [17.0, 261.0, 501.0] {
+        let eco = Strategy::EcoFull.plan(&slices, ci).carbon_kg_per_hr();
+        for s in Strategy::all() {
+            let c = s.plan(&slices, ci).carbon_kg_per_hr();
+            assert!(eco <= c * 1.02,
+                    "CI {ci}: ecoserve {eco} vs {} {c}", s.name());
+        }
+    }
+}
+
+#[test]
+fn planner_scales_sublinearly() {
+    // Table 3's property: 16x cluster growth costs << 16x solve time.
+    let m = models::llm("llama-8b").unwrap();
+    let solve_at = |rate: f64| {
+        let slices = workload(m, rate);
+        plan(&slices, &PlanConfig::default()).solve_s
+    };
+    let t_small = solve_at(4.0).max(1e-4);
+    let t_big = solve_at(64.0);
+    assert!(t_big < t_small * 40.0, "small {t_small}s big {t_big}s");
+    assert!(t_big < 5.0, "big solve too slow: {t_big}s");
+}

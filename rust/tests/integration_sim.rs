@@ -1,0 +1,82 @@
+//! Simulator integration: planner-built fleets serve their own workloads
+//! within SLO, and carbon accounting is self-consistent.
+
+use ecoserve::models;
+use ecoserve::planner::slicing::{cluster_slices, slice_trace};
+use ecoserve::sim::{simulate, Router};
+use ecoserve::strategies::{fleet_from_plan, sim_config, splitwise_fleet, Strategy};
+use ecoserve::workload::slo::slo_for;
+use ecoserve::workload::{generate_trace, Arrivals, LengthDist, RequestClass};
+
+#[test]
+fn planned_fleet_meets_slo_mostly() {
+    let m = models::llm("llama-8b").unwrap();
+    let slo = slo_for("llama-8b", false).unwrap().slo;
+    let tr = generate_trace(Arrivals::Poisson { rate: 6.0 },
+                            LengthDist::ShareGpt, RequestClass::Online,
+                            180.0, 9);
+    let slices = cluster_slices(&slice_trace(m, &tr, 180.0, slo, 1));
+    let plan = Strategy::EcoFull.plan(&slices, 261.0);
+    let fleet = fleet_from_plan(&plan, m, 2048);
+    assert!(!fleet.is_empty());
+    let cfg = sim_config(fleet, &plan, 261.0);
+    let r = simulate(m, &tr, &cfg, slo.ttft_s, slo.tpot_s);
+    assert_eq!(r.completed, tr.len());
+    assert!(r.slo_attainment > 0.6,
+            "planned fleet SLO attainment too low: {}", r.slo_attainment);
+}
+
+#[test]
+fn carbon_accounting_scales_with_ci() {
+    let m = models::llm("llama-8b").unwrap();
+    let tr = generate_trace(Arrivals::Poisson { rate: 2.0 },
+                            LengthDist::ShareGpt, RequestClass::Online,
+                            120.0, 10);
+    let mk = |ci: f64| {
+        let servers = ecoserve::sim::homogeneous_fleet("A100-40", 4, m, 2048);
+        let cfg = ecoserve::sim::SimConfig {
+            emb_kg_per_hr: vec![0.005; 4],
+            servers,
+            router: Router::Jsq,
+            ci,
+            kv_transfer_bw: 64e9,
+        };
+        simulate(m, &tr, &cfg, 0.5, 0.1)
+    };
+    let low = mk(17.0);
+    let high = mk(501.0);
+    // Same trace, same fleet: identical energy, op carbon ∝ CI.
+    assert!((low.energy_j - high.energy_j).abs() < 1e-6);
+    let ratio = high.op_kg / low.op_kg;
+    assert!((ratio - 501.0 / 17.0).abs() < 0.1, "op ratio {ratio}");
+    assert!((low.emb_kg - high.emb_kg).abs() < 1e-9);
+}
+
+#[test]
+fn splitwise_vs_ecoserve_shape() {
+    // Fig 17's qualitative claim on one point: at iso fleet size, the
+    // workload-aware heterogeneous plan emits no more carbon than the
+    // fixed H100 PD split.
+    let m = models::llm("llama-70b").unwrap();
+    let slo = slo_for("llama-70b", false).unwrap().slo;
+    let tr = generate_trace(Arrivals::Poisson { rate: 0.6 },
+                            LengthDist::AzureCode, RequestClass::Online,
+                            120.0, 11);
+    let slices = cluster_slices(&slice_trace(m, &tr, 120.0, slo, 1));
+    let eco_plan = Strategy::EcoFull.plan(&slices, 261.0);
+    let eco_fleet = fleet_from_plan(&eco_plan, m, 2048);
+    let eco = simulate(m, &tr, &sim_config(eco_fleet, &eco_plan, 261.0),
+                       slo.ttft_s, slo.tpot_s);
+
+    let total = eco_plan.total_gpus().max(4);
+    let sw_fleet = splitwise_fleet(m, (total * 3 / 4).max(1),
+                                   (total / 4).max(1), 2048);
+    let sw_plan = Strategy::Splitwise.plan(&slices, 261.0);
+    let mut sw_cfg = sim_config(sw_fleet, &sw_plan, 261.0);
+    sw_cfg.router = Router::Jsq;
+    let sw = simulate(m, &tr, &sw_cfg, slo.ttft_s, slo.tpot_s);
+
+    assert_eq!(eco.completed, sw.completed);
+    assert!(eco.carbon_kg() <= sw.carbon_kg() * 1.1,
+            "eco {} vs splitwise {}", eco.carbon_kg(), sw.carbon_kg());
+}

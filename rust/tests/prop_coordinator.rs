@@ -1,0 +1,163 @@
+//! Property tests on coordinator-side invariants: routing, slicing,
+//! and simulator conservation laws.
+
+use ecoserve::models;
+use ecoserve::planner::slicing::{cluster_slices, slice_trace};
+use ecoserve::sim::{homogeneous_fleet, simulate, Router, SimConfig};
+use ecoserve::testkit::{forall, PropConfig};
+use ecoserve::util::rng::Rng;
+use ecoserve::workload::slo::Slo;
+use ecoserve::workload::{generate_trace, Arrivals, LengthDist, Request,
+                         RequestClass};
+
+#[derive(Debug, Clone)]
+struct TraceCase {
+    rate: f64,
+    seed: u64,
+    dur: f64,
+}
+
+fn gen_case(r: &mut Rng) -> TraceCase {
+    TraceCase {
+        rate: r.range(0.2, 6.0),
+        seed: r.next_u64(),
+        dur: r.range(30.0, 90.0),
+    }
+}
+
+fn trace_of(c: &TraceCase) -> Vec<Request> {
+    generate_trace(Arrivals::Poisson { rate: c.rate }, LengthDist::ShareGpt,
+                   RequestClass::Online, c.dur, c.seed)
+}
+
+#[test]
+fn simulator_conserves_requests_and_tokens() {
+    let m = models::llm("llama-8b").unwrap();
+    forall(
+        &PropConfig { cases: 25, ..Default::default() },
+        gen_case,
+        |_| Vec::new(),
+        |c| {
+            let tr = trace_of(c);
+            let servers = homogeneous_fleet("A100-40", 3, m, 2048);
+            let cfg = SimConfig {
+                emb_kg_per_hr: vec![0.005; servers.len()],
+                servers,
+                router: Router::Jsq,
+                ci: 261.0,
+                kv_transfer_bw: 64e9,
+            };
+            let r = simulate(m, &tr, &cfg, 0.5, 0.1);
+            if r.completed != tr.len() {
+                return Err(format!("completed {} of {}", r.completed, tr.len()));
+            }
+            let want: usize = tr.iter().map(|x| x.output_tokens.max(1)).sum();
+            if r.generated_tokens != want {
+                return Err(format!("tokens {} vs {}", r.generated_tokens, want));
+            }
+            if r.ttft.len() != tr.len() || r.tpot.len() != tr.len() {
+                return Err("sample counts mismatch".into());
+            }
+            if !(r.energy_j.is_finite() && r.energy_j > 0.0) {
+                return Err("bad energy".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn ttft_never_precedes_arrival() {
+    let m = models::llm("llama-8b").unwrap();
+    forall(
+        &PropConfig { cases: 15, ..Default::default() },
+        gen_case,
+        |_| Vec::new(),
+        |c| {
+            let tr = trace_of(c);
+            let servers = homogeneous_fleet("L4", 2, m, 2048);
+            let cfg = SimConfig {
+                emb_kg_per_hr: vec![0.001; 2],
+                servers,
+                router: Router::WorkloadAware,
+                ci: 100.0,
+                kv_transfer_bw: 64e9,
+            };
+            let mut r = simulate(m, &tr, &cfg, 0.5, 0.1);
+            if r.ttft.min() < 0.0 {
+                return Err(format!("negative TTFT {}", r.ttft.min()));
+            }
+            if r.tpot.min() < 0.0 {
+                return Err("negative TPOT".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn slicing_conserves_rate_under_any_factor() {
+    let m = models::llm("llama-8b").unwrap();
+    forall(
+        &PropConfig { cases: 30, ..Default::default() },
+        |r| (gen_case(r), 1 + r.below(6)),
+        |_| Vec::new(),
+        |(c, f)| {
+            let tr = trace_of(c);
+            if tr.is_empty() {
+                return Ok(());
+            }
+            let slo = Slo { ttft_s: 0.5, tpot_s: 0.1 };
+            let slices = slice_trace(m, &tr, c.dur, slo, *f);
+            let total: f64 = slices.iter().map(|s| s.rate).sum();
+            let want = tr.len() as f64 / c.dur;
+            if (total - want).abs() > 1e-9 * want.max(1.0) {
+                return Err(format!("rate {total} vs {want} (f={f})"));
+            }
+            let clustered = cluster_slices(&slices);
+            let ctotal: f64 = clustered.iter().map(|s| s.rate).sum();
+            if (ctotal - want).abs() > 1e-9 * want.max(1.0) {
+                return Err("clustering lost rate".into());
+            }
+            if clustered.len() > slices.len() {
+                return Err("clustering grew".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn planner_respects_slo_feasibility() {
+    use ecoserve::planner::{device_options, max_tput, Phase, PlanConfig};
+    use ecoserve::planner::slicing::Slice;
+    let m = models::llm("llama-8b").unwrap();
+    forall(
+        &PropConfig { cases: 40, ..Default::default() },
+        |r| (r.range(0.02, 3.0), r.below(4096) + 16, r.below(512) + 8),
+        |_| Vec::new(),
+        |(ttft, prompt, output)| {
+            let s = Slice {
+                model: m,
+                rate: 1.0,
+                prompt: *prompt,
+                output: *output,
+                slo: Slo { ttft_s: *ttft, tpot_s: 0.1 },
+                offline: false,
+            };
+            let cfg = PlanConfig::default();
+            for opt in device_options(&cfg, m) {
+                if let Some((tput, lat)) = max_tput(&opt, &s, Phase::Prompt) {
+                    if lat > *ttft + 1e-9 {
+                        return Err(format!(
+                            "{}: latency {lat} exceeds SLO {ttft}", opt.name));
+                    }
+                    if tput <= 0.0 {
+                        return Err("non-positive throughput".into());
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,169 @@
+//! Property tests for the LP/MILP substrate: optimality vs brute force,
+//! feasibility of returned solutions, relaxation bounds.
+
+use ecoserve::solver::lp::{self, Cmp, LpStatus, Row};
+use ecoserve::solver::{milp, MilpConfig, MilpStatus};
+use ecoserve::testkit::{forall, PropConfig};
+use ecoserve::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+struct Knapsack {
+    values: Vec<f64>,
+    weights: Vec<f64>,
+    cap: f64,
+}
+
+fn gen_knapsack(r: &mut Rng) -> Knapsack {
+    let n = 2 + r.below(7);
+    Knapsack {
+        values: (0..n).map(|_| (1.0 + r.f64() * 9.0).round()).collect(),
+        weights: (0..n).map(|_| (1.0 + r.f64() * 9.0).round()).collect(),
+        cap: (5.0 + r.f64() * 20.0).round(),
+    }
+}
+
+fn brute_force(k: &Knapsack) -> f64 {
+    let n = k.values.len();
+    let mut best = 0.0f64;
+    for mask in 0..(1usize << n) {
+        let (mut v, mut w) = (0.0, 0.0);
+        for i in 0..n {
+            if mask & (1 << i) != 0 {
+                v += k.values[i];
+                w += k.weights[i];
+            }
+        }
+        if w <= k.cap + 1e-9 {
+            best = best.max(v);
+        }
+    }
+    best
+}
+
+#[test]
+fn milp_matches_brute_force_knapsack() {
+    forall(
+        &PropConfig { cases: 60, ..Default::default() },
+        gen_knapsack,
+        |k| {
+            let mut out = Vec::new();
+            if k.values.len() > 2 {
+                let mut s = k.clone();
+                s.values.pop();
+                s.weights.pop();
+                out.push(s);
+            }
+            out
+        },
+        |k| {
+            let n = k.values.len();
+            let c: Vec<f64> = k.values.iter().map(|v| -v).collect();
+            let mut rows = vec![Row {
+                coeffs: k.weights.iter().cloned().enumerate().collect(),
+                cmp: Cmp::Le,
+                rhs: k.cap,
+            }];
+            for j in 0..n {
+                rows.push(Row { coeffs: vec![(j, 1.0)], cmp: Cmp::Le, rhs: 1.0 });
+            }
+            let sol = milp::solve(n, &c, &rows, &vec![true; n], &MilpConfig::default());
+            let expect = brute_force(k);
+            if sol.status != MilpStatus::Optimal {
+                return Err(format!("status {:?}", sol.status));
+            }
+            if (-sol.objective - expect).abs() > 1e-6 {
+                return Err(format!("milp {} vs brute {expect}", -sol.objective));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[derive(Debug, Clone)]
+struct RandomLp {
+    n: usize,
+    c: Vec<f64>,
+    rows: Vec<Row>,
+}
+
+fn gen_lp(r: &mut Rng) -> RandomLp {
+    let n = 2 + r.below(5);
+    let m = 1 + r.below(5);
+    let c: Vec<f64> = (0..n).map(|_| r.range(0.1, 5.0)).collect();
+    // Feasible by construction: a·x <= b with b >= 0 and a >= 0, plus a
+    // couple of >= floors that are mutually satisfiable.
+    let mut rows: Vec<Row> = (0..m)
+        .map(|_| Row {
+            coeffs: (0..n).map(|j| (j, r.range(0.0, 3.0))).collect(),
+            cmp: Cmp::Le,
+            rhs: r.range(1.0, 20.0),
+        })
+        .collect();
+    rows.push(Row { coeffs: vec![(0, 1.0)], cmp: Cmp::Ge, rhs: 0.1 });
+    RandomLp { n, c, rows }
+}
+
+#[test]
+fn lp_solutions_are_feasible() {
+    forall(
+        &PropConfig { cases: 80, ..Default::default() },
+        gen_lp,
+        |_| Vec::new(),
+        |p| {
+            let sol = lp::solve(p.n, &p.c, &p.rows);
+            if sol.status == LpStatus::Infeasible {
+                // Floor of 0.1 on x0 can conflict with a tight <= row; fine.
+                return Ok(());
+            }
+            if sol.status != LpStatus::Optimal {
+                return Err(format!("status {:?}", sol.status));
+            }
+            for (i, row) in p.rows.iter().enumerate() {
+                let lhs: f64 = row.coeffs.iter().map(|(j, a)| a * sol.x[*j]).sum();
+                let ok = match row.cmp {
+                    Cmp::Le => lhs <= row.rhs + 1e-6,
+                    Cmp::Ge => lhs >= row.rhs - 1e-6,
+                    Cmp::Eq => (lhs - row.rhs).abs() <= 1e-6,
+                };
+                if !ok {
+                    return Err(format!("row {i} violated: {lhs} vs {}", row.rhs));
+                }
+            }
+            if sol.x.iter().any(|&x| x < -1e-9) {
+                return Err("negative variable".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn relaxation_bounds_milp() {
+    forall(
+        &PropConfig { cases: 40, ..Default::default() },
+        gen_knapsack,
+        |_| Vec::new(),
+        |k| {
+            let n = k.values.len();
+            let c: Vec<f64> = k.values.iter().map(|v| -v).collect();
+            let mut rows = vec![Row {
+                coeffs: k.weights.iter().cloned().enumerate().collect(),
+                cmp: Cmp::Le,
+                rhs: k.cap,
+            }];
+            for j in 0..n {
+                rows.push(Row { coeffs: vec![(j, 1.0)], cmp: Cmp::Le, rhs: 1.0 });
+            }
+            let rel = lp::solve(n, &c, &rows);
+            let int = milp::solve(n, &c, &rows, &vec![true; n], &MilpConfig::default());
+            if rel.status != LpStatus::Optimal || int.status != MilpStatus::Optimal {
+                return Err("unexpected status".into());
+            }
+            if rel.objective > int.objective + 1e-6 {
+                return Err(format!("relaxation {} worse than MILP {}",
+                                   rel.objective, int.objective));
+            }
+            Ok(())
+        },
+    );
+}
