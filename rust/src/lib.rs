@@ -16,6 +16,7 @@ pub mod hw;
 pub mod models;
 pub mod planner;
 pub mod perf;
+pub mod scenarios;
 pub mod workload;
 pub mod sim;
 pub mod solver;

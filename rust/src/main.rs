@@ -1,5 +1,6 @@
 //! `ecoserve` CLI: serve (real AOT model), plan (capacity planner),
-//! simulate (cluster sim), report (carbon models).
+//! simulate (cluster sim), report (carbon models), sweep (parallel
+//! scenario-sweep engine).
 
 use ecoserve::util::cli::Args;
 
@@ -11,6 +12,9 @@ commands:
   plan      --model NAME --rate R --ci CI [--config F]  run the capacity planner
   simulate  --model NAME --gpus N --gpu SKU --rate R  run the cluster sim
   report    --gpu SKU                               embodied-carbon breakdown
+  sweep     --all | --scenario A,B [--list] [--threads N] [--seed S]
+            [--duration SECS] [--out FILE] [--json]
+            run registered end-to-end scenarios in parallel
 ";
 
 fn main() -> anyhow::Result<()> {
@@ -20,11 +24,74 @@ fn main() -> anyhow::Result<()> {
         Some("plan") => { plan(&args); Ok(()) }
         Some("simulate") => { simulate(&args); Ok(()) }
         Some("report") => { report(&args); Ok(()) }
+        Some("sweep") => sweep(&args),
         _ => {
             print!("{USAGE}");
             Ok(())
         }
     }
+}
+
+fn sweep(args: &Args) -> anyhow::Result<()> {
+    use ecoserve::scenarios::{catalog, registry, run_sweep, SweepConfig};
+
+    if args.bool("list") {
+        println!("registered scenarios:");
+        for s in registry() {
+            println!("  {:<16} {}", s.name(), s.description());
+        }
+        return Ok(());
+    }
+
+    let scenarios = if args.bool("all") || !args.has("scenario") {
+        registry()
+    } else {
+        let spec = args.str("scenario", "");
+        let names: Vec<&str> = spec.split(',')
+            .map(|s| s.trim())
+            .filter(|s| !s.is_empty())
+            .collect();
+        anyhow::ensure!(!names.is_empty(), "empty --scenario list");
+        catalog::by_names(&names).ok_or_else(|| {
+            anyhow::anyhow!("unknown scenario in '{spec}' (try `ecoserve sweep --list`)")
+        })?
+    };
+
+    let cfg = SweepConfig {
+        threads: args.usize("threads", 0),
+        seed: args.u64("seed", 42),
+        duration_s: args.f64("duration", 180.0),
+    };
+    anyhow::ensure!(cfg.duration_s.is_finite() && cfg.duration_s > 0.0,
+                    "--duration must be a positive finite number of seconds");
+    eprintln!("sweeping {} scenarios (seed {}, {}s traces) ...",
+              scenarios.len(), cfg.seed, cfg.duration_s);
+    let t0 = std::time::Instant::now();
+    let report = run_sweep(&scenarios, &cfg);
+    let wall = t0.elapsed().as_secs_f64();
+
+    let json = report.to_json().to_string();
+    if args.bool("json") {
+        println!("{json}");
+    } else {
+        report.summary_table().print();
+        for o in &report.outcomes {
+            for (k, v) in &o.extras {
+                println!("  {}: {k} = {v:.4}", o.name);
+            }
+        }
+    }
+    // Table mode always persists the machine-readable report; --json mode
+    // already streams it to stdout, so only write a file when asked.
+    if !args.bool("json") || args.has("out") {
+        let out = args.str("out", "sweep-report.json");
+        std::fs::write(&out, json.as_bytes())
+            .map_err(|e| anyhow::anyhow!("writing {out}: {e}"))?;
+        eprintln!("{} scenarios in {:.1}s -> {}", report.outcomes.len(), wall, out);
+    } else {
+        eprintln!("{} scenarios in {:.1}s", report.outcomes.len(), wall);
+    }
+    Ok(())
 }
 
 fn serve(args: &Args) -> anyhow::Result<()> {

@@ -1,0 +1,313 @@
+//! Scenario-sweep engine: named end-to-end design points wired through
+//! `config → planner → solver → sim → carbon` (DESIGN.md §5).
+//!
+//! A [`Scenario`] is a declarative [`ScenarioSpec`] — model, region,
+//! strategy, workload mix, fleet policy — plus a name; [`registry`]
+//! (catalog.rs) holds the shipped design points and [`run_sweep`]
+//! (runner.rs) executes any subset in parallel with deterministic
+//! per-scenario seeds. Every future perf/scale PR benchmarks against this
+//! substrate: `ecoserve sweep --all` reproduces the whole matrix in one
+//! command and emits machine-readable JSON.
+//!
+//! Determinism contract: the same (scenario name, master seed, duration)
+//! triple produces byte-identical [`ScenarioOutcome`] JSON regardless of
+//! thread count or co-scheduled scenarios. Seeds derive from the scenario
+//! *name* (not its registry position), wall-clock fields are excluded from
+//! the JSON, and MILP truncation is node-bound rather than time-bound.
+
+pub mod catalog;
+pub mod runner;
+
+pub use catalog::registry;
+pub use runner::{run_sweep, SweepConfig, SweepReport};
+
+use crate::carbon::intensity::Region;
+use crate::planner::{self, PlanConfig};
+use crate::sim::{simulate, Router, SimReport};
+use crate::strategies::{fleet_from_plan, sim_config, splitwise_fleet, Strategy};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::workload::slo::{slo_for, Slo};
+use crate::workload::{generate_trace, merge_traces, Arrivals, LengthDist,
+                      Request, RequestClass};
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+/// One workload component of a scenario (a trace generator).
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    pub arrivals: Arrivals,
+    pub lengths: LengthDist,
+    pub class: RequestClass,
+}
+
+/// How the simulated fleet is derived from the plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FleetPolicy {
+    /// Planner-provisioned fleet (mixed/disaggregated roles from loads).
+    Planned,
+    /// Splitwise-style fixed 3:1 prompt/token H100 split sized to the
+    /// plan's GPU count (paper §6.2.1).
+    SplitwisePd,
+}
+
+/// A declarative end-to-end design point.
+#[derive(Debug, Clone)]
+pub struct ScenarioSpec {
+    /// Model name from [`crate::models::catalog`].
+    pub model: &'static str,
+    /// Primary deployment region (sets the planning CI).
+    pub region: Region,
+    /// Provisioning strategy whose planner configuration is used.
+    pub strategy: Strategy,
+    /// Override the strategy's GPU menu (e.g. a legacy-hardware pool).
+    pub gpu_menu: Option<Vec<&'static str>>,
+    /// Workload mix; traces are generated and merged per component.
+    pub workloads: Vec<WorkloadSpec>,
+    /// Online SLO override (defaults to the paper's §5 table entry).
+    pub slo: Option<Slo>,
+    pub fleet: FleetPolicy,
+    pub router: Router,
+    /// Extra regions to cross-report carbon for (operational rescales
+    /// linearly with CI; embodied is region-independent).
+    pub compare_regions: Vec<Region>,
+}
+
+/// A named design point that the sweep runner can execute.
+pub trait Scenario: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn description(&self) -> &'static str;
+    fn spec(&self) -> ScenarioSpec;
+
+    /// Run the full pipeline at a seed/duration. Deterministic.
+    fn run(&self, seed: u64, duration_s: f64) -> ScenarioOutcome {
+        run_spec(self.name(), &self.spec(), seed, duration_s)
+    }
+}
+
+/// Per-scenario sweep result. Everything here is deterministic for a
+/// (name, seed, duration) triple — no wall-clock fields.
+#[derive(Debug, Clone)]
+pub struct ScenarioOutcome {
+    pub name: String,
+    pub seed: u64,
+    pub model: String,
+    pub region: String,
+    pub ci: f64,
+    /// Requests in the generated trace.
+    pub requests: usize,
+    pub completed: usize,
+    pub generated_tokens: usize,
+    /// Provisioned GPUs (plan) and simulated servers (TP groups).
+    pub fleet_gpus: usize,
+    pub fleet_servers: usize,
+    pub counts: BTreeMap<String, usize>,
+    pub plan_cost_hr: f64,
+    pub plan_op_kg_per_hr: f64,
+    pub plan_emb_kg_per_hr: f64,
+    pub ttft_p50_s: f64,
+    pub ttft_p90_s: f64,
+    pub ttft_p99_s: f64,
+    pub tpot_p50_s: f64,
+    pub tpot_p90_s: f64,
+    pub tpot_p99_s: f64,
+    pub throughput_tok_s: f64,
+    pub energy_j: f64,
+    pub op_kg: f64,
+    pub emb_kg: f64,
+    pub slo_attainment: f64,
+    /// Scenario-specific extra metrics (e.g. per-region carbon).
+    pub extras: BTreeMap<String, f64>,
+}
+
+impl ScenarioOutcome {
+    pub fn carbon_kg(&self) -> f64 {
+        self.op_kg + self.emb_kg
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut counts = Json::obj();
+        for (k, v) in &self.counts {
+            counts = counts.set(k, *v);
+        }
+        let mut extras = Json::obj();
+        for (k, v) in &self.extras {
+            extras = extras.set(k, jnum(*v));
+        }
+        Json::obj()
+            .set("name", self.name.as_str())
+            .set("seed", format!("{:#018x}", self.seed))
+            .set("model", self.model.as_str())
+            .set("region", self.region.as_str())
+            .set("ci_g_per_kwh", jnum(self.ci))
+            .set("requests", self.requests)
+            .set("completed", self.completed)
+            .set("generated_tokens", self.generated_tokens)
+            .set("fleet_gpus", self.fleet_gpus)
+            .set("fleet_servers", self.fleet_servers)
+            .set("fleet_counts", counts)
+            .set("plan_cost_hr", jnum(self.plan_cost_hr))
+            .set("plan_op_kg_per_hr", jnum(self.plan_op_kg_per_hr))
+            .set("plan_emb_kg_per_hr", jnum(self.plan_emb_kg_per_hr))
+            .set("ttft_p50_s", jnum(self.ttft_p50_s))
+            .set("ttft_p90_s", jnum(self.ttft_p90_s))
+            .set("ttft_p99_s", jnum(self.ttft_p99_s))
+            .set("tpot_p50_s", jnum(self.tpot_p50_s))
+            .set("tpot_p90_s", jnum(self.tpot_p90_s))
+            .set("tpot_p99_s", jnum(self.tpot_p99_s))
+            .set("throughput_tok_s", jnum(self.throughput_tok_s))
+            .set("energy_j", jnum(self.energy_j))
+            .set("op_kg", jnum(self.op_kg))
+            .set("emb_kg", jnum(self.emb_kg))
+            .set("carbon_kg", jnum(self.carbon_kg()))
+            .set("slo_attainment", jnum(self.slo_attainment))
+            .set("extras", extras)
+    }
+}
+
+/// Non-finite floats have no JSON representation; map them to null.
+fn jnum(x: f64) -> Json {
+    if x.is_finite() { Json::Num(x) } else { Json::Null }
+}
+
+/// Deterministic per-scenario seed: FNV-1a of the scenario *name* mixed
+/// with the master seed. Independent of registry order and thread count.
+pub fn scenario_seed(master: u64, name: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h ^ master.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+/// Planner configuration for a scenario: the strategy's config with a
+/// deterministic MILP budget (node-bound, not wall-clock-bound) and an
+/// optional GPU-menu override.
+fn scenario_plan_config(spec: &ScenarioSpec, ci: f64) -> PlanConfig {
+    let mut cfg = spec.strategy.plan_config(ci);
+    if let Some(menu) = &spec.gpu_menu {
+        cfg.gpu_menu = menu.clone();
+    }
+    cfg.milp.max_nodes = 500;
+    cfg.milp.time_limit = Duration::from_secs(3600);
+    cfg
+}
+
+/// Generate the merged trace for a spec. Workload seeds derive from the
+/// scenario seed in component order.
+fn scenario_trace(spec: &ScenarioSpec, seed: u64, duration_s: f64) -> Vec<Request> {
+    let mut root = Rng::new(seed);
+    let traces = spec
+        .workloads
+        .iter()
+        .map(|w| generate_trace(w.arrivals, w.lengths, w.class, duration_s,
+                                root.next_u64()))
+        .collect();
+    merge_traces(traces)
+}
+
+/// Execute one design point end to end:
+/// trace → slices → planner (ILP) → fleet → cluster sim → carbon.
+pub fn run_spec(name: &str, spec: &ScenarioSpec, seed: u64, duration_s: f64)
+    -> ScenarioOutcome {
+    use crate::planner::slicing::{cluster_slices, slice_trace};
+
+    let model = crate::models::llm(spec.model)
+        .unwrap_or_else(|| panic!("scenario {name}: unknown model {}", spec.model));
+    let ci = spec.region.avg_ci();
+    let slo = spec.slo
+        .or_else(|| slo_for(spec.model, false).map(|w| w.slo))
+        .unwrap_or(Slo { ttft_s: 2.0, tpot_s: 0.2 });
+
+    let trace = scenario_trace(spec, seed, duration_s);
+    let slices = cluster_slices(&slice_trace(model, &trace, duration_s, slo, 1));
+    let plan = planner::plan(&slices, &scenario_plan_config(spec, ci));
+
+    let fleet = match spec.fleet {
+        FleetPolicy::Planned => fleet_from_plan(&plan, model, 2048),
+        FleetPolicy::SplitwisePd => {
+            let total = plan.total_gpus().max(4);
+            let prompt = (total * 3 / 4).max(1);
+            let token = (total - prompt).max(1);
+            splitwise_fleet(model, prompt, token, 2048)
+        }
+    };
+    let fleet_servers = fleet.len();
+    let mut cfg = sim_config(fleet, &plan, ci);
+    cfg.router = spec.router;
+    let mut r: SimReport = simulate(model, &trace, &cfg, slo.ttft_s, slo.tpot_s);
+
+    let mut extras = BTreeMap::new();
+    for region in &spec.compare_regions {
+        // Operational carbon scales linearly with grid CI for a fixed
+        // energy draw; embodied is region-independent.
+        let op = r.op_kg * region.avg_ci() / ci;
+        extras.insert(format!("carbon_kg_{region:?}"), op + r.emb_kg);
+    }
+
+    ScenarioOutcome {
+        name: name.to_string(),
+        seed,
+        model: spec.model.to_string(),
+        region: spec.region.name().to_string(),
+        ci,
+        requests: trace.len(),
+        completed: r.completed,
+        generated_tokens: r.generated_tokens,
+        fleet_gpus: plan.total_gpus(),
+        fleet_servers,
+        counts: plan.counts.clone(),
+        plan_cost_hr: plan.cost_hr,
+        plan_op_kg_per_hr: plan.op_kg_per_hr,
+        plan_emb_kg_per_hr: plan.emb_kg_per_hr,
+        ttft_p50_s: r.ttft.p50(),
+        ttft_p90_s: r.ttft.p90(),
+        ttft_p99_s: r.ttft.p99(),
+        tpot_p50_s: r.tpot.p50(),
+        tpot_p90_s: r.tpot.p90(),
+        tpot_p99_s: r.tpot.p99(),
+        throughput_tok_s: r.throughput_tok_s(),
+        energy_j: r.energy_j,
+        op_kg: r.op_kg,
+        emb_kg: r.emb_kg,
+        slo_attainment: r.slo_attainment,
+        extras,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seeds_depend_on_name_not_order() {
+        let a = scenario_seed(42, "online-latency");
+        let b = scenario_seed(42, "offline-batch");
+        assert_ne!(a, b);
+        assert_eq!(a, scenario_seed(42, "online-latency"));
+        assert_ne!(a, scenario_seed(43, "online-latency"));
+    }
+
+    #[test]
+    fn jnum_maps_non_finite_to_null() {
+        assert_eq!(jnum(1.5), Json::Num(1.5));
+        assert_eq!(jnum(f64::NAN), Json::Null);
+        assert_eq!(jnum(f64::INFINITY), Json::Null);
+    }
+
+    #[test]
+    fn outcome_json_has_required_fields() {
+        let sc = catalog::registry();
+        let first = &sc[0];
+        let out = first.run(scenario_seed(7, first.name()), 30.0);
+        let j = out.to_json();
+        for key in ["name", "carbon_kg", "op_kg", "emb_kg", "ttft_p50_s",
+                    "ttft_p90_s", "tpot_p50_s", "slo_attainment",
+                    "fleet_counts"] {
+            assert!(j.get(key).is_some(), "missing {key}");
+        }
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed, j, "outcome JSON must round-trip");
+    }
+}

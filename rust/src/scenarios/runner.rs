@@ -1,0 +1,146 @@
+//! Parallel sweep runner: executes a set of scenarios over std::thread
+//! scoped workers with deterministic per-scenario seeds, and renders the
+//! combined [`SweepReport`] as machine-readable JSON (util::json) and a
+//! human summary table (util::table).
+
+use super::{scenario_seed, Scenario, ScenarioOutcome};
+use crate::util::json::Json;
+use crate::util::table::{fnum, Table};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Sweep execution parameters.
+#[derive(Debug, Clone)]
+pub struct SweepConfig {
+    /// Worker threads; 0 = one per available core (capped to the number
+    /// of scenarios). Thread count never affects the report bytes.
+    pub threads: usize,
+    /// Master seed; per-scenario seeds derive from it and the name.
+    pub seed: u64,
+    /// Trace duration per scenario, seconds.
+    pub duration_s: f64,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        SweepConfig { threads: 0, seed: 42, duration_s: 180.0 }
+    }
+}
+
+/// Combined result of one sweep invocation.
+#[derive(Debug, Clone)]
+pub struct SweepReport {
+    pub seed: u64,
+    pub duration_s: f64,
+    /// Outcomes sorted by scenario name (stable across thread counts).
+    pub outcomes: Vec<ScenarioOutcome>,
+}
+
+impl SweepReport {
+    pub fn to_json(&self) -> Json {
+        let scenarios: Vec<Json> =
+            self.outcomes.iter().map(|o| o.to_json()).collect();
+        Json::obj()
+            .set("master_seed", format!("{:#018x}", self.seed))
+            .set("duration_s", self.duration_s)
+            .set("scenarios", scenarios)
+    }
+
+    /// Human-readable summary (latency in ms, SLO in %).
+    pub fn summary_table(&self) -> Table {
+        let mut t = Table::new(&[
+            "scenario", "carbon kg", "op kg", "emb kg", "TTFT p50 ms",
+            "TTFT p90 ms", "TPOT p50 ms", "SLO %", "gpus", "req",
+        ]);
+        for o in &self.outcomes {
+            t.row(&[
+                o.name.clone(),
+                fnum(o.carbon_kg()),
+                fnum(o.op_kg),
+                fnum(o.emb_kg),
+                fnum(o.ttft_p50_s * 1e3),
+                fnum(o.ttft_p90_s * 1e3),
+                fnum(o.tpot_p50_s * 1e3),
+                fnum(100.0 * o.slo_attainment),
+                format!("{}", o.fleet_gpus),
+                format!("{}", o.requests),
+            ]);
+        }
+        t
+    }
+}
+
+fn resolve_threads(requested: usize, jobs: usize) -> usize {
+    let auto = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let n = if requested == 0 { auto } else { requested };
+    n.clamp(1, jobs.max(1))
+}
+
+/// Run scenarios in parallel. Results are slotted by scenario index and
+/// then sorted by name, so the report is byte-identical for any thread
+/// count; per-scenario seeds come from [`scenario_seed`].
+pub fn run_sweep(scenarios: &[Box<dyn Scenario>], cfg: &SweepConfig) -> SweepReport {
+    let n = scenarios.len();
+    let threads = resolve_threads(cfg.threads, n);
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<ScenarioOutcome>>> =
+        (0..n).map(|_| Mutex::new(None)).collect();
+
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::SeqCst);
+                if i >= n {
+                    break;
+                }
+                let sc = &scenarios[i];
+                let seed = scenario_seed(cfg.seed, sc.name());
+                let outcome = sc.run(seed, cfg.duration_s);
+                *slots[i].lock().unwrap() = Some(outcome);
+            });
+        }
+    });
+
+    let mut outcomes: Vec<ScenarioOutcome> = slots
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .expect("sweep worker poisoned a result slot")
+                .expect("sweep worker skipped a scenario")
+        })
+        .collect();
+    outcomes.sort_by(|a, b| a.name.cmp(&b.name));
+    SweepReport { seed: cfg.seed, duration_s: cfg.duration_s, outcomes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thread_resolution() {
+        assert_eq!(resolve_threads(4, 6), 4);
+        assert_eq!(resolve_threads(16, 6), 6);
+        assert!(resolve_threads(0, 6) >= 1);
+        assert_eq!(resolve_threads(3, 0), 1);
+    }
+
+    #[test]
+    fn single_scenario_sweep_produces_table_and_json() {
+        let scenarios = super::super::catalog::by_names(&["online-latency"]).unwrap();
+        let cfg = SweepConfig { threads: 2, seed: 11, duration_s: 30.0 };
+        let r = run_sweep(&scenarios, &cfg);
+        assert_eq!(r.outcomes.len(), 1);
+        let o = &r.outcomes[0];
+        assert_eq!(o.name, "online-latency");
+        assert!(o.requests > 0 && o.completed <= o.requests);
+        assert!((0.0..=1.0).contains(&o.slo_attainment));
+        let table = r.summary_table().render();
+        assert!(table.contains("online-latency"));
+        let json = r.to_json().to_string();
+        assert!(json.contains("\"scenarios\""));
+        assert!(Json::parse(&json).is_ok());
+    }
+}

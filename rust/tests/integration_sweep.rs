@@ -1,0 +1,77 @@
+//! Scenario-sweep integration: the full registry runs end to end, and the
+//! report is byte-identical across repeated runs and across thread counts
+//! (the determinism contract every future perf PR must preserve).
+
+use ecoserve::scenarios::{registry, run_sweep, scenario_seed, SweepConfig};
+use ecoserve::util::json::Json;
+
+const TEST_DURATION_S: f64 = 60.0;
+
+#[test]
+fn sweep_is_deterministic_across_runs_and_thread_counts() {
+    let cfg1 = SweepConfig { threads: 1, seed: 7, duration_s: TEST_DURATION_S };
+    let cfg4 = SweepConfig { threads: 4, ..cfg1.clone() };
+
+    let a = run_sweep(&registry(), &cfg1).to_json().to_string();
+    let b = run_sweep(&registry(), &cfg1).to_json().to_string();
+    let c = run_sweep(&registry(), &cfg4).to_json().to_string();
+
+    assert_eq!(a, b, "same seed + same thread count must be byte-identical");
+    assert_eq!(a, c, "thread count must not change the report bytes");
+
+    // The report is also valid JSON with every registered scenario present,
+    // sorted by name, carrying the required per-scenario metrics.
+    let j = Json::parse(&a).expect("report must be valid JSON");
+    let scenarios = j.get("scenarios").and_then(|s| s.as_arr()).unwrap();
+    assert!(scenarios.len() >= 6, "only {} scenarios", scenarios.len());
+    let names: Vec<&str> = scenarios.iter()
+        .map(|s| s.get("name").and_then(|n| n.as_str()).unwrap())
+        .collect();
+    let mut sorted = names.clone();
+    sorted.sort_unstable();
+    assert_eq!(names, sorted, "scenarios must be name-sorted");
+    for s in scenarios {
+        let name = s.get("name").unwrap().as_str().unwrap();
+        let num = |k: &str| -> f64 {
+            s.get(k).and_then(|v| v.as_f64())
+                .unwrap_or_else(|| panic!("{name}: missing numeric {k}"))
+        };
+        let op = num("op_kg");
+        let emb = num("emb_kg");
+        let carbon = num("carbon_kg");
+        assert!(op > 0.0 && emb > 0.0, "{name}: op {op} emb {emb}");
+        assert!((carbon - (op + emb)).abs() <= 1e-9 * carbon.max(1.0),
+                "{name}: carbon {carbon} != op {op} + emb {emb}");
+        let slo = num("slo_attainment");
+        assert!((0.0..=1.0).contains(&slo), "{name}: slo {slo}");
+        for k in ["ttft_p50_s", "ttft_p90_s", "ttft_p99_s", "tpot_p50_s",
+                  "tpot_p90_s"] {
+            let v = num(k);
+            assert!(v >= 0.0, "{name}: {k} = {v}");
+        }
+        assert!(num("ttft_p50_s") <= num("ttft_p90_s") + 1e-12, "{name}");
+        let requests = s.get("requests").and_then(|v| v.as_usize()).unwrap();
+        let completed = s.get("completed").and_then(|v| v.as_usize()).unwrap();
+        assert!(requests > 0 && completed <= requests,
+                "{name}: {completed}/{requests}");
+        assert!(s.get("generated_tokens").and_then(|v| v.as_usize()).unwrap() > 0,
+                "{name}: no tokens generated");
+        assert!(s.get("fleet_gpus").and_then(|v| v.as_usize()).unwrap() > 0,
+                "{name}: empty fleet");
+    }
+}
+
+#[test]
+fn different_master_seeds_change_the_workload() {
+    let sel = ecoserve::scenarios::catalog::by_names(&["mixed-4r"]).unwrap();
+    let r1 = run_sweep(&sel, &SweepConfig { threads: 1, seed: 1, duration_s: 45.0 });
+    let r2 = run_sweep(&sel, &SweepConfig { threads: 1, seed: 2, duration_s: 45.0 });
+    assert_ne!(scenario_seed(1, "mixed-4r"), scenario_seed(2, "mixed-4r"));
+    // Different seeds give different traces (request counts almost surely
+    // differ for a Poisson+bursty mix; equality of both counts would mean
+    // the seed plumbing collapsed somewhere).
+    let a = &r1.outcomes[0];
+    let b = &r2.outcomes[0];
+    assert!(a.requests != b.requests || a.generated_tokens != b.generated_tokens,
+            "seed change produced an identical workload");
+}

@@ -137,6 +137,160 @@ fn lp_solutions_are_feasible() {
     );
 }
 
+/// Randomized capacitated-allocation instance mirroring the planner's ILP
+/// shape: binary assignment a[s][d] of slices to devices, integer device
+/// counts b[d], capacity rows, and a provisioning + assignment objective.
+#[derive(Debug, Clone)]
+struct AllocInstance {
+    /// load[s][d]: device-fraction slice s consumes on device d.
+    load: Vec<Vec<f64>>,
+    /// cap[d]: capacity of one device of type d.
+    cap: Vec<f64>,
+    /// dev_cost[d]: objective per provisioned device.
+    dev_cost: Vec<f64>,
+    /// assign_cost[s][d]: objective per assignment.
+    assign_cost: Vec<Vec<f64>>,
+}
+
+fn gen_alloc(r: &mut Rng) -> AllocInstance {
+    let s = 1 + r.below(4);
+    let d = 1 + r.below(3);
+    AllocInstance {
+        load: (0..s).map(|_| (0..d).map(|_| r.range(0.1, 1.5)).collect()).collect(),
+        cap: (0..d).map(|_| r.range(1.0, 4.0)).collect(),
+        dev_cost: (0..d).map(|_| (1.0 + r.f64() * 9.0).round()).collect(),
+        assign_cost: (0..s).map(|_| (0..d).map(|_| r.range(0.0, 1.0)).collect()).collect(),
+    }
+}
+
+/// Build the MILP rows for an instance. Variable layout: b[0..D) integer,
+/// then a[s*D + d] binary.
+fn alloc_rows(k: &AllocInstance) -> (usize, Vec<f64>, Vec<Row>, Vec<bool>) {
+    let (ns, nd) = (k.load.len(), k.cap.len());
+    let ncols = nd + ns * nd;
+    let a_idx = |s: usize, d: usize| nd + s * nd + d;
+    let mut c = k.dev_cost.clone();
+    for s in 0..ns {
+        for d in 0..nd {
+            c.push(k.assign_cost[s][d]);
+        }
+    }
+    let mut rows = Vec::new();
+    // Each slice assigned exactly once.
+    for s in 0..ns {
+        rows.push(Row {
+            coeffs: (0..nd).map(|d| (a_idx(s, d), 1.0)).collect(),
+            cmp: Cmp::Eq,
+            rhs: 1.0,
+        });
+    }
+    // Capacity: sum_s load[s][d]·a[s][d] <= cap[d]·b[d].
+    for d in 0..nd {
+        let mut coeffs: Vec<(usize, f64)> =
+            (0..ns).map(|s| (a_idx(s, d), k.load[s][d])).collect();
+        coeffs.push((d, -k.cap[d]));
+        rows.push(Row { coeffs, cmp: Cmp::Le, rhs: 0.0 });
+    }
+    // Binary bounds on the assignment variables.
+    for s in 0..ns {
+        for d in 0..nd {
+            rows.push(Row { coeffs: vec![(a_idx(s, d), 1.0)], cmp: Cmp::Le, rhs: 1.0 });
+        }
+    }
+    let integer = vec![true; ncols];
+    (ncols, c, rows, integer)
+}
+
+/// Greedy baseline mirroring the planner's warm start: each slice takes
+/// the device minimizing assignment cost + amortized provisioning, then
+/// counts are the ceil of accumulated load.
+fn greedy_alloc_objective(k: &AllocInstance) -> f64 {
+    let (ns, nd) = (k.load.len(), k.cap.len());
+    let mut load_on = vec![0.0f64; nd];
+    let mut obj = 0.0;
+    for s in 0..ns {
+        let mut best = (f64::INFINITY, 0usize);
+        for d in 0..nd {
+            let score = k.assign_cost[s][d]
+                + k.load[s][d] / k.cap[d] * k.dev_cost[d];
+            if score < best.0 {
+                best = (score, d);
+            }
+        }
+        let d = best.1;
+        load_on[d] += k.load[s][d];
+        obj += k.assign_cost[s][d];
+    }
+    for d in 0..nd {
+        obj += (load_on[d] / k.cap[d]).ceil() * k.dev_cost[d];
+    }
+    obj
+}
+
+#[test]
+fn milp_allocations_feasible_and_never_worse_than_greedy() {
+    forall(
+        &PropConfig { cases: 50, ..Default::default() },
+        gen_alloc,
+        |k| {
+            let mut out = Vec::new();
+            if k.load.len() > 1 {
+                let mut s = k.clone();
+                s.load.pop();
+                s.assign_cost.pop();
+                out.push(s);
+            }
+            out
+        },
+        |k| {
+            let (ncols, c, rows, integer) = alloc_rows(k);
+            // Generous node budget: these instances are tiny (≤ 15 vars),
+            // so search must terminate optimally, never truncated.
+            let cfg = MilpConfig { max_nodes: 100_000, ..Default::default() };
+            let sol = milp::solve(ncols, &c, &rows, &integer, &cfg);
+            if sol.status != MilpStatus::Optimal {
+                return Err(format!("status {:?}", sol.status));
+            }
+            let (ns, nd) = (k.load.len(), k.cap.len());
+            let a_idx = |s: usize, d: usize| nd + s * nd + d;
+            // Integrality and variable domains.
+            for (j, &x) in sol.x.iter().enumerate() {
+                if x < -1e-6 {
+                    return Err(format!("negative var {j}: {x}"));
+                }
+                if (x - x.round()).abs() > 1e-6 {
+                    return Err(format!("fractional integer var {j}: {x}"));
+                }
+            }
+            // Every slice assigned exactly once.
+            for s in 0..ns {
+                let total: f64 = (0..nd).map(|d| sol.x[a_idx(s, d)]).sum();
+                if (total - 1.0).abs() > 1e-6 {
+                    return Err(format!("slice {s} assigned {total} times"));
+                }
+            }
+            // Returned allocation is feasible w.r.t. every capacity row.
+            for d in 0..nd {
+                let used: f64 = (0..ns)
+                    .map(|s| k.load[s][d] * sol.x[a_idx(s, d)])
+                    .sum();
+                let avail = k.cap[d] * sol.x[d];
+                if used > avail + 1e-6 {
+                    return Err(format!(
+                        "capacity violated on device {d}: {used} > {avail}"));
+                }
+            }
+            // The MILP objective is never worse than the greedy baseline.
+            let greedy = greedy_alloc_objective(k);
+            if sol.objective > greedy + 1e-6 {
+                return Err(format!("milp {} worse than greedy {greedy}",
+                                   sol.objective));
+            }
+            Ok(())
+        },
+    );
+}
+
 #[test]
 fn relaxation_bounds_milp() {
     forall(

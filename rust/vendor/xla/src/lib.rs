@@ -1,0 +1,151 @@
+//! Compile stub for the XLA/PJRT bindings.
+//!
+//! The offline build environment does not ship the native XLA runtime, so
+//! this vendored crate provides the exact API surface the EcoServe engine
+//! (`runtime/engine.rs`) uses — clients, executables, and literals — with
+//! every entry point that would touch the real runtime returning a clear
+//! [`Error`]. The serving layer therefore compiles and fails gracefully at
+//! `Engine::load` time; the planner / simulator / carbon stack (which is
+//! what the test suite exercises) never touches this crate at runtime.
+//! Swap this path dependency for the real bindings to serve compiled
+//! artifacts.
+
+use std::fmt;
+
+/// Error type mirroring the native bindings' error.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: XLA/PJRT native runtime is not available in this build \
+         (vendored stub; link the real xla bindings to serve artifacts)"
+    ))
+}
+
+/// Element types a [`Literal`] can hold.
+pub trait NativeType: Copy + 'static {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u8 {}
+
+/// Host-side tensor value. The stub keeps no data: nothing can execute.
+#[derive(Debug, Default, Clone)]
+pub struct Literal {
+    _priv: (),
+}
+
+impl Literal {
+    pub fn vec1<T: NativeType>(_data: &[T]) -> Literal {
+        Literal { _priv: () }
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Error> {
+        Ok(Literal { _priv: () })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, Error> {
+        Err(unavailable("Literal::to_vec"))
+    }
+
+    pub fn copy_raw_to<T: NativeType>(&self, _dst: &mut [T]) -> Result<(), Error> {
+        Err(unavailable("Literal::copy_raw_to"))
+    }
+
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>, Error> {
+        Err(unavailable("Literal::decompose_tuple"))
+    }
+}
+
+/// Parsed HLO module (stub: parsing requires the native runtime).
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _priv: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation wrapping a parsed module.
+#[derive(Debug)]
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _priv: () }
+    }
+}
+
+/// PJRT client handle.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _c: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+/// Compiled executable handle.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute over borrowed literals; `result[device][output]` buffers.
+    pub fn execute<T: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// Device-side buffer handle.
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_unavailable() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("not available"));
+        let lit = Literal::vec1(&[1.0f32, 2.0]).reshape(&[2]).unwrap();
+        assert!(lit.to_vec::<f32>().is_err());
+        let mut buf = [0f32; 2];
+        assert!(lit.copy_raw_to::<f32>(&mut buf).is_err());
+    }
+}
