@@ -38,9 +38,8 @@ fn main() {
                                 LengthDist::ShareGpt, RequestClass::Online,
                                 120.0, 1);
         let servers = homogeneous_fleet("A100-40", 8, m, 2048);
-        let cfg2 = SimConfig { emb_kg_per_hr: vec![0.005; 8], servers,
-                               router: Router::WorkloadAware, ci: 261.0,
-                               kv_transfer_bw: 64e9 };
+        let cfg2 = SimConfig::flat(servers, Router::WorkloadAware, 261.0,
+                                   vec![0.005; 8]);
         std::hint::black_box(simulate(m, &tr, &cfg2, 0.5, 0.1));
     });
     println!("{}", r.report());

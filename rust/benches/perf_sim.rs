@@ -1,0 +1,52 @@
+//! perf_sim: throughput of the refactored discrete-event core on a
+//! 50k-request trace — reported as events/sec and persisted to
+//! `BENCH_sim.json` so sim-core perf regressions are visible across PRs.
+use ecoserve::bench::{run, BenchConfig};
+use ecoserve::models;
+use ecoserve::sim::{homogeneous_fleet, simulate, Router, SimConfig};
+use ecoserve::util::json::Json;
+use ecoserve::workload::{generate_trace, Arrivals, LengthDist, RequestClass};
+use std::time::Duration;
+
+fn main() {
+    let m = models::llm("llama-8b").unwrap();
+    // ~50k requests (Poisson 250/s over 200 s) on a 32-server fleet near
+    // its saturation point — the regime where event pressure is highest.
+    let tr = generate_trace(Arrivals::Poisson { rate: 250.0 },
+                            LengthDist::ShareGpt, RequestClass::Online,
+                            200.0, 42);
+    let servers = homogeneous_fleet("A100-40", 32, m, 2048);
+    let n = servers.len();
+    let cfg = SimConfig::flat(servers, Router::Jsq, 261.0, vec![0.005; n]);
+
+    // One probe run pins down the (deterministic) event count.
+    let probe = simulate(m, &tr, &cfg, 0.5, 0.1);
+    assert_eq!(probe.completed, tr.len());
+
+    let bcfg = BenchConfig {
+        warmup: Duration::from_millis(200),
+        measure: Duration::from_secs(2),
+        min_samples: 3,
+        max_samples: 50,
+    };
+    let r = run("sim_50k_requests_32_servers", &bcfg, || {
+        std::hint::black_box(simulate(m, &tr, &cfg, 0.5, 0.1));
+    });
+    println!("{}", r.report());
+    let events_per_sec = probe.events as f64 / r.mean_s;
+    println!("events/sec: {events_per_sec:.0}  ({} events, {} requests, {} tokens)",
+             probe.events, tr.len(), probe.generated_tokens);
+
+    let j = Json::obj()
+        .set("bench", "perf_sim")
+        .set("requests", tr.len())
+        .set("servers", n)
+        .set("events", probe.events)
+        .set("generated_tokens", probe.generated_tokens)
+        .set("mean_s", r.mean_s)
+        .set("p50_s", r.p50_s)
+        .set("events_per_sec", events_per_sec);
+    std::fs::write("BENCH_sim.json", j.to_string().as_bytes())
+        .expect("write BENCH_sim.json");
+    eprintln!("wrote BENCH_sim.json");
+}

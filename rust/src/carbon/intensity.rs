@@ -74,6 +74,16 @@ impl Region {
     pub fn low_mid_high() -> [Region; 3] {
         [Region::SwedenNorth, Region::California, Region::Midcontinent]
     }
+
+    /// CI at an hour-of-day for this region's synthetic solar day: dip
+    /// centred at 13:00, evening ramp peak at 19:30, plus caller noise.
+    fn ci_at_hour(&self, hour: f64, noise: f64) -> f64 {
+        let avg = self.avg_ci();
+        let swing = self.diurnal_swing();
+        let solar = (-((hour - 13.0) / 3.5).powi(2)).exp();
+        let evening = (-((hour - 19.5) / 2.0).powi(2)).exp();
+        (avg * (1.0 - swing * solar + 0.5 * swing * evening + noise)).max(1.0)
+    }
 }
 
 /// A CI time series at fixed resolution.
@@ -90,19 +100,33 @@ impl CiTrace {
     pub fn diurnal(region: Region, days: usize, step_s: f64, seed: u64) -> CiTrace {
         let mut rng = Rng::new(seed ^ 0xC1);
         let n = ((days as f64 * 86_400.0) / step_s).ceil() as usize;
-        let avg = region.avg_ci();
-        let swing = region.diurnal_swing();
         let mut noise = 0.0f64;
         let values = (0..n)
             .map(|i| {
                 let t = i as f64 * step_s;
                 let hour = (t / 3600.0) % 24.0;
-                // Solar dip centred at 13:00, evening peak at 19:00.
-                let solar = (-((hour - 13.0) / 3.5).powi(2)).exp();
-                let evening = (-((hour - 19.5) / 2.0).powi(2)).exp();
                 noise = 0.9 * noise + 0.1 * rng.normal() * 0.05;
-                let v = avg * (1.0 - swing * solar + 0.5 * swing * evening + noise);
-                v.max(1.0)
+                region.ci_at_hour(hour, noise)
+            })
+            .collect();
+        CiTrace { region, step_s, values }
+    }
+
+    /// One synthetic solar day compressed onto `period_s` seconds, repeated
+    /// `periods` times — lets short simulated traces exercise intra-day CI
+    /// swings (the temporal-shifting lever) without simulating 24 h.
+    pub fn compressed_diurnal(region: Region, period_s: f64, periods: usize,
+                              steps_per_period: usize, seed: u64) -> CiTrace {
+        assert!(period_s > 0.0 && steps_per_period > 0);
+        let mut rng = Rng::new(seed ^ 0xC1);
+        let step_s = period_s / steps_per_period as f64;
+        let mut noise = 0.0f64;
+        let values = (0..periods.max(1) * steps_per_period)
+            .map(|i| {
+                let hour = (i % steps_per_period) as f64
+                    / steps_per_period as f64 * 24.0;
+                noise = 0.9 * noise + 0.1 * rng.normal() * 0.05;
+                region.ci_at_hour(hour, noise)
             })
             .collect();
         CiTrace { region, step_s, values }
@@ -128,6 +152,70 @@ impl CiTrace {
             return self.region.avg_ci();
         }
         self.values.iter().sum::<f64>() / self.values.len() as f64
+    }
+
+    /// Mean CI over [t0, t1] at step resolution (partial steps counted
+    /// whole; both endpoints clamped to the trace extent).
+    pub fn mean_over(&self, t0_s: f64, t1_s: f64) -> f64 {
+        if self.values.is_empty() {
+            return self.region.avg_ci();
+        }
+        if t1_s <= t0_s {
+            return self.at(t0_s);
+        }
+        let last = self.values.len() - 1;
+        let lo = ((t0_s / self.step_s) as usize).min(last);
+        let hi = ((t1_s / self.step_s) as usize).min(last).max(lo);
+        let span = &self.values[lo..=hi];
+        span.iter().sum::<f64>() / span.len() as f64
+    }
+}
+
+/// A grid-CI signal as the simulator consumes it: a flat scalar (the
+/// regional average) or a time-varying [`CiTrace`]. Keeping both under one
+/// type lets every sim/scenario knob accept either without special cases.
+#[derive(Debug, Clone)]
+pub enum CiSignal {
+    /// Constant CI, gCO₂e/kWh.
+    Flat(f64),
+    /// Time-varying CI sampled from a trace (clamped at the extent).
+    Trace(CiTrace),
+}
+
+impl CiSignal {
+    pub fn flat(ci_g_per_kwh: f64) -> CiSignal {
+        CiSignal::Flat(ci_g_per_kwh)
+    }
+
+    /// CI at time t (seconds from trace start).
+    pub fn at(&self, t_s: f64) -> f64 {
+        match self {
+            CiSignal::Flat(ci) => *ci,
+            CiSignal::Trace(tr) => tr.at(t_s),
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        match self {
+            CiSignal::Flat(ci) => *ci,
+            CiSignal::Trace(tr) => tr.mean(),
+        }
+    }
+
+    /// Mean CI over [t0, t1].
+    pub fn mean_over(&self, t0_s: f64, t1_s: f64) -> f64 {
+        match self {
+            CiSignal::Flat(ci) => *ci,
+            CiSignal::Trace(tr) => tr.mean_over(t0_s, t1_s),
+        }
+    }
+
+    /// Sampling resolution; `None` for flat signals (nothing to scan).
+    pub fn step_s(&self) -> Option<f64> {
+        match self {
+            CiSignal::Flat(_) => None,
+            CiSignal::Trace(tr) => Some(tr.step_s),
+        }
     }
 }
 
@@ -171,5 +259,37 @@ mod tests {
         let tr = CiTrace::flat(Region::Midcontinent, 1, 3600.0);
         assert_eq!(tr.at(0.0), 501.0);
         assert_eq!(tr.mean(), 501.0);
+    }
+
+    #[test]
+    fn compressed_day_has_the_same_shape_at_trace_scale() {
+        // A 180 s "day": the solar dip lands at 13/24 of the period and is
+        // the global minimum of the cycle, just as in the real-time trace.
+        let tr = CiTrace::compressed_diurnal(Region::California, 180.0, 2, 96, 9);
+        assert_eq!(tr.values.len(), 192);
+        assert!((tr.step_s - 180.0 / 96.0).abs() < 1e-12);
+        let dip = tr.at(13.0 / 24.0 * 180.0);
+        let night = tr.at(3.0 / 24.0 * 180.0);
+        let evening = tr.at(19.5 / 24.0 * 180.0);
+        assert!(dip < night && dip < evening, "dip {dip} night {night} evening {evening}");
+        // Second period repeats the day shape (modulo AR(1) noise).
+        let dip2 = tr.at(180.0 + 13.0 / 24.0 * 180.0);
+        assert!(dip2 < tr.at(180.0 + 3.0 / 24.0 * 180.0));
+    }
+
+    #[test]
+    fn signal_flat_vs_trace() {
+        let f = CiSignal::flat(261.0);
+        assert_eq!(f.at(1e6), 261.0);
+        assert_eq!(f.mean_over(0.0, 500.0), 261.0);
+        assert!(f.step_s().is_none());
+        let s = CiSignal::Trace(CiTrace::compressed_diurnal(
+            Region::California, 120.0, 1, 96, 4));
+        assert!(s.step_s().is_some());
+        let m = s.mean_over(0.0, 120.0);
+        assert!((m - 261.0).abs() / 261.0 < 0.2, "mean {m}");
+        // mean_over of a window stays near the window's values.
+        let dip = s.at(65.0);
+        assert!(s.mean_over(60.0, 70.0) >= dip * 0.9);
     }
 }

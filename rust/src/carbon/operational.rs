@@ -13,7 +13,14 @@ pub fn j_to_kwh(joules: f64) -> f64 {
 /// Operational carbon (kgCO₂e) of drawing `power_w` for `dur_s` seconds at
 /// a flat CI (gCO₂e/kWh).
 pub fn op_kg(power_w: f64, dur_s: f64, ci_g_per_kwh: f64) -> f64 {
-    j_to_kwh(power_w * dur_s) * ci_g_per_kwh / 1000.0
+    op_kg_from_joules(power_w * dur_s, ci_g_per_kwh)
+}
+
+/// Operational carbon (kgCO₂e) of an energy draw at a flat CI — the
+/// energy-first form of [`op_kg`] for accounting paths that track joules
+/// directly (no fictitious `op_kg(1.0, e, ci)` power×time factoring).
+pub fn op_kg_from_joules(energy_j: f64, ci_g_per_kwh: f64) -> f64 {
+    j_to_kwh(energy_j) * ci_g_per_kwh / 1000.0
 }
 
 /// Operational carbon integrating a CI trace from `t0_s` for `dur_s`.
@@ -93,6 +100,13 @@ mod tests {
     fn one_kwh_at_unit_ci() {
         // 1000 W for 1 hour at 1000 g/kWh = 1 kg.
         assert!((op_kg(1000.0, 3600.0, 1000.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn joules_form_matches_power_time_form() {
+        assert!((op_kg_from_joules(3.6e6, 1000.0) - 1.0).abs() < 1e-12);
+        let e = 12_345.6;
+        assert!((op_kg_from_joules(e, 261.0) - op_kg(1.0, e, 261.0)).abs() < 1e-15);
     }
 
     #[test]

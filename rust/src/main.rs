@@ -10,10 +10,11 @@ ecoserve <command> [--flags]
 commands:
   serve     --artifacts DIR --requests N --rate R   serve the AOT model
   plan      --model NAME --rate R --ci CI [--config F]  run the capacity planner
-  simulate  --model NAME --gpus N --gpu SKU --rate R  run the cluster sim
+  simulate  --model NAME --gpus N --gpu SKU --rate R [--ci-trace diurnal]
+            run the cluster sim
   report    --gpu SKU                               embodied-carbon breakdown
   sweep     --all | --scenario A,B [--list] [--threads N] [--seed S]
-            [--duration SECS] [--out FILE] [--json]
+            [--duration SECS] [--ci-trace flat|diurnal] [--out FILE] [--json]
             run registered end-to-end scenarios in parallel
 ";
 
@@ -22,13 +23,24 @@ fn main() -> anyhow::Result<()> {
     match args.subcommand() {
         Some("serve") => serve(&args),
         Some("plan") => { plan(&args); Ok(()) }
-        Some("simulate") => { simulate(&args); Ok(()) }
+        Some("simulate") => simulate(&args),
         Some("report") => { report(&args); Ok(()) }
         Some("sweep") => sweep(&args),
         _ => {
             print!("{USAGE}");
             Ok(())
         }
+    }
+}
+
+fn ci_profile_flag(args: &Args) -> anyhow::Result<Option<ecoserve::scenarios::CiProfile>> {
+    use ecoserve::scenarios::CiProfile;
+    match args.opt_str("ci-trace") {
+        None => Ok(None),
+        Some("flat") => Ok(Some(CiProfile::Flat)),
+        Some("diurnal") => Ok(Some(CiProfile::CompressedDiurnal)),
+        Some(other) => anyhow::bail!(
+            "unknown --ci-trace '{other}' (expected flat or diurnal)"),
     }
 }
 
@@ -61,6 +73,7 @@ fn sweep(args: &Args) -> anyhow::Result<()> {
         threads: args.usize("threads", 0),
         seed: args.u64("seed", 42),
         duration_s: args.f64("duration", 180.0),
+        ci_profile: ci_profile_flag(args)?,
     };
     anyhow::ensure!(cfg.duration_s.is_finite() && cfg.duration_s > 0.0,
                     "--duration must be a positive finite number of seconds");
@@ -79,6 +92,9 @@ fn sweep(args: &Args) -> anyhow::Result<()> {
             for (k, v) in &o.extras {
                 println!("  {}: {k} = {v:.4}", o.name);
             }
+        }
+        for w in report.truncation_warnings() {
+            eprintln!("{w}");
         }
     }
     // Table mode always persists the machine-readable report; --json mode
@@ -151,19 +167,34 @@ fn plan(args: &Args) {
     println!("solved in {:.0} ms / {} nodes", p.solve_s * 1e3, p.nodes);
 }
 
-fn simulate(args: &Args) {
+fn simulate(args: &Args) -> anyhow::Result<()> {
+    use ecoserve::carbon::intensity::{CiSignal, CiTrace, Region};
+    use ecoserve::scenarios::CiProfile;
     use ecoserve::sim::*;
     use ecoserve::workload::*;
     let model = args.str("model", "llama-8b");
     let m = ecoserve::models::llm(&model).expect("unknown model");
+    let duration = args.f64("duration", 120.0);
+    let ci = args.f64("ci", 261.0);
     let tr = generate_trace(Arrivals::Poisson { rate: args.f64("rate", 4.0) },
                             LengthDist::ShareGpt, RequestClass::Online,
-                            args.f64("duration", 120.0), 1);
+                            duration, 1);
     let n = args.usize("gpus", 4);
     let servers = homogeneous_fleet(&args.str("gpu", "A100-40"), n, m, 2048);
-    let cfg = SimConfig { emb_kg_per_hr: vec![0.005; n], servers,
-                          router: Router::WorkloadAware,
-                          ci: args.f64("ci", 261.0), kv_transfer_bw: 64e9 };
+    let mut cfg = SimConfig::flat(servers, Router::WorkloadAware, ci,
+                                  vec![0.005; n]);
+    if ci_profile_flag(args)? == Some(CiProfile::CompressedDiurnal) {
+        // One solar day compressed onto the trace duration, rescaled so
+        // the trace mean tracks the requested --ci level.
+        let mut trace =
+            CiTrace::compressed_diurnal(Region::California, duration, 2, 96,
+                                        args.u64("seed", 1));
+        let scale = ci / Region::California.avg_ci();
+        for v in &mut trace.values {
+            *v *= scale;
+        }
+        cfg.ci = CiSignal::Trace(trace);
+    }
     let mut r = simulate(m, &tr, &cfg, 0.5, 0.1);
     println!("completed {} | TTFT p50 {:.0} ms p90 {:.0} ms | TPOT p50 {:.1} ms",
              r.completed, r.ttft.p50() * 1e3, r.ttft.p90() * 1e3,
@@ -171,6 +202,14 @@ fn simulate(args: &Args) {
     println!("throughput {:.1} tok/s | energy {:.1} kJ | carbon {:.4} kg (op {:.4} emb {:.4}) | SLO {:.1}%",
              r.throughput_tok_s(), r.energy_j / 1e3, r.carbon_kg(), r.op_kg,
              r.emb_kg, 100.0 * r.slo_attainment);
+    println!("events {} | deferred {} | offline deadline {:.1}%",
+             r.events, r.deferred_requests,
+             100.0 * r.offline_deadline_attainment);
+    if r.truncated_prompts > 0 {
+        eprintln!("warning: {} prompts clipped to {} tokens",
+                  r.truncated_prompts, MAX_PROMPT_TOKENS);
+    }
+    Ok(())
 }
 
 fn report(args: &Args) {

@@ -5,7 +5,7 @@
 //! legacy-hardware Reuse. Each wires config → planner → solver → sim →
 //! carbon into one [`super::ScenarioOutcome`].
 
-use super::{FleetPolicy, Scenario, ScenarioSpec, WorkloadSpec};
+use super::{CiProfile, FleetPolicy, Scenario, ScenarioSpec, WorkloadSpec};
 use crate::carbon::intensity::Region;
 use crate::sim::Router;
 use crate::strategies::Strategy;
@@ -44,6 +44,8 @@ fn base_spec(model: &'static str, region: Region, strategy: Strategy)
         slo: None,
         fleet: FleetPolicy::Planned,
         router: Router::WorkloadAware,
+        ci_profile: CiProfile::Flat,
+        defer_offline: false,
         compare_regions: Vec::new(),
     }
 }
@@ -143,6 +145,46 @@ fn legacy_reuse() -> ScenarioSpec {
     }
 }
 
+fn diurnal_shift() -> ScenarioSpec {
+    // Online chat rides alongside an offline LongBench stream; the grid is
+    // a compressed solar day, and offline work is temporally shifted into
+    // the midday low-CI dip under its deadline. The run-immediately
+    // baseline lands in extras (op_kg_immediate et al.).
+    ScenarioSpec {
+        workloads: vec![
+            WorkloadSpec {
+                arrivals: Arrivals::Poisson { rate: 6.0 },
+                lengths: LengthDist::ShareGpt,
+                class: RequestClass::Online,
+            },
+            WorkloadSpec {
+                arrivals: Arrivals::Poisson { rate: 3.0 },
+                lengths: LengthDist::LongBench,
+                class: RequestClass::Offline,
+            },
+        ],
+        ci_profile: CiProfile::CompressedDiurnal,
+        defer_offline: true,
+        ..base_spec("llama-8b", Region::California, Strategy::EcoFull)
+    }
+}
+
+fn carbon_router() -> ScenarioSpec {
+    // One planned fleet split across a clean and a dirty grid; the
+    // carbon-greedy router steers load to the clean half while the JSQ
+    // baseline (op_kg_jsq in extras) stays carbon-blind.
+    ScenarioSpec {
+        workloads: vec![WorkloadSpec {
+            arrivals: Arrivals::Poisson { rate: 8.0 },
+            lengths: LengthDist::ShareGpt,
+            class: RequestClass::Online,
+        }],
+        fleet: FleetPolicy::TwoRegion { low: Region::SwedenNorth },
+        router: Router::CarbonGreedy,
+        ..base_spec("llama-8b", Region::Midcontinent, Strategy::EcoFull)
+    }
+}
+
 /// All shipped design points, in a stable order (seeds do not depend on
 /// this order — see [`super::scenario_seed`]).
 pub fn registry() -> Vec<Box<dyn Scenario>> {
@@ -183,6 +225,18 @@ pub fn registry() -> Vec<Box<dyn Scenario>> {
                           Reuse in a clean grid (Llama-8B)",
             build: legacy_reuse,
         }),
+        Box::new(DesignPoint {
+            name: "diurnal-shift",
+            description: "offline batch temporally shifted into the diurnal \
+                          low-CI window vs run-immediately (Llama-8B)",
+            build: diurnal_shift,
+        }),
+        Box::new(DesignPoint {
+            name: "carbon-router",
+            description: "carbon-greedy routing over a two-grid fleet \
+                          (SE-North + MISO) vs carbon-blind JSQ (Llama-8B)",
+            build: carbon_router,
+        }),
     ]
 }
 
@@ -201,9 +255,9 @@ mod tests {
     use super::*;
 
     #[test]
-    fn registry_has_at_least_six_unique_named_scenarios() {
+    fn registry_has_at_least_eight_unique_named_scenarios() {
         let r = registry();
-        assert!(r.len() >= 6, "only {} scenarios", r.len());
+        assert!(r.len() >= 8, "only {} scenarios", r.len());
         let mut names: Vec<&str> = r.iter().map(|s| s.name()).collect();
         names.sort_unstable();
         names.dedup();
@@ -216,10 +270,23 @@ mod tests {
 
     #[test]
     fn by_names_selects_and_rejects() {
-        let sel = by_names(&["mixed-4r", "online-latency"]).unwrap();
-        assert_eq!(sel.len(), 2);
+        let sel = by_names(&["mixed-4r", "online-latency", "diurnal-shift",
+                             "carbon-router"]).unwrap();
+        assert_eq!(sel.len(), 4);
         assert_eq!(sel[0].name(), "mixed-4r");
         assert!(by_names(&["no-such-scenario"]).is_none());
+    }
+
+    #[test]
+    fn carbon_aware_specs_are_wired() {
+        let d = by_names(&["diurnal-shift"]).unwrap().remove(0).spec();
+        assert!(d.defer_offline);
+        assert_eq!(d.ci_profile, CiProfile::CompressedDiurnal);
+        assert!(d.workloads.iter().any(|w| w.class == RequestClass::Offline));
+        assert!(d.workloads.iter().any(|w| w.class == RequestClass::Online));
+        let c = by_names(&["carbon-router"]).unwrap().remove(0).spec();
+        assert_eq!(c.router, Router::CarbonGreedy);
+        assert!(matches!(c.fleet, FleetPolicy::TwoRegion { .. }));
     }
 
     #[test]

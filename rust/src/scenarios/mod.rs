@@ -21,9 +21,9 @@ pub mod runner;
 pub use catalog::registry;
 pub use runner::{run_sweep, SweepConfig, SweepReport};
 
-use crate::carbon::intensity::Region;
+use crate::carbon::intensity::{CiSignal, CiTrace, Region};
 use crate::planner::{self, PlanConfig};
-use crate::sim::{simulate, Router, SimReport};
+use crate::sim::{simulate, DeferralPolicy, Router, SimReport};
 use crate::strategies::{fleet_from_plan, sim_config, splitwise_fleet, Strategy};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -49,6 +49,21 @@ pub enum FleetPolicy {
     /// Splitwise-style fixed 3:1 prompt/token H100 split sized to the
     /// plan's GPU count (paper §6.2.1).
     SplitwisePd,
+    /// Planner fleet split across two grids: alternate servers are pinned
+    /// to the `low`-CI region, the rest stay in the primary region — the
+    /// substrate for carbon-aware routing studies.
+    TwoRegion { low: Region },
+}
+
+/// Shape of the primary region's CI signal over the simulated trace.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CiProfile {
+    /// Flat at the region's published average.
+    Flat,
+    /// One synthetic solar day compressed onto the trace duration
+    /// ([`CiTrace::compressed_diurnal`]) so short sweeps see intra-day
+    /// swings.
+    CompressedDiurnal,
 }
 
 /// A declarative end-to-end design point.
@@ -68,6 +83,11 @@ pub struct ScenarioSpec {
     pub slo: Option<Slo>,
     pub fleet: FleetPolicy,
     pub router: Router,
+    /// Shape of the primary region's CI signal.
+    pub ci_profile: CiProfile,
+    /// Temporally shift offline work into low-CI windows (the paper's
+    /// Reduce lever); the run-immediately baseline lands in `extras`.
+    pub defer_offline: bool,
     /// Extra regions to cross-report carbon for (operational rescales
     /// linearly with CI; embodied is region-independent).
     pub compare_regions: Vec<Region>,
@@ -81,7 +101,18 @@ pub trait Scenario: Send + Sync {
 
     /// Run the full pipeline at a seed/duration. Deterministic.
     fn run(&self, seed: u64, duration_s: f64) -> ScenarioOutcome {
-        run_spec(self.name(), &self.spec(), seed, duration_s)
+        self.run_profile(seed, duration_s, None)
+    }
+
+    /// Like [`Scenario::run`] with an optional CI-profile override (the
+    /// sweep CLI's `--ci-trace` knob).
+    fn run_profile(&self, seed: u64, duration_s: f64,
+                   ci_profile: Option<CiProfile>) -> ScenarioOutcome {
+        let mut spec = self.spec();
+        if let Some(p) = ci_profile {
+            spec.ci_profile = p;
+        }
+        run_spec(self.name(), &spec, seed, duration_s)
     }
 }
 
@@ -116,6 +147,12 @@ pub struct ScenarioOutcome {
     pub op_kg: f64,
     pub emb_kg: f64,
     pub slo_attainment: f64,
+    /// Offline deadline attainment (1.0 when no deadlines are tracked).
+    pub offline_deadline_attainment: f64,
+    /// Offline requests shifted into low-CI release slots.
+    pub deferred: usize,
+    /// Requests whose prompts were clipped to the sim's context cap.
+    pub truncated_prompts: usize,
     /// Scenario-specific extra metrics (e.g. per-region carbon).
     pub extras: BTreeMap<String, f64>,
 }
@@ -161,6 +198,10 @@ impl ScenarioOutcome {
             .set("emb_kg", jnum(self.emb_kg))
             .set("carbon_kg", jnum(self.carbon_kg()))
             .set("slo_attainment", jnum(self.slo_attainment))
+            .set("offline_deadline_attainment",
+                 jnum(self.offline_deadline_attainment))
+            .set("deferred_requests", self.deferred)
+            .set("truncated_prompts", self.truncated_prompts)
             .set("extras", extras)
     }
 }
@@ -232,18 +273,63 @@ pub fn run_spec(name: &str, spec: &ScenarioSpec, seed: u64, duration_s: f64)
             let token = (total - prompt).max(1);
             splitwise_fleet(model, prompt, token, 2048)
         }
+        FleetPolicy::TwoRegion { low } => {
+            let mut fleet = fleet_from_plan(&plan, model, 2048);
+            for (i, s) in fleet.iter_mut().enumerate() {
+                // Alternate so both grids hold prompt-capable servers
+                // whatever roles the plan assigned. Only the low-CI half
+                // is pinned; the rest follows the primary CI signal, so a
+                // diurnal profile still reaches half the fleet.
+                s.region = if i % 2 == 0 { Some(low) } else { None };
+            }
+            fleet
+        }
     };
     let fleet_servers = fleet.len();
     let mut cfg = sim_config(fleet, &plan, ci);
     cfg.router = spec.router;
+    cfg.ci = match spec.ci_profile {
+        CiProfile::Flat => CiSignal::flat(ci),
+        CiProfile::CompressedDiurnal => CiSignal::Trace(
+            CiTrace::compressed_diurnal(spec.region, duration_s, 2, 96,
+                                        seed ^ 0xD1A)),
+    };
+    if spec.defer_offline {
+        cfg.deferral = DeferralPolicy::LowCiWindow {
+            deadline_s: 0.8 * duration_s,
+            spacing_s: 0.3,
+            horizon_s: duration_s,
+        };
+    }
     let mut r: SimReport = simulate(model, &trace, &cfg, slo.ttft_s, slo.tpot_s);
 
     let mut extras = BTreeMap::new();
     for region in &spec.compare_regions {
         // Operational carbon scales linearly with grid CI for a fixed
-        // energy draw; embodied is region-independent.
-        let op = r.op_kg * region.avg_ci() / ci;
+        // energy draw; embodied is region-independent. Normalize by the
+        // signal's mean (== the flat average for CiProfile::Flat) so a
+        // forced diurnal profile doesn't mis-scale the comparison.
+        let op = r.op_kg * region.avg_ci() / cfg.ci.mean().max(1e-9);
         extras.insert(format!("carbon_kg_{region:?}"), op + r.emb_kg);
+    }
+    if spec.defer_offline {
+        // Run-immediately baseline: same trace/fleet/signal, no shifting.
+        let mut base_cfg = cfg.clone();
+        base_cfg.deferral = DeferralPolicy::Immediate;
+        let mut base = simulate(model, &trace, &base_cfg, slo.ttft_s, slo.tpot_s);
+        extras.insert("op_kg_immediate".into(), base.op_kg);
+        extras.insert("carbon_kg_immediate".into(), base.carbon_kg());
+        extras.insert("slo_attainment_immediate".into(), base.slo_attainment);
+        extras.insert("ttft_p90_s_immediate".into(), base.ttft.p90());
+    }
+    if spec.router == Router::CarbonGreedy {
+        // JSQ baseline: identical fleet/grids, carbon-blind routing.
+        let mut base_cfg = cfg.clone();
+        base_cfg.router = Router::Jsq;
+        let mut base = simulate(model, &trace, &base_cfg, slo.ttft_s, slo.tpot_s);
+        extras.insert("op_kg_jsq".into(), base.op_kg);
+        extras.insert("carbon_kg_jsq".into(), base.carbon_kg());
+        extras.insert("ttft_p90_s_jsq".into(), base.ttft.p90());
     }
 
     ScenarioOutcome {
@@ -272,6 +358,9 @@ pub fn run_spec(name: &str, spec: &ScenarioSpec, seed: u64, duration_s: f64)
         op_kg: r.op_kg,
         emb_kg: r.emb_kg,
         slo_attainment: r.slo_attainment,
+        offline_deadline_attainment: r.offline_deadline_attainment,
+        deferred: r.deferred_requests,
+        truncated_prompts: r.truncated_prompts,
         extras,
     }
 }

@@ -3,7 +3,7 @@
 //! combined [`SweepReport`] as machine-readable JSON (util::json) and a
 //! human summary table (util::table).
 
-use super::{scenario_seed, Scenario, ScenarioOutcome};
+use super::{scenario_seed, CiProfile, Scenario, ScenarioOutcome};
 use crate::util::json::Json;
 use crate::util::table::{fnum, Table};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -19,11 +19,14 @@ pub struct SweepConfig {
     pub seed: u64,
     /// Trace duration per scenario, seconds.
     pub duration_s: f64,
+    /// Force a CI-signal shape on every scenario (the `--ci-trace` knob);
+    /// `None` keeps each scenario's own profile.
+    pub ci_profile: Option<CiProfile>,
 }
 
 impl Default for SweepConfig {
     fn default() -> Self {
-        SweepConfig { threads: 0, seed: 42, duration_s: 180.0 }
+        SweepConfig { threads: 0, seed: 42, duration_s: 180.0, ci_profile: None }
     }
 }
 
@@ -46,11 +49,13 @@ impl SweepReport {
             .set("scenarios", scenarios)
     }
 
-    /// Human-readable summary (latency in ms, SLO in %).
+    /// Human-readable summary (latency in ms, SLO in %). The `trunc`
+    /// column surfaces context-cap prompt clipping; pair the table with
+    /// [`SweepReport::truncation_warnings`].
     pub fn summary_table(&self) -> Table {
         let mut t = Table::new(&[
             "scenario", "carbon kg", "op kg", "emb kg", "TTFT p50 ms",
-            "TTFT p90 ms", "TPOT p50 ms", "SLO %", "gpus", "req",
+            "TTFT p90 ms", "TPOT p50 ms", "SLO %", "gpus", "req", "trunc",
         ]);
         for o in &self.outcomes {
             t.row(&[
@@ -64,9 +69,23 @@ impl SweepReport {
                 fnum(100.0 * o.slo_attainment),
                 format!("{}", o.fleet_gpus),
                 format!("{}", o.requests),
+                format!("{}", o.truncated_prompts),
             ]);
         }
         t
+    }
+
+    /// One warning line per scenario that silently clipped prompts to the
+    /// simulator's context cap.
+    pub fn truncation_warnings(&self) -> Vec<String> {
+        self.outcomes.iter()
+            .filter(|o| o.truncated_prompts > 0)
+            .map(|o| format!(
+                "warning: {}: {} of {} prompts clipped to {} tokens \
+                 (sim context cap)",
+                o.name, o.truncated_prompts, o.requests,
+                crate::sim::MAX_PROMPT_TOKENS))
+            .collect()
     }
 }
 
@@ -97,7 +116,7 @@ pub fn run_sweep(scenarios: &[Box<dyn Scenario>], cfg: &SweepConfig) -> SweepRep
                 }
                 let sc = &scenarios[i];
                 let seed = scenario_seed(cfg.seed, sc.name());
-                let outcome = sc.run(seed, cfg.duration_s);
+                let outcome = sc.run_profile(seed, cfg.duration_s, cfg.ci_profile);
                 *slots[i].lock().unwrap() = Some(outcome);
             });
         }
@@ -130,7 +149,8 @@ mod tests {
     #[test]
     fn single_scenario_sweep_produces_table_and_json() {
         let scenarios = super::super::catalog::by_names(&["online-latency"]).unwrap();
-        let cfg = SweepConfig { threads: 2, seed: 11, duration_s: 30.0 };
+        let cfg = SweepConfig { threads: 2, seed: 11, duration_s: 30.0,
+                                ..Default::default() };
         let r = run_sweep(&scenarios, &cfg);
         assert_eq!(r.outcomes.len(), 1);
         let o = &r.outcomes[0];
@@ -142,5 +162,21 @@ mod tests {
         let json = r.to_json().to_string();
         assert!(json.contains("\"scenarios\""));
         assert!(Json::parse(&json).is_ok());
+    }
+
+    #[test]
+    fn truncation_is_surfaced_for_long_context_scenarios() {
+        // LongBench prompts exceed the sim's 8192-token cap often; the
+        // clipping must be counted and warned about, not silent.
+        let scenarios = super::super::catalog::by_names(&["offline-batch"]).unwrap();
+        let cfg = SweepConfig { threads: 1, seed: 3, duration_s: 30.0,
+                                ..Default::default() };
+        let r = run_sweep(&scenarios, &cfg);
+        assert!(r.outcomes[0].truncated_prompts > 0,
+                "expected clipped LongBench prompts");
+        let w = r.truncation_warnings();
+        assert_eq!(w.len(), 1);
+        assert!(w[0].contains("offline-batch") && w[0].contains("8192"));
+        assert!(r.summary_table().render().contains("trunc"));
     }
 }

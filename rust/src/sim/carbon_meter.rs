@@ -1,0 +1,130 @@
+//! Carbon-meter observer: integrates operational carbon against the
+//! deployment's time-varying CI signal as the simulation runs, instead of
+//! multiplying total energy by a scalar CI after the fact. Multi-region
+//! fleets attach per-server flat overrides (a server's grid does not move
+//! with the primary region's trace).
+
+use crate::carbon::intensity::CiSignal;
+use crate::carbon::operational::op_kg_from_joules;
+
+use super::core::SimConfig;
+
+#[derive(Debug)]
+pub struct CarbonMeter {
+    primary: CiSignal,
+    /// Per-server flat CI overrides (multi-region fleets), indexed like
+    /// `SimConfig::servers`.
+    overrides: Vec<Option<f64>>,
+    op_kg: f64,
+}
+
+impl CarbonMeter {
+    pub fn new(cfg: &SimConfig) -> CarbonMeter {
+        CarbonMeter {
+            primary: cfg.ci.clone(),
+            overrides: cfg.servers.iter()
+                .map(|s| s.region.map(|r| r.avg_ci()))
+                .collect(),
+            op_kg: 0.0,
+        }
+    }
+
+    /// The deployment's primary CI signal (drives deferral decisions).
+    pub fn primary(&self) -> &CiSignal {
+        &self.primary
+    }
+
+    /// Grid CI seen by `server` at time `t`.
+    pub fn ci_at(&self, server: usize, t_s: f64) -> f64 {
+        match self.overrides.get(server).copied().flatten() {
+            Some(ci) => ci,
+            None => self.primary.at(t_s),
+        }
+    }
+
+    /// Charge a busy interval's energy at the mean CI over the interval.
+    pub fn record(&mut self, server: usize, t0_s: f64, dur_s: f64, energy_j: f64) {
+        let ci = match self.overrides.get(server).copied().flatten() {
+            Some(ci) => ci,
+            None => self.primary.mean_over(t0_s, t0_s + dur_s.max(0.0)),
+        };
+        self.op_kg += op_kg_from_joules(energy_j, ci);
+    }
+
+    /// Charge idle-floor energy at the signal's mean over the sim horizon
+    /// (idle draw is spread across the whole run, not one interval).
+    pub fn record_idle(&mut self, server: usize, energy_j: f64, dur_s: f64) {
+        let ci = match self.overrides.get(server).copied().flatten() {
+            Some(ci) => ci,
+            None => self.primary.mean_over(0.0, dur_s),
+        };
+        self.op_kg += op_kg_from_joules(energy_j, ci);
+    }
+
+    /// Accumulated operational carbon, kgCO₂e.
+    pub fn op_kg(&self) -> f64 {
+        self.op_kg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::carbon::intensity::{CiTrace, Region};
+    use crate::models;
+    use crate::sim::policy::Router;
+    use crate::sim::server::homogeneous_fleet;
+
+    fn cfg(ci: CiSignal, regions: &[Option<Region>]) -> SimConfig {
+        let m = models::llm("llama-8b").unwrap();
+        let mut fleet = homogeneous_fleet("A100-40", regions.len(), m, 2048);
+        for (s, r) in fleet.iter_mut().zip(regions) {
+            s.region = *r;
+        }
+        let n = fleet.len();
+        let mut c = SimConfig::flat(fleet, Router::Jsq, 0.0, vec![0.005; n]);
+        c.ci = ci;
+        c
+    }
+
+    #[test]
+    fn flat_meter_matches_closed_form() {
+        let mut m = CarbonMeter::new(&cfg(CiSignal::flat(261.0), &[None, None]));
+        m.record(0, 0.0, 10.0, 3.6e6);
+        m.record_idle(1, 3.6e6, 100.0);
+        // 2 kWh at 261 g/kWh = 0.522 kg.
+        assert!((m.op_kg() - 2.0 * 261.0 / 1000.0).abs() < 1e-12);
+        assert_eq!(m.ci_at(0, 55.0), 261.0);
+    }
+
+    #[test]
+    fn overrides_pin_a_server_to_its_region() {
+        let m = CarbonMeter::new(&cfg(
+            CiSignal::flat(261.0),
+            &[Some(Region::SwedenNorth), None],
+        ));
+        assert_eq!(m.ci_at(0, 0.0), 17.0);
+        assert_eq!(m.ci_at(1, 0.0), 261.0);
+        let mut m2 = CarbonMeter::new(&cfg(
+            CiSignal::flat(261.0),
+            &[Some(Region::SwedenNorth), None],
+        ));
+        m2.record(0, 0.0, 1.0, 3.6e6);
+        assert!((m2.op_kg() - 17.0 / 1000.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn traced_meter_charges_less_in_the_dip() {
+        let tr = CiTrace::compressed_diurnal(Region::California, 240.0, 1, 96, 3);
+        let sig = CiSignal::Trace(tr);
+        let dip_t = 13.0 / 24.0 * 240.0;
+        let night_t = 3.0 / 24.0 * 240.0;
+        let mk = |t0: f64| {
+            let mut m = CarbonMeter::new(&cfg(sig.clone(), &[None]));
+            m.record(0, t0, 2.0, 1e6);
+            m.op_kg()
+        };
+        assert!(mk(dip_t) < mk(night_t),
+                "dip {} night {}", mk(dip_t), mk(night_t));
+    }
+}

@@ -1,0 +1,384 @@
+//! Discrete-event core (dslab-style): a sequence-numbered, total-order
+//! event queue and the engine that drives servers, policies, the deferral
+//! queue, the metrics sink, and the carbon meter.
+//!
+//! Ordering is total by construction: events compare by `(time, seq)` via
+//! `f64::total_cmp`, so ties at equal timestamps pop in FIFO order and NaN
+//! cannot silently collapse to `Ordering::Equal`. Busy servers are modelled
+//! with explicit completion generations instead of the old
+//! `busy_until > now + 1e-12` stale-wake epsilon: a `Complete` event names
+//! the busy period it ends, and `Wake` nudges are ignored while a period is
+//! in flight.
+
+use crate::carbon::intensity::CiSignal;
+use crate::models::LlmSpec;
+use crate::workload::{Request, RequestClass};
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use super::carbon_meter::CarbonMeter;
+use super::metrics::{MetricsSink, SimReport};
+use super::policy::{BatchPolicy, Batcher, DeferState, DeferralPolicy,
+                    RouteCtx, RoutePolicy, Router};
+use super::server::{Job, Role, Server, ServerSpec, MAX_PROMPT_TOKENS};
+
+/// Simulator configuration.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub servers: Vec<ServerSpec>,
+    /// Routing policy selector (maps to a [`RoutePolicy`] impl).
+    pub router: Router,
+    /// Batch-formation policy selector (maps to a [`BatchPolicy`] impl).
+    pub batcher: Batcher,
+    /// Grid carbon-intensity signal: flat scalar or time-varying trace.
+    pub ci: CiSignal,
+    /// Per-server embodied amortization, kgCO₂e per server-hour.
+    pub emb_kg_per_hr: Vec<f64>,
+    /// KV transfer bandwidth between prefill and decode servers, B/s.
+    pub kv_transfer_bw: f64,
+    /// Temporal scheduling of offline-class requests.
+    pub deferral: DeferralPolicy,
+}
+
+impl SimConfig {
+    /// The common case: a flat CI, online-first batching, no deferral.
+    pub fn flat(servers: Vec<ServerSpec>, router: Router, ci: f64,
+                emb_kg_per_hr: Vec<f64>) -> SimConfig {
+        SimConfig {
+            servers,
+            router,
+            batcher: Batcher::OnlineFirst,
+            ci: CiSignal::flat(ci),
+            emb_kg_per_hr,
+            kv_transfer_bw: 64e9,
+            deferral: DeferralPolicy::Immediate,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub(crate) enum EventKind {
+    /// A request enters the system.
+    Arrival(usize),
+    /// A deferred offline request is released to the routers.
+    Release(usize),
+    /// Nudge a server to schedule work (ignored while mid-iteration).
+    Wake(usize),
+    /// A prefilled sequence's KV cache lands on `server` (after transfer);
+    /// only now may the decode side admit the job.
+    Handoff { job: usize, server: usize },
+    /// End of `server`'s busy period number `gen`.
+    Complete { server: usize, gen: u64 },
+}
+
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct Event {
+    pub t: f64,
+    /// Monotonic sequence number assigned at push: makes the order total
+    /// and deterministic (FIFO among equal timestamps).
+    pub seq: u64,
+    pub kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.seq == other.seq
+    }
+}
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Min-heap by (time, seq); total_cmp keeps the order total even
+        // for non-finite timestamps.
+        other.t.total_cmp(&self.t).then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// The sequence-numbered event queue.
+#[derive(Debug, Default)]
+pub(crate) struct EventQueue {
+    heap: BinaryHeap<Event>,
+    next_seq: u64,
+}
+
+impl EventQueue {
+    pub fn push(&mut self, t: f64, kind: EventKind) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(Event { t, seq, kind });
+    }
+
+    pub fn pop(&mut self) -> Option<Event> {
+        self.heap.pop()
+    }
+}
+
+/// The simulation engine. Stepping logic (prefill/decode) lives in
+/// `server.rs`; this file owns the event loop and lifecycle.
+pub(crate) struct Sim<'a> {
+    pub model: &'a LlmSpec,
+    pub cfg: &'a SimConfig,
+    pub route: &'a dyn RoutePolicy,
+    pub batch: &'a dyn BatchPolicy,
+    pub jobs: Vec<Job>,
+    pub servers: Vec<Server>,
+    pub queue: EventQueue,
+    pub metrics: MetricsSink,
+    pub meter: CarbonMeter,
+    pub defer: DeferState,
+    pub prompt_eligible: Vec<usize>,
+    pub now: f64,
+}
+
+impl<'a> Sim<'a> {
+    pub fn new(model: &'a LlmSpec, trace: &[Request], cfg: &'a SimConfig,
+               slo_ttft: f64, slo_tpot: f64, route: &'a dyn RoutePolicy,
+               batch: &'a dyn BatchPolicy) -> Sim<'a> {
+        assert_eq!(cfg.servers.len(), cfg.emb_kg_per_hr.len());
+        let mut metrics = MetricsSink::default();
+        let jobs: Vec<Job> = trace
+            .iter()
+            .map(|r| {
+                if r.prompt_tokens > MAX_PROMPT_TOKENS {
+                    metrics.truncated_prompts += 1;
+                }
+                Job {
+                    arrival: r.arrival_s,
+                    prompt: r.prompt_tokens.min(MAX_PROMPT_TOKENS),
+                    output: r.output_tokens.max(1),
+                    class: r.class,
+                    slo_ttft,
+                    slo_tpot,
+                    deadline: cfg.deferral.deadline_for(r.class, r.arrival_s),
+                    dispatched_t: r.arrival_s,
+                    first_token_t: None,
+                    decoded: 0,
+                }
+            })
+            .collect();
+        let servers: Vec<Server> = cfg.servers.iter().map(Server::new).collect();
+        let mut queue = EventQueue::default();
+        for (i, j) in jobs.iter().enumerate() {
+            queue.push(j.arrival, EventKind::Arrival(i));
+        }
+        let prompt_eligible: Vec<usize> = servers
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.spec.role != Role::Decode)
+            .map(|(i, _)| i)
+            .collect();
+        assert!(!prompt_eligible.is_empty(), "no prompt-capable servers");
+        Sim {
+            model,
+            cfg,
+            route,
+            batch,
+            jobs,
+            servers,
+            queue,
+            metrics,
+            meter: CarbonMeter::new(cfg),
+            defer: DeferState::new(cfg.deferral),
+            prompt_eligible,
+            now: 0.0,
+        }
+    }
+
+    /// Drain the event queue to completion.
+    pub fn run(&mut self) {
+        while let Some(ev) = self.queue.pop() {
+            self.now = ev.t;
+            self.metrics.events += 1;
+            match ev.kind {
+                EventKind::Arrival(ji) => {
+                    if self.jobs[ji].class == RequestClass::Offline {
+                        let release =
+                            self.defer.release_time(self.now, self.meter.primary());
+                        if let Some(t) = release {
+                            self.metrics.deferred += 1;
+                            self.queue.push(t, EventKind::Release(ji));
+                            continue;
+                        }
+                    }
+                    self.dispatch(ji);
+                }
+                EventKind::Release(ji) => self.dispatch(ji),
+                EventKind::Wake(sid) => {
+                    if !self.servers[sid].in_flight {
+                        self.step(sid);
+                    }
+                }
+                EventKind::Handoff { job, server } => {
+                    let class = self.jobs[job].class;
+                    self.servers[server].decode_q.push(job, class);
+                    self.queue.push(self.now, EventKind::Wake(server));
+                }
+                EventKind::Complete { server, gen } => {
+                    // A new busy period only starts once the previous one's
+                    // Complete has fired, so the named generation always
+                    // matches — `in_flight` is the operative guard and the
+                    // generation is a checked invariant.
+                    debug_assert_eq!(self.servers[server].busy_gen, gen,
+                                     "Complete must end the period it named");
+                    self.servers[server].in_flight = false;
+                    self.step(server);
+                }
+            }
+        }
+    }
+
+    /// Route a request and nudge the chosen server.
+    fn dispatch(&mut self, ji: usize) {
+        self.jobs[ji].dispatched_t = self.now;
+        let ctx = RouteCtx { now: self.now, meter: &self.meter };
+        let sid = self.route.route(&self.jobs[ji], &self.servers,
+                                   &self.prompt_eligible, &ctx);
+        debug_assert!(self.prompt_eligible.contains(&sid),
+                      "policy routed to an ineligible server");
+        let class = self.jobs[ji].class;
+        self.servers[sid].prompt_q.push(ji, class);
+        self.queue.push(self.now, EventKind::Wake(sid));
+    }
+
+    /// Close the books: idle-floor energy, operational + embodied carbon.
+    pub fn finish(mut self, trace: &[Request]) -> SimReport {
+        let dur = self.now.max(trace.last().map(|r| r.arrival_s).unwrap_or(0.0));
+        let mut energy = 0.0;
+        for (i, s) in self.servers.iter().enumerate() {
+            let tpf = s.spec.tp as f64;
+            let idle_s = (dur - s.busy_s).max(0.0);
+            let idle_j = idle_s * s.spec.device.idle_w * tpf;
+            self.meter.record_idle(i, idle_j, dur);
+            energy += s.energy_j + idle_j;
+        }
+        let emb: f64 = self.cfg.emb_kg_per_hr.iter().map(|r| r * dur / 3600.0).sum();
+        self.metrics.into_report(dur, energy, self.meter.op_kg(), emb)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+    use crate::sim::{homogeneous_fleet, simulate};
+    use crate::workload::{generate_trace, Arrivals, LengthDist};
+
+    fn small_trace(rate: f64, seed: u64) -> Vec<Request> {
+        generate_trace(Arrivals::Poisson { rate }, LengthDist::ShareGpt,
+                       RequestClass::Online, 120.0, seed)
+    }
+
+    fn cfg_for(servers: Vec<ServerSpec>, router: Router) -> SimConfig {
+        let n = servers.len();
+        SimConfig::flat(servers, router, 261.0, vec![0.005; n])
+    }
+
+    #[test]
+    fn event_order_is_total_and_fifo_at_ties() {
+        let mut q = EventQueue::default();
+        q.push(2.0, EventKind::Wake(0));
+        q.push(1.0, EventKind::Wake(1));
+        q.push(1.0, EventKind::Wake(2));
+        q.push(1.0, EventKind::Wake(3));
+        let order: Vec<usize> = std::iter::from_fn(|| q.pop())
+            .map(|e| match e.kind {
+                EventKind::Wake(s) => s,
+                _ => unreachable!(),
+            })
+            .collect();
+        // Equal timestamps pop in push order; later time last.
+        assert_eq!(order, vec![1, 2, 3, 0]);
+    }
+
+    #[test]
+    fn nan_timestamps_do_not_break_the_heap() {
+        // total_cmp orders NaN after +inf; the queue still drains fully.
+        let mut q = EventQueue::default();
+        q.push(f64::NAN, EventKind::Wake(0));
+        q.push(0.5, EventKind::Wake(1));
+        q.push(f64::NAN, EventKind::Wake(2));
+        let popped: Vec<Event> = std::iter::from_fn(|| q.pop()).collect();
+        assert_eq!(popped.len(), 3);
+        assert!(matches!(popped[0].kind, EventKind::Wake(1)));
+    }
+
+    #[test]
+    fn completes_all_requests() {
+        let m = models::llm("llama-8b").unwrap();
+        let tr = small_trace(2.0, 1);
+        let cfg = cfg_for(homogeneous_fleet("A100-40", 4, m, 2048), Router::Jsq);
+        let r = simulate(m, &tr, &cfg, 0.5, 0.1);
+        assert_eq!(r.completed, tr.len());
+        assert!(r.generated_tokens > 0);
+        assert!(r.op_kg > 0.0 && r.emb_kg > 0.0);
+        assert!(r.events >= 2 * tr.len());
+    }
+
+    #[test]
+    fn overload_degrades_ttft() {
+        let m = models::llm("llama-8b").unwrap();
+        let cfg = cfg_for(homogeneous_fleet("A100-40", 2, m, 2048), Router::Jsq);
+        let mut light = simulate(m, &small_trace(0.5, 2), &cfg, 0.5, 0.1);
+        let mut heavy = simulate(m, &small_trace(12.0, 2), &cfg, 0.5, 0.1);
+        assert!(heavy.ttft.p90() > light.ttft.p90(),
+                "heavy {} vs light {}", heavy.ttft.p90(), light.ttft.p90());
+    }
+
+    #[test]
+    fn more_servers_more_throughput_headroom() {
+        let m = models::llm("llama-8b").unwrap();
+        let tr = small_trace(8.0, 3);
+        let small = cfg_for(homogeneous_fleet("A100-40", 2, m, 2048), Router::Jsq);
+        let big = cfg_for(homogeneous_fleet("A100-40", 8, m, 2048), Router::Jsq);
+        let mut r_small = simulate(m, &tr, &small, 0.5, 0.1);
+        let mut r_big = simulate(m, &tr, &big, 0.5, 0.1);
+        assert!(r_big.ttft.p90() <= r_small.ttft.p90() * 1.1 + 1e-9,
+                "big {} small {}", r_big.ttft.p90(), r_small.ttft.p90());
+        assert!(r_big.slo_attainment >= r_small.slo_attainment);
+    }
+
+    #[test]
+    fn disaggregated_pd_split_works() {
+        let m = models::llm("llama-8b").unwrap();
+        let mut servers = homogeneous_fleet("H100", 2, m, 2048);
+        servers[0].role = Role::Prompt;
+        servers[1].role = Role::Decode;
+        let cfg = cfg_for(servers, Router::Jsq);
+        let r = simulate(m, &small_trace(1.0, 4), &cfg, 0.5, 0.1);
+        assert_eq!(r.completed, simulate(m, &small_trace(1.0, 4),
+            &cfg_for(homogeneous_fleet("H100", 2, m, 2048), Router::Jsq),
+            0.5, 0.1).completed);
+        assert!(r.ttft.len() > 0 && r.tpot.len() > 0);
+    }
+
+    #[test]
+    fn energy_includes_idle_floor() {
+        let m = models::llm("llama-8b").unwrap();
+        // One request on a big fleet: idle power dominates.
+        let tr = small_trace(0.05, 6);
+        let cfg = cfg_for(homogeneous_fleet("A100-40", 8, m, 2048), Router::Jsq);
+        let r = simulate(m, &tr, &cfg, 0.5, 0.1);
+        let idle_j = r.sim_duration_s * 8.0 * 50.0; // 8x idle 50 W
+        assert!(r.energy_j > 0.8 * idle_j, "energy {} idle floor {idle_j}", r.energy_j);
+    }
+
+    #[test]
+    fn same_config_same_bytes() {
+        // The core is deterministic: two runs over the same trace agree on
+        // every counter, including the event count.
+        let m = models::llm("llama-8b").unwrap();
+        let tr = small_trace(4.0, 8);
+        let cfg = cfg_for(homogeneous_fleet("A100-40", 3, m, 2048), Router::Jsq);
+        let a = simulate(m, &tr, &cfg, 0.5, 0.1);
+        let b = simulate(m, &tr, &cfg, 0.5, 0.1);
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.generated_tokens, b.generated_tokens);
+        assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits());
+        assert_eq!(a.op_kg.to_bits(), b.op_kg.to_bits());
+    }
+}

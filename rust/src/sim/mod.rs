@@ -1,505 +1,54 @@
 //! Event-driven cluster simulator (the Splitwise-simulator substitute,
-//! paper §5/§6.2): prefill/decode disaggregation, iteration-level
-//! continuous batching, KV-transfer costs, JSQ vs workload-aware routing,
-//! and energy/carbon accounting.
+//! paper §5/§6.2), decomposed into a pluggable discrete-event core:
 //!
-//! Drives Figs 15/17 (end-to-end carbon vs TTFT/TPOT under load) on top of
-//! the same roofline models the planner uses, so provisioning decisions and
-//! runtime behaviour stay consistent — the paper's cross-layer point.
+//! - [`core`] — sequence-numbered total-order event queue + engine loop;
+//! - [`server`] — server state and prefill/decode stepping;
+//! - [`policy`] — [`RoutePolicy`]/[`BatchPolicy`] traits (JSQ,
+//!   workload-aware, carbon-greedy; FIFO, online-first) and the offline
+//!   [`DeferralPolicy`] (temporal shifting into low-CI windows);
+//! - [`metrics`] — the [`MetricsSink`] collecting TTFT/TPOT/SLO/deadline
+//!   counters into a [`SimReport`];
+//! - [`carbon_meter`] — operational-carbon observer integrating energy
+//!   against a time-varying [`crate::carbon::intensity::CiSignal`].
+//!
+//! Provisioning (planner ILP) and runtime behaviour see the *same* carbon
+//! signal — the paper's cross-layer point — and every policy is a trait
+//! impl, so runtime experiments never fork the core.
 
-use crate::carbon::operational::op_kg;
+pub mod carbon_meter;
+pub mod core;
+pub mod metrics;
+pub mod policy;
+pub mod server;
+
+pub use self::carbon_meter::CarbonMeter;
+pub use self::core::SimConfig;
+pub use self::metrics::{MetricsSink, SimReport};
+pub use self::policy::{BatchPolicy, Batcher, CarbonGreedy, DeferralPolicy,
+                       FifoBatch, Jsq, OnlineFirstBatch, RouteCtx, RoutePolicy,
+                       Router, WorkloadAware, LONG_PROMPT_TOKENS};
+pub use self::server::{homogeneous_fleet, ClassQueue, Job, Role, Server,
+                       ServerSpec, MAX_PROMPT_TOKENS};
+
 use crate::models::LlmSpec;
-use crate::perf::roofline::{self, Device};
-use crate::util::stats::Samples;
-use crate::workload::{Request, RequestClass};
-use std::cmp::Ordering;
-use std::collections::{BinaryHeap, VecDeque};
+use crate::workload::Request;
 
-/// Server role in a (possibly disaggregated) deployment.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Role {
-    Prompt,
-    Decode,
-    Mixed,
-}
-
-/// One provisioned server (a TP group acts as one server).
-#[derive(Debug, Clone)]
-pub struct ServerSpec {
-    pub device: Device,
-    pub role: Role,
-    pub tp: usize,
-    /// Max concurrent decode sequences (KV capacity at typical ctx).
-    pub max_batch: usize,
-    /// Max prompts per prefill batch.
-    pub prefill_batch: usize,
-}
-
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Router {
-    /// Join-shortest-queue over eligible servers (Splitwise's policy).
-    Jsq,
-    /// Workload-aware: long prompts to high-memory servers, short to lean
-    /// ones (EcoServe's runtime component).
-    WorkloadAware,
-}
-
-#[derive(Debug, Clone)]
-pub struct SimConfig {
-    pub servers: Vec<ServerSpec>,
-    pub router: Router,
-    /// Grid carbon intensity, gCO₂e/kWh.
-    pub ci: f64,
-    /// Per-server embodied amortization, kgCO₂e per server-hour.
-    pub emb_kg_per_hr: Vec<f64>,
-    /// KV transfer bandwidth between prefill and decode servers, B/s.
-    pub kv_transfer_bw: f64,
-}
-
-/// Simulation outcome.
-#[derive(Debug)]
-pub struct SimReport {
-    pub ttft: Samples,
-    pub tpot: Samples,
-    pub completed: usize,
-    pub generated_tokens: usize,
-    pub sim_duration_s: f64,
-    pub energy_j: f64,
-    pub op_kg: f64,
-    pub emb_kg: f64,
-    /// Fraction of online requests whose TTFT/TPOT met the SLO.
-    pub slo_attainment: f64,
-}
-
-impl SimReport {
-    pub fn carbon_kg(&self) -> f64 {
-        self.op_kg + self.emb_kg
-    }
-
-    pub fn throughput_tok_s(&self) -> f64 {
-        self.generated_tokens as f64 / self.sim_duration_s.max(1e-9)
-    }
-}
-
-#[derive(Debug, Clone, Copy, PartialEq)]
-enum EventKind {
-    Arrival(usize),
-    Wake(usize),
-}
-
-#[derive(Debug, Clone, Copy)]
-struct Event {
-    t: f64,
-    kind: EventKind,
-}
-
-impl PartialEq for Event {
-    fn eq(&self, other: &Self) -> bool {
-        self.t == other.t
-    }
-}
-impl Eq for Event {}
-impl PartialOrd for Event {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl Ord for Event {
-    fn cmp(&self, other: &Self) -> Ordering {
-        // Min-heap by time.
-        other.t.partial_cmp(&self.t).unwrap_or(Ordering::Equal)
-    }
-}
-
-#[derive(Debug, Clone)]
-struct Job {
-    arrival: f64,
-    prompt: usize,
-    output: usize,
-    class: RequestClass,
-    slo_ttft: f64,
-    slo_tpot: f64,
-    first_token_t: Option<f64>,
-    decoded: usize,
-}
-
-struct Server {
-    spec: ServerSpec,
-    prompt_q: VecDeque<usize>,
-    decode_q: VecDeque<usize>,
-    active: Vec<usize>,
-    busy_until: f64,
-    busy_s: f64,
-    energy_j: f64,
-}
-
-/// Run the simulator over a trace for a model.
+/// Run the simulator over a trace for a model with the config's selected
+/// policies.
 pub fn simulate(model: &LlmSpec, trace: &[Request], cfg: &SimConfig,
                 slo_ttft: f64, slo_tpot: f64) -> SimReport {
-    assert_eq!(cfg.servers.len(), cfg.emb_kg_per_hr.len());
-    let mut jobs: Vec<Job> = trace.iter().map(|r| Job {
-        arrival: r.arrival_s,
-        prompt: r.prompt_tokens.min(8192),
-        output: r.output_tokens.max(1),
-        class: r.class,
-        slo_ttft,
-        slo_tpot,
-        first_token_t: None,
-        decoded: 0,
-    }).collect();
-
-    let mut servers: Vec<Server> = cfg.servers.iter().map(|s| Server {
-        spec: s.clone(),
-        prompt_q: VecDeque::new(),
-        decode_q: VecDeque::new(),
-        active: Vec::new(),
-        busy_until: 0.0,
-        busy_s: 0.0,
-        energy_j: 0.0,
-    }).collect();
-
-    let mut heap = BinaryHeap::new();
-    for (i, j) in jobs.iter().enumerate() {
-        heap.push(Event { t: j.arrival, kind: EventKind::Arrival(i) });
-    }
-
-    let mut ttft = Samples::new();
-    let mut tpot = Samples::new();
-    let mut completed = 0usize;
-    let mut generated = 0usize;
-    let mut slo_ok = 0usize;
-    let mut online_done = 0usize;
-    let mut now = 0.0f64;
-
-    let prompt_eligible: Vec<usize> = servers.iter().enumerate()
-        .filter(|(_, s)| s.spec.role != Role::Decode)
-        .map(|(i, _)| i)
-        .collect();
-    assert!(!prompt_eligible.is_empty(), "no prompt-capable servers");
-
-    while let Some(ev) = heap.pop() {
-        now = ev.t;
-        match ev.kind {
-            EventKind::Arrival(ji) => {
-                let sid = route(&servers, &prompt_eligible, &jobs[ji], cfg.router);
-                servers[sid].prompt_q.push_back(ji);
-                heap.push(Event { t: now, kind: EventKind::Wake(sid) });
-            }
-            EventKind::Wake(sid) => {
-                if servers[sid].busy_until > now + 1e-12 {
-                    continue; // stale wake; the busy completion re-wakes.
-                }
-                if let Some(next) = step_server(
-                    sid, &mut servers, &mut jobs, model, cfg, now,
-                    &mut ttft, &mut tpot, &mut completed, &mut generated,
-                    &mut slo_ok, &mut online_done, &mut heap,
-                ) {
-                    heap.push(Event { t: next, kind: EventKind::Wake(sid) });
-                }
-            }
-        }
-    }
-
-    let dur = now.max(trace.last().map(|r| r.arrival_s).unwrap_or(0.0));
-    let mut energy = 0.0;
-    let mut op = 0.0;
-    let mut emb = 0.0;
-    for (s, emb_rate) in servers.iter().zip(&cfg.emb_kg_per_hr) {
-        let tpf = s.spec.tp as f64;
-        let idle_s = (dur - s.busy_s).max(0.0);
-        let e = s.energy_j + idle_s * s.spec.device.idle_w * tpf;
-        energy += e;
-        op += op_kg(1.0, e, cfg.ci); // op_kg(P,t,ci) with P·t == e joules
-        emb += emb_rate * dur / 3600.0;
-    }
-
-    SimReport {
-        ttft,
-        tpot,
-        completed,
-        generated_tokens: generated,
-        sim_duration_s: dur,
-        energy_j: energy,
-        op_kg: op,
-        emb_kg: emb,
-        slo_attainment: if online_done == 0 { 1.0 } else {
-            slo_ok as f64 / online_done as f64
-        },
-    }
+    simulate_with(model, trace, cfg, slo_ttft, slo_tpot,
+                  cfg.router.policy(), cfg.batcher.policy())
 }
 
-fn route(servers: &[Server], eligible: &[usize], job: &Job, policy: Router) -> usize {
-    match policy {
-        Router::Jsq => *eligible.iter()
-            .min_by_key(|&&i| servers[i].prompt_q.len() + servers[i].active.len())
-            .unwrap(),
-        Router::WorkloadAware => {
-            // Long prompts → largest-memory eligible server pool; short →
-            // smallest that still fits; ties by queue depth.
-            let long = job.prompt >= 1024;
-            *eligible.iter()
-                .min_by(|&&a, &&b| {
-                    let ka = wa_key(&servers[a], long);
-                    let kb = wa_key(&servers[b], long);
-                    ka.partial_cmp(&kb).unwrap()
-                })
-                .unwrap()
-        }
-    }
-}
-
-fn wa_key(s: &Server, long: bool) -> (f64, usize) {
-    let mem = s.spec.device.mem_gb;
-    let pref = if long { -mem } else { mem };
-    (pref, s.prompt_q.len() + s.active.len())
-}
-
-/// Execute one scheduling iteration on a server; returns the wall-clock of
-/// the next wake, or None if idle (a future arrival will wake it).
-#[allow(clippy::too_many_arguments)]
-fn step_server(
-    sid: usize,
-    servers: &mut [Server],
-    jobs: &mut [Job],
-    model: &LlmSpec,
-    cfg: &SimConfig,
-    now: f64,
-    ttft: &mut Samples,
-    tpot: &mut Samples,
-    completed: &mut usize,
-    generated: &mut usize,
-    slo_ok: &mut usize,
-    online_done: &mut usize,
-    heap: &mut BinaryHeap<Event>,
-) -> Option<f64> {
-    // Prefill first (prompt servers drain their queue; mixed servers give
-    // prefill priority — chunked-prefill-style).
-    let (do_prefill, batch_ids): (bool, Vec<usize>) = {
-        let s = &mut servers[sid];
-        if s.spec.role != Role::Decode && !s.prompt_q.is_empty() {
-            let n = s.spec.prefill_batch.min(s.prompt_q.len());
-            let ids: Vec<usize> = (0..n).map(|_| s.prompt_q.pop_front().unwrap()).collect();
-            (true, ids)
-        } else {
-            (false, Vec::new())
-        }
-    };
-
-    if do_prefill {
-        let max_prompt = batch_ids.iter().map(|&j| jobs[j].prompt).max().unwrap();
-        let spec_tp = servers[sid].spec.tp;
-        let perf = roofline::prefill_perf(model, &servers[sid].spec.device,
-                                          batch_ids.len(), max_prompt, spec_tp);
-        let done_t = now + perf.latency_s;
-        {
-            let s = &mut servers[sid];
-            s.busy_until = done_t;
-            s.busy_s += perf.latency_s;
-            s.energy_j += perf.energy_j;
-        }
-        // First token is produced by prefill.
-        for &ji in &batch_ids {
-            let j = &mut jobs[ji];
-            j.first_token_t = Some(done_t);
-            ttft.push(done_t - j.arrival);
-        }
-        // Hand sequences to a decode server (KV transfer if remote).
-        let decode_sid = pick_decode_server(servers, sid);
-        let kv_bytes = batch_ids.iter()
-            .map(|&j| jobs[j].prompt as f64 * model.kv_bytes_per_token())
-            .sum::<f64>();
-        let xfer = if decode_sid == sid { 0.0 } else { kv_bytes / cfg.kv_transfer_bw };
-        for &ji in &batch_ids {
-            servers[decode_sid].decode_q.push_back(ji);
-        }
-        heap.push(Event { t: done_t + xfer, kind: EventKind::Wake(decode_sid) });
-        return Some(done_t);
-    }
-
-    // Decode iteration.
-    {
-        let s = &mut servers[sid];
-        while s.active.len() < s.spec.max_batch {
-            let Some(ji) = s.decode_q.pop_front() else { break };
-            s.active.push(ji);
-        }
-    }
-    let active = servers[sid].active.clone();
-    if active.is_empty() {
-        return None;
-    }
-    let mean_ctx = (active.iter()
-        .map(|&j| jobs[j].prompt + jobs[j].decoded)
-        .sum::<usize>() / active.len()).max(1);
-    let spec_tp = servers[sid].spec.tp;
-    let perf = roofline::decode_step_perf(model, &servers[sid].spec.device,
-                                          active.len(), mean_ctx, spec_tp);
-    let done_t = now + perf.latency_s;
-    {
-        let s = &mut servers[sid];
-        s.busy_until = done_t;
-        s.busy_s += perf.latency_s;
-        s.energy_j += perf.energy_j;
-    }
-    let mut still = Vec::with_capacity(active.len());
-    for ji in active {
-        let j = &mut jobs[ji];
-        j.decoded += 1;
-        *generated += 1;
-        if j.decoded >= j.output {
-            let first = j.first_token_t.unwrap_or(j.arrival);
-            let t = if j.decoded > 1 {
-                (done_t - first) / (j.decoded - 1) as f64
-            } else {
-                0.0
-            };
-            tpot.push(t);
-            *completed += 1;
-            if j.class == RequestClass::Online {
-                *online_done += 1;
-                if (first - j.arrival) <= j.slo_ttft && t <= j.slo_tpot {
-                    *slo_ok += 1;
-                }
-            }
-        } else {
-            still.push(ji);
-        }
-    }
-    servers[sid].active = still;
-    Some(done_t)
-}
-
-fn pick_decode_server(servers: &[Server], from: usize) -> usize {
-    if servers[from].spec.role == Role::Mixed {
-        return from;
-    }
-    // JSQ over decode-capable servers.
-    servers.iter().enumerate()
-        .filter(|(_, s)| s.spec.role != Role::Prompt)
-        .min_by_key(|(_, s)| s.decode_q.len() + s.active.len())
-        .map(|(i, _)| i)
-        .unwrap_or(from)
-}
-
-/// Convenience: n identical mixed servers of a GPU SKU.
-pub fn homogeneous_fleet(gpu: &str, n: usize, model: &LlmSpec, ctx: usize)
-    -> Vec<ServerSpec> {
-    let g = crate::hw::gpu(gpu).unwrap_or_else(|| panic!("unknown gpu {gpu}"));
-    let dev = Device::from_gpu(g);
-    let mut tp = 1usize;
-    while model.weight_gb() >= 0.45 * dev.mem_gb * tp as f64 && tp < 8 {
-        tp *= 2;
-    }
-    let max_batch = model.max_batch(dev.mem_gb, ctx, tp).clamp(1, 64);
-    (0..n)
-        .map(|_| ServerSpec {
-            device: dev.clone(),
-            role: Role::Mixed,
-            tp,
-            max_batch,
-            prefill_batch: 4,
-        })
-        .collect()
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::models;
-    use crate::workload::{generate_trace, Arrivals, LengthDist};
-
-    fn small_trace(rate: f64, seed: u64) -> Vec<Request> {
-        generate_trace(Arrivals::Poisson { rate }, LengthDist::ShareGpt,
-                       RequestClass::Online, 120.0, seed)
-    }
-
-    fn cfg_for(servers: Vec<ServerSpec>, router: Router) -> SimConfig {
-        let n = servers.len();
-        SimConfig {
-            servers,
-            router,
-            ci: 261.0,
-            emb_kg_per_hr: vec![0.005; n],
-            kv_transfer_bw: 64e9,
-        }
-    }
-
-    #[test]
-    fn completes_all_requests() {
-        let m = models::llm("llama-8b").unwrap();
-        let tr = small_trace(2.0, 1);
-        let cfg = cfg_for(homogeneous_fleet("A100-40", 4, m, 2048), Router::Jsq);
-        let r = simulate(m, &tr, &cfg, 0.5, 0.1);
-        assert_eq!(r.completed, tr.len());
-        assert!(r.generated_tokens > 0);
-        assert!(r.op_kg > 0.0 && r.emb_kg > 0.0);
-    }
-
-    #[test]
-    fn overload_degrades_ttft() {
-        let m = models::llm("llama-8b").unwrap();
-        let cfg = cfg_for(homogeneous_fleet("A100-40", 2, m, 2048), Router::Jsq);
-        let mut light = simulate(m, &small_trace(0.5, 2), &cfg, 0.5, 0.1);
-        let mut heavy = simulate(m, &small_trace(12.0, 2), &cfg, 0.5, 0.1);
-        assert!(heavy.ttft.p90() > light.ttft.p90(),
-                "heavy {} vs light {}", heavy.ttft.p90(), light.ttft.p90());
-    }
-
-    #[test]
-    fn more_servers_more_throughput_headroom() {
-        let m = models::llm("llama-8b").unwrap();
-        let tr = small_trace(8.0, 3);
-        let small = cfg_for(homogeneous_fleet("A100-40", 2, m, 2048), Router::Jsq);
-        let big = cfg_for(homogeneous_fleet("A100-40", 8, m, 2048), Router::Jsq);
-        let mut r_small = simulate(m, &tr, &small, 0.5, 0.1);
-        let mut r_big = simulate(m, &tr, &big, 0.5, 0.1);
-        // More servers relieve queueing (p90 within noise of batched
-        // prefill saturation effects) and never hurt SLO attainment.
-        assert!(r_big.ttft.p90() <= r_small.ttft.p90() * 1.1 + 1e-9,
-                "big {} small {}", r_big.ttft.p90(), r_small.ttft.p90());
-        assert!(r_big.slo_attainment >= r_small.slo_attainment);
-    }
-
-    #[test]
-    fn disaggregated_pd_split_works() {
-        let m = models::llm("llama-8b").unwrap();
-        let mut servers = homogeneous_fleet("H100", 2, m, 2048);
-        servers[0].role = Role::Prompt;
-        servers[1].role = Role::Decode;
-        let cfg = cfg_for(servers, Router::Jsq);
-        let r = simulate(m, &small_trace(1.0, 4), &cfg, 0.5, 0.1);
-        assert_eq!(r.completed, simulate(m, &small_trace(1.0, 4),
-            &cfg_for(homogeneous_fleet("H100", 2, m, 2048), Router::Jsq),
-            0.5, 0.1).completed);
-        assert!(r.ttft.len() > 0 && r.tpot.len() > 0);
-    }
-
-    #[test]
-    fn workload_aware_router_helps_mixed_lengths() {
-        let m = models::llm("gemma-27b").unwrap();
-        // Heterogeneous fleet: one big-memory A100-80, one lean L4 pair.
-        let mut servers = homogeneous_fleet("A100-80", 1, m, 2048);
-        servers.extend(homogeneous_fleet("A100-40", 1, m, 2048));
-        let tr = generate_trace(Arrivals::Poisson { rate: 1.0 },
-                                LengthDist::AzureCode, RequestClass::Online,
-                                240.0, 5);
-        let mut jsq = simulate(m, &tr, &cfg_for(servers.clone(), Router::Jsq),
-                               10.0, 0.2);
-        let mut wa = simulate(m, &tr, &cfg_for(servers, Router::WorkloadAware),
-                              10.0, 0.2);
-        // Workload-aware must not be worse on p90 TTFT (usually better).
-        assert!(wa.ttft.p90() <= jsq.ttft.p90() * 1.35,
-                "wa {} jsq {}", wa.ttft.p90(), jsq.ttft.p90());
-    }
-
-    #[test]
-    fn energy_includes_idle_floor() {
-        let m = models::llm("llama-8b").unwrap();
-        // One request on a big fleet: idle power dominates.
-        let tr = small_trace(0.05, 6);
-        let cfg = cfg_for(homogeneous_fleet("A100-40", 8, m, 2048), Router::Jsq);
-        let r = simulate(m, &tr, &cfg, 0.5, 0.1);
-        let idle_j = r.sim_duration_s * 8.0 * 50.0; // 8x idle 50 W
-        assert!(r.energy_j > 0.8 * idle_j, "energy {} idle floor {idle_j}", r.energy_j);
-    }
+/// Run with explicit policy objects — the extension point for custom
+/// routing/batching studies that are not in the [`Router`]/[`Batcher`]
+/// registries.
+pub fn simulate_with(model: &LlmSpec, trace: &[Request], cfg: &SimConfig,
+                     slo_ttft: f64, slo_tpot: f64, route: &dyn RoutePolicy,
+                     batch: &dyn BatchPolicy) -> SimReport {
+    let mut sim = self::core::Sim::new(model, trace, cfg, slo_ttft, slo_tpot,
+                                       route, batch);
+    sim.run();
+    sim.finish(trace)
 }

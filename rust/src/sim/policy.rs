@@ -1,0 +1,513 @@
+//! Pluggable runtime policies: routing ([`RoutePolicy`]), batch formation
+//! ([`BatchPolicy`]) and offline temporal shifting ([`DeferralPolicy`]).
+//!
+//! Policies are the extension point for runtime-behaviour experiments: the
+//! simulator core only ever talks to the traits, and the [`Router`] /
+//! [`Batcher`] enums are thin config-level selectors over the shipped
+//! impls. Custom policies plug in through [`crate::sim::simulate_with`].
+
+use crate::carbon::intensity::CiSignal;
+use crate::workload::RequestClass;
+
+use super::carbon_meter::CarbonMeter;
+use super::server::{ClassQueue, Job, Server};
+
+/// Context a routing decision may consult: current time and the grid CI
+/// each server currently sees (the cross-layer carbon signal).
+pub struct RouteCtx<'a> {
+    pub now: f64,
+    pub(crate) meter: &'a CarbonMeter,
+}
+
+impl RouteCtx<'_> {
+    /// Grid CI currently seen by `server`, gCO₂e/kWh.
+    pub fn ci(&self, server: usize) -> f64 {
+        self.meter.ci_at(server, self.now)
+    }
+}
+
+/// Picks a server for an arriving request.
+pub trait RoutePolicy: Send + Sync {
+    fn name(&self) -> &'static str;
+    /// Pick one of `eligible` (non-empty, all prompt-capable) for `job`.
+    fn route(&self, job: &Job, servers: &[Server], eligible: &[usize],
+             ctx: &RouteCtx) -> usize;
+}
+
+/// Forms prefill/decode batches from a server's queues. Implementations
+/// *remove* the jobs they pick (O(batch) front pops on [`ClassQueue`] —
+/// never a full-queue scan); `jobs` is read-only context for policies
+/// that want lengths or deadlines.
+pub trait BatchPolicy: Send + Sync {
+    fn name(&self) -> &'static str;
+    /// Remove and return up to `max` job ids for the next prefill batch.
+    fn select_prefill(&self, queue: &mut ClassQueue, jobs: &[Job], max: usize)
+        -> Vec<usize>;
+    /// Remove and return up to `max` job ids to admit into decode.
+    fn select_decode(&self, queue: &mut ClassQueue, jobs: &[Job], max: usize)
+        -> Vec<usize>;
+}
+
+/// Join-shortest-queue over eligible servers (Splitwise's policy).
+pub struct Jsq;
+
+impl RoutePolicy for Jsq {
+    fn name(&self) -> &'static str {
+        "jsq"
+    }
+
+    fn route(&self, _job: &Job, servers: &[Server], eligible: &[usize],
+             _ctx: &RouteCtx) -> usize {
+        *eligible.iter().min_by_key(|&&i| servers[i].depth()).unwrap()
+    }
+}
+
+/// Workload-aware: long prompts to the largest-memory eligible pool, short
+/// to the leanest; ties by queue depth (EcoServe's runtime component).
+pub struct WorkloadAware;
+
+/// Prompt length (tokens) at which a request counts as "long".
+pub const LONG_PROMPT_TOKENS: usize = 1024;
+
+impl RoutePolicy for WorkloadAware {
+    fn name(&self) -> &'static str {
+        "workload-aware"
+    }
+
+    fn route(&self, job: &Job, servers: &[Server], eligible: &[usize],
+             _ctx: &RouteCtx) -> usize {
+        let long = job.prompt >= LONG_PROMPT_TOKENS;
+        *eligible.iter()
+            .min_by(|&&a, &&b| {
+                let (pa, da) = wa_key(&servers[a], long);
+                let (pb, db) = wa_key(&servers[b], long);
+                pa.total_cmp(&pb).then_with(|| da.cmp(&db)).then_with(|| a.cmp(&b))
+            })
+            .unwrap()
+    }
+}
+
+fn wa_key(s: &Server, long: bool) -> (f64, usize) {
+    let mem = s.spec().device.mem_gb;
+    let pref = if long { -mem } else { mem };
+    (pref, s.depth())
+}
+
+/// Carbon-greedy: prefer the eligible server whose grid currently has the
+/// lowest CI, discounted by queue depth so a clean region saturating does
+/// not starve latency forever (score = ci/mean_ci + queue_weight·depth).
+pub struct CarbonGreedy {
+    pub queue_weight: f64,
+}
+
+impl RoutePolicy for CarbonGreedy {
+    fn name(&self) -> &'static str {
+        "carbon-greedy"
+    }
+
+    fn route(&self, _job: &Job, servers: &[Server], eligible: &[usize],
+             ctx: &RouteCtx) -> usize {
+        let mean_ci = (eligible.iter().map(|&i| ctx.ci(i)).sum::<f64>()
+            / eligible.len() as f64).max(1e-9);
+        let score = |i: usize| -> f64 {
+            ctx.ci(i) / mean_ci + self.queue_weight * servers[i].depth() as f64
+        };
+        *eligible.iter()
+            .min_by(|&&a, &&b| {
+                score(a).total_cmp(&score(b)).then_with(|| a.cmp(&b))
+            })
+            .unwrap()
+    }
+}
+
+/// Plain FIFO batching: strict arrival order, blind to request class.
+pub struct FifoBatch;
+
+impl BatchPolicy for FifoBatch {
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+
+    fn select_prefill(&self, queue: &mut ClassQueue, _jobs: &[Job], max: usize)
+        -> Vec<usize> {
+        queue.pop_fifo(max)
+    }
+
+    fn select_decode(&self, queue: &mut ClassQueue, _jobs: &[Job], max: usize)
+        -> Vec<usize> {
+        queue.pop_fifo(max)
+    }
+}
+
+/// Online-priority batching: interactive requests fill the batch first and
+/// offline work pads the leftover slots, so deferred offline herds cannot
+/// queue ahead of latency-sensitive traffic (EcoServe's runtime rule).
+pub struct OnlineFirstBatch;
+
+impl BatchPolicy for OnlineFirstBatch {
+    fn name(&self) -> &'static str {
+        "online-first"
+    }
+
+    fn select_prefill(&self, queue: &mut ClassQueue, _jobs: &[Job], max: usize)
+        -> Vec<usize> {
+        queue.pop_online_first(max)
+    }
+
+    fn select_decode(&self, queue: &mut ClassQueue, _jobs: &[Job], max: usize)
+        -> Vec<usize> {
+        queue.pop_online_first(max)
+    }
+}
+
+static JSQ: Jsq = Jsq;
+static WORKLOAD_AWARE: WorkloadAware = WorkloadAware;
+static CARBON_GREEDY: CarbonGreedy = CarbonGreedy { queue_weight: 0.25 };
+static FIFO: FifoBatch = FifoBatch;
+static ONLINE_FIRST: OnlineFirstBatch = OnlineFirstBatch;
+
+/// Config-level selector for the shipped routing policies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Router {
+    /// Join-shortest-queue over eligible servers (Splitwise's policy).
+    Jsq,
+    /// Workload-aware: long prompts to high-memory servers (EcoServe).
+    WorkloadAware,
+    /// Lowest current grid CI, discounted by queue depth.
+    CarbonGreedy,
+}
+
+impl Router {
+    pub fn policy(&self) -> &'static dyn RoutePolicy {
+        match self {
+            Router::Jsq => &JSQ,
+            Router::WorkloadAware => &WORKLOAD_AWARE,
+            Router::CarbonGreedy => &CARBON_GREEDY,
+        }
+    }
+}
+
+/// Config-level selector for the shipped batch policies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Batcher {
+    Fifo,
+    OnlineFirst,
+}
+
+impl Batcher {
+    pub fn policy(&self) -> &'static dyn BatchPolicy {
+        match self {
+            Batcher::Fifo => &FIFO,
+            Batcher::OnlineFirst => &ONLINE_FIRST,
+        }
+    }
+}
+
+/// Fraction of an offline deadline usable as the release window (the rest
+/// is service slack so deferred work still finishes on time).
+const WINDOW_FRAC: f64 = 0.7;
+
+/// Minimum CI improvement (gCO₂e/kWh) worth deferring for; guards against
+/// chasing trace noise.
+const MIN_WIN_G_PER_KWH: f64 = 1.0;
+
+/// Temporal scheduling of offline-class requests (the paper's Reduce /
+/// temporal-shifting lever). Online work is never deferred.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum DeferralPolicy {
+    /// Route offline work the moment it arrives.
+    Immediate,
+    /// Shift each offline request to the lowest-CI point of
+    /// `[arrival, min(arrival + 0.7·deadline_s, horizon_s)]`, spacing
+    /// releases `spacing_s` apart so the low-CI window does not turn into
+    /// a thundering herd. A request is only deferred when the realized
+    /// release slot still beats running immediately.
+    LowCiWindow {
+        deadline_s: f64,
+        spacing_s: f64,
+        /// Don't release past this point (normally the trace duration), so
+        /// shifting never stretches the accounted sim horizon.
+        horizon_s: f64,
+    },
+}
+
+impl DeferralPolicy {
+    /// Completion deadline for a request under this policy.
+    pub(crate) fn deadline_for(&self, class: RequestClass, arrival_s: f64) -> f64 {
+        match self {
+            DeferralPolicy::LowCiWindow { deadline_s, .. }
+                if class == RequestClass::Offline => arrival_s + deadline_s,
+            _ => f64::INFINITY,
+        }
+    }
+}
+
+/// Runtime state of the deferral queue (release-slot spacing).
+#[derive(Debug)]
+pub(crate) struct DeferState {
+    policy: DeferralPolicy,
+    next_slot: f64,
+}
+
+impl DeferState {
+    pub fn new(policy: DeferralPolicy) -> DeferState {
+        DeferState { policy, next_slot: 0.0 }
+    }
+
+    /// Release time for an offline request arriving at `now`, or `None`
+    /// to run it immediately. Deterministic: scans the CI signal at trace
+    /// resolution, ties break to the earliest slot.
+    pub fn release_time(&mut self, now: f64, signal: &CiSignal) -> Option<f64> {
+        let DeferralPolicy::LowCiWindow { deadline_s, spacing_s, horizon_s } =
+            self.policy
+        else {
+            return None;
+        };
+        let step = signal.step_s()?; // flat signal: nothing to gain
+        let cap = (now + WINDOW_FRAC * deadline_s).min(horizon_s);
+        if cap <= now {
+            return None;
+        }
+        let now_ci = signal.at(now);
+        let mut best_t = now;
+        let mut best_ci = now_ci;
+        let mut t = now + step;
+        while t <= cap {
+            let ci = signal.at(t);
+            if ci + 1e-9 < best_ci {
+                best_ci = ci;
+                best_t = t;
+            }
+            t += step;
+        }
+        if best_t <= now {
+            return None;
+        }
+        // Serialize releases; only defer if the realized slot still wins.
+        let release = best_t.max(self.next_slot);
+        if release > cap || signal.at(release) + MIN_WIN_G_PER_KWH >= now_ci {
+            return None;
+        }
+        self.next_slot = release + spacing_s;
+        Some(release)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::carbon::intensity::{CiTrace, Region};
+    use crate::models;
+    use crate::sim::core::SimConfig;
+    use crate::sim::server::homogeneous_fleet;
+    use crate::testkit::{forall, PropConfig};
+    use crate::util::rng::Rng;
+
+    fn job(prompt: usize) -> Job {
+        Job {
+            arrival: 0.0,
+            prompt,
+            output: 16,
+            class: RequestClass::Online,
+            slo_ttft: 0.5,
+            slo_tpot: 0.1,
+            deadline: f64::INFINITY,
+            dispatched_t: 0.0,
+            first_token_t: None,
+            decoded: 0,
+        }
+    }
+
+    /// Build runtime servers with the given (prompt_q, active) depths.
+    fn servers_with_depths(specs: &[super::super::server::ServerSpec],
+                           depths: &[(usize, usize)]) -> Vec<Server> {
+        specs.iter().zip(depths).map(|(spec, &(q, a))| {
+            let mut s = Server::new(spec);
+            for i in 0..q {
+                s.prompt_q.push(i, RequestClass::Online);
+            }
+            for i in 0..a {
+                s.active.push(i);
+            }
+            s
+        }).collect()
+    }
+
+    fn flat_ctx_cfg(n: usize) -> SimConfig {
+        let m = models::llm("llama-8b").unwrap();
+        let fleet = homogeneous_fleet("A100-40", n, m, 2048);
+        SimConfig::flat(fleet, Router::Jsq, 261.0, vec![0.005; n])
+    }
+
+    #[test]
+    fn prop_jsq_never_routes_to_a_strictly_longer_queue() {
+        let specs = {
+            let m = models::llm("llama-8b").unwrap();
+            homogeneous_fleet("A100-40", 6, m, 2048)
+        };
+        let cfg = flat_ctx_cfg(6);
+        let meter = CarbonMeter::new(&cfg);
+        forall(
+            &PropConfig { cases: 200, ..Default::default() },
+            |r: &mut Rng| {
+                let n = 2 + r.below(5);
+                (0..n).map(|_| (r.below(10), r.below(8))).collect::<Vec<_>>()
+            },
+            |_| Vec::new(),
+            |depths| {
+                let servers = servers_with_depths(&specs[..depths.len()], depths);
+                let eligible: Vec<usize> = (0..depths.len()).collect();
+                let ctx = RouteCtx { now: 0.0, meter: &meter };
+                let sid = Jsq.route(&job(256), &servers, &eligible, &ctx);
+                let chosen = servers[sid].depth();
+                for &i in &eligible {
+                    if servers[i].depth() < chosen {
+                        return Err(format!(
+                            "routed to depth {chosen} with server {i} at {}",
+                            servers[i].depth()));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_workload_aware_sends_long_prompts_to_largest_memory() {
+        // Heterogeneous pool: A100-80 (80 GB) + A100-40 + L4.
+        let m = models::llm("llama-8b").unwrap();
+        let mut specs = homogeneous_fleet("A100-80", 1, m, 2048);
+        specs.extend(homogeneous_fleet("A100-40", 1, m, 2048));
+        specs.extend(homogeneous_fleet("L4", 1, m, 2048));
+        let cfg = flat_ctx_cfg(3);
+        let meter = CarbonMeter::new(&cfg);
+        let max_mem = specs.iter().map(|s| s.device.mem_gb)
+            .fold(f64::MIN, f64::max);
+        forall(
+            &PropConfig { cases: 200, ..Default::default() },
+            |r: &mut Rng| {
+                let depths: Vec<(usize, usize)> =
+                    (0..3).map(|_| (r.below(10), r.below(8))).collect();
+                let prompt = LONG_PROMPT_TOKENS + r.below(8192);
+                (depths, prompt)
+            },
+            |_| Vec::new(),
+            |(depths, prompt)| {
+                let servers = servers_with_depths(&specs, depths);
+                let eligible = vec![0, 1, 2];
+                let ctx = RouteCtx { now: 0.0, meter: &meter };
+                let sid = WorkloadAware.route(&job(*prompt), &servers,
+                                              &eligible, &ctx);
+                let mem = servers[sid].spec().device.mem_gb;
+                if mem < max_mem {
+                    return Err(format!(
+                        "long prompt ({prompt} tok) routed to {mem} GB, max {max_mem}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn carbon_greedy_prefers_clean_grid_until_queues_pile_up() {
+        let m = models::llm("llama-8b").unwrap();
+        let mut specs = homogeneous_fleet("A100-40", 2, m, 2048);
+        specs[0].region = Some(Region::SwedenNorth); // 17 g/kWh
+        specs[1].region = Some(Region::Midcontinent); // 501 g/kWh
+        let cfg = SimConfig::flat(specs.clone(), Router::CarbonGreedy, 261.0,
+                                  vec![0.005; 2]);
+        let meter = CarbonMeter::new(&cfg);
+        let ctx = RouteCtx { now: 0.0, meter: &meter };
+        let empty = servers_with_depths(&specs, &[(0, 0), (0, 0)]);
+        assert_eq!(CARBON_GREEDY.route(&job(256), &empty, &[0, 1], &ctx), 0);
+        // A deep enough clean-grid queue finally spills to the dirty grid.
+        let deep = servers_with_depths(&specs, &[(40, 20), (0, 0)]);
+        assert_eq!(CARBON_GREEDY.route(&job(256), &deep, &[0, 1], &ctx), 1);
+    }
+
+    #[test]
+    fn online_first_batch_pads_with_offline() {
+        let mut jobs: Vec<Job> = (0..6).map(|_| job(128)).collect();
+        jobs[1].class = RequestClass::Offline;
+        jobs[2].class = RequestClass::Offline;
+        let fill = |jobs: &[Job]| {
+            let mut q = ClassQueue::default();
+            for (j, jb) in jobs.iter().enumerate() {
+                q.push(j, jb.class);
+            }
+            q
+        };
+        // Online 0,3,4,5 fill the batch before offline 1,2 get a slot.
+        let mut q = fill(&jobs);
+        assert_eq!(OnlineFirstBatch.select_prefill(&mut q, &jobs, 4),
+                   vec![0, 3, 4, 5]);
+        assert_eq!(q.len(), 2, "unpicked jobs stay queued");
+        let mut q = fill(&jobs);
+        assert_eq!(OnlineFirstBatch.select_prefill(&mut q, &jobs, 5),
+                   vec![0, 3, 4, 5, 1]);
+        // Strict FIFO is blind to class.
+        let mut q = fill(&jobs);
+        assert_eq!(FifoBatch.select_prefill(&mut q, &jobs, 4), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn deferral_targets_the_dip_and_respects_caps() {
+        let tr = CiTrace::compressed_diurnal(Region::California, 240.0, 2, 96, 7);
+        let sig = CiSignal::Trace(tr);
+        let policy = DeferralPolicy::LowCiWindow {
+            deadline_s: 192.0,
+            spacing_s: 0.5,
+            horizon_s: 240.0,
+        };
+        let mut st = DeferState::new(policy);
+        // Early-morning arrival defers into the solar dip (~13/24 of 240 s).
+        let r = st.release_time(10.0, &sig).expect("should defer");
+        assert!(r > 10.0 && r <= 10.0 + 0.7 * 192.0);
+        assert!(sig.at(r) < sig.at(10.0), "release CI {} >= now CI {}",
+                sig.at(r), sig.at(10.0));
+        // Spacing: the next release never lands before the previous + gap.
+        let r2 = st.release_time(10.5, &sig).expect("should defer");
+        assert!(r2 >= r + 0.5 - 1e-9, "r2 {r2} vs r {r}");
+        // Flat signal: never defers.
+        let mut st2 = DeferState::new(policy);
+        assert!(st2.release_time(10.0, &CiSignal::flat(261.0)).is_none());
+        // Immediate policy: never defers.
+        let mut st3 = DeferState::new(DeferralPolicy::Immediate);
+        assert!(st3.release_time(10.0, &sig).is_none());
+    }
+
+    #[test]
+    fn workload_aware_router_helps_mixed_lengths() {
+        use crate::sim::simulate;
+        use crate::workload::{generate_trace, Arrivals, LengthDist};
+        let m = models::llm("gemma-27b").unwrap();
+        // Heterogeneous fleet: one big-memory A100-80, one lean A100-40.
+        let mut servers = homogeneous_fleet("A100-80", 1, m, 2048);
+        servers.extend(homogeneous_fleet("A100-40", 1, m, 2048));
+        let tr = generate_trace(Arrivals::Poisson { rate: 1.0 },
+                                LengthDist::AzureCode, RequestClass::Online,
+                                240.0, 5);
+        let n = servers.len();
+        let mk = |router: Router| {
+            let cfg = SimConfig::flat(servers.clone(), router, 261.0,
+                                      vec![0.005; n]);
+            simulate(m, &tr, &cfg, 10.0, 0.2)
+        };
+        let mut jsq = mk(Router::Jsq);
+        let mut wa = mk(Router::WorkloadAware);
+        // Workload-aware must not be worse on p90 TTFT (usually better).
+        assert!(wa.ttft.p90() <= jsq.ttft.p90() * 1.35,
+                "wa {} jsq {}", wa.ttft.p90(), jsq.ttft.p90());
+    }
+
+    #[test]
+    fn deadlines_only_for_offline_under_deferral() {
+        let p = DeferralPolicy::LowCiWindow {
+            deadline_s: 100.0, spacing_s: 0.5, horizon_s: 200.0,
+        };
+        assert_eq!(p.deadline_for(RequestClass::Offline, 5.0), 105.0);
+        assert!(p.deadline_for(RequestClass::Online, 5.0).is_infinite());
+        assert!(DeferralPolicy::Immediate
+            .deadline_for(RequestClass::Offline, 5.0).is_infinite());
+    }
+}

@@ -1,0 +1,342 @@
+//! Server state and the prefill/decode stepping logic, driven by the
+//! event core. Batch formation and routing are delegated to the policy
+//! traits in `policy.rs`; energy goes to the server ledger and the
+//! carbon meter; latency/SLO samples go to the metrics sink.
+
+use crate::carbon::intensity::Region;
+use crate::models::LlmSpec;
+use crate::perf::roofline::{self, Device};
+use crate::workload::RequestClass;
+use std::collections::VecDeque;
+
+use super::core::{EventKind, Sim};
+
+/// Prompts are clipped to this many tokens (the sim's context cap);
+/// clipped requests are counted in `SimReport::truncated_prompts`.
+pub const MAX_PROMPT_TOKENS: usize = 8192;
+
+/// Server role in a (possibly disaggregated) deployment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    Prompt,
+    Decode,
+    Mixed,
+}
+
+/// One provisioned server (a TP group acts as one server).
+#[derive(Debug, Clone)]
+pub struct ServerSpec {
+    pub device: Device,
+    pub role: Role,
+    pub tp: usize,
+    /// Max concurrent decode sequences (KV capacity at typical ctx).
+    pub max_batch: usize,
+    /// Max prompts per prefill batch.
+    pub prefill_batch: usize,
+    /// Grid region override for multi-region fleets; `None` means the
+    /// deployment's primary CI signal applies.
+    pub region: Option<Region>,
+}
+
+/// A request as the simulator tracks it.
+#[derive(Debug, Clone)]
+pub struct Job {
+    pub arrival: f64,
+    pub prompt: usize,
+    pub output: usize,
+    pub class: RequestClass,
+    pub slo_ttft: f64,
+    pub slo_tpot: f64,
+    /// Completion deadline (offline temporal shifting); ∞ when untracked.
+    pub deadline: f64,
+    /// When the request was handed to the routers — equals `arrival`
+    /// unless the deferral policy shifted it. TTFT measures from here so
+    /// intentional temporal shifting doesn't masquerade as serving
+    /// latency (deadline attainment still measures from `arrival`).
+    pub dispatched_t: f64,
+    pub first_token_t: Option<f64>,
+    pub decoded: usize,
+}
+
+/// A per-class FIFO queue with global arrival sequencing: batch policies
+/// take strict-FIFO or class-priority prefixes in O(batch) — no queue
+/// scans — and removal is a front pop, not a retain.
+#[derive(Debug, Default)]
+pub struct ClassQueue {
+    online: VecDeque<(u64, usize)>,
+    offline: VecDeque<(u64, usize)>,
+    next_seq: u64,
+}
+
+impl ClassQueue {
+    pub(crate) fn push(&mut self, job: usize, class: RequestClass) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        match class {
+            RequestClass::Online => self.online.push_back((seq, job)),
+            RequestClass::Offline => self.offline.push_back((seq, job)),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.online.len() + self.offline.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.online.is_empty() && self.offline.is_empty()
+    }
+
+    /// Remove and return up to `max` job ids in strict arrival order
+    /// (classes interleaved by enqueue sequence).
+    pub fn pop_fifo(&mut self, max: usize) -> Vec<usize> {
+        let mut out = Vec::with_capacity(max.min(self.len()));
+        while out.len() < max {
+            let take_online = match (self.online.front(), self.offline.front()) {
+                (Some(&(a, _)), Some(&(b, _))) => a < b,
+                (Some(_), None) => true,
+                (None, Some(_)) => false,
+                (None, None) => break,
+            };
+            let q = if take_online { &mut self.online } else { &mut self.offline };
+            out.push(q.pop_front().unwrap().1);
+        }
+        out
+    }
+
+    /// Remove and return up to `max` job ids, online class first (each
+    /// class in arrival order).
+    pub fn pop_online_first(&mut self, max: usize) -> Vec<usize> {
+        let mut out = Vec::with_capacity(max.min(self.len()));
+        while out.len() < max {
+            let Some((_, j)) = self.online.pop_front() else { break };
+            out.push(j);
+        }
+        while out.len() < max {
+            let Some((_, j)) = self.offline.pop_front() else { break };
+            out.push(j);
+        }
+        out
+    }
+}
+
+/// Runtime server state. Fields are crate-private; policies observe
+/// servers through the accessor methods.
+#[derive(Debug)]
+pub struct Server {
+    pub(crate) spec: ServerSpec,
+    pub(crate) prompt_q: ClassQueue,
+    pub(crate) decode_q: ClassQueue,
+    pub(crate) active: Vec<usize>,
+    /// Count of busy periods started; a `Complete { gen }` event ends the
+    /// period it names, making stale wakes structurally impossible.
+    pub(crate) busy_gen: u64,
+    pub(crate) in_flight: bool,
+    pub(crate) busy_s: f64,
+    pub(crate) energy_j: f64,
+}
+
+impl Server {
+    pub(crate) fn new(spec: &ServerSpec) -> Server {
+        Server {
+            spec: spec.clone(),
+            prompt_q: ClassQueue::default(),
+            decode_q: ClassQueue::default(),
+            active: Vec::new(),
+            busy_gen: 0,
+            in_flight: false,
+            busy_s: 0.0,
+            energy_j: 0.0,
+        }
+    }
+
+    /// Load the routing policies see: waiting prompts + running decodes.
+    pub fn depth(&self) -> usize {
+        self.prompt_q.len() + self.active.len()
+    }
+
+    pub fn spec(&self) -> &ServerSpec {
+        &self.spec
+    }
+}
+
+impl<'a> Sim<'a> {
+    /// One scheduling iteration: prefill first (prompt servers drain their
+    /// queue; mixed servers give prefill priority, chunked-prefill-style),
+    /// else a decode step. Work schedules its own `Complete` event.
+    pub(crate) fn step(&mut self, sid: usize) {
+        if self.try_prefill(sid) {
+            return;
+        }
+        self.try_decode(sid);
+    }
+
+    fn try_prefill(&mut self, sid: usize) -> bool {
+        if self.servers[sid].spec.role == Role::Decode
+            || self.servers[sid].prompt_q.is_empty()
+        {
+            return false;
+        }
+        let cap = self.servers[sid].spec.prefill_batch;
+        let batch = self.batch;
+        let picks =
+            batch.select_prefill(&mut self.servers[sid].prompt_q, &self.jobs, cap);
+        if picks.is_empty() {
+            return false;
+        }
+
+        let max_prompt = picks.iter().map(|&j| self.jobs[j].prompt).max().unwrap();
+        let tp = self.servers[sid].spec.tp;
+        let perf = roofline::prefill_perf(self.model, &self.servers[sid].spec.device,
+                                          picks.len(), max_prompt, tp);
+        let done_t = self.begin_busy(sid, perf.latency_s, perf.energy_j);
+
+        // First token is produced by prefill. TTFT is measured from the
+        // dispatch time (== arrival unless the job was deferred).
+        for &ji in &picks {
+            self.jobs[ji].first_token_t = Some(done_t);
+            let ttft = done_t - self.jobs[ji].dispatched_t;
+            self.metrics.ttft.push(ttft);
+        }
+
+        // Hand sequences to a decode server (KV transfer if remote). The
+        // Handoff event lands the KV at done_t + xfer — the decode side
+        // cannot admit a sequence before its prefill (and transfer) ends.
+        let decode_sid = self.pick_decode_server(sid);
+        let kv_bytes: f64 = picks.iter()
+            .map(|&j| self.jobs[j].prompt as f64 * self.model.kv_bytes_per_token())
+            .sum();
+        let xfer = if decode_sid == sid { 0.0 } else { kv_bytes / self.cfg.kv_transfer_bw };
+        for &ji in &picks {
+            self.queue.push(done_t + xfer,
+                            EventKind::Handoff { job: ji, server: decode_sid });
+        }
+        true
+    }
+
+    fn try_decode(&mut self, sid: usize) {
+        let slots = {
+            let s = &self.servers[sid];
+            s.spec.max_batch.saturating_sub(s.active.len())
+        };
+        if slots > 0 && !self.servers[sid].decode_q.is_empty() {
+            let batch = self.batch;
+            let admit =
+                batch.select_decode(&mut self.servers[sid].decode_q, &self.jobs, slots);
+            self.servers[sid].active.extend_from_slice(&admit);
+        }
+
+        let active = self.servers[sid].active.clone();
+        if active.is_empty() {
+            return;
+        }
+        let mean_ctx = (active.iter()
+            .map(|&j| self.jobs[j].prompt + self.jobs[j].decoded)
+            .sum::<usize>() / active.len()).max(1);
+        let tp = self.servers[sid].spec.tp;
+        let perf = roofline::decode_step_perf(self.model, &self.servers[sid].spec.device,
+                                              active.len(), mean_ctx, tp);
+        let done_t = self.begin_busy(sid, perf.latency_s, perf.energy_j);
+
+        let mut still = Vec::with_capacity(active.len());
+        for ji in active {
+            self.jobs[ji].decoded += 1;
+            self.metrics.generated_tokens += 1;
+            let j = &self.jobs[ji];
+            if j.decoded >= j.output {
+                let first = j.first_token_t.unwrap_or(j.dispatched_t);
+                let tpot = if j.decoded > 1 {
+                    (done_t - first) / (j.decoded - 1) as f64
+                } else {
+                    0.0
+                };
+                let online = j.class == RequestClass::Online;
+                let slo_hit = (first - j.dispatched_t) <= j.slo_ttft
+                    && tpot <= j.slo_tpot;
+                let on_time = done_t <= j.deadline;
+                self.metrics.complete(online, slo_hit, on_time, tpot);
+            } else {
+                still.push(ji);
+            }
+        }
+        self.servers[sid].active = still;
+    }
+
+    /// Start a busy period ending at `now + latency_s`: bump the server's
+    /// generation, charge the meter, and schedule the matching `Complete`.
+    fn begin_busy(&mut self, sid: usize, latency_s: f64, energy_j: f64) -> f64 {
+        let done_t = self.now + latency_s;
+        let s = &mut self.servers[sid];
+        s.busy_gen += 1;
+        s.in_flight = true;
+        s.busy_s += latency_s;
+        s.energy_j += energy_j;
+        let gen = s.busy_gen;
+        self.meter.record(sid, self.now, latency_s, energy_j);
+        self.queue.push(done_t, EventKind::Complete { server: sid, gen });
+        done_t
+    }
+
+    /// JSQ over decode-capable servers; mixed servers keep their own KV.
+    fn pick_decode_server(&self, from: usize) -> usize {
+        if self.servers[from].spec.role == Role::Mixed {
+            return from;
+        }
+        self.servers.iter().enumerate()
+            .filter(|(_, s)| s.spec.role != Role::Prompt)
+            .min_by_key(|(_, s)| s.decode_q.len() + s.active.len())
+            .map(|(i, _)| i)
+            .unwrap_or(from)
+    }
+}
+
+/// Convenience: n identical mixed servers of a GPU SKU.
+pub fn homogeneous_fleet(gpu: &str, n: usize, model: &LlmSpec, ctx: usize)
+    -> Vec<ServerSpec> {
+    let g = crate::hw::gpu(gpu).unwrap_or_else(|| panic!("unknown gpu {gpu}"));
+    let dev = Device::from_gpu(g);
+    let mut tp = 1usize;
+    while model.weight_gb() >= 0.45 * dev.mem_gb * tp as f64 && tp < 8 {
+        tp *= 2;
+    }
+    let max_batch = model.max_batch(dev.mem_gb, ctx, tp).clamp(1, 64);
+    (0..n)
+        .map(|_| ServerSpec {
+            device: dev.clone(),
+            role: Role::Mixed,
+            tp,
+            max_batch,
+            prefill_batch: 4,
+            region: None,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_queue_fifo_interleaves_by_arrival() {
+        let mut q = ClassQueue::default();
+        q.push(10, RequestClass::Online);
+        q.push(11, RequestClass::Offline);
+        q.push(12, RequestClass::Online);
+        q.push(13, RequestClass::Offline);
+        assert_eq!(q.len(), 4);
+        assert_eq!(q.pop_fifo(3), vec![10, 11, 12]);
+        assert_eq!(q.pop_fifo(3), vec![13]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn class_queue_online_first_pads_with_offline() {
+        let mut q = ClassQueue::default();
+        for (j, class) in [(0, RequestClass::Online), (1, RequestClass::Offline),
+                           (2, RequestClass::Offline), (3, RequestClass::Online)] {
+            q.push(j, class);
+        }
+        assert_eq!(q.pop_online_first(3), vec![0, 3, 1]);
+        assert_eq!(q.pop_online_first(3), vec![2]);
+        assert!(q.is_empty());
+    }
+}

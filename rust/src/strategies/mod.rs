@@ -161,18 +161,16 @@ pub fn splitwise_fleet(model: &LlmSpec, n_prompt: usize, n_token: usize,
     fleet
 }
 
-/// SimConfig for a fleet under a strategy's carbon accounting.
+/// SimConfig for a fleet under a strategy's carbon accounting: flat CI at
+/// the planning value, workload-aware routing, online-first batching.
+/// Callers swap `cfg.ci` for a [`crate::carbon::intensity::CiSignal`]
+/// trace or set `cfg.deferral` for temporal-shifting studies.
 pub fn sim_config(fleet: Vec<ServerSpec>, plan: &Plan, ci: f64) -> SimConfig {
     let n = fleet.len().max(1);
     // Spread the plan's embodied rate across servers.
     let per_server = plan.emb_kg_per_hr / n as f64;
-    SimConfig {
-        emb_kg_per_hr: vec![per_server; fleet.len()],
-        servers: fleet,
-        router: Router::WorkloadAware,
-        ci,
-        kv_transfer_bw: 64e9,
-    }
+    let emb = vec![per_server; fleet.len()];
+    SimConfig::flat(fleet, Router::WorkloadAware, ci, emb)
 }
 
 /// Iso-power fleet sizing: how many of `gpu` fit the power envelope of

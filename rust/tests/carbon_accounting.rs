@@ -2,7 +2,8 @@
 //! and the operational/embodied task model stay self-consistent.
 
 use ecoserve::carbon::operational::{amortized_emb_kg, device_power, op_kg,
-                                    task_carbon, GPU_POWER_GAMMA};
+                                    op_kg_from_joules, task_carbon,
+                                    GPU_POWER_GAMMA};
 use ecoserve::models;
 use ecoserve::sim::{homogeneous_fleet, simulate, Router, SimConfig, SimReport};
 use ecoserve::workload::{generate_trace, Arrivals, LengthDist, Request,
@@ -14,13 +15,8 @@ fn run_sim(gpus: usize, rate: f64, ci: f64, class: RequestClass)
     let tr = generate_trace(Arrivals::Poisson { rate }, LengthDist::ShareGpt,
                             class, 120.0, 99);
     let servers = homogeneous_fleet("A100-40", gpus, m, 2048);
-    let cfg = SimConfig {
-        emb_kg_per_hr: vec![0.005; servers.len()],
-        servers,
-        router: Router::WorkloadAware,
-        ci,
-        kv_transfer_bw: 64e9,
-    };
+    let n = servers.len();
+    let cfg = SimConfig::flat(servers, Router::WorkloadAware, ci, vec![0.005; n]);
     let r = simulate(m, &tr, &cfg, 0.5, 0.1);
     (r, tr)
 }
@@ -31,10 +27,10 @@ fn sim_carbon_is_op_plus_embodied() {
     assert!(r.op_kg > 0.0 && r.emb_kg > 0.0);
     assert!((r.carbon_kg() - (r.op_kg + r.emb_kg)).abs() < 1e-12,
             "carbon {} != {} + {}", r.carbon_kg(), r.op_kg, r.emb_kg);
-    // Operational carbon is exactly energy × CI (op_kg sums linearly over
-    // servers, so the total must match a single conversion of the total
-    // energy draw).
-    let expect = op_kg(1.0, r.energy_j, 261.0);
+    // Operational carbon is exactly energy × CI for a flat signal (the
+    // meter sums linearly over busy/idle intervals, so the total must
+    // match a single conversion of the total energy draw).
+    let expect = op_kg_from_joules(r.energy_j, 261.0);
     assert!((r.op_kg - expect).abs() <= 1e-9 * expect.max(1e-12),
             "op {} vs energy-derived {}", r.op_kg, expect);
 }

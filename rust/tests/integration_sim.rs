@@ -34,13 +34,8 @@ fn carbon_accounting_scales_with_ci() {
                             120.0, 10);
     let mk = |ci: f64| {
         let servers = ecoserve::sim::homogeneous_fleet("A100-40", 4, m, 2048);
-        let cfg = ecoserve::sim::SimConfig {
-            emb_kg_per_hr: vec![0.005; 4],
-            servers,
-            router: Router::Jsq,
-            ci,
-            kv_transfer_bw: 64e9,
-        };
+        let cfg = ecoserve::sim::SimConfig::flat(servers, Router::Jsq, ci,
+                                                 vec![0.005; 4]);
         simulate(m, &tr, &cfg, 0.5, 0.1)
     };
     let low = mk(17.0);

@@ -9,7 +9,8 @@ const TEST_DURATION_S: f64 = 60.0;
 
 #[test]
 fn sweep_is_deterministic_across_runs_and_thread_counts() {
-    let cfg1 = SweepConfig { threads: 1, seed: 7, duration_s: TEST_DURATION_S };
+    let cfg1 = SweepConfig { threads: 1, seed: 7, duration_s: TEST_DURATION_S,
+                             ..Default::default() };
     let cfg4 = SweepConfig { threads: 4, ..cfg1.clone() };
 
     let a = run_sweep(&registry(), &cfg1).to_json().to_string();
@@ -23,10 +24,13 @@ fn sweep_is_deterministic_across_runs_and_thread_counts() {
     // sorted by name, carrying the required per-scenario metrics.
     let j = Json::parse(&a).expect("report must be valid JSON");
     let scenarios = j.get("scenarios").and_then(|s| s.as_arr()).unwrap();
-    assert!(scenarios.len() >= 6, "only {} scenarios", scenarios.len());
+    assert!(scenarios.len() >= 8, "only {} scenarios", scenarios.len());
     let names: Vec<&str> = scenarios.iter()
         .map(|s| s.get("name").and_then(|n| n.as_str()).unwrap())
         .collect();
+    for want in ["diurnal-shift", "carbon-router"] {
+        assert!(names.contains(&want), "missing carbon-aware scenario {want}");
+    }
     let mut sorted = names.clone();
     sorted.sort_unstable();
     assert_eq!(names, sorted, "scenarios must be name-sorted");
@@ -44,6 +48,12 @@ fn sweep_is_deterministic_across_runs_and_thread_counts() {
                 "{name}: carbon {carbon} != op {op} + emb {emb}");
         let slo = num("slo_attainment");
         assert!((0.0..=1.0).contains(&slo), "{name}: slo {slo}");
+        let ddl = num("offline_deadline_attainment");
+        assert!((0.0..=1.0).contains(&ddl), "{name}: deadline {ddl}");
+        assert!(s.get("deferred_requests").and_then(|v| v.as_usize()).is_some(),
+                "{name}: missing deferred_requests");
+        assert!(s.get("truncated_prompts").and_then(|v| v.as_usize()).is_some(),
+                "{name}: missing truncated_prompts");
         for k in ["ttft_p50_s", "ttft_p90_s", "ttft_p99_s", "tpot_p50_s",
                   "tpot_p90_s"] {
             let v = num(k);
@@ -64,8 +74,10 @@ fn sweep_is_deterministic_across_runs_and_thread_counts() {
 #[test]
 fn different_master_seeds_change_the_workload() {
     let sel = ecoserve::scenarios::catalog::by_names(&["mixed-4r"]).unwrap();
-    let r1 = run_sweep(&sel, &SweepConfig { threads: 1, seed: 1, duration_s: 45.0 });
-    let r2 = run_sweep(&sel, &SweepConfig { threads: 1, seed: 2, duration_s: 45.0 });
+    let r1 = run_sweep(&sel, &SweepConfig { threads: 1, seed: 1, duration_s: 45.0,
+                                            ..Default::default() });
+    let r2 = run_sweep(&sel, &SweepConfig { threads: 1, seed: 2, duration_s: 45.0,
+                                            ..Default::default() });
     assert_ne!(scenario_seed(1, "mixed-4r"), scenario_seed(2, "mixed-4r"));
     // Different seeds give different traces (request counts almost surely
     // differ for a Poisson+bursty mix; equality of both counts would mean

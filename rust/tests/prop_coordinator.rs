@@ -40,13 +40,9 @@ fn simulator_conserves_requests_and_tokens() {
         |c| {
             let tr = trace_of(c);
             let servers = homogeneous_fleet("A100-40", 3, m, 2048);
-            let cfg = SimConfig {
-                emb_kg_per_hr: vec![0.005; servers.len()],
-                servers,
-                router: Router::Jsq,
-                ci: 261.0,
-                kv_transfer_bw: 64e9,
-            };
+            let n = servers.len();
+            let cfg = SimConfig::flat(servers, Router::Jsq, 261.0,
+                                      vec![0.005; n]);
             let r = simulate(m, &tr, &cfg, 0.5, 0.1);
             if r.completed != tr.len() {
                 return Err(format!("completed {} of {}", r.completed, tr.len()));
@@ -76,13 +72,8 @@ fn ttft_never_precedes_arrival() {
         |c| {
             let tr = trace_of(c);
             let servers = homogeneous_fleet("L4", 2, m, 2048);
-            let cfg = SimConfig {
-                emb_kg_per_hr: vec![0.001; 2],
-                servers,
-                router: Router::WorkloadAware,
-                ci: 100.0,
-                kv_transfer_bw: 64e9,
-            };
+            let cfg = SimConfig::flat(servers, Router::WorkloadAware, 100.0,
+                                      vec![0.001; 2]);
             let mut r = simulate(m, &tr, &cfg, 0.5, 0.1);
             if r.ttft.min() < 0.0 {
                 return Err(format!("negative TTFT {}", r.ttft.min()));
