@@ -1,6 +1,9 @@
 //! perf_sim: throughput of the refactored discrete-event core on a
 //! 50k-request trace — reported as events/sec and persisted to
-//! `BENCH_sim.json` so sim-core perf regressions are visible across PRs.
+//! `BENCH_sim.json` at the repository root (resolved via
+//! `CARGO_MANIFEST_DIR`, so the output lands in the same place whatever
+//! directory cargo was invoked from) so sim-core perf regressions are
+//! visible across PRs and comparable on CI.
 use ecoserve::bench::{run, BenchConfig};
 use ecoserve::models;
 use ecoserve::sim::{homogeneous_fleet, simulate, Router, SimConfig};
@@ -12,9 +15,16 @@ fn main() {
     let m = models::llm("llama-8b").unwrap();
     // ~50k requests (Poisson 250/s over 200 s) on a 32-server fleet near
     // its saturation point — the regime where event pressure is highest.
+    // PERF_SIM_DURATION trims the trace (CI runs a shorter slice; the
+    // reported events/sec metric is scale-invariant).
+    let duration: f64 = std::env::var("PERF_SIM_DURATION")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|d: &f64| d.is_finite() && *d > 0.0)
+        .unwrap_or(200.0);
     let tr = generate_trace(Arrivals::Poisson { rate: 250.0 },
                             LengthDist::ShareGpt, RequestClass::Online,
-                            200.0, 42);
+                            duration, 42);
     let servers = homogeneous_fleet("A100-40", 32, m, 2048);
     let n = servers.len();
     let cfg = SimConfig::flat(servers, Router::Jsq, 261.0, vec![0.005; n]);
@@ -39,6 +49,7 @@ fn main() {
 
     let j = Json::obj()
         .set("bench", "perf_sim")
+        .set("trace_duration_s", duration)
         .set("requests", tr.len())
         .set("servers", n)
         .set("events", probe.events)
@@ -46,7 +57,10 @@ fn main() {
         .set("mean_s", r.mean_s)
         .set("p50_s", r.p50_s)
         .set("events_per_sec", events_per_sec);
-    std::fs::write("BENCH_sim.json", j.to_string().as_bytes())
-        .expect("write BENCH_sim.json");
-    eprintln!("wrote BENCH_sim.json");
+    // The package lives at <repo>/rust; the report belongs at <repo>.
+    let manifest = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let out = manifest.parent().unwrap_or(manifest).join("BENCH_sim.json");
+    std::fs::write(&out, j.to_string().as_bytes())
+        .unwrap_or_else(|e| panic!("write {}: {e}", out.display()));
+    eprintln!("wrote {}", out.display());
 }

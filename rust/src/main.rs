@@ -14,8 +14,10 @@ commands:
             run the cluster sim
   report    --gpu SKU                               embodied-carbon breakdown
   sweep     --all | --scenario A,B [--list] [--threads N] [--seed S]
-            [--duration SECS] [--ci-trace flat|diurnal] [--out FILE] [--json]
-            run registered end-to-end scenarios in parallel
+            [--duration SECS] [--ci-trace flat|diurnal] [--epoch SECS]
+            [--out FILE] [--json]
+            run registered end-to-end scenarios in parallel (--epoch
+            overrides the rolling-horizon re-provisioning period)
 ";
 
 fn main() -> anyhow::Result<()> {
@@ -69,14 +71,24 @@ fn sweep(args: &Args) -> anyhow::Result<()> {
         })?
     };
 
+    let epoch_s = if args.has("epoch") {
+        Some(args.f64("epoch", 15.0))
+    } else {
+        None
+    };
     let cfg = SweepConfig {
         threads: args.usize("threads", 0),
         seed: args.u64("seed", 42),
         duration_s: args.f64("duration", 180.0),
         ci_profile: ci_profile_flag(args)?,
+        epoch_s,
     };
     anyhow::ensure!(cfg.duration_s.is_finite() && cfg.duration_s > 0.0,
                     "--duration must be a positive finite number of seconds");
+    if let Some(e) = cfg.epoch_s {
+        anyhow::ensure!(e.is_finite() && e > 0.0,
+                        "--epoch must be a positive finite number of seconds");
+    }
     eprintln!("sweeping {} scenarios (seed {}, {}s traces) ...",
               scenarios.len(), cfg.seed, cfg.duration_s);
     let t0 = std::time::Instant::now();

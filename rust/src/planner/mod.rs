@@ -12,7 +12,13 @@
 //! ships with the GPUs regardless) and whose capacity is tied linearly to
 //! the provisioned machine count — so reuse and provisioning co-optimize in
 //! one solve, the paper's "cross-layer" point.
+//!
+//! [`horizon`] runs this same ILP *periodically*: the rolling-horizon
+//! controller re-solves against the observed demand window and the grid-CI
+//! forecast every epoch and emits fleet provisioning events for the
+//! simulator (periodic pool management).
 
+pub mod horizon;
 pub mod pools;
 pub mod slicing;
 

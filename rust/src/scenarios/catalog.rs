@@ -1,12 +1,15 @@
-//! The shipped scenario registry: ≥6 named end-to-end design points
+//! The shipped scenario registry: 10 named end-to-end design points
 //! spanning the paper's evaluation axes — latency-optimized online
 //! serving, offline batch, the mixed 4R deployment, Splitwise-style
-//! prefill/decode disaggregation, multi-region carbon intensity, and
-//! legacy-hardware Reuse. Each wires config → planner → solver → sim →
-//! carbon into one [`super::ScenarioOutcome`].
+//! prefill/decode disaggregation, multi-region carbon intensity,
+//! legacy-hardware Reuse, temporal shifting, carbon-aware routing, and
+//! the rolling-horizon autoscaling pair (diurnal tracking + demand
+//! surge). Each wires config → planner → solver → sim → carbon into one
+//! [`super::ScenarioOutcome`].
 
 use super::{CiProfile, FleetPolicy, Scenario, ScenarioSpec, WorkloadSpec};
 use crate::carbon::intensity::Region;
+use crate::planner::horizon::HorizonConfig;
 use crate::sim::Router;
 use crate::strategies::Strategy;
 use crate::workload::slo::Slo;
@@ -46,6 +49,7 @@ fn base_spec(model: &'static str, region: Region, strategy: Strategy)
         router: Router::WorkloadAware,
         ci_profile: CiProfile::Flat,
         defer_offline: false,
+        reprovision: None,
         compare_regions: Vec::new(),
     }
 }
@@ -185,6 +189,63 @@ fn carbon_router() -> ScenarioSpec {
     }
 }
 
+fn autoscale_diurnal() -> ScenarioSpec {
+    // Elastic fleet tracking one compressed demand + CI day: the
+    // rolling-horizon controller re-solves the allocation ILP each epoch
+    // against the observed window and drains the surplus off-peak, so
+    // embodied + idle carbon amortize over actual provisioned hours. The
+    // static peak-provisioned baseline lands in extras (carbon_kg_static
+    // et al.). The loose chat SLO keeps both variants at full attainment
+    // so the comparison isolates carbon, not latency records.
+    ScenarioSpec {
+        workloads: vec![
+            WorkloadSpec {
+                arrivals: Arrivals::CompressedDiurnal {
+                    rate: 8.0, amplitude: 0.7, period_s: 0.0,
+                },
+                lengths: LengthDist::ShareGpt,
+                class: RequestClass::Online,
+            },
+            WorkloadSpec {
+                arrivals: Arrivals::Poisson { rate: 1.5 },
+                lengths: LengthDist::LongBench,
+                class: RequestClass::Offline,
+            },
+        ],
+        slo: Some(Slo { ttft_s: 2.0, tpot_s: 0.2 }),
+        ci_profile: CiProfile::CompressedDiurnal,
+        // SLO-conservative elasticity: generous headroom over the observed
+        // window and a 2-server floor keep attainment pinned at the static
+        // baseline's level while the off-peak drains still shed most of
+        // the fleet's provisioned hours.
+        reprovision: Some(HorizonConfig {
+            headroom: 1.5,
+            min_active: 2,
+            ..Default::default()
+        }),
+        ..base_spec("llama-8b", Region::California, Strategy::EcoFull)
+    }
+}
+
+fn demand_surge() -> ScenarioSpec {
+    // Step-function load spike: a quiet baseline with a 5x surge over the
+    // middle fifth of the trace. The peak-provisioned static fleet burns
+    // embodied + idle carbon all day for a spike it serves briefly; the
+    // elastic fleet provisions up for the surge window and drains after.
+    ScenarioSpec {
+        workloads: vec![WorkloadSpec {
+            arrivals: Arrivals::Step {
+                base: 3.0, surge: 12.0, start_frac: 0.4, end_frac: 0.6,
+            },
+            lengths: LengthDist::ShareGpt,
+            class: RequestClass::Online,
+        }],
+        slo: Some(Slo { ttft_s: 2.0, tpot_s: 0.2 }),
+        reprovision: Some(HorizonConfig { headroom: 1.5, ..Default::default() }),
+        ..base_spec("llama-8b", Region::Midcontinent, Strategy::EcoFull)
+    }
+}
+
 /// All shipped design points, in a stable order (seeds do not depend on
 /// this order — see [`super::scenario_seed`]).
 pub fn registry() -> Vec<Box<dyn Scenario>> {
@@ -237,6 +298,20 @@ pub fn registry() -> Vec<Box<dyn Scenario>> {
                           (SE-North + MISO) vs carbon-blind JSQ (Llama-8B)",
             build: carbon_router,
         }),
+        Box::new(DesignPoint {
+            name: "autoscale-diurnal",
+            description: "rolling-horizon elastic fleet tracking a diurnal \
+                          demand + CI day vs a static peak-provisioned \
+                          baseline (Llama-8B)",
+            build: autoscale_diurnal,
+        }),
+        Box::new(DesignPoint {
+            name: "demand-surge",
+            description: "step-function load spike: epoch re-provisioning \
+                          absorbs a 5x surge, then drains the surplus \
+                          (Llama-8B, MISO)",
+            build: demand_surge,
+        }),
     ]
 }
 
@@ -255,9 +330,9 @@ mod tests {
     use super::*;
 
     #[test]
-    fn registry_has_at_least_eight_unique_named_scenarios() {
+    fn registry_has_at_least_ten_unique_named_scenarios() {
         let r = registry();
-        assert!(r.len() >= 8, "only {} scenarios", r.len());
+        assert!(r.len() >= 10, "only {} scenarios", r.len());
         let mut names: Vec<&str> = r.iter().map(|s| s.name()).collect();
         names.sort_unstable();
         names.dedup();
@@ -287,6 +362,20 @@ mod tests {
         let c = by_names(&["carbon-router"]).unwrap().remove(0).spec();
         assert_eq!(c.router, Router::CarbonGreedy);
         assert!(matches!(c.fleet, FleetPolicy::TwoRegion { .. }));
+    }
+
+    #[test]
+    fn autoscaling_specs_are_wired() {
+        let a = by_names(&["autoscale-diurnal"]).unwrap().remove(0).spec();
+        let h = a.reprovision.expect("autoscale-diurnal must re-provision");
+        assert!(h.epoch_s > 0.0 && h.min_active >= 1 && h.headroom >= 1.0);
+        assert_eq!(a.ci_profile, CiProfile::CompressedDiurnal);
+        assert!(a.workloads.iter().any(|w| matches!(
+            w.arrivals, Arrivals::CompressedDiurnal { .. })));
+        let s = by_names(&["demand-surge"]).unwrap().remove(0).spec();
+        assert!(s.reprovision.is_some());
+        assert!(s.workloads.iter().any(|w| matches!(
+            w.arrivals, Arrivals::Step { .. })));
     }
 
     #[test]

@@ -22,8 +22,9 @@ pub use catalog::registry;
 pub use runner::{run_sweep, SweepConfig, SweepReport};
 
 use crate::carbon::intensity::{CiSignal, CiTrace, Region};
+use crate::planner::horizon::{self, HorizonConfig};
 use crate::planner::{self, PlanConfig};
-use crate::sim::{simulate, DeferralPolicy, Router, SimReport};
+use crate::sim::{simulate, DeferralPolicy, FleetSchedule, Router, SimReport};
 use crate::strategies::{fleet_from_plan, sim_config, splitwise_fleet, Strategy};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -88,9 +89,25 @@ pub struct ScenarioSpec {
     /// Temporally shift offline work into low-CI windows (the paper's
     /// Reduce lever); the run-immediately baseline lands in `extras`.
     pub defer_offline: bool,
+    /// Rolling-horizon re-provisioning: the fleet is the *peak* plan, and
+    /// the [`horizon`] controller re-solves the allocation ILP each epoch
+    /// to drain/re-provision servers against observed demand and the CI
+    /// forecast. The static peak-provisioned baseline lands in `extras`
+    /// (`carbon_kg_static`, …).
+    pub reprovision: Option<HorizonConfig>,
     /// Extra regions to cross-report carbon for (operational rescales
     /// linearly with CI; embodied is region-independent).
     pub compare_regions: Vec<Region>,
+}
+
+/// Sweep-level spec overrides (the CLI's `--ci-trace` / `--epoch` knobs).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Overrides {
+    /// Force a CI-signal shape on the scenario.
+    pub ci_profile: Option<CiProfile>,
+    /// Override the re-provisioning epoch (seconds) for scenarios that
+    /// run the rolling-horizon controller; ignored for static fleets.
+    pub epoch_s: Option<f64>,
 }
 
 /// A named design point that the sweep runner can execute.
@@ -101,16 +118,18 @@ pub trait Scenario: Send + Sync {
 
     /// Run the full pipeline at a seed/duration. Deterministic.
     fn run(&self, seed: u64, duration_s: f64) -> ScenarioOutcome {
-        self.run_profile(seed, duration_s, None)
+        self.run_with(seed, duration_s, &Overrides::default())
     }
 
-    /// Like [`Scenario::run`] with an optional CI-profile override (the
-    /// sweep CLI's `--ci-trace` knob).
-    fn run_profile(&self, seed: u64, duration_s: f64,
-                   ci_profile: Option<CiProfile>) -> ScenarioOutcome {
+    /// Like [`Scenario::run`] with sweep-level spec overrides.
+    fn run_with(&self, seed: u64, duration_s: f64, ov: &Overrides)
+        -> ScenarioOutcome {
         let mut spec = self.spec();
-        if let Some(p) = ci_profile {
+        if let Some(p) = ov.ci_profile {
             spec.ci_profile = p;
+        }
+        if let (Some(e), Some(h)) = (ov.epoch_s, spec.reprovision.as_mut()) {
+            h.epoch_s = e;
         }
         run_spec(self.name(), &spec, seed, duration_s)
     }
@@ -153,6 +172,13 @@ pub struct ScenarioOutcome {
     pub deferred: usize,
     /// Requests whose prompts were clipped to the sim's context cap.
     pub truncated_prompts: usize,
+    /// Servers brought online / decommissioned by the rolling-horizon
+    /// controller (both 0 for static fleets).
+    pub provision_events: usize,
+    pub decommission_events: usize,
+    /// Provisioned server-hours the embodied and idle carbon amortize
+    /// over (static fleets: servers × duration).
+    pub provisioned_server_hours: f64,
     /// Scenario-specific extra metrics (e.g. per-region carbon).
     pub extras: BTreeMap<String, f64>,
 }
@@ -202,6 +228,9 @@ impl ScenarioOutcome {
                  jnum(self.offline_deadline_attainment))
             .set("deferred_requests", self.deferred)
             .set("truncated_prompts", self.truncated_prompts)
+            .set("provision_events", self.provision_events)
+            .set("decommission_events", self.decommission_events)
+            .set("provisioned_server_hours", jnum(self.provisioned_server_hours))
             .set("extras", extras)
     }
 }
@@ -250,6 +279,11 @@ fn scenario_trace(spec: &ScenarioSpec, seed: u64, duration_s: f64) -> Vec<Reques
 
 /// Execute one design point end to end:
 /// trace → slices → planner (ILP) → fleet → cluster sim → carbon.
+///
+/// With `spec.reprovision` set, the one-shot plan is sized on the trace's
+/// *peak* epoch window (what a peak-provisioned operator would deploy)
+/// and the rolling-horizon controller then schedules provisioning events
+/// over that template; the static all-on baseline lands in `extras`.
 pub fn run_spec(name: &str, spec: &ScenarioSpec, seed: u64, duration_s: f64)
     -> ScenarioOutcome {
     use crate::planner::slicing::{cluster_slices, slice_trace};
@@ -262,8 +296,21 @@ pub fn run_spec(name: &str, spec: &ScenarioSpec, seed: u64, duration_s: f64)
         .unwrap_or(Slo { ttft_s: 2.0, tpot_s: 0.2 });
 
     let trace = scenario_trace(spec, seed, duration_s);
-    let slices = cluster_slices(&slice_trace(model, &trace, duration_s, slo, 1));
-    let plan = planner::plan(&slices, &scenario_plan_config(spec, ci));
+    let plan_cfg = scenario_plan_config(spec, ci);
+    let plan = match &spec.reprovision {
+        Some(h) => {
+            let epoch = h.effective_epoch(duration_s);
+            let (lo, hi) = horizon::peak_epoch_window(&trace, epoch, duration_s);
+            let window = if hi > lo { &trace[lo..hi] } else { &trace[..] };
+            let slices = cluster_slices(&slice_trace(model, window, epoch, slo, 1));
+            planner::plan(&slices, &plan_cfg)
+        }
+        None => {
+            let slices =
+                cluster_slices(&slice_trace(model, &trace, duration_s, slo, 1));
+            planner::plan(&slices, &plan_cfg)
+        }
+    };
 
     let fleet = match spec.fleet {
         FleetPolicy::Planned => fleet_from_plan(&plan, model, 2048),
@@ -301,6 +348,10 @@ pub fn run_spec(name: &str, spec: &ScenarioSpec, seed: u64, duration_s: f64)
             horizon_s: duration_s,
         };
     }
+    if let Some(h) = &spec.reprovision {
+        cfg.fleet_plan = horizon::plan_schedule(
+            model, &trace, &cfg.servers, &plan_cfg, &cfg.ci, slo, h, duration_s);
+    }
     let mut r: SimReport = simulate(model, &trace, &cfg, slo.ttft_s, slo.tpot_s);
 
     let mut extras = BTreeMap::new();
@@ -330,6 +381,21 @@ pub fn run_spec(name: &str, spec: &ScenarioSpec, seed: u64, duration_s: f64)
         extras.insert("op_kg_jsq".into(), base.op_kg);
         extras.insert("carbon_kg_jsq".into(), base.carbon_kg());
         extras.insert("ttft_p90_s_jsq".into(), base.ttft.p90());
+    }
+    if spec.reprovision.is_some() {
+        // Static peak-provisioned baseline: the same template fleet kept
+        // fully online for the whole trace — what the elastic schedule
+        // must strictly beat on total (op + amortized embodied) carbon.
+        let mut base_cfg = cfg.clone();
+        base_cfg.fleet_plan = FleetSchedule::default();
+        let mut base = simulate(model, &trace, &base_cfg, slo.ttft_s, slo.tpot_s);
+        extras.insert("op_kg_static".into(), base.op_kg);
+        extras.insert("emb_kg_static".into(), base.emb_kg);
+        extras.insert("carbon_kg_static".into(), base.carbon_kg());
+        extras.insert("slo_attainment_static".into(), base.slo_attainment);
+        extras.insert("ttft_p90_s_static".into(), base.ttft.p90());
+        extras.insert("provisioned_server_hours_static".into(),
+                      base.provisioned_server_hours);
     }
 
     ScenarioOutcome {
@@ -361,6 +427,9 @@ pub fn run_spec(name: &str, spec: &ScenarioSpec, seed: u64, duration_s: f64)
         offline_deadline_attainment: r.offline_deadline_attainment,
         deferred: r.deferred_requests,
         truncated_prompts: r.truncated_prompts,
+        provision_events: r.provision_events,
+        decommission_events: r.decommission_events,
+        provisioned_server_hours: r.provisioned_server_hours,
         extras,
     }
 }

@@ -3,7 +3,7 @@
 //! combined [`SweepReport`] as machine-readable JSON (util::json) and a
 //! human summary table (util::table).
 
-use super::{scenario_seed, CiProfile, Scenario, ScenarioOutcome};
+use super::{scenario_seed, CiProfile, Overrides, Scenario, ScenarioOutcome};
 use crate::util::json::Json;
 use crate::util::table::{fnum, Table};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -22,11 +22,15 @@ pub struct SweepConfig {
     /// Force a CI-signal shape on every scenario (the `--ci-trace` knob);
     /// `None` keeps each scenario's own profile.
     pub ci_profile: Option<CiProfile>,
+    /// Override the re-provisioning epoch for rolling-horizon scenarios
+    /// (the `--epoch` knob); `None` keeps each scenario's own epoch.
+    pub epoch_s: Option<f64>,
 }
 
 impl Default for SweepConfig {
     fn default() -> Self {
-        SweepConfig { threads: 0, seed: 42, duration_s: 180.0, ci_profile: None }
+        SweepConfig { threads: 0, seed: 42, duration_s: 180.0,
+                      ci_profile: None, epoch_s: None }
     }
 }
 
@@ -55,7 +59,8 @@ impl SweepReport {
     pub fn summary_table(&self) -> Table {
         let mut t = Table::new(&[
             "scenario", "carbon kg", "op kg", "emb kg", "TTFT p50 ms",
-            "TTFT p90 ms", "TPOT p50 ms", "SLO %", "gpus", "req", "trunc",
+            "TTFT p90 ms", "TPOT p50 ms", "SLO %", "gpus", "srv-hrs", "req",
+            "trunc",
         ]);
         for o in &self.outcomes {
             t.row(&[
@@ -68,6 +73,7 @@ impl SweepReport {
                 fnum(o.tpot_p50_s * 1e3),
                 fnum(100.0 * o.slo_attainment),
                 format!("{}", o.fleet_gpus),
+                fnum(o.provisioned_server_hours),
                 format!("{}", o.requests),
                 format!("{}", o.truncated_prompts),
             ]);
@@ -116,7 +122,11 @@ pub fn run_sweep(scenarios: &[Box<dyn Scenario>], cfg: &SweepConfig) -> SweepRep
                 }
                 let sc = &scenarios[i];
                 let seed = scenario_seed(cfg.seed, sc.name());
-                let outcome = sc.run_profile(seed, cfg.duration_s, cfg.ci_profile);
+                let ov = Overrides {
+                    ci_profile: cfg.ci_profile,
+                    epoch_s: cfg.epoch_s,
+                };
+                let outcome = sc.run_with(seed, cfg.duration_s, &ov);
                 *slots[i].lock().unwrap() = Some(outcome);
             });
         }

@@ -3,6 +3,12 @@
 //! multiplying total energy by a scalar CI after the fact. Multi-region
 //! fleets attach per-server flat overrides (a server's grid does not move
 //! with the primary region's trace).
+//!
+//! The meter also keeps each server's **provisioned intervals** — opened
+//! by `Provision`, closed by `Decommission` events — so embodied carbon
+//! amortizes per provisioned-hour (the 4R Rightsize/Recycle accounting: a
+//! decommissioned server stops accruing embodied and idle carbon) rather
+//! than being charged for the whole sim horizon regardless of fleet size.
 
 use crate::carbon::intensity::CiSignal;
 use crate::carbon::operational::op_kg_from_joules;
@@ -16,17 +22,69 @@ pub struct CarbonMeter {
     /// `SimConfig::servers`.
     overrides: Vec<Option<f64>>,
     op_kg: f64,
+    /// Closed provisioned intervals per server, in time order.
+    intervals: Vec<Vec<(f64, f64)>>,
+    /// Start of each server's currently open provisioned interval.
+    open_since: Vec<Option<f64>>,
 }
 
 impl CarbonMeter {
     pub fn new(cfg: &SimConfig) -> CarbonMeter {
+        let n = cfg.servers.len();
         CarbonMeter {
             primary: cfg.ci.clone(),
             overrides: cfg.servers.iter()
                 .map(|s| s.region.map(|r| r.avg_ci()))
                 .collect(),
             op_kg: 0.0,
+            intervals: vec![Vec::new(); n],
+            open_since: vec![None; n],
         }
+    }
+
+    /// Open a provisioned interval for `server` at `t_s` (idempotent
+    /// while an interval is already open).
+    pub(crate) fn provision(&mut self, server: usize, t_s: f64) {
+        if self.open_since[server].is_none() {
+            self.open_since[server] = Some(t_s);
+        }
+    }
+
+    /// Close `server`'s open provisioned interval at `t_s`.
+    pub(crate) fn decommission(&mut self, server: usize, t_s: f64) {
+        if let Some(t0) = self.open_since[server].take() {
+            self.intervals[server].push((t0, t_s.max(t0)));
+        }
+    }
+
+    /// Close every still-open interval at the end of the sim horizon.
+    pub(crate) fn finalize(&mut self, horizon_s: f64) {
+        for i in 0..self.open_since.len() {
+            self.decommission(i, horizon_s);
+        }
+    }
+
+    /// Total provisioned seconds accumulated by `server` so far (open
+    /// intervals count only after [`CarbonMeter::finalize`]).
+    pub fn provisioned_s(&self, server: usize) -> f64 {
+        self.intervals[server].iter().map(|(a, b)| b - a).sum()
+    }
+
+    /// Mean CI over `server`'s provisioned intervals, weighted by
+    /// interval length — what idle draw should be priced at (an elastic
+    /// server is only idle while it is provisioned). Falls back to the
+    /// horizon mean for a never-provisioned server (its idle energy is
+    /// zero anyway).
+    fn provisioned_mean_ci(&self, server: usize, horizon_s: f64) -> f64 {
+        let iv = &self.intervals[server];
+        let total: f64 = iv.iter().map(|(a, b)| b - a).sum();
+        if total <= 0.0 {
+            return self.primary.mean_over(0.0, horizon_s);
+        }
+        iv.iter()
+            .map(|(a, b)| self.primary.mean_over(*a, *b) * (b - a))
+            .sum::<f64>()
+            / total
     }
 
     /// The deployment's primary CI signal (drives deferral decisions).
@@ -51,12 +109,13 @@ impl CarbonMeter {
         self.op_kg += op_kg_from_joules(energy_j, ci);
     }
 
-    /// Charge idle-floor energy at the signal's mean over the sim horizon
-    /// (idle draw is spread across the whole run, not one interval).
+    /// Charge idle-floor energy at the signal's mean over the server's
+    /// provisioned intervals (idle draw is spread across the time the
+    /// server was actually up — the whole run for a static fleet).
     pub fn record_idle(&mut self, server: usize, energy_j: f64, dur_s: f64) {
         let ci = match self.overrides.get(server).copied().flatten() {
             Some(ci) => ci,
-            None => self.primary.mean_over(0.0, dur_s),
+            None => self.provisioned_mean_ci(server, dur_s),
         };
         self.op_kg += op_kg_from_joules(energy_j, ci);
     }
@@ -111,6 +170,24 @@ mod tests {
         ));
         m2.record(0, 0.0, 1.0, 3.6e6);
         assert!((m2.op_kg() - 17.0 / 1000.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn provisioned_intervals_accumulate_and_close() {
+        let mut m = CarbonMeter::new(&cfg(CiSignal::flat(261.0), &[None, None]));
+        m.provision(0, 0.0);
+        m.provision(0, 5.0); // idempotent while open
+        m.decommission(0, 10.0);
+        m.provision(0, 20.0); // re-provision opens a second interval
+        m.provision(1, 0.0);
+        m.finalize(30.0);
+        assert!((m.provisioned_s(0) - 20.0).abs() < 1e-12,
+                "server 0: {}", m.provisioned_s(0));
+        assert!((m.provisioned_s(1) - 30.0).abs() < 1e-12,
+                "server 1: {}", m.provisioned_s(1));
+        // Closing an already-closed interval is a no-op.
+        m.decommission(0, 40.0);
+        assert!((m.provisioned_s(0) - 20.0).abs() < 1e-12);
     }
 
     #[test]

@@ -17,10 +17,51 @@ use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
 use super::carbon_meter::CarbonMeter;
-use super::metrics::{MetricsSink, SimReport};
+use super::metrics::{MetricsSink, ServerUsage, SimReport};
 use super::policy::{BatchPolicy, Batcher, DeferState, DeferralPolicy,
                     RouteCtx, RoutePolicy, Router};
-use super::server::{Job, Role, Server, ServerSpec, MAX_PROMPT_TOKENS};
+use super::server::{Job, Lifecycle, Role, Server, ServerSpec,
+                    MAX_PROMPT_TOKENS};
+
+/// What a scheduled fleet event does to its server.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FleetAction {
+    /// Bring the server online (from `Pending`, `Draining`, or even
+    /// `Retired` — re-provisioning a recycled server reopens its
+    /// embodied/idle accounting interval).
+    Provision,
+    /// Stop admitting: the server finishes in-flight batches, then
+    /// decommissions itself once empty.
+    Drain,
+}
+
+/// One scheduled provisioning decision.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FleetEvent {
+    pub t: f64,
+    pub server: usize,
+    pub action: FleetAction,
+}
+
+/// A provisioning schedule for the fleet, typically produced by the
+/// rolling-horizon controller ([`crate::planner::horizon`]). The default
+/// (empty) schedule is the static fleet: every server provisioned at t=0
+/// and never drained — exactly the pre-elasticity behavior.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FleetSchedule {
+    /// Which servers are provisioned at t=0; empty means all of them.
+    /// When non-empty it must have one entry per server.
+    pub initially_active: Vec<bool>,
+    /// Provision/Drain decisions, applied at their timestamps.
+    pub events: Vec<FleetEvent>,
+}
+
+impl FleetSchedule {
+    /// True for the all-on, never-drained (static-fleet) schedule.
+    pub fn is_static(&self) -> bool {
+        self.initially_active.is_empty() && self.events.is_empty()
+    }
+}
 
 /// Simulator configuration.
 #[derive(Debug, Clone)]
@@ -32,16 +73,20 @@ pub struct SimConfig {
     pub batcher: Batcher,
     /// Grid carbon-intensity signal: flat scalar or time-varying trace.
     pub ci: CiSignal,
-    /// Per-server embodied amortization, kgCO₂e per server-hour.
+    /// Per-server embodied amortization, kgCO₂e per server-hour — charged
+    /// only over each server's provisioned intervals.
     pub emb_kg_per_hr: Vec<f64>,
     /// KV transfer bandwidth between prefill and decode servers, B/s.
     pub kv_transfer_bw: f64,
     /// Temporal scheduling of offline-class requests.
     pub deferral: DeferralPolicy,
+    /// Fleet provisioning schedule (default: static all-on fleet).
+    pub fleet_plan: FleetSchedule,
 }
 
 impl SimConfig {
-    /// The common case: a flat CI, online-first batching, no deferral.
+    /// The common case: a flat CI, online-first batching, no deferral,
+    /// a static fleet.
     pub fn flat(servers: Vec<ServerSpec>, router: Router, ci: f64,
                 emb_kg_per_hr: Vec<f64>) -> SimConfig {
         SimConfig {
@@ -52,6 +97,7 @@ impl SimConfig {
             emb_kg_per_hr,
             kv_transfer_bw: 64e9,
             deferral: DeferralPolicy::Immediate,
+            fleet_plan: FleetSchedule::default(),
         }
     }
 }
@@ -69,6 +115,13 @@ pub(crate) enum EventKind {
     Handoff { job: usize, server: usize },
     /// End of `server`'s busy period number `gen`.
     Complete { server: usize, gen: u64 },
+    /// Bring `server` online (scheduled fleet elasticity).
+    Provision(usize),
+    /// Stop admitting on `server`; it decommissions once empty.
+    Drain(usize),
+    /// Retire `server` if (and only if) it is draining and empty; a guard
+    /// re-check at fire time makes double-scheduling harmless.
+    Decommission(usize),
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -161,19 +214,35 @@ impl<'a> Sim<'a> {
                 }
             })
             .collect();
-        let servers: Vec<Server> = cfg.servers.iter().map(Server::new).collect();
+        let plan = &cfg.fleet_plan;
+        assert!(plan.initially_active.is_empty()
+                    || plan.initially_active.len() == cfg.servers.len(),
+                "fleet schedule initially_active length mismatch");
+        let mut servers: Vec<Server> = cfg.servers.iter().map(Server::new).collect();
+        let mut meter = CarbonMeter::new(cfg);
+        for (i, s) in servers.iter_mut().enumerate() {
+            let active0 = plan.initially_active.is_empty()
+                || plan.initially_active[i];
+            if active0 {
+                meter.provision(i, 0.0);
+            } else {
+                s.lifecycle = Lifecycle::Pending;
+            }
+        }
         let mut queue = EventQueue::default();
+        for e in &plan.events {
+            assert!(e.server < servers.len(), "fleet event for unknown server");
+            assert!(e.t >= 0.0, "fleet event before t=0");
+            let kind = match e.action {
+                FleetAction::Provision => EventKind::Provision(e.server),
+                FleetAction::Drain => EventKind::Drain(e.server),
+            };
+            queue.push(e.t, kind);
+        }
         for (i, j) in jobs.iter().enumerate() {
             queue.push(j.arrival, EventKind::Arrival(i));
         }
-        let prompt_eligible: Vec<usize> = servers
-            .iter()
-            .enumerate()
-            .filter(|(_, s)| s.spec.role != Role::Decode)
-            .map(|(i, _)| i)
-            .collect();
-        assert!(!prompt_eligible.is_empty(), "no prompt-capable servers");
-        Sim {
+        let mut sim = Sim {
             model,
             cfg,
             route,
@@ -182,10 +251,33 @@ impl<'a> Sim<'a> {
             servers,
             queue,
             metrics,
-            meter: CarbonMeter::new(cfg),
+            meter,
             defer: DeferState::new(cfg.deferral),
-            prompt_eligible,
+            prompt_eligible: Vec::new(),
             now: 0.0,
+        };
+        sim.refresh_eligibility();
+        assert!(!sim.prompt_eligible.is_empty(),
+                "no active prompt-capable servers at t=0");
+        sim
+    }
+
+    /// Rebuild the routing-eligible set (active, prompt-capable servers)
+    /// after a lifecycle transition. Fleets are small; a rebuild keeps
+    /// the set trivially consistent.
+    fn refresh_eligibility(&mut self) {
+        self.prompt_eligible = self.servers.iter().enumerate()
+            .filter(|(_, s)| s.spec.role != Role::Decode && s.is_admitting())
+            .map(|(i, _)| i)
+            .collect();
+    }
+
+    /// Schedule retirement for a draining server that has gone empty.
+    fn maybe_retire(&mut self, sid: usize) {
+        if self.servers[sid].lifecycle == Lifecycle::Draining
+            && self.servers[sid].is_idle_empty()
+        {
+            self.queue.push(self.now, EventKind::Decommission(sid));
         }
     }
 
@@ -214,6 +306,20 @@ impl<'a> Sim<'a> {
                     }
                 }
                 EventKind::Handoff { job, server } => {
+                    // The target was chosen at prefill time; if it retired
+                    // (or never came up) during the KV transfer, re-route
+                    // to a live decode server at landing time.
+                    let server = match self.servers[server].lifecycle {
+                        Lifecycle::Active | Lifecycle::Draining => server,
+                        Lifecycle::Pending | Lifecycle::Retired =>
+                            self.pick_decode_server(server),
+                    };
+                    // A schedule that kills every live server while KV is
+                    // in transit would strand this job on a dead queue;
+                    // fail loudly instead of silently losing work.
+                    assert!(matches!(self.servers[server].lifecycle,
+                                     Lifecycle::Active | Lifecycle::Draining),
+                            "KV handoff found no live decode-capable server");
                     let class = self.jobs[job].class;
                     self.servers[server].decode_q.push(job, class);
                     self.queue.push(self.now, EventKind::Wake(server));
@@ -227,14 +333,57 @@ impl<'a> Sim<'a> {
                                      "Complete must end the period it named");
                     self.servers[server].in_flight = false;
                     self.step(server);
+                    self.maybe_retire(server);
+                }
+                EventKind::Provision(sid) => {
+                    match self.servers[sid].lifecycle {
+                        Lifecycle::Active => {}
+                        Lifecycle::Draining => {
+                            // Cancel the drain; the accounting interval is
+                            // still open.
+                            self.servers[sid].lifecycle = Lifecycle::Active;
+                            self.refresh_eligibility();
+                        }
+                        Lifecycle::Pending | Lifecycle::Retired => {
+                            self.servers[sid].lifecycle = Lifecycle::Active;
+                            self.meter.provision(sid, self.now);
+                            self.metrics.provision_events += 1;
+                            self.refresh_eligibility();
+                            self.queue.push(self.now, EventKind::Wake(sid));
+                        }
+                    }
+                }
+                EventKind::Drain(sid) => {
+                    if self.servers[sid].lifecycle == Lifecycle::Active {
+                        self.servers[sid].lifecycle = Lifecycle::Draining;
+                        self.refresh_eligibility();
+                        self.maybe_retire(sid);
+                    }
+                }
+                EventKind::Decommission(sid) => {
+                    // Guarded: only a draining *and empty* server retires;
+                    // work that landed after the check was scheduled (e.g.
+                    // an in-transit KV handoff) keeps it alive until the
+                    // next empty transition re-schedules retirement.
+                    if self.servers[sid].lifecycle == Lifecycle::Draining
+                        && self.servers[sid].is_idle_empty()
+                    {
+                        self.servers[sid].lifecycle = Lifecycle::Retired;
+                        self.meter.decommission(sid, self.now);
+                        self.metrics.decommission_events += 1;
+                    }
                 }
             }
         }
     }
 
-    /// Route a request and nudge the chosen server.
+    /// Route a request and nudge the chosen server. Only admitting
+    /// (active) prompt-capable servers are eligible; schedules must keep
+    /// at least one alive (the horizon controller enforces a floor).
     fn dispatch(&mut self, ji: usize) {
         self.jobs[ji].dispatched_t = self.now;
+        assert!(!self.prompt_eligible.is_empty(),
+                "fleet schedule drained every prompt-capable server");
         let ctx = RouteCtx { now: self.now, meter: &self.meter };
         let sid = self.route.route(&self.jobs[ji], &self.servers,
                                    &self.prompt_eligible, &ctx);
@@ -246,18 +395,33 @@ impl<'a> Sim<'a> {
     }
 
     /// Close the books: idle-floor energy, operational + embodied carbon.
+    /// Idle power and amortized embodied are charged per *provisioned*
+    /// server-hour (the meter's intervals), so an elastic fleet that
+    /// decommissions surplus servers is visibly cheaper than a static
+    /// peak-provisioned one.
     pub fn finish(mut self, trace: &[Request]) -> SimReport {
         let dur = self.now.max(trace.last().map(|r| r.arrival_s).unwrap_or(0.0));
+        self.meter.finalize(dur);
         let mut energy = 0.0;
+        let mut emb = 0.0;
+        let mut per_server = Vec::with_capacity(self.servers.len());
         for (i, s) in self.servers.iter().enumerate() {
             let tpf = s.spec.tp as f64;
-            let idle_s = (dur - s.busy_s).max(0.0);
+            let prov_s = self.meter.provisioned_s(i);
+            debug_assert!(s.busy_s <= prov_s + 1e-6,
+                          "server {i} busy outside its provisioned interval");
+            let idle_s = (prov_s - s.busy_s).max(0.0);
             let idle_j = idle_s * s.spec.device.idle_w * tpf;
             self.meter.record_idle(i, idle_j, dur);
             energy += s.energy_j + idle_j;
+            emb += self.cfg.emb_kg_per_hr[i] * prov_s / 3600.0;
+            per_server.push(ServerUsage {
+                busy_s: s.busy_s,
+                energy_j: s.energy_j + idle_j,
+                provisioned_s: prov_s,
+            });
         }
-        let emb: f64 = self.cfg.emb_kg_per_hr.iter().map(|r| r * dur / 3600.0).sum();
-        self.metrics.into_report(dur, energy, self.meter.op_kg(), emb)
+        self.metrics.into_report(dur, energy, self.meter.op_kg(), emb, per_server)
     }
 }
 
@@ -365,6 +529,82 @@ mod tests {
         let r = simulate(m, &tr, &cfg, 0.5, 0.1);
         let idle_j = r.sim_duration_s * 8.0 * 50.0; // 8x idle 50 W
         assert!(r.energy_j > 0.8 * idle_j, "energy {} idle floor {idle_j}", r.energy_j);
+    }
+
+    #[test]
+    fn explicit_all_on_schedule_matches_the_static_default() {
+        let m = models::llm("llama-8b").unwrap();
+        let tr = small_trace(3.0, 9);
+        let base = cfg_for(homogeneous_fleet("A100-40", 3, m, 2048), Router::Jsq);
+        let mut explicit = base.clone();
+        explicit.fleet_plan.initially_active = vec![true; 3];
+        let a = simulate(m, &tr, &base, 0.5, 0.1);
+        let b = simulate(m, &tr, &explicit, 0.5, 0.1);
+        assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits());
+        assert_eq!(a.emb_kg.to_bits(), b.emb_kg.to_bits());
+        assert_eq!(a.provision_events, 0);
+        assert_eq!(b.provision_events, 0);
+        assert!((a.provisioned_server_hours
+                     - 3.0 * a.sim_duration_s / 3600.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn drained_empty_server_retires_immediately_and_costs_nothing() {
+        let m = models::llm("llama-8b").unwrap();
+        let tr = small_trace(2.0, 10);
+        let mut cfg = cfg_for(homogeneous_fleet("A100-40", 3, m, 2048), Router::Jsq);
+        cfg.fleet_plan.events.push(FleetEvent {
+            t: 0.0, server: 2, action: FleetAction::Drain,
+        });
+        let r = simulate(m, &tr, &cfg, 0.5, 0.1);
+        assert_eq!(r.completed, tr.len());
+        assert_eq!(r.decommission_events, 1);
+        // Drained before any arrival: never admitted, never busy, never
+        // charged a provisioned second beyond t=0.
+        assert_eq!(r.per_server[2].busy_s, 0.0);
+        assert_eq!(r.per_server[2].provisioned_s, 0.0);
+        let static_r = simulate(m, &tr, &cfg_for(
+            homogeneous_fleet("A100-40", 3, m, 2048), Router::Jsq), 0.5, 0.1);
+        assert!(r.emb_kg < static_r.emb_kg,
+                "elastic emb {} !< static emb {}", r.emb_kg, static_r.emb_kg);
+    }
+
+    #[test]
+    fn late_provisioned_server_is_charged_only_from_provision_time() {
+        let m = models::llm("llama-8b").unwrap();
+        let tr = small_trace(2.0, 11);
+        let mut cfg = cfg_for(homogeneous_fleet("A100-40", 2, m, 2048), Router::Jsq);
+        cfg.fleet_plan.initially_active = vec![true, false];
+        cfg.fleet_plan.events.push(FleetEvent {
+            t: 60.0, server: 1, action: FleetAction::Provision,
+        });
+        let r = simulate(m, &tr, &cfg, 0.5, 0.1);
+        assert_eq!(r.completed, tr.len());
+        assert_eq!(r.provision_events, 1);
+        let prov = r.per_server[1].provisioned_s;
+        assert!((prov - (r.sim_duration_s - 60.0)).abs() < 1e-9,
+                "provisioned {prov} vs horizon {}", r.sim_duration_s);
+        assert!(r.per_server[0].provisioned_s > prov);
+    }
+
+    #[test]
+    fn mid_trace_drain_finishes_in_flight_work_before_retiring() {
+        let m = models::llm("llama-8b").unwrap();
+        let tr = small_trace(6.0, 12);
+        let mut cfg = cfg_for(homogeneous_fleet("A100-40", 2, m, 2048), Router::Jsq);
+        cfg.fleet_plan.events.push(FleetEvent {
+            t: 40.0, server: 1, action: FleetAction::Drain,
+        });
+        let r = simulate(m, &tr, &cfg, 0.5, 0.1);
+        // No requests are lost when a busy server drains, the retirement
+        // waits for the in-flight batches, and busy time never exceeds
+        // the provisioned interval.
+        assert_eq!(r.completed, tr.len());
+        assert_eq!(r.decommission_events, 1);
+        let u = &r.per_server[1];
+        assert!(u.provisioned_s >= 40.0 - 1e-9);
+        assert!(u.provisioned_s < r.sim_duration_s);
+        assert!(u.busy_s <= u.provisioned_s + 1e-6);
     }
 
     #[test]

@@ -22,6 +22,11 @@ pub struct MetricsSink {
     pub truncated_prompts: usize,
     /// Discrete events processed (the core's perf currency).
     pub events: usize,
+    /// Servers brought online by provisioning events (excludes the
+    /// initially-active fleet).
+    pub provision_events: usize,
+    /// Draining servers that emptied and were decommissioned.
+    pub decommission_events: usize,
 }
 
 impl MetricsSink {
@@ -63,9 +68,12 @@ impl MetricsSink {
     }
 
     pub(crate) fn into_report(mut self, sim_duration_s: f64, energy_j: f64,
-                              op_kg: f64, emb_kg: f64) -> SimReport {
+                              op_kg: f64, emb_kg: f64,
+                              per_server: Vec<ServerUsage>) -> SimReport {
         let slo_attainment = self.slo_attainment();
         let offline_deadline_attainment = self.offline_deadline_attainment();
+        let provisioned_server_hours =
+            per_server.iter().map(|u| u.provisioned_s).sum::<f64>() / 3600.0;
         SimReport {
             ttft: std::mem::take(&mut self.ttft),
             tpot: std::mem::take(&mut self.tpot),
@@ -80,8 +88,24 @@ impl MetricsSink {
             deferred_requests: self.deferred,
             truncated_prompts: self.truncated_prompts,
             events: self.events,
+            provision_events: self.provision_events,
+            decommission_events: self.decommission_events,
+            provisioned_server_hours,
+            per_server,
         }
     }
+}
+
+/// Per-server usage, for fleet-elasticity observability: how long each
+/// server was provisioned (embodied + idle are charged only over this)
+/// and how much of that it spent busy.
+#[derive(Debug, Clone, Default)]
+pub struct ServerUsage {
+    pub busy_s: f64,
+    pub energy_j: f64,
+    /// Total provisioned seconds (sum of provision→decommission
+    /// intervals, open intervals closed at the sim horizon).
+    pub provisioned_s: f64,
 }
 
 /// Simulation outcome.
@@ -107,6 +131,15 @@ pub struct SimReport {
     pub truncated_prompts: usize,
     /// Discrete events processed by the core.
     pub events: usize,
+    /// Servers brought online by provisioning events.
+    pub provision_events: usize,
+    /// Draining servers that emptied and were decommissioned.
+    pub decommission_events: usize,
+    /// Fleet-wide provisioned server-hours — the base embodied and idle
+    /// carbon amortize over (static fleets: n_servers · duration).
+    pub provisioned_server_hours: f64,
+    /// Per-server busy/energy/provisioned breakdown.
+    pub per_server: Vec<ServerUsage>,
 }
 
 impl SimReport {
@@ -142,9 +175,15 @@ mod tests {
         assert_eq!(m.offline_done, 2);
         assert!((m.slo_attainment() - 0.5).abs() < 1e-12);
         assert!((m.offline_deadline_attainment() - 0.5).abs() < 1e-12);
-        let r = m.into_report(10.0, 100.0, 0.1, 0.2);
+        let usage = vec![
+            ServerUsage { busy_s: 4.0, energy_j: 60.0, provisioned_s: 7200.0 },
+            ServerUsage { busy_s: 1.0, energy_j: 40.0, provisioned_s: 3600.0 },
+        ];
+        let r = m.into_report(10.0, 100.0, 0.1, 0.2, usage);
         assert_eq!(r.completed, 4);
         assert!((r.carbon_kg() - 0.3).abs() < 1e-12);
         assert_eq!(r.tpot.len(), 4);
+        assert!((r.provisioned_server_hours - 3.0).abs() < 1e-12);
+        assert_eq!(r.per_server.len(), 2);
     }
 }

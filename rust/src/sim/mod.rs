@@ -9,7 +9,15 @@
 //! - [`metrics`] — the [`MetricsSink`] collecting TTFT/TPOT/SLO/deadline
 //!   counters into a [`SimReport`];
 //! - [`carbon_meter`] — operational-carbon observer integrating energy
-//!   against a time-varying [`crate::carbon::intensity::CiSignal`].
+//!   against a time-varying [`crate::carbon::intensity::CiSignal`], plus
+//!   per-server provisioned intervals for amortized embodied carbon.
+//!
+//! Fleets may be *elastic*: a [`FleetSchedule`] (typically produced by the
+//! rolling-horizon controller in [`crate::planner::horizon`]) provisions
+//! and drains servers mid-run. Draining servers finish in-flight batches
+//! but admit nothing; they decommission once empty, and embodied + idle
+//! carbon is charged per provisioned-hour — the 4R Rightsize/Recycle
+//! accounting.
 //!
 //! Provisioning (planner ILP) and runtime behaviour see the *same* carbon
 //! signal — the paper's cross-layer point — and every policy is a trait
@@ -22,13 +30,13 @@ pub mod policy;
 pub mod server;
 
 pub use self::carbon_meter::CarbonMeter;
-pub use self::core::SimConfig;
-pub use self::metrics::{MetricsSink, SimReport};
+pub use self::core::{FleetAction, FleetEvent, FleetSchedule, SimConfig};
+pub use self::metrics::{MetricsSink, ServerUsage, SimReport};
 pub use self::policy::{BatchPolicy, Batcher, CarbonGreedy, DeferralPolicy,
                        FifoBatch, Jsq, OnlineFirstBatch, RouteCtx, RoutePolicy,
                        Router, WorkloadAware, LONG_PROMPT_TOKENS};
-pub use self::server::{homogeneous_fleet, ClassQueue, Job, Role, Server,
-                       ServerSpec, MAX_PROMPT_TOKENS};
+pub use self::server::{homogeneous_fleet, ClassQueue, Job, Lifecycle, Role,
+                       Server, ServerSpec, MAX_PROMPT_TOKENS};
 
 use crate::models::LlmSpec;
 use crate::workload::Request;

@@ -23,6 +23,23 @@ pub enum Role {
     Mixed,
 }
 
+/// Provisioning lifecycle of a server under fleet elasticity. Static
+/// fleets stay `Active` for the whole run; a rolling-horizon schedule
+/// walks servers `Pending → Active → Draining → Retired` (and possibly
+/// back to `Active` on re-provision).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Lifecycle {
+    /// Not yet provisioned: invisible to routing, charged nothing.
+    Pending,
+    /// Provisioned and admitting work.
+    Active,
+    /// Finishing in-flight batches; admits nothing new. Still charged
+    /// embodied + idle carbon until it empties and retires.
+    Draining,
+    /// Decommissioned: no work, no further embodied/idle accrual.
+    Retired,
+}
+
 /// One provisioned server (a TP group acts as one server).
 #[derive(Debug, Clone)]
 pub struct ServerSpec {
@@ -124,6 +141,7 @@ impl ClassQueue {
 #[derive(Debug)]
 pub struct Server {
     pub(crate) spec: ServerSpec,
+    pub(crate) lifecycle: Lifecycle,
     pub(crate) prompt_q: ClassQueue,
     pub(crate) decode_q: ClassQueue,
     pub(crate) active: Vec<usize>,
@@ -139,6 +157,7 @@ impl Server {
     pub(crate) fn new(spec: &ServerSpec) -> Server {
         Server {
             spec: spec.clone(),
+            lifecycle: Lifecycle::Active,
             prompt_q: ClassQueue::default(),
             decode_q: ClassQueue::default(),
             active: Vec::new(),
@@ -157,13 +176,41 @@ impl Server {
     pub fn spec(&self) -> &ServerSpec {
         &self.spec
     }
+
+    pub fn lifecycle(&self) -> Lifecycle {
+        self.lifecycle
+    }
+
+    /// Whether routing may send *new* work here. Draining servers finish
+    /// what they hold but never admit.
+    pub fn is_admitting(&self) -> bool {
+        self.lifecycle == Lifecycle::Active
+    }
+
+    /// No queued, admitted, or in-flight work of any kind.
+    pub(crate) fn is_idle_empty(&self) -> bool {
+        !self.in_flight
+            && self.prompt_q.is_empty()
+            && self.decode_q.is_empty()
+            && self.active.is_empty()
+    }
 }
 
 impl<'a> Sim<'a> {
     /// One scheduling iteration: prefill first (prompt servers drain their
     /// queue; mixed servers give prefill priority, chunked-prefill-style),
     /// else a decode step. Work schedules its own `Complete` event.
+    /// Draining servers still step (they must finish in-flight batches);
+    /// pending/retired servers hold no work and never run.
     pub(crate) fn step(&mut self, sid: usize) {
+        match self.servers[sid].lifecycle {
+            Lifecycle::Pending | Lifecycle::Retired => {
+                debug_assert!(self.servers[sid].is_idle_empty(),
+                              "unprovisioned server holds work");
+                return;
+            }
+            Lifecycle::Active | Lifecycle::Draining => {}
+        }
         if self.try_prefill(sid) {
             return;
         }
@@ -276,15 +323,29 @@ impl<'a> Sim<'a> {
         done_t
     }
 
-    /// JSQ over decode-capable servers; mixed servers keep their own KV.
-    fn pick_decode_server(&self, from: usize) -> usize {
-        if self.servers[from].spec.role == Role::Mixed {
+    /// JSQ over decode-capable servers; live mixed servers keep their own
+    /// KV. Preference order: admitting decode-capable, then draining
+    /// decode-capable (so in-flight prefills still land somewhere when
+    /// the whole decode side is winding down), then any live server at
+    /// all — never a pending or retired one.
+    pub(crate) fn pick_decode_server(&self, from: usize) -> usize {
+        let alive = |s: &Server| {
+            matches!(s.lifecycle, Lifecycle::Active | Lifecycle::Draining)
+        };
+        if self.servers[from].spec.role == Role::Mixed && alive(&self.servers[from]) {
             return from;
         }
-        self.servers.iter().enumerate()
-            .filter(|(_, s)| s.spec.role != Role::Prompt)
-            .min_by_key(|(_, s)| s.decode_q.len() + s.active.len())
-            .map(|(i, _)| i)
+        let best = |decode_only: bool, admitting_only: bool| {
+            self.servers.iter().enumerate()
+                .filter(|(_, s)| !decode_only || s.spec.role != Role::Prompt)
+                .filter(|(_, s)| if admitting_only { s.is_admitting() } else { alive(s) })
+                .min_by_key(|(_, s)| s.decode_q.len() + s.active.len())
+                .map(|(i, _)| i)
+        };
+        best(true, true)
+            .or_else(|| best(true, false))
+            .or_else(|| best(false, true))
+            .or_else(|| best(false, false))
             .unwrap_or(from)
     }
 }

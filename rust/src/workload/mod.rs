@@ -88,11 +88,22 @@ pub enum Arrivals {
     /// Diurnal-modulated Poisson: rate(t) = rate·(1 + amp·sin) (Fig 10's
     /// day shape).
     Diurnal { rate: f64, amplitude: f64 },
+    /// [`Arrivals::Diurnal`]'s day shape compressed onto `period_s`
+    /// seconds, matching `CiTrace::compressed_diurnal` so short traces
+    /// see demand and grid CI swing together. `period_s <= 0` means one
+    /// day per trace duration.
+    CompressedDiurnal { rate: f64, amplitude: f64, period_s: f64 },
+    /// Step-function load: `base` req/s with `surge` extra req/s inside
+    /// `[start_frac, end_frac]` of the trace duration — the
+    /// re-provisioning stress case (GreenLLM-style demand spikes).
+    Step { base: f64, surge: f64, start_frac: f64, end_frac: f64 },
 }
 
 impl Arrivals {
-    /// Next inter-arrival gap at absolute time `t_s`.
-    pub fn next_gap(&self, rng: &mut Rng, t_s: f64) -> f64 {
+    /// Next inter-arrival gap at absolute time `t_s`. `duration_s` is the
+    /// trace length, which anchors the duration-relative processes
+    /// (compressed diurnal periods, surge windows).
+    pub fn next_gap(&self, rng: &mut Rng, t_s: f64, duration_s: f64) -> f64 {
         match *self {
             Arrivals::Poisson { rate } => rng.exp(rate),
             Arrivals::Bursty { rate, cv } => {
@@ -102,14 +113,29 @@ impl Arrivals {
             }
             Arrivals::Diurnal { rate, amplitude } => {
                 let hour = (t_s / 3600.0) % 24.0;
-                // Peak at 14:00 local, trough at 02:00.
-                let mod_rate = rate
-                    * (1.0 + amplitude * ((hour - 8.0) / 24.0
-                        * std::f64::consts::TAU).sin());
-                rng.exp(mod_rate.max(rate * 0.05))
+                rng.exp(diurnal_rate(rate, amplitude, hour))
+            }
+            Arrivals::CompressedDiurnal { rate, amplitude, period_s } => {
+                let period = if period_s > 0.0 { period_s } else { duration_s };
+                let hour = (t_s / period.max(1e-9)).fract() * 24.0;
+                rng.exp(diurnal_rate(rate, amplitude, hour))
+            }
+            Arrivals::Step { base, surge, start_frac, end_frac } => {
+                let in_surge = t_s >= start_frac * duration_s
+                    && t_s < end_frac * duration_s;
+                let rate = base + if in_surge { surge } else { 0.0 };
+                rng.exp(rate.max(1e-9))
             }
         }
     }
+}
+
+/// Sinusoidal day modulation shared by the diurnal processes: peak at
+/// 14:00 local, trough at 02:00, floored at 5% of the base rate.
+fn diurnal_rate(rate: f64, amplitude: f64, hour: f64) -> f64 {
+    let modulated = rate
+        * (1.0 + amplitude * ((hour - 8.0) / 24.0 * std::f64::consts::TAU).sin());
+    modulated.max(rate * 0.05)
 }
 
 /// Generate a request trace.
@@ -125,7 +151,7 @@ pub fn generate_trace(
     let mut t = 0.0;
     let mut id = 0u64;
     loop {
-        t += arrivals.next_gap(&mut rng, t);
+        t += arrivals.next_gap(&mut rng, t, duration_s);
         if t >= duration_s {
             break;
         }
@@ -215,6 +241,36 @@ mod tests {
         let afternoon = count_in(12.0, 16.0);
         let night = count_in(0.0, 4.0);
         assert!(afternoon > night * 2, "afternoon {afternoon} night {night}");
+    }
+
+    #[test]
+    fn compressed_diurnal_swings_within_a_short_trace() {
+        // One compressed day over 240 s: the 12:00–16:00 band (t in
+        // [120, 160)) must far outnumber the 00:00–04:00 band ([0, 40)).
+        let tr = generate_trace(
+            Arrivals::CompressedDiurnal { rate: 20.0, amplitude: 0.8, period_s: 0.0 },
+            LengthDist::ShareGpt, RequestClass::Online, 240.0, 9);
+        let count_in = |lo: f64, hi: f64| tr.iter()
+            .filter(|r| r.arrival_s >= lo && r.arrival_s < hi)
+            .count();
+        let afternoon = count_in(120.0, 160.0);
+        let night = count_in(0.0, 40.0);
+        assert!(afternoon > night * 2, "afternoon {afternoon} night {night}");
+    }
+
+    #[test]
+    fn step_surge_concentrates_in_its_window() {
+        let tr = generate_trace(
+            Arrivals::Step { base: 2.0, surge: 18.0, start_frac: 0.4, end_frac: 0.6 },
+            LengthDist::ShareGpt, RequestClass::Online, 300.0, 10);
+        let count_in = |lo: f64, hi: f64| tr.iter()
+            .filter(|r| r.arrival_s >= lo && r.arrival_s < hi)
+            .count();
+        // Surge window [120, 180) runs at 20 req/s vs 2 req/s outside.
+        let surge = count_in(120.0, 180.0) as f64 / 60.0;
+        let before = count_in(0.0, 120.0) as f64 / 120.0;
+        assert!(surge > 5.0 * before, "surge {surge} base {before}");
+        assert!((surge - 20.0).abs() < 5.0, "surge rate {surge}");
     }
 
     #[test]

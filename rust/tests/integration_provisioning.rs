@@ -1,0 +1,164 @@
+//! Provisioning-event and rolling-horizon integration: draining servers
+//! never admit new jobs, decommission fires only on empty servers, and
+//! the autoscale scenarios beat their static peak-provisioned baselines
+//! on total (op + amortized embodied) carbon without giving up SLO.
+
+use ecoserve::models;
+use ecoserve::scenarios::{catalog, run_sweep, SweepConfig};
+use ecoserve::sim::{homogeneous_fleet, simulate_with, FifoBatch, FleetAction,
+                    FleetEvent, Job, RouteCtx, RoutePolicy, Router, Server,
+                    SimConfig};
+use ecoserve::workload::{generate_trace, Arrivals, LengthDist, RequestClass};
+
+/// JSQ clone that *asserts* every eligible server is admitting — the
+/// routing-side proof that draining servers never see new work.
+struct AssertAdmittingJsq;
+
+impl RoutePolicy for AssertAdmittingJsq {
+    fn name(&self) -> &'static str {
+        "assert-admitting-jsq"
+    }
+
+    fn route(&self, _job: &Job, servers: &[Server], eligible: &[usize],
+             _ctx: &RouteCtx) -> usize {
+        for &i in eligible {
+            assert!(servers[i].is_admitting(),
+                    "server {i} offered for routing while {:?}",
+                    servers[i].lifecycle());
+        }
+        *eligible.iter()
+            .min_by_key(|&&i| servers[i].depth())
+            .expect("no eligible servers")
+    }
+}
+
+#[test]
+fn draining_servers_are_never_offered_to_the_router() {
+    let m = models::llm("llama-8b").unwrap();
+    let tr = generate_trace(Arrivals::Poisson { rate: 6.0 },
+                            LengthDist::ShareGpt, RequestClass::Online,
+                            120.0, 31);
+    let mut cfg = SimConfig::flat(homogeneous_fleet("A100-40", 4, m, 2048),
+                                  Router::Jsq, 261.0, vec![0.005; 4]);
+    // Drain two servers mid-trace, re-provision one later: every arrival
+    // routed in between must only ever see admitting servers.
+    cfg.fleet_plan.events = vec![
+        FleetEvent { t: 30.0, server: 2, action: FleetAction::Drain },
+        FleetEvent { t: 30.0, server: 3, action: FleetAction::Drain },
+        FleetEvent { t: 80.0, server: 3, action: FleetAction::Provision },
+    ];
+    let r = simulate_with(m, &tr, &cfg, 0.5, 0.1, &AssertAdmittingJsq, &FifoBatch);
+    assert_eq!(r.completed, tr.len(), "drained work was lost");
+    assert!(r.decommission_events >= 1, "nothing decommissioned");
+    // Re-provisioning counts only when the server had actually retired
+    // (a cancelled drain reopens nothing).
+    assert!(r.provision_events <= 1);
+}
+
+#[test]
+fn decommission_only_fires_on_empty_servers() {
+    let m = models::llm("llama-8b").unwrap();
+    // Saturating load so the drained server is busy when the drain lands.
+    let tr = generate_trace(Arrivals::Poisson { rate: 12.0 },
+                            LengthDist::ShareGpt, RequestClass::Online,
+                            90.0, 32);
+    let mut cfg = SimConfig::flat(homogeneous_fleet("A100-40", 3, m, 2048),
+                                  Router::Jsq, 261.0, vec![0.005; 3]);
+    cfg.fleet_plan.events = vec![
+        FleetEvent { t: 45.0, server: 2, action: FleetAction::Drain },
+    ];
+    let r = ecoserve::sim::simulate(m, &tr, &cfg, 0.5, 0.1);
+    assert_eq!(r.completed, tr.len(), "in-flight batches must finish");
+    assert_eq!(r.decommission_events, 1);
+    let u = &r.per_server[2];
+    // Retirement waited for the in-flight work: the provisioned interval
+    // covers the whole busy time, extends past the drain decision, and
+    // ends before the horizon (it did retire).
+    assert!(u.busy_s <= u.provisioned_s + 1e-6,
+            "busy {} outside provisioned {}", u.busy_s, u.provisioned_s);
+    assert!(u.provisioned_s >= 45.0 - 1e-9,
+            "retired before the drain decision: {}", u.provisioned_s);
+    assert!(u.provisioned_s < r.sim_duration_s,
+            "drained server never retired");
+    // And the fleet-wide invariant: nobody is ever busy unprovisioned.
+    for (i, u) in r.per_server.iter().enumerate() {
+        assert!(u.busy_s <= u.provisioned_s + 1e-6, "server {i}");
+    }
+}
+
+fn autoscale_outcome(name: &str, seed: u64, duration_s: f64)
+    -> ecoserve::scenarios::ScenarioOutcome {
+    let sel = catalog::by_names(&[name]).unwrap();
+    let cfg = SweepConfig { threads: 1, seed, duration_s,
+                            ..Default::default() };
+    run_sweep(&sel, &cfg).outcomes.remove(0)
+}
+
+#[test]
+fn autoscale_diurnal_beats_static_peak_on_total_carbon_at_equal_slo() {
+    let o = autoscale_outcome("autoscale-diurnal", 7, 180.0);
+    assert_eq!(o.completed, o.requests, "requests lost");
+    assert!(o.decommission_events > 0, "fleet never scaled down");
+    // The acceptance criterion: strictly lower total (operational +
+    // amortized embodied) carbon than the static peak-provisioned
+    // baseline, at unchanged online SLO attainment.
+    let static_carbon = o.extras["carbon_kg_static"];
+    assert!(o.carbon_kg() < static_carbon,
+            "elastic {} !< static {}", o.carbon_kg(), static_carbon);
+    // Embodied specifically amortizes over fewer provisioned hours.
+    assert!(o.emb_kg < o.extras["emb_kg_static"],
+            "elastic emb {} !< static emb {}",
+            o.emb_kg, o.extras["emb_kg_static"]);
+    assert!(o.provisioned_server_hours
+                < o.extras["provisioned_server_hours_static"]);
+    // "Unchanged" online SLO: the elastic fleet matches the static
+    // baseline's attainment (within 1% for tie-breaking queueing noise)
+    // and stays near-perfect in absolute terms.
+    let static_slo = o.extras["slo_attainment_static"];
+    assert!(o.slo_attainment >= static_slo - 0.01,
+            "online SLO degraded: {} vs static {}",
+            o.slo_attainment, static_slo);
+    assert!(o.slo_attainment >= 0.95,
+            "elastic SLO attainment collapsed: {}", o.slo_attainment);
+}
+
+#[test]
+fn demand_surge_scales_up_for_the_spike_and_saves_carbon() {
+    let o = autoscale_outcome("demand-surge", 7, 180.0);
+    assert_eq!(o.completed, o.requests, "requests lost");
+    // Quiet → surge → quiet forces both directions of elasticity.
+    assert!(o.decommission_events > 0, "never drained the surplus");
+    assert!(o.provision_events > 0, "never re-provisioned for the surge");
+    assert!(o.carbon_kg() < o.extras["carbon_kg_static"],
+            "elastic {} !< static {}",
+            o.carbon_kg(), o.extras["carbon_kg_static"]);
+    let static_slo = o.extras["slo_attainment_static"];
+    assert!(o.slo_attainment >= static_slo - 0.02,
+            "online SLO collapsed: {} vs static {}",
+            o.slo_attainment, static_slo);
+}
+
+#[test]
+fn autoscale_is_deterministic_across_thread_counts_and_epochs_differ() {
+    let sel = |n| catalog::by_names(&["autoscale-diurnal", "demand-surge"])
+        .map(|s| {
+            let cfg = SweepConfig { threads: n, seed: 5, duration_s: 120.0,
+                                    ..Default::default() };
+            run_sweep(&s, &cfg).to_json().to_string()
+        })
+        .unwrap();
+    assert_eq!(sel(1), sel(4), "provisioning schedules must be thread-safe");
+    // The --epoch override changes the schedule (and hence the outcome).
+    let s = catalog::by_names(&["autoscale-diurnal"]).unwrap();
+    let base = SweepConfig { threads: 1, seed: 5, duration_s: 120.0,
+                             ..Default::default() };
+    let coarse = SweepConfig { epoch_s: Some(60.0), ..base.clone() };
+    let a = run_sweep(&s, &base).outcomes.remove(0);
+    let s = catalog::by_names(&["autoscale-diurnal"]).unwrap();
+    let b = run_sweep(&s, &coarse).outcomes.remove(0);
+    assert!(a.provision_events + a.decommission_events
+                != b.provision_events + b.decommission_events
+            || (a.provisioned_server_hours - b.provisioned_server_hours).abs()
+                > 1e-9,
+            "--epoch had no observable effect");
+}

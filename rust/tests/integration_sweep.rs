@@ -24,11 +24,12 @@ fn sweep_is_deterministic_across_runs_and_thread_counts() {
     // sorted by name, carrying the required per-scenario metrics.
     let j = Json::parse(&a).expect("report must be valid JSON");
     let scenarios = j.get("scenarios").and_then(|s| s.as_arr()).unwrap();
-    assert!(scenarios.len() >= 8, "only {} scenarios", scenarios.len());
+    assert!(scenarios.len() >= 10, "only {} scenarios", scenarios.len());
     let names: Vec<&str> = scenarios.iter()
         .map(|s| s.get("name").and_then(|n| n.as_str()).unwrap())
         .collect();
-    for want in ["diurnal-shift", "carbon-router"] {
+    for want in ["diurnal-shift", "carbon-router", "autoscale-diurnal",
+                 "demand-surge"] {
         assert!(names.contains(&want), "missing carbon-aware scenario {want}");
     }
     let mut sorted = names.clone();
@@ -54,6 +55,10 @@ fn sweep_is_deterministic_across_runs_and_thread_counts() {
                 "{name}: missing deferred_requests");
         assert!(s.get("truncated_prompts").and_then(|v| v.as_usize()).is_some(),
                 "{name}: missing truncated_prompts");
+        assert!(s.get("provision_events").and_then(|v| v.as_usize()).is_some(),
+                "{name}: missing provision_events");
+        let srv_hrs = num("provisioned_server_hours");
+        assert!(srv_hrs > 0.0, "{name}: provisioned_server_hours {srv_hrs}");
         for k in ["ttft_p50_s", "ttft_p90_s", "ttft_p99_s", "tpot_p50_s",
                   "tpot_p90_s"] {
             let v = num(k);
