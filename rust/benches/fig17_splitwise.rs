@@ -27,7 +27,7 @@ fn main() {
                 let eco_plan = Strategy::EcoFull.plan(&slices, ci);
                 let eco_fleet = fleet_from_plan(&eco_plan, m, 2048);
                 let mut eco_cfg = sim_config(eco_fleet, &eco_plan, ci);
-                let mut eco = simulate(m, &tr, &eco_cfg, slo.ttft_s, slo.tpot_s);
+                let eco = simulate(m, &tr, &eco_cfg, slo.ttft_s, slo.tpot_s);
 
                 // Splitwise: iso-power H100 fleet, fixed 3:1 PD split, JSQ.
                 let total = eco_plan.total_gpus().max(4);
@@ -36,7 +36,7 @@ fn main() {
                 let sw_plan = Strategy::Splitwise.plan(&slices, ci);
                 let mut sw_cfg = sim_config(sw_fleet, &sw_plan, ci);
                 sw_cfg.router = Router::Jsq;
-                let mut sw = simulate(m, &tr, &sw_cfg, slo.ttft_s, slo.tpot_s);
+                let sw = simulate(m, &tr, &sw_cfg, slo.ttft_s, slo.tpot_s);
 
                 eco_cfg.servers.clear();
                 sw_cfg.servers.clear();

@@ -1,14 +1,18 @@
-//! perf_sim: throughput of the refactored discrete-event core on a
+//! perf_sim: throughput of the streaming discrete-event core on a
 //! 50k-request trace — reported as events/sec and persisted to
 //! `BENCH_sim.json` at the repository root (resolved via
 //! `CARGO_MANIFEST_DIR`, so the output lands in the same place whatever
 //! directory cargo was invoked from) so sim-core perf regressions are
-//! visible across PRs and comparable on CI.
+//! visible across PRs and comparable on CI. The committed baseline lives
+//! at `rust/benches/BENCH_sim_baseline.json`; the CI `perf-sim` job fails
+//! on a >30% events/sec regression against it. Each measured iteration
+//! drives the full streaming path: lazy trace generation → pull-on-pop
+//! arrivals → arena-recycled jobs → histogram metrics.
 use ecoserve::bench::{run, BenchConfig};
 use ecoserve::models;
-use ecoserve::sim::{homogeneous_fleet, simulate, Router, SimConfig};
+use ecoserve::sim::{homogeneous_fleet, simulate_stream, Router, SimConfig};
 use ecoserve::util::json::Json;
-use ecoserve::workload::{generate_trace, Arrivals, LengthDist, RequestClass};
+use ecoserve::workload::{Arrivals, GeneratorSource, LengthDist, RequestClass};
 use std::time::Duration;
 
 fn main() {
@@ -22,16 +26,16 @@ fn main() {
         .and_then(|v| v.parse().ok())
         .filter(|d: &f64| d.is_finite() && *d > 0.0)
         .unwrap_or(200.0);
-    let tr = generate_trace(Arrivals::Poisson { rate: 250.0 },
-                            LengthDist::ShareGpt, RequestClass::Online,
-                            duration, 42);
+    let source = || GeneratorSource::new(Arrivals::Poisson { rate: 250.0 },
+                                         LengthDist::ShareGpt,
+                                         RequestClass::Online, duration, 42);
     let servers = homogeneous_fleet("A100-40", 32, m, 2048);
     let n = servers.len();
     let cfg = SimConfig::flat(servers, Router::Jsq, 261.0, vec![0.005; n]);
 
     // One probe run pins down the (deterministic) event count.
-    let probe = simulate(m, &tr, &cfg, 0.5, 0.1);
-    assert_eq!(probe.completed, tr.len());
+    let probe = simulate_stream(m, &mut source(), &cfg, 0.5, 0.1);
+    assert_eq!(probe.completed, probe.arrivals);
 
     let bcfg = BenchConfig {
         warmup: Duration::from_millis(200),
@@ -40,20 +44,23 @@ fn main() {
         max_samples: 50,
     };
     let r = run("sim_50k_requests_32_servers", &bcfg, || {
-        std::hint::black_box(simulate(m, &tr, &cfg, 0.5, 0.1));
+        std::hint::black_box(simulate_stream(m, &mut source(), &cfg, 0.5, 0.1));
     });
     println!("{}", r.report());
     let events_per_sec = probe.events as f64 / r.mean_s;
-    println!("events/sec: {events_per_sec:.0}  ({} events, {} requests, {} tokens)",
-             probe.events, tr.len(), probe.generated_tokens);
+    println!("events/sec: {events_per_sec:.0}  ({} events, {} requests, \
+              {} tokens, peak {} live jobs)",
+             probe.events, probe.arrivals, probe.generated_tokens,
+             probe.peak_live_jobs);
 
     let j = Json::obj()
         .set("bench", "perf_sim")
         .set("trace_duration_s", duration)
-        .set("requests", tr.len())
+        .set("requests", probe.arrivals)
         .set("servers", n)
         .set("events", probe.events)
         .set("generated_tokens", probe.generated_tokens)
+        .set("peak_live_jobs", probe.peak_live_jobs)
         .set("mean_s", r.mean_s)
         .set("p50_s", r.p50_s)
         .set("events_per_sec", events_per_sec);

@@ -14,10 +14,12 @@ commands:
             run the cluster sim
   report    --gpu SKU                               embodied-carbon breakdown
   sweep     --all | --scenario A,B [--list] [--threads N] [--seed S]
-            [--duration SECS] [--ci-trace flat|diurnal] [--epoch SECS]
+            [--duration SECS] [--ci-trace flat|diurnal|week] [--epoch SECS]
             [--out FILE] [--json]
             run registered end-to-end scenarios in parallel (--epoch
-            overrides the rolling-horizon re-provisioning period)
+            overrides the rolling-horizon re-provisioning period;
+            long-haul scale scenarios join --all only when --duration
+            is given, or when selected by name)
 ";
 
 fn main() -> anyhow::Result<()> {
@@ -41,8 +43,9 @@ fn ci_profile_flag(args: &Args) -> anyhow::Result<Option<ecoserve::scenarios::Ci
         None => Ok(None),
         Some("flat") => Ok(Some(CiProfile::Flat)),
         Some("diurnal") => Ok(Some(CiProfile::CompressedDiurnal)),
+        Some("week") => Ok(Some(CiProfile::CompressedWeek)),
         Some(other) => anyhow::bail!(
-            "unknown --ci-trace '{other}' (expected flat or diurnal)"),
+            "unknown --ci-trace '{other}' (expected flat, diurnal, or week)"),
     }
 }
 
@@ -52,13 +55,29 @@ fn sweep(args: &Args) -> anyhow::Result<()> {
     if args.bool("list") {
         println!("registered scenarios:");
         for s in registry() {
-            println!("  {:<16} {}", s.name(), s.description());
+            let tag = if s.long_haul() { " [long-haul]" } else { "" };
+            println!("  {:<16} {}{tag}", s.name(), s.description());
         }
         return Ok(());
     }
 
     let scenarios = if args.bool("all") || !args.has("scenario") {
-        registry()
+        // Long-haul scale scenarios only join a full sweep when the
+        // caller sized it explicitly; `--scenario` selection by name
+        // always runs them.
+        let mut all = registry();
+        if !args.has("duration") {
+            let skipped: Vec<&str> = all.iter()
+                .filter(|s| s.long_haul())
+                .map(|s| s.name())
+                .collect();
+            if !skipped.is_empty() {
+                eprintln!("skipping long-haul scenarios without --duration: {}",
+                          skipped.join(", "));
+            }
+            all.retain(|s| !s.long_haul());
+        }
+        all
     } else {
         let spec = args.str("scenario", "");
         let names: Vec<&str> = spec.split(',')
@@ -195,19 +214,26 @@ fn simulate(args: &Args) -> anyhow::Result<()> {
     let servers = homogeneous_fleet(&args.str("gpu", "A100-40"), n, m, 2048);
     let mut cfg = SimConfig::flat(servers, Router::WorkloadAware, ci,
                                   vec![0.005; n]);
-    if ci_profile_flag(args)? == Some(CiProfile::CompressedDiurnal) {
-        // One solar day compressed onto the trace duration, rescaled so
-        // the trace mean tracks the requested --ci level.
+    // Compressed solar day(s) mapped onto the trace duration, rescaled so
+    // the trace mean tracks the requested --ci level. Periods overshoot
+    // the duration so post-trace-end completion time keeps cycling
+    // instead of clamping to the final step.
+    let day = match ci_profile_flag(args)? {
+        Some(CiProfile::CompressedDiurnal) => Some((duration, 2)),
+        Some(CiProfile::CompressedWeek) => Some((duration / 7.0, 8)),
+        Some(CiProfile::Flat) | None => None,
+    };
+    if let Some((period_s, periods)) = day {
         let mut trace =
-            CiTrace::compressed_diurnal(Region::California, duration, 2, 96,
-                                        args.u64("seed", 1));
+            CiTrace::compressed_diurnal(Region::California, period_s, periods,
+                                        96, args.u64("seed", 1));
         let scale = ci / Region::California.avg_ci();
         for v in &mut trace.values {
             *v *= scale;
         }
         cfg.ci = CiSignal::Trace(trace);
     }
-    let mut r = simulate(m, &tr, &cfg, 0.5, 0.1);
+    let r = simulate(m, &tr, &cfg, 0.5, 0.1);
     println!("completed {} | TTFT p50 {:.0} ms p90 {:.0} ms | TPOT p50 {:.1} ms",
              r.completed, r.ttft.p50() * 1e3, r.ttft.p90() * 1e3,
              r.tpot.p50() * 1e3);

@@ -19,12 +19,12 @@
 
 use crate::carbon::intensity::CiSignal;
 use crate::models::LlmSpec;
-use crate::planner::slicing::{cluster_slices, slice_trace};
+use crate::planner::slicing::{cluster_slices, SliceAccum};
 use crate::planner::{self, PlanConfig};
 use crate::sim::{FleetAction, FleetEvent, FleetSchedule, Role, ServerSpec};
 use crate::workload::slo::Slo;
-use crate::workload::Request;
-use std::collections::BTreeMap;
+use crate::workload::{ArrivalSource, Request, SliceSource};
+use std::collections::{BTreeMap, VecDeque};
 
 /// Controller knobs. All durations are simulated seconds (a compressed
 /// trace maps "every 15 real minutes" onto its own time scale).
@@ -66,41 +66,91 @@ impl HorizonConfig {
     }
 }
 
-/// Index range (into an arrival-sorted trace) of the busiest epoch-sized
-/// window — what "peak-provisioned" means for the static baseline and for
-/// sizing the elastic template fleet. Windows slide at quarter-epoch
-/// steps so a burst straddling an epoch-aligned boundary is not
-/// undercounted.
-pub fn peak_epoch_window(trace: &[Request], epoch_s: f64, duration_s: f64)
-    -> (usize, usize) {
-    assert!(epoch_s > 0.0);
-    let mut best = (0, trace.len());
-    let mut best_n = 0usize;
-    let mut t = 0.0;
-    while t < duration_s {
-        let lo = trace.partition_point(|r| r.arrival_s < t);
-        let hi = trace.partition_point(|r| r.arrival_s < t + epoch_s);
-        if hi - lo > best_n {
-            best_n = hi - lo;
-            best = (lo, hi);
-        }
-        t += epoch_s / 4.0;
+/// The busiest epoch-sized demand window over an arrival stream, found in
+/// one pass and O(windows) memory: windows slide at quarter-epoch steps
+/// (so a burst straddling an epoch-aligned boundary is not undercounted)
+/// and the first strictly-maximal window wins. Returns the window's
+/// `(t_lo, t_hi, count)`; `count == 0` means the stream was empty.
+pub fn peak_window_over(source: &mut dyn ArrivalSource, epoch_s: f64,
+                        duration_s: f64) -> (f64, f64, usize) {
+    assert!(epoch_s > 0.0 && duration_s > 0.0);
+    let q = epoch_s / 4.0;
+    // Window k covers [k·q, k·q + epoch); enumerate every k with k·q
+    // inside the trace. The effective epoch is clamped to duration/96, so
+    // this is at most a few hundred counters.
+    let mut n_windows = 0usize;
+    while (n_windows as f64) * q < duration_s {
+        n_windows += 1;
     }
-    best
+    let mut counts = vec![0usize; n_windows];
+    while let Some(r) = source.next_request() {
+        let a = r.arrival_s;
+        // Guarded index range: derive candidates by division, confirm
+        // membership against the exact k·q edges.
+        let k_hi = ((a / q) as usize).min(n_windows.saturating_sub(1));
+        let k_lo = (((a - epoch_s) / q).floor().max(0.0)) as usize;
+        for k in k_lo.saturating_sub(1)..=(k_hi + 1).min(n_windows - 1) {
+            let t_k = k as f64 * q;
+            if t_k <= a && a < t_k + epoch_s {
+                counts[k] += 1;
+            }
+        }
+    }
+    let mut best_k = 0usize;
+    let mut best_n = 0usize;
+    for (k, &n) in counts.iter().enumerate() {
+        if n > best_n {
+            best_n = n;
+            best_k = k;
+        }
+    }
+    let t_lo = best_k as f64 * q;
+    (t_lo, t_lo + epoch_s, best_n)
 }
 
-/// Build the provisioning schedule for `template` over `trace`.
-///
-/// The template is the peak-provisioned fleet (every server the schedule
-/// may ever use); the whole template starts active, and from the first
-/// epoch boundary on, the observed-demand ILP decides how much of it
-/// stays up. Deterministic: same inputs, same schedule, independent of
-/// thread count (the per-epoch MILP is node-bounded).
+/// Index range (into an arrival-sorted trace) of the busiest epoch-sized
+/// window — what "peak-provisioned" means for the static baseline and for
+/// sizing the elastic template fleet. Materialized adapter over
+/// [`peak_window_over`]; `(0, len)` when the trace is empty.
+pub fn peak_epoch_window(trace: &[Request], epoch_s: f64, duration_s: f64)
+    -> (usize, usize) {
+    let (t_lo, t_hi, n) = peak_window_over(&mut SliceSource::new(trace),
+                                           epoch_s, duration_s);
+    if n == 0 {
+        return (0, trace.len());
+    }
+    let lo = trace.partition_point(|r| r.arrival_s < t_lo);
+    let hi = trace.partition_point(|r| r.arrival_s < t_hi);
+    (lo, hi)
+}
+
+/// Build the provisioning schedule for `template` over a materialized
+/// trace — a thin adapter over [`plan_schedule_stream`].
 #[allow(clippy::too_many_arguments)]
 pub fn plan_schedule(model: &'static LlmSpec, trace: &[Request],
                      template: &[ServerSpec], base: &PlanConfig,
                      ci: &CiSignal, slo: Slo, h: &HorizonConfig,
                      duration_s: f64) -> FleetSchedule {
+    plan_schedule_stream(model, &mut SliceSource::new(trace), template, base,
+                         ci, slo, h, duration_s)
+}
+
+/// Build the provisioning schedule for `template` over a streaming
+/// arrival source.
+///
+/// The template is the peak-provisioned fleet (every server the schedule
+/// may ever use); the whole template starts active, and from the first
+/// epoch boundary on, the observed-demand ILP decides how much of it
+/// stays up. The stream is consumed forward, holding only the trailing
+/// observation window in memory (≤ rate·window requests — never the whole
+/// trace). Deterministic: same inputs, same schedule, independent of
+/// thread count (the per-epoch MILP is node-bounded).
+#[allow(clippy::too_many_arguments)]
+pub fn plan_schedule_stream(model: &'static LlmSpec,
+                            source: &mut dyn ArrivalSource,
+                            template: &[ServerSpec], base: &PlanConfig,
+                            ci: &CiSignal, slo: Slo, h: &HorizonConfig,
+                            duration_s: f64) -> FleetSchedule {
     assert!(!template.is_empty(), "empty template fleet");
     let epoch = h.effective_epoch(duration_s);
     let window = if h.window_s > 0.0 { h.window_s } else { epoch };
@@ -117,6 +167,11 @@ pub fn plan_schedule(model: &'static LlmSpec, trace: &[Request],
     assert!(!groups.is_empty(), "template has no catalog GPUs");
     let menu: Vec<&'static str> = groups.keys().copied().collect();
 
+    // Sliding observation window: arrivals in [t_k - w, t_k), ingested
+    // forward with one request of lookahead.
+    let mut buf: VecDeque<Request> = VecDeque::new();
+    let mut lookahead = source.next_request();
+
     let mut active: Vec<bool> = vec![true; template.len()];
     let mut events = Vec::new();
     let mut k = 1usize;
@@ -128,13 +183,26 @@ pub fn plan_schedule(model: &'static LlmSpec, trace: &[Request],
         // the elapsed trace so early epochs don't dilute their rates),
         // scaled by the headroom margin.
         let w = window.min(t_k);
-        let lo = trace.partition_point(|r| r.arrival_s < t_k - w);
-        let hi = trace.partition_point(|r| r.arrival_s < t_k);
+        while let Some(r) = lookahead.take() {
+            if r.arrival_s < t_k {
+                buf.push_back(r);
+                lookahead = source.next_request();
+            } else {
+                lookahead = Some(r);
+                break;
+            }
+        }
+        while buf.front().is_some_and(|r| r.arrival_s < t_k - w) {
+            buf.pop_front();
+        }
         let mut desired: BTreeMap<&'static str, usize> =
             menu.iter().map(|n| (*n, 0)).collect();
-        if hi > lo {
-            let mut slices =
-                cluster_slices(&slice_trace(model, &trace[lo..hi], w, slo, 1));
+        if !buf.is_empty() {
+            let mut acc = SliceAccum::new();
+            for r in &buf {
+                acc.push(r);
+            }
+            let mut slices = cluster_slices(&acc.slices(model, w, slo, 1));
             for s in &mut slices {
                 s.rate *= h.headroom;
             }

@@ -39,6 +39,82 @@ fn representative(edges: &[usize], idx: usize) -> usize {
     ((lo as f64 * hi as f64).sqrt()) as usize
 }
 
+/// Streaming bucket accumulator: the counting half of [`slice_trace`],
+/// split out so planning passes can ingest requests one at a time from an
+/// arrival stream (or a sliding demand window) without materializing a
+/// trace. `slice_trace` delegates here, so the two paths are identical by
+/// construction — bucket counts are integers, and the rate arithmetic in
+/// [`SliceAccum::slices`] is shared.
+#[derive(Debug, Clone)]
+pub struct SliceAccum {
+    /// counts[class][p][o]
+    counts: Vec<Vec<Vec<usize>>>,
+    total: usize,
+}
+
+impl Default for SliceAccum {
+    fn default() -> Self {
+        SliceAccum::new()
+    }
+}
+
+impl SliceAccum {
+    pub fn new() -> SliceAccum {
+        let np = PROMPT_EDGES.len() - 1;
+        let no = OUTPUT_EDGES.len() - 1;
+        SliceAccum { counts: vec![vec![vec![0usize; no]; np]; 2], total: 0 }
+    }
+
+    pub fn push(&mut self, r: &Request) {
+        let ci = match r.class { RequestClass::Online => 0, RequestClass::Offline => 1 };
+        let p = bucket_of(r.prompt_tokens, PROMPT_EDGES);
+        let o = bucket_of(r.output_tokens, OUTPUT_EDGES);
+        self.counts[ci][p][o] += 1;
+        self.total += 1;
+    }
+
+    /// Requests ingested so far.
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    /// Fold the accumulated buckets into planner slices over `duration_s`
+    /// seconds of demand.
+    pub fn slices(&self, model: &'static LlmSpec, duration_s: f64,
+                  online_slo: Slo, slice_factor: usize) -> Vec<Slice> {
+        assert!(duration_s > 0.0 && slice_factor >= 1);
+        let mut out = Vec::new();
+        for (ci, class_counts) in self.counts.iter().enumerate() {
+            let offline = ci == 1;
+            for (p, row) in class_counts.iter().enumerate() {
+                for (o, &n) in row.iter().enumerate() {
+                    if n == 0 {
+                        continue;
+                    }
+                    let total_rate = n as f64 / duration_s;
+                    let slo = if offline {
+                        Slo { ttft_s: crate::workload::slo::OFFLINE_DEADLINE_S,
+                              tpot_s: f64::INFINITY }
+                    } else {
+                        online_slo
+                    };
+                    for _ in 0..slice_factor {
+                        out.push(Slice {
+                            model,
+                            rate: total_rate / slice_factor as f64,
+                            prompt: representative(PROMPT_EDGES, p),
+                            output: representative(OUTPUT_EDGES, o),
+                            slo,
+                            offline,
+                        });
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
 /// Bucket a trace into slices. `slice_factor` ≥ 1 subdivides each bucket's
 /// rate into f equal slices for finer-grained allocation (the paper's f).
 pub fn slice_trace(
@@ -48,46 +124,11 @@ pub fn slice_trace(
     online_slo: Slo,
     slice_factor: usize,
 ) -> Vec<Slice> {
-    assert!(duration_s > 0.0 && slice_factor >= 1);
-    let np = PROMPT_EDGES.len() - 1;
-    let no = OUTPUT_EDGES.len() - 1;
-    // counts[class][p][o]
-    let mut counts = vec![vec![vec![0usize; no]; np]; 2];
+    let mut acc = SliceAccum::new();
     for r in trace {
-        let ci = match r.class { RequestClass::Online => 0, RequestClass::Offline => 1 };
-        let p = bucket_of(r.prompt_tokens, PROMPT_EDGES);
-        let o = bucket_of(r.output_tokens, OUTPUT_EDGES);
-        counts[ci][p][o] += 1;
+        acc.push(r);
     }
-    let mut out = Vec::new();
-    for (ci, class_counts) in counts.iter().enumerate() {
-        let offline = ci == 1;
-        for (p, row) in class_counts.iter().enumerate() {
-            for (o, &n) in row.iter().enumerate() {
-                if n == 0 {
-                    continue;
-                }
-                let total_rate = n as f64 / duration_s;
-                let slo = if offline {
-                    Slo { ttft_s: crate::workload::slo::OFFLINE_DEADLINE_S,
-                          tpot_s: f64::INFINITY }
-                } else {
-                    online_slo
-                };
-                for _ in 0..slice_factor {
-                    out.push(Slice {
-                        model,
-                        rate: total_rate / slice_factor as f64,
-                        prompt: representative(PROMPT_EDGES, p),
-                        output: representative(OUTPUT_EDGES, o),
-                        slo,
-                        offline,
-                    });
-                }
-            }
-        }
-    }
-    out
+    acc.slices(model, duration_s, online_slo, slice_factor)
 }
 
 /// Merge slices that are identical (bucket, class) — the clustering that

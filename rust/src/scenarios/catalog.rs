@@ -1,10 +1,12 @@
-//! The shipped scenario registry: 10 named end-to-end design points
+//! The shipped scenario registry: 12 named end-to-end design points
 //! spanning the paper's evaluation axes — latency-optimized online
 //! serving, offline batch, the mixed 4R deployment, Splitwise-style
 //! prefill/decode disaggregation, multi-region carbon intensity,
-//! legacy-hardware Reuse, temporal shifting, carbon-aware routing, and
-//! the rolling-horizon autoscaling pair (diurnal tracking + demand
-//! surge). Each wires config → planner → solver → sim → carbon into one
+//! legacy-hardware Reuse, temporal shifting, carbon-aware routing, the
+//! rolling-horizon autoscaling pair (diurnal tracking + demand surge),
+//! and the production-scale pair (`production-day` / `production-week`)
+//! that exercises the streaming core at multi-million-request trace
+//! lengths. Each wires config → planner → solver → sim → carbon into one
 //! [`super::ScenarioOutcome`].
 
 use super::{CiProfile, FleetPolicy, Scenario, ScenarioSpec, WorkloadSpec};
@@ -20,6 +22,9 @@ struct DesignPoint {
     name: &'static str,
     description: &'static str,
     build: fn() -> ScenarioSpec,
+    /// Sized for explicit long `--duration` runs; skipped by `--all`
+    /// sweeps that did not pass a duration.
+    long_haul: bool,
 }
 
 impl Scenario for DesignPoint {
@@ -33,6 +38,10 @@ impl Scenario for DesignPoint {
 
     fn spec(&self) -> ScenarioSpec {
         (self.build)()
+    }
+
+    fn long_haul(&self) -> bool {
+        self.long_haul
     }
 }
 
@@ -246,71 +255,141 @@ fn demand_surge() -> ScenarioSpec {
     }
 }
 
+fn production_day() -> ScenarioSpec {
+    // One compressed demand + CI day at production scale: ~300 req/s of
+    // mixed chat + code traffic on a two-grid elastic fleet with
+    // carbon-greedy routing — streaming arrivals, rolling-horizon
+    // re-provisioning, and multi-region accounting all engaged at once.
+    // At `--duration 7200` the day carries ≥ 2M requests; the streaming
+    // core holds memory at the fleet + in-flight jobs (`peak_live_jobs`),
+    // which the CI `scale-smoke` job asserts via peak RSS.
+    ScenarioSpec {
+        workloads: vec![
+            WorkloadSpec {
+                arrivals: Arrivals::CompressedDiurnal {
+                    rate: 230.0, amplitude: 0.6, period_s: 0.0,
+                },
+                lengths: LengthDist::ShareGpt,
+                class: RequestClass::Online,
+            },
+            WorkloadSpec {
+                arrivals: Arrivals::Poisson { rate: 70.0 },
+                lengths: LengthDist::AzureCode,
+                class: RequestClass::Offline,
+            },
+        ],
+        slo: Some(Slo { ttft_s: 2.0, tpot_s: 0.2 }),
+        fleet: FleetPolicy::TwoRegion { low: Region::SwedenNorth },
+        router: Router::CarbonGreedy,
+        ci_profile: CiProfile::CompressedDiurnal,
+        reprovision: Some(HorizonConfig {
+            epoch_s: 300.0,
+            headroom: 1.5,
+            min_active: 2,
+            ..Default::default()
+        }),
+        ..base_spec("llama-8b", Region::Midcontinent, Strategy::EcoFull)
+    }
+}
+
+fn production_week() -> ScenarioSpec {
+    // Seven compressed diurnal cycles with weekday/weekend amplitude
+    // (weekends at 45% of the weekday rate), demand and grid CI cycling
+    // together, under rolling-horizon re-provisioning. Gated behind an
+    // explicit `--duration` in `--all` sweeps; at `--duration 25200`
+    // (one hour per simulated day) the week carries several million
+    // requests.
+    ScenarioSpec {
+        workloads: vec![
+            WorkloadSpec {
+                arrivals: Arrivals::Week {
+                    rate: 120.0, amplitude: 0.7, weekend_factor: 0.45,
+                },
+                lengths: LengthDist::ShareGpt,
+                class: RequestClass::Online,
+            },
+            WorkloadSpec {
+                arrivals: Arrivals::Poisson { rate: 30.0 },
+                lengths: LengthDist::AzureCode,
+                class: RequestClass::Offline,
+            },
+        ],
+        slo: Some(Slo { ttft_s: 2.0, tpot_s: 0.2 }),
+        ci_profile: CiProfile::CompressedWeek,
+        reprovision: Some(HorizonConfig {
+            epoch_s: 600.0,
+            headroom: 1.5,
+            min_active: 2,
+            ..Default::default()
+        }),
+        ..base_spec("llama-8b", Region::California, Strategy::EcoFull)
+    }
+}
+
 /// All shipped design points, in a stable order (seeds do not depend on
 /// this order — see [`super::scenario_seed`]).
 pub fn registry() -> Vec<Box<dyn Scenario>> {
+    let point = |name, description, build| {
+        Box::new(DesignPoint { name, description, build, long_haul: false })
+            as Box<dyn Scenario>
+    };
     vec![
+        point("online-latency",
+              "latency-optimized online chat serving \
+               (Llama-8B, ShareGPT, perf-opt planner)",
+              online_latency),
+        point("offline-batch",
+              "offline-heavy long-context batch under a 24h \
+               deadline (Gemma-27B, LongBench, 4R planner)",
+              offline_batch),
+        point("mixed-4r",
+              "mixed online+offline production mix with all \
+               four R strategies engaged (Llama-8B)",
+              mixed_4r),
+        point("splitwise-pd",
+              "prefill/decode-disaggregated H100 fleet with a \
+               fixed 3:1 split, Splitwise-style (Llama-70B)",
+              splitwise_pd),
+        point("multi-region",
+              "one deployment cross-reported over low/mid/high \
+               carbon-intensity regions (Llama-8B, 4R planner)",
+              multi_region),
+        point("legacy-reuse",
+              "legacy GPU pool (T4/V100/A40/A6000) with host-CPU \
+               Reuse in a clean grid (Llama-8B)",
+              legacy_reuse),
+        point("diurnal-shift",
+              "offline batch temporally shifted into the diurnal \
+               low-CI window vs run-immediately (Llama-8B)",
+              diurnal_shift),
+        point("carbon-router",
+              "carbon-greedy routing over a two-grid fleet \
+               (SE-North + MISO) vs carbon-blind JSQ (Llama-8B)",
+              carbon_router),
+        point("autoscale-diurnal",
+              "rolling-horizon elastic fleet tracking a diurnal \
+               demand + CI day vs a static peak-provisioned \
+               baseline (Llama-8B)",
+              autoscale_diurnal),
+        point("demand-surge",
+              "step-function load spike: epoch re-provisioning \
+               absorbs a 5x surge, then drains the surplus \
+               (Llama-8B, MISO)",
+              demand_surge),
+        point("production-day",
+              "production-scale compressed demand+CI day (~300 req/s) on \
+               a two-grid elastic fleet: streaming arrivals + \
+               rolling-horizon re-provisioning + carbon-greedy routing; \
+               >=2M requests at --duration 7200 (Llama-8B)",
+              production_day),
         Box::new(DesignPoint {
-            name: "online-latency",
-            description: "latency-optimized online chat serving \
-                          (Llama-8B, ShareGPT, perf-opt planner)",
-            build: online_latency,
-        }),
-        Box::new(DesignPoint {
-            name: "offline-batch",
-            description: "offline-heavy long-context batch under a 24h \
-                          deadline (Gemma-27B, LongBench, 4R planner)",
-            build: offline_batch,
-        }),
-        Box::new(DesignPoint {
-            name: "mixed-4r",
-            description: "mixed online+offline production mix with all \
-                          four R strategies engaged (Llama-8B)",
-            build: mixed_4r,
-        }),
-        Box::new(DesignPoint {
-            name: "splitwise-pd",
-            description: "prefill/decode-disaggregated H100 fleet with a \
-                          fixed 3:1 split, Splitwise-style (Llama-70B)",
-            build: splitwise_pd,
-        }),
-        Box::new(DesignPoint {
-            name: "multi-region",
-            description: "one deployment cross-reported over low/mid/high \
-                          carbon-intensity regions (Llama-8B, 4R planner)",
-            build: multi_region,
-        }),
-        Box::new(DesignPoint {
-            name: "legacy-reuse",
-            description: "legacy GPU pool (T4/V100/A40/A6000) with host-CPU \
-                          Reuse in a clean grid (Llama-8B)",
-            build: legacy_reuse,
-        }),
-        Box::new(DesignPoint {
-            name: "diurnal-shift",
-            description: "offline batch temporally shifted into the diurnal \
-                          low-CI window vs run-immediately (Llama-8B)",
-            build: diurnal_shift,
-        }),
-        Box::new(DesignPoint {
-            name: "carbon-router",
-            description: "carbon-greedy routing over a two-grid fleet \
-                          (SE-North + MISO) vs carbon-blind JSQ (Llama-8B)",
-            build: carbon_router,
-        }),
-        Box::new(DesignPoint {
-            name: "autoscale-diurnal",
-            description: "rolling-horizon elastic fleet tracking a diurnal \
-                          demand + CI day vs a static peak-provisioned \
-                          baseline (Llama-8B)",
-            build: autoscale_diurnal,
-        }),
-        Box::new(DesignPoint {
-            name: "demand-surge",
-            description: "step-function load spike: epoch re-provisioning \
-                          absorbs a 5x surge, then drains the surplus \
-                          (Llama-8B, MISO)",
-            build: demand_surge,
+            name: "production-week",
+            description: "seven compressed diurnal cycles with \
+                          weekday/weekend amplitude under rolling-horizon \
+                          re-provisioning; multi-million-request weeks at \
+                          long --duration (Llama-8B)",
+            build: production_week,
+            long_haul: true,
         }),
     ]
 }
@@ -330,9 +409,9 @@ mod tests {
     use super::*;
 
     #[test]
-    fn registry_has_at_least_ten_unique_named_scenarios() {
+    fn registry_has_at_least_twelve_unique_named_scenarios() {
         let r = registry();
-        assert!(r.len() >= 10, "only {} scenarios", r.len());
+        assert!(r.len() >= 12, "only {} scenarios", r.len());
         let mut names: Vec<&str> = r.iter().map(|s| s.name()).collect();
         names.sort_unstable();
         names.dedup();
@@ -376,6 +455,34 @@ mod tests {
         assert!(s.reprovision.is_some());
         assert!(s.workloads.iter().any(|w| matches!(
             w.arrivals, Arrivals::Step { .. })));
+    }
+
+    #[test]
+    fn scale_specs_are_wired() {
+        let d = by_names(&["production-day"]).unwrap().remove(0);
+        assert!(!d.long_haul(), "production-day must run in default sweeps");
+        let spec = d.spec();
+        assert!(spec.reprovision.is_some(), "production-day must re-provision");
+        assert!(matches!(spec.fleet, FleetPolicy::TwoRegion { .. }));
+        assert_eq!(spec.router, Router::CarbonGreedy);
+        assert!(spec.workloads.iter().any(|w| matches!(
+            w.arrivals, Arrivals::CompressedDiurnal { .. })));
+        // The day is sized so 7200 s carries >= 2M requests: aggregate
+        // mean rate must exceed 2e6 / 7200 ~ 278 req/s.
+        let rate: f64 = spec.workloads.iter().map(|w| match w.arrivals {
+            Arrivals::CompressedDiurnal { rate, .. } => rate,
+            Arrivals::Poisson { rate } => rate,
+            _ => 0.0,
+        }).sum();
+        assert!(rate >= 280.0, "production-day mean rate {rate} too low");
+
+        let w = by_names(&["production-week"]).unwrap().remove(0);
+        assert!(w.long_haul(), "production-week is gated behind --duration");
+        let spec = w.spec();
+        assert_eq!(spec.ci_profile, CiProfile::CompressedWeek);
+        assert!(spec.reprovision.is_some());
+        assert!(spec.workloads.iter().any(|wl| matches!(
+            wl.arrivals, Arrivals::Week { .. })));
     }
 
     #[test]

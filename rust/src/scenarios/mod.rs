@@ -23,14 +23,17 @@ pub use runner::{run_sweep, SweepConfig, SweepReport};
 
 use crate::carbon::intensity::{CiSignal, CiTrace, Region};
 use crate::planner::horizon::{self, HorizonConfig};
+use crate::planner::slicing::SliceAccum;
 use crate::planner::{self, PlanConfig};
-use crate::sim::{simulate, DeferralPolicy, FleetSchedule, Router, SimReport};
+use crate::sim::{simulate_stream, DeferralPolicy, FleetSchedule, Router,
+                 SimReport};
 use crate::strategies::{fleet_from_plan, sim_config, splitwise_fleet, Strategy};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::workload::slo::{slo_for, Slo};
-use crate::workload::{generate_trace, merge_traces, Arrivals, LengthDist,
-                      Request, RequestClass};
+use crate::workload::{generate_trace, merge_traces, Arrivals, ArrivalSource,
+                      GeneratorSource, LengthDist, MergedSource, Request,
+                      RequestClass, SliceSource};
 use std::collections::BTreeMap;
 use std::time::Duration;
 
@@ -65,6 +68,10 @@ pub enum CiProfile {
     /// ([`CiTrace::compressed_diurnal`]) so short sweeps see intra-day
     /// swings.
     CompressedDiurnal,
+    /// Seven compressed solar days across the trace duration — pairs with
+    /// [`Arrivals::Week`] so a production week sees demand and grid CI
+    /// cycle together.
+    CompressedWeek,
 }
 
 /// A declarative end-to-end design point.
@@ -115,6 +122,14 @@ pub trait Scenario: Send + Sync {
     fn name(&self) -> &'static str;
     fn description(&self) -> &'static str;
     fn spec(&self) -> ScenarioSpec;
+
+    /// Scale scenarios sized for explicit long `--duration` runs (e.g. a
+    /// multi-million-request production week). The CLI skips these in
+    /// `--all` sweeps unless a duration was given; selecting them by name
+    /// always runs them.
+    fn long_haul(&self) -> bool {
+        false
+    }
 
     /// Run the full pipeline at a seed/duration. Deterministic.
     fn run(&self, seed: u64, duration_s: f64) -> ScenarioOutcome {
@@ -176,6 +191,9 @@ pub struct ScenarioOutcome {
     /// controller (both 0 for static fleets).
     pub provision_events: usize,
     pub decommission_events: usize,
+    /// High-water mark of concurrently live jobs in the streaming core's
+    /// arena — the scale scenarios assert this stays far below `requests`.
+    pub peak_live_jobs: usize,
     /// Provisioned server-hours the embodied and idle carbon amortize
     /// over (static fleets: servers × duration).
     pub provisioned_server_hours: f64,
@@ -230,6 +248,7 @@ impl ScenarioOutcome {
             .set("truncated_prompts", self.truncated_prompts)
             .set("provision_events", self.provision_events)
             .set("decommission_events", self.decommission_events)
+            .set("peak_live_jobs", self.peak_live_jobs)
             .set("provisioned_server_hours", jnum(self.provisioned_server_hours))
             .set("extras", extras)
     }
@@ -264,8 +283,23 @@ fn scenario_plan_config(spec: &ScenarioSpec, ci: f64) -> PlanConfig {
     cfg
 }
 
+/// Lazy multi-class merged source for a spec: per-component
+/// [`GeneratorSource`]s under a k-way merge, with workload seeds derived
+/// from the scenario seed in component order — the same per-name
+/// deterministic seeds the materialized path uses.
+fn scenario_sources(spec: &ScenarioSpec, seed: u64, duration_s: f64)
+    -> MergedSource<GeneratorSource> {
+    let mut root = Rng::new(seed);
+    MergedSource::new(
+        spec.workloads
+            .iter()
+            .map(|w| GeneratorSource::new(w.arrivals, w.lengths, w.class,
+                                          duration_s, root.next_u64()))
+            .collect())
+}
+
 /// Generate the merged trace for a spec. Workload seeds derive from the
-/// scenario seed in component order.
+/// scenario seed in component order (identical to [`scenario_sources`]).
 fn scenario_trace(spec: &ScenarioSpec, seed: u64, duration_s: f64) -> Vec<Request> {
     let mut root = Rng::new(seed);
     let traces = spec
@@ -277,16 +311,49 @@ fn scenario_trace(spec: &ScenarioSpec, seed: u64, duration_s: f64) -> Vec<Reques
     merge_traces(traces)
 }
 
-/// Execute one design point end to end:
-/// trace → slices → planner (ILP) → fleet → cluster sim → carbon.
+/// Execute one design point end to end over lazy arrival streams:
+/// stream → slices → planner (ILP) → fleet → cluster sim → carbon.
+/// Memory stays bounded by the fleet, the in-flight jobs, and (for
+/// re-provisioning scenarios) one observation window of demand.
+pub fn run_spec(name: &str, spec: &ScenarioSpec, seed: u64, duration_s: f64)
+    -> ScenarioOutcome {
+    let mut fresh = || {
+        Box::new(scenario_sources(spec, seed, duration_s)) as Box<dyn ArrivalSource>
+    };
+    run_spec_with_sources(name, spec, seed, duration_s, &mut fresh)
+}
+
+/// Reference implementation for the differential suite: materialize the
+/// full trace once (the pre-streaming behavior) and run the identical
+/// pipeline through [`SliceSource`] adapters. Must produce byte-identical
+/// [`ScenarioOutcome`] JSON to [`run_spec`] — `tests/integration_streaming.rs`
+/// enforces this for every registry scenario.
+pub fn run_spec_materialized(name: &str, spec: &ScenarioSpec, seed: u64,
+                             duration_s: f64) -> ScenarioOutcome {
+    let trace = scenario_trace(spec, seed, duration_s);
+    let mut fresh = || {
+        Box::new(SliceSource::new(&trace)) as Box<dyn ArrivalSource + '_>
+    };
+    run_spec_with_sources(name, spec, seed, duration_s, &mut fresh)
+}
+
+/// Factory handing out a fresh copy of a scenario's arrival stream; each
+/// demand pass over the workload pulls its own.
+type SourceFactory<'a> = dyn FnMut() -> Box<dyn ArrivalSource + 'a>;
+
+/// The shared pipeline: every demand pass (peak-window scan, slicing,
+/// horizon scheduling, simulation, baselines) pulls a fresh stream from
+/// `fresh`, so the streaming and materialized paths run the *same* code
+/// over the same request sequences.
 ///
 /// With `spec.reprovision` set, the one-shot plan is sized on the trace's
 /// *peak* epoch window (what a peak-provisioned operator would deploy)
 /// and the rolling-horizon controller then schedules provisioning events
 /// over that template; the static all-on baseline lands in `extras`.
-pub fn run_spec(name: &str, spec: &ScenarioSpec, seed: u64, duration_s: f64)
+fn run_spec_with_sources<'a>(name: &str, spec: &ScenarioSpec, seed: u64,
+                             duration_s: f64, fresh: &mut SourceFactory<'a>)
     -> ScenarioOutcome {
-    use crate::planner::slicing::{cluster_slices, slice_trace};
+    use crate::planner::slicing::cluster_slices;
 
     let model = crate::models::llm(spec.model)
         .unwrap_or_else(|| panic!("scenario {name}: unknown model {}", spec.model));
@@ -295,19 +362,37 @@ pub fn run_spec(name: &str, spec: &ScenarioSpec, seed: u64, duration_s: f64)
         .or_else(|| slo_for(spec.model, false).map(|w| w.slo))
         .unwrap_or(Slo { ttft_s: 2.0, tpot_s: 0.2 });
 
-    let trace = scenario_trace(spec, seed, duration_s);
     let plan_cfg = scenario_plan_config(spec, ci);
     let plan = match &spec.reprovision {
         Some(h) => {
             let epoch = h.effective_epoch(duration_s);
-            let (lo, hi) = horizon::peak_epoch_window(&trace, epoch, duration_s);
-            let window = if hi > lo { &trace[lo..hi] } else { &trace[..] };
-            let slices = cluster_slices(&slice_trace(model, window, epoch, slo, 1));
+            let (t_lo, t_hi, n) =
+                horizon::peak_window_over(&mut *fresh(), epoch, duration_s);
+            let mut acc = SliceAccum::new();
+            let mut src = fresh();
+            while let Some(r) = src.next_request() {
+                // Empty stream: degenerate fallback over everything (which
+                // is also nothing); otherwise only the peak window counts,
+                // and the time-ordered stream contract lets us stop as
+                // soon as the window has passed instead of draining (and
+                // generating) the rest of a multi-million-request day.
+                if n > 0 && r.arrival_s >= t_hi {
+                    break;
+                }
+                if n == 0 || r.arrival_s >= t_lo {
+                    acc.push(&r);
+                }
+            }
+            let slices = cluster_slices(&acc.slices(model, epoch, slo, 1));
             planner::plan(&slices, &plan_cfg)
         }
         None => {
-            let slices =
-                cluster_slices(&slice_trace(model, &trace, duration_s, slo, 1));
+            let mut acc = SliceAccum::new();
+            let mut src = fresh();
+            while let Some(r) = src.next_request() {
+                acc.push(&r);
+            }
+            let slices = cluster_slices(&acc.slices(model, duration_s, slo, 1));
             planner::plan(&slices, &plan_cfg)
         }
     };
@@ -340,6 +425,12 @@ pub fn run_spec(name: &str, spec: &ScenarioSpec, seed: u64, duration_s: f64)
         CiProfile::CompressedDiurnal => CiSignal::Trace(
             CiTrace::compressed_diurnal(spec.region, duration_s, 2, 96,
                                         seed ^ 0xD1A)),
+        // 8 periods of duration/7: like the diurnal profile's 2x-duration
+        // trace, the extra cycle keeps post-trace-end completion time on a
+        // live diurnal signal instead of a clamped final step.
+        CiProfile::CompressedWeek => CiSignal::Trace(
+            CiTrace::compressed_diurnal(spec.region, duration_s / 7.0, 8, 96,
+                                        seed ^ 0xD1A)),
     };
     if spec.defer_offline {
         cfg.deferral = DeferralPolicy::LowCiWindow {
@@ -349,10 +440,12 @@ pub fn run_spec(name: &str, spec: &ScenarioSpec, seed: u64, duration_s: f64)
         };
     }
     if let Some(h) = &spec.reprovision {
-        cfg.fleet_plan = horizon::plan_schedule(
-            model, &trace, &cfg.servers, &plan_cfg, &cfg.ci, slo, h, duration_s);
+        cfg.fleet_plan = horizon::plan_schedule_stream(
+            model, &mut *fresh(), &cfg.servers, &plan_cfg, &cfg.ci, slo, h,
+            duration_s);
     }
-    let mut r: SimReport = simulate(model, &trace, &cfg, slo.ttft_s, slo.tpot_s);
+    let r: SimReport =
+        simulate_stream(model, &mut *fresh(), &cfg, slo.ttft_s, slo.tpot_s);
 
     let mut extras = BTreeMap::new();
     for region in &spec.compare_regions {
@@ -367,7 +460,8 @@ pub fn run_spec(name: &str, spec: &ScenarioSpec, seed: u64, duration_s: f64)
         // Run-immediately baseline: same trace/fleet/signal, no shifting.
         let mut base_cfg = cfg.clone();
         base_cfg.deferral = DeferralPolicy::Immediate;
-        let mut base = simulate(model, &trace, &base_cfg, slo.ttft_s, slo.tpot_s);
+        let base = simulate_stream(model, &mut *fresh(), &base_cfg,
+                                   slo.ttft_s, slo.tpot_s);
         extras.insert("op_kg_immediate".into(), base.op_kg);
         extras.insert("carbon_kg_immediate".into(), base.carbon_kg());
         extras.insert("slo_attainment_immediate".into(), base.slo_attainment);
@@ -377,7 +471,8 @@ pub fn run_spec(name: &str, spec: &ScenarioSpec, seed: u64, duration_s: f64)
         // JSQ baseline: identical fleet/grids, carbon-blind routing.
         let mut base_cfg = cfg.clone();
         base_cfg.router = Router::Jsq;
-        let mut base = simulate(model, &trace, &base_cfg, slo.ttft_s, slo.tpot_s);
+        let base = simulate_stream(model, &mut *fresh(), &base_cfg,
+                                   slo.ttft_s, slo.tpot_s);
         extras.insert("op_kg_jsq".into(), base.op_kg);
         extras.insert("carbon_kg_jsq".into(), base.carbon_kg());
         extras.insert("ttft_p90_s_jsq".into(), base.ttft.p90());
@@ -388,7 +483,8 @@ pub fn run_spec(name: &str, spec: &ScenarioSpec, seed: u64, duration_s: f64)
         // must strictly beat on total (op + amortized embodied) carbon.
         let mut base_cfg = cfg.clone();
         base_cfg.fleet_plan = FleetSchedule::default();
-        let mut base = simulate(model, &trace, &base_cfg, slo.ttft_s, slo.tpot_s);
+        let base = simulate_stream(model, &mut *fresh(), &base_cfg,
+                                   slo.ttft_s, slo.tpot_s);
         extras.insert("op_kg_static".into(), base.op_kg);
         extras.insert("emb_kg_static".into(), base.emb_kg);
         extras.insert("carbon_kg_static".into(), base.carbon_kg());
@@ -404,7 +500,7 @@ pub fn run_spec(name: &str, spec: &ScenarioSpec, seed: u64, duration_s: f64)
         model: spec.model.to_string(),
         region: spec.region.name().to_string(),
         ci,
-        requests: trace.len(),
+        requests: r.arrivals,
         completed: r.completed,
         generated_tokens: r.generated_tokens,
         fleet_gpus: plan.total_gpus(),
@@ -429,6 +525,7 @@ pub fn run_spec(name: &str, spec: &ScenarioSpec, seed: u64, duration_s: f64)
         truncated_prompts: r.truncated_prompts,
         provision_events: r.provision_events,
         decommission_events: r.decommission_events,
+        peak_live_jobs: r.peak_live_jobs,
         provisioned_server_hours: r.provisioned_server_hours,
         extras,
     }

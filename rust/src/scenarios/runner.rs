@@ -55,12 +55,14 @@ impl SweepReport {
 
     /// Human-readable summary (latency in ms, SLO in %). The `trunc`
     /// column surfaces context-cap prompt clipping; pair the table with
-    /// [`SweepReport::truncation_warnings`].
+    /// [`SweepReport::truncation_warnings`]. `peak-jobs` is the streaming
+    /// core's arena high-water mark — at production trace lengths it
+    /// should sit orders of magnitude below `req`.
     pub fn summary_table(&self) -> Table {
         let mut t = Table::new(&[
             "scenario", "carbon kg", "op kg", "emb kg", "TTFT p50 ms",
             "TTFT p90 ms", "TPOT p50 ms", "SLO %", "gpus", "srv-hrs", "req",
-            "trunc",
+            "peak-jobs", "trunc",
         ]);
         for o in &self.outcomes {
             t.row(&[
@@ -75,6 +77,7 @@ impl SweepReport {
                 format!("{}", o.fleet_gpus),
                 fnum(o.provisioned_server_hours),
                 format!("{}", o.requests),
+                format!("{}", o.peak_live_jobs),
                 format!("{}", o.truncated_prompts),
             ]);
         }

@@ -22,10 +22,15 @@ pub struct CarbonMeter {
     /// `SimConfig::servers`.
     overrides: Vec<Option<f64>>,
     op_kg: f64,
-    /// Closed provisioned intervals per server, in time order.
+    /// Closed provisioned intervals per server, in time order (consulted
+    /// only for traced signals when pricing idle energy).
     intervals: Vec<Vec<(f64, f64)>>,
     /// Start of each server's currently open provisioned interval.
     open_since: Vec<Option<f64>>,
+    /// Running per-server provisioned-second totals, maintained at
+    /// decommission time so [`CarbonMeter::provisioned_s`] is O(1) on the
+    /// per-server finish path instead of re-summing interval lists.
+    total_s: Vec<f64>,
 }
 
 impl CarbonMeter {
@@ -39,6 +44,7 @@ impl CarbonMeter {
             op_kg: 0.0,
             intervals: vec![Vec::new(); n],
             open_since: vec![None; n],
+            total_s: vec![0.0; n],
         }
     }
 
@@ -53,7 +59,9 @@ impl CarbonMeter {
     /// Close `server`'s open provisioned interval at `t_s`.
     pub(crate) fn decommission(&mut self, server: usize, t_s: f64) {
         if let Some(t0) = self.open_since[server].take() {
-            self.intervals[server].push((t0, t_s.max(t0)));
+            let t1 = t_s.max(t0);
+            self.intervals[server].push((t0, t1));
+            self.total_s[server] += t1 - t0;
         }
     }
 
@@ -65,9 +73,9 @@ impl CarbonMeter {
     }
 
     /// Total provisioned seconds accumulated by `server` so far (open
-    /// intervals count only after [`CarbonMeter::finalize`]).
+    /// intervals count only after [`CarbonMeter::finalize`]). O(1).
     pub fn provisioned_s(&self, server: usize) -> f64 {
-        self.intervals[server].iter().map(|(a, b)| b - a).sum()
+        self.total_s[server]
     }
 
     /// Mean CI over `server`'s provisioned intervals, weighted by
@@ -76,6 +84,9 @@ impl CarbonMeter {
     /// horizon mean for a never-provisioned server (its idle energy is
     /// zero anyway).
     fn provisioned_mean_ci(&self, server: usize, horizon_s: f64) -> f64 {
+        if let CiSignal::Flat(ci) = &self.primary {
+            return *ci; // interval weighting is moot for a flat signal
+        }
         let iv = &self.intervals[server];
         let total: f64 = iv.iter().map(|(a, b)| b - a).sum();
         if total <= 0.0 {
@@ -101,10 +112,15 @@ impl CarbonMeter {
     }
 
     /// Charge a busy interval's energy at the mean CI over the interval.
+    /// Called once per busy period — the meter's hot path — so the flat
+    /// signal skips the interval-integration machinery entirely.
     pub fn record(&mut self, server: usize, t0_s: f64, dur_s: f64, energy_j: f64) {
         let ci = match self.overrides.get(server).copied().flatten() {
             Some(ci) => ci,
-            None => self.primary.mean_over(t0_s, t0_s + dur_s.max(0.0)),
+            None => match &self.primary {
+                CiSignal::Flat(ci) => *ci,
+                sig => sig.mean_over(t0_s, t0_s + dur_s.max(0.0)),
+            },
         };
         self.op_kg += op_kg_from_joules(energy_j, ci);
     }

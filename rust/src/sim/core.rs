@@ -9,10 +9,18 @@
 //! `busy_until > now + 1e-12` stale-wake epsilon: a `Complete` event names
 //! the busy period it ends, and `Wake` nudges are ignored while a period is
 //! in flight.
+//!
+//! The engine is *streaming*: it pulls requests from an
+//! [`ArrivalSource`] one at a time and keeps exactly one pending `Arrival`
+//! event in the queue (pull-next-on-pop), with job state in a recycling
+//! [`JobArena`]. Heap size and job memory therefore scale with the fleet
+//! and the in-flight work, never with the trace length — the property the
+//! `production-day`/`production-week` scale scenarios (and the CI
+//! `scale-smoke` RSS gate) exercise end to end.
 
 use crate::carbon::intensity::CiSignal;
 use crate::models::LlmSpec;
-use crate::workload::{Request, RequestClass};
+use crate::workload::{ArrivalSource, RequestClass};
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
@@ -20,7 +28,7 @@ use super::carbon_meter::CarbonMeter;
 use super::metrics::{MetricsSink, ServerUsage, SimReport};
 use super::policy::{BatchPolicy, Batcher, DeferState, DeferralPolicy,
                     RouteCtx, RoutePolicy, Router};
-use super::server::{Job, Lifecycle, Role, Server, ServerSpec,
+use super::server::{Job, JobArena, Lifecycle, Role, Server, ServerSpec,
                     MAX_PROMPT_TOKENS};
 
 /// What a scheduled fleet event does to its server.
@@ -102,9 +110,11 @@ impl SimConfig {
     }
 }
 
+/// Discrete-event payloads. Public so the property suite can drive
+/// [`EventQueue`] directly; the engine itself is crate-internal.
 #[derive(Debug, Clone, Copy, PartialEq)]
-pub(crate) enum EventKind {
-    /// A request enters the system.
+pub enum EventKind {
+    /// A request enters the system (its job is already in the arena).
     Arrival(usize),
     /// A deferred offline request is released to the routers.
     Release(usize),
@@ -125,7 +135,7 @@ pub(crate) enum EventKind {
 }
 
 #[derive(Debug, Clone, Copy)]
-pub(crate) struct Event {
+pub struct Event {
     pub t: f64,
     /// Monotonic sequence number assigned at push: makes the order total
     /// and deterministic (FIFO among equal timestamps).
@@ -154,7 +164,7 @@ impl Ord for Event {
 
 /// The sequence-numbered event queue.
 #[derive(Debug, Default)]
-pub(crate) struct EventQueue {
+pub struct EventQueue {
     heap: BinaryHeap<Event>,
     next_seq: u64,
 }
@@ -169,16 +179,26 @@ impl EventQueue {
     pub fn pop(&mut self) -> Option<Event> {
         self.heap.pop()
     }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
 }
 
 /// The simulation engine. Stepping logic (prefill/decode) lives in
-/// `server.rs`; this file owns the event loop and lifecycle.
+/// `server.rs`; this file owns the event loop, arrival streaming, and
+/// lifecycle.
 pub(crate) struct Sim<'a> {
     pub model: &'a LlmSpec,
     pub cfg: &'a SimConfig,
     pub route: &'a dyn RoutePolicy,
     pub batch: &'a dyn BatchPolicy,
-    pub jobs: Vec<Job>,
+    pub source: &'a mut dyn ArrivalSource,
+    pub jobs: JobArena,
     pub servers: Vec<Server>,
     pub queue: EventQueue,
     pub metrics: MetricsSink,
@@ -186,34 +206,20 @@ pub(crate) struct Sim<'a> {
     pub defer: DeferState,
     pub prompt_eligible: Vec<usize>,
     pub now: f64,
+    slo_ttft: f64,
+    slo_tpot: f64,
+    /// Latest arrival time pulled so far (the demand horizon).
+    last_arrival: f64,
+    /// Reusable batch-selection buffer (hot-path allocation avoidance).
+    pub(crate) batch_scratch: Vec<usize>,
 }
 
 impl<'a> Sim<'a> {
-    pub fn new(model: &'a LlmSpec, trace: &[Request], cfg: &'a SimConfig,
-               slo_ttft: f64, slo_tpot: f64, route: &'a dyn RoutePolicy,
-               batch: &'a dyn BatchPolicy) -> Sim<'a> {
+    pub fn new(model: &'a LlmSpec, source: &'a mut dyn ArrivalSource,
+               cfg: &'a SimConfig, slo_ttft: f64, slo_tpot: f64,
+               route: &'a dyn RoutePolicy, batch: &'a dyn BatchPolicy)
+        -> Sim<'a> {
         assert_eq!(cfg.servers.len(), cfg.emb_kg_per_hr.len());
-        let mut metrics = MetricsSink::default();
-        let jobs: Vec<Job> = trace
-            .iter()
-            .map(|r| {
-                if r.prompt_tokens > MAX_PROMPT_TOKENS {
-                    metrics.truncated_prompts += 1;
-                }
-                Job {
-                    arrival: r.arrival_s,
-                    prompt: r.prompt_tokens.min(MAX_PROMPT_TOKENS),
-                    output: r.output_tokens.max(1),
-                    class: r.class,
-                    slo_ttft,
-                    slo_tpot,
-                    deadline: cfg.deferral.deadline_for(r.class, r.arrival_s),
-                    dispatched_t: r.arrival_s,
-                    first_token_t: None,
-                    decoded: 0,
-                }
-            })
-            .collect();
         let plan = &cfg.fleet_plan;
         assert!(plan.initially_active.is_empty()
                     || plan.initially_active.len() == cfg.servers.len(),
@@ -239,37 +245,69 @@ impl<'a> Sim<'a> {
             };
             queue.push(e.t, kind);
         }
-        for (i, j) in jobs.iter().enumerate() {
-            queue.push(j.arrival, EventKind::Arrival(i));
-        }
         let mut sim = Sim {
             model,
             cfg,
             route,
             batch,
-            jobs,
+            source,
+            jobs: JobArena::new(),
             servers,
             queue,
-            metrics,
+            metrics: MetricsSink::default(),
             meter,
             defer: DeferState::new(cfg.deferral),
             prompt_eligible: Vec::new(),
             now: 0.0,
+            slo_ttft,
+            slo_tpot,
+            last_arrival: 0.0,
+            batch_scratch: Vec::new(),
         };
+        sim.pull_next_arrival();
         sim.refresh_eligibility();
         assert!(!sim.prompt_eligible.is_empty(),
                 "no active prompt-capable servers at t=0");
         sim
     }
 
+    /// Pull the next request off the stream and schedule its `Arrival` —
+    /// the one-pending-arrival invariant. Called once at start-up and then
+    /// exactly once per popped `Arrival`, so the event heap never holds
+    /// more than one future arrival regardless of trace length.
+    fn pull_next_arrival(&mut self) {
+        let Some(r) = self.source.next_request() else { return };
+        debug_assert!(r.arrival_s >= self.last_arrival,
+                      "arrival source must be time-ordered");
+        self.last_arrival = self.last_arrival.max(r.arrival_s);
+        self.metrics.arrivals += 1;
+        if r.prompt_tokens > MAX_PROMPT_TOKENS {
+            self.metrics.truncated_prompts += 1;
+        }
+        let slot = self.jobs.alloc(Job {
+            arrival: r.arrival_s,
+            prompt: r.prompt_tokens.min(MAX_PROMPT_TOKENS),
+            output: r.output_tokens.max(1),
+            class: r.class,
+            slo_ttft: self.slo_ttft,
+            slo_tpot: self.slo_tpot,
+            deadline: self.cfg.deferral.deadline_for(r.class, r.arrival_s),
+            dispatched_t: r.arrival_s,
+            first_token_t: None,
+            decoded: 0,
+        });
+        self.queue.push(r.arrival_s, EventKind::Arrival(slot));
+    }
+
     /// Rebuild the routing-eligible set (active, prompt-capable servers)
     /// after a lifecycle transition. Fleets are small; a rebuild keeps
     /// the set trivially consistent.
     fn refresh_eligibility(&mut self) {
-        self.prompt_eligible = self.servers.iter().enumerate()
-            .filter(|(_, s)| s.spec.role != Role::Decode && s.is_admitting())
-            .map(|(i, _)| i)
-            .collect();
+        self.prompt_eligible.clear();
+        self.prompt_eligible.extend(
+            self.servers.iter().enumerate()
+                .filter(|(_, s)| s.spec.role != Role::Decode && s.is_admitting())
+                .map(|(i, _)| i));
     }
 
     /// Schedule retirement for a draining server that has gone empty.
@@ -288,6 +326,10 @@ impl<'a> Sim<'a> {
             self.metrics.events += 1;
             match ev.kind {
                 EventKind::Arrival(ji) => {
+                    // Keep the stream primed before handling this arrival,
+                    // so the next arrival is in the heap (and ordered)
+                    // before any same-time Wake/Handoff churn.
+                    self.pull_next_arrival();
                     if self.jobs[ji].class == RequestClass::Offline {
                         let release =
                             self.defer.release_time(self.now, self.meter.primary());
@@ -399,8 +441,10 @@ impl<'a> Sim<'a> {
     /// server-hour (the meter's intervals), so an elastic fleet that
     /// decommissions surplus servers is visibly cheaper than a static
     /// peak-provisioned one.
-    pub fn finish(mut self, trace: &[Request]) -> SimReport {
-        let dur = self.now.max(trace.last().map(|r| r.arrival_s).unwrap_or(0.0));
+    pub fn finish(mut self) -> SimReport {
+        debug_assert_eq!(self.jobs.live(), 0,
+                         "jobs still live after the event queue drained");
+        let dur = self.now.max(self.last_arrival);
         self.meter.finalize(dur);
         let mut energy = 0.0;
         let mut emb = 0.0;
@@ -421,6 +465,7 @@ impl<'a> Sim<'a> {
                 provisioned_s: prov_s,
             });
         }
+        self.metrics.peak_live_jobs = self.jobs.peak_live();
         self.metrics.into_report(dur, energy, self.meter.op_kg(), emb, per_server)
     }
 }
@@ -429,8 +474,9 @@ impl<'a> Sim<'a> {
 mod tests {
     use super::*;
     use crate::models;
-    use crate::sim::{homogeneous_fleet, simulate};
-    use crate::workload::{generate_trace, Arrivals, LengthDist};
+    use crate::sim::{homogeneous_fleet, simulate, simulate_stream};
+    use crate::workload::{generate_trace, Arrivals, GeneratorSource,
+                          LengthDist, Request};
 
     fn small_trace(rate: f64, seed: u64) -> Vec<Request> {
         generate_trace(Arrivals::Poisson { rate }, LengthDist::ShareGpt,
@@ -478,17 +524,45 @@ mod tests {
         let cfg = cfg_for(homogeneous_fleet("A100-40", 4, m, 2048), Router::Jsq);
         let r = simulate(m, &tr, &cfg, 0.5, 0.1);
         assert_eq!(r.completed, tr.len());
+        assert_eq!(r.arrivals, tr.len());
         assert!(r.generated_tokens > 0);
         assert!(r.op_kg > 0.0 && r.emb_kg > 0.0);
         assert!(r.events >= 2 * tr.len());
     }
 
     #[test]
+    fn streaming_keeps_job_memory_bounded_by_in_flight_work() {
+        let m = models::llm("llama-8b").unwrap();
+        let cfg = cfg_for(homogeneous_fleet("A100-40", 4, m, 2048), Router::Jsq);
+        let mut src = GeneratorSource::new(Arrivals::Poisson { rate: 8.0 },
+                                           LengthDist::ShareGpt,
+                                           RequestClass::Online, 240.0, 17);
+        let r = simulate_stream(m, &mut src, &cfg, 0.5, 0.1);
+        assert_eq!(r.completed, r.arrivals);
+        assert!(r.arrivals > 1000, "trace too small: {}", r.arrivals);
+        // The arena high-water mark tracks concurrent work, not the trace.
+        assert!(r.peak_live_jobs * 4 < r.arrivals,
+                "peak live {} vs {} arrivals — arena is not recycling",
+                r.peak_live_jobs, r.arrivals);
+    }
+
+    #[test]
+    fn empty_source_still_closes_the_books() {
+        let m = models::llm("llama-8b").unwrap();
+        let cfg = cfg_for(homogeneous_fleet("A100-40", 2, m, 2048), Router::Jsq);
+        let r = simulate(m, &[], &cfg, 0.5, 0.1);
+        assert_eq!(r.arrivals, 0);
+        assert_eq!(r.completed, 0);
+        assert_eq!(r.peak_live_jobs, 0);
+        assert_eq!(r.sim_duration_s, 0.0);
+    }
+
+    #[test]
     fn overload_degrades_ttft() {
         let m = models::llm("llama-8b").unwrap();
         let cfg = cfg_for(homogeneous_fleet("A100-40", 2, m, 2048), Router::Jsq);
-        let mut light = simulate(m, &small_trace(0.5, 2), &cfg, 0.5, 0.1);
-        let mut heavy = simulate(m, &small_trace(12.0, 2), &cfg, 0.5, 0.1);
+        let light = simulate(m, &small_trace(0.5, 2), &cfg, 0.5, 0.1);
+        let heavy = simulate(m, &small_trace(12.0, 2), &cfg, 0.5, 0.1);
         assert!(heavy.ttft.p90() > light.ttft.p90(),
                 "heavy {} vs light {}", heavy.ttft.p90(), light.ttft.p90());
     }
@@ -499,8 +573,8 @@ mod tests {
         let tr = small_trace(8.0, 3);
         let small = cfg_for(homogeneous_fleet("A100-40", 2, m, 2048), Router::Jsq);
         let big = cfg_for(homogeneous_fleet("A100-40", 8, m, 2048), Router::Jsq);
-        let mut r_small = simulate(m, &tr, &small, 0.5, 0.1);
-        let mut r_big = simulate(m, &tr, &big, 0.5, 0.1);
+        let r_small = simulate(m, &tr, &small, 0.5, 0.1);
+        let r_big = simulate(m, &tr, &big, 0.5, 0.1);
         assert!(r_big.ttft.p90() <= r_small.ttft.p90() * 1.1 + 1e-9,
                 "big {} small {}", r_big.ttft.p90(), r_small.ttft.p90());
         assert!(r_big.slo_attainment >= r_small.slo_attainment);

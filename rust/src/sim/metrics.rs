@@ -2,14 +2,21 @@
 //! TTFT/TPOT samples and completion/SLO/deadline counters as the core
 //! raises events (instead of the old 13-`&mut`-argument threading), then
 //! folds into the final [`SimReport`].
+//!
+//! Latency percentiles accumulate into fixed-bin log-spaced
+//! [`Histogram`]s, not per-sample vectors — O(1) memory at any trace
+//! scale, which is what lets the streaming core hold a multi-million
+//! request production day without the metrics sink growing with it.
 
-use crate::util::stats::Samples;
+use crate::util::stats::Histogram;
 
 /// Streaming collector the event core and server stepping write into.
 #[derive(Debug, Default)]
 pub struct MetricsSink {
-    pub ttft: Samples,
-    pub tpot: Samples,
+    pub ttft: Histogram,
+    pub tpot: Histogram,
+    /// Requests pulled from the arrival stream.
+    pub arrivals: usize,
     pub completed: usize,
     pub generated_tokens: usize,
     pub slo_ok: usize,
@@ -27,6 +34,9 @@ pub struct MetricsSink {
     pub provision_events: usize,
     /// Draining servers that emptied and were decommissioned.
     pub decommission_events: usize,
+    /// High-water mark of concurrently live jobs in the arena — the
+    /// streaming core's memory bound (set at finish).
+    pub peak_live_jobs: usize,
 }
 
 impl MetricsSink {
@@ -77,6 +87,7 @@ impl MetricsSink {
         SimReport {
             ttft: std::mem::take(&mut self.ttft),
             tpot: std::mem::take(&mut self.tpot),
+            arrivals: self.arrivals,
             completed: self.completed,
             generated_tokens: self.generated_tokens,
             sim_duration_s,
@@ -90,6 +101,7 @@ impl MetricsSink {
             events: self.events,
             provision_events: self.provision_events,
             decommission_events: self.decommission_events,
+            peak_live_jobs: self.peak_live_jobs,
             provisioned_server_hours,
             per_server,
         }
@@ -111,8 +123,11 @@ pub struct ServerUsage {
 /// Simulation outcome.
 #[derive(Debug)]
 pub struct SimReport {
-    pub ttft: Samples,
-    pub tpot: Samples,
+    pub ttft: Histogram,
+    pub tpot: Histogram,
+    /// Requests pulled from the arrival stream (== trace length once the
+    /// queue drains).
+    pub arrivals: usize,
     pub completed: usize,
     pub generated_tokens: usize,
     pub sim_duration_s: f64,
@@ -135,6 +150,9 @@ pub struct SimReport {
     pub provision_events: usize,
     /// Draining servers that emptied and were decommissioned.
     pub decommission_events: usize,
+    /// High-water mark of concurrently live jobs — memory is bounded by
+    /// this (plus the fleet), never by `arrivals`.
+    pub peak_live_jobs: usize,
     /// Fleet-wide provisioned server-hours — the base embodied and idle
     /// carbon amortize over (static fleets: n_servers · duration).
     pub provisioned_server_hours: f64,

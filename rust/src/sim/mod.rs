@@ -22,6 +22,12 @@
 //! Provisioning (planner ILP) and runtime behaviour see the *same* carbon
 //! signal — the paper's cross-layer point — and every policy is a trait
 //! impl, so runtime experiments never fork the core.
+//!
+//! The core is *streaming*: arrivals pull lazily from a
+//! [`crate::workload::ArrivalSource`] (one pending `Arrival` in the heap,
+//! job slots recycled by a [`JobArena`], latency percentiles in fixed-bin
+//! histograms), so a multi-million-request production day runs in memory
+//! bounded by the fleet and the in-flight jobs, not the trace length.
 
 pub mod carbon_meter;
 pub mod core;
@@ -30,33 +36,55 @@ pub mod policy;
 pub mod server;
 
 pub use self::carbon_meter::CarbonMeter;
-pub use self::core::{FleetAction, FleetEvent, FleetSchedule, SimConfig};
+pub use self::core::{Event, EventKind, EventQueue, FleetAction, FleetEvent,
+                     FleetSchedule, SimConfig};
 pub use self::metrics::{MetricsSink, ServerUsage, SimReport};
 pub use self::policy::{BatchPolicy, Batcher, CarbonGreedy, DeferralPolicy,
                        FifoBatch, Jsq, OnlineFirstBatch, RouteCtx, RoutePolicy,
                        Router, WorkloadAware, LONG_PROMPT_TOKENS};
-pub use self::server::{homogeneous_fleet, ClassQueue, Job, Lifecycle, Role,
-                       Server, ServerSpec, MAX_PROMPT_TOKENS};
+pub use self::server::{homogeneous_fleet, ClassQueue, Job, JobArena, Lifecycle,
+                       Role, Server, ServerSpec, MAX_PROMPT_TOKENS};
 
 use crate::models::LlmSpec;
-use crate::workload::Request;
+use crate::workload::{ArrivalSource, Request, SliceSource};
 
-/// Run the simulator over a trace for a model with the config's selected
-/// policies.
+/// Run the simulator over a materialized trace — a thin adapter over the
+/// streaming path ([`simulate_stream`]); the two are byte-identical by
+/// construction and the differential suite keeps them that way.
 pub fn simulate(model: &LlmSpec, trace: &[Request], cfg: &SimConfig,
                 slo_ttft: f64, slo_tpot: f64) -> SimReport {
-    simulate_with(model, trace, cfg, slo_ttft, slo_tpot,
-                  cfg.router.policy(), cfg.batcher.policy())
+    let mut src = SliceSource::new(trace);
+    simulate_stream(model, &mut src, cfg, slo_ttft, slo_tpot)
 }
 
-/// Run with explicit policy objects — the extension point for custom
-/// routing/batching studies that are not in the [`Router`]/[`Batcher`]
-/// registries.
+/// Run the simulator over a streaming [`ArrivalSource`] with the config's
+/// selected policies. Exactly one pending arrival lives in the event heap
+/// at a time and job slots recycle, so memory is bounded by the fleet and
+/// the in-flight work — this is the production-scale entry point.
+pub fn simulate_stream(model: &LlmSpec, source: &mut dyn ArrivalSource,
+                       cfg: &SimConfig, slo_ttft: f64, slo_tpot: f64)
+    -> SimReport {
+    simulate_stream_with(model, source, cfg, slo_ttft, slo_tpot,
+                         cfg.router.policy(), cfg.batcher.policy())
+}
+
+/// [`simulate`] with explicit policy objects — the extension point for
+/// custom routing/batching studies that are not in the
+/// [`Router`]/[`Batcher`] registries.
 pub fn simulate_with(model: &LlmSpec, trace: &[Request], cfg: &SimConfig,
                      slo_ttft: f64, slo_tpot: f64, route: &dyn RoutePolicy,
                      batch: &dyn BatchPolicy) -> SimReport {
-    let mut sim = self::core::Sim::new(model, trace, cfg, slo_ttft, slo_tpot,
+    let mut src = SliceSource::new(trace);
+    simulate_stream_with(model, &mut src, cfg, slo_ttft, slo_tpot, route, batch)
+}
+
+/// [`simulate_stream`] with explicit policy objects.
+pub fn simulate_stream_with(model: &LlmSpec, source: &mut dyn ArrivalSource,
+                            cfg: &SimConfig, slo_ttft: f64, slo_tpot: f64,
+                            route: &dyn RoutePolicy, batch: &dyn BatchPolicy)
+    -> SimReport {
+    let mut sim = self::core::Sim::new(model, source, cfg, slo_ttft, slo_tpot,
                                        route, batch);
     sim.run();
-    sim.finish(trace)
+    sim.finish()
 }

@@ -36,16 +36,19 @@ pub trait RoutePolicy: Send + Sync {
 
 /// Forms prefill/decode batches from a server's queues. Implementations
 /// *remove* the jobs they pick (O(batch) front pops on [`ClassQueue`] —
-/// never a full-queue scan); `jobs` is read-only context for policies
-/// that want lengths or deadlines.
+/// never a full-queue scan) and append them to `out`, a caller-owned
+/// scratch buffer the core recycles across iterations so the hot path is
+/// allocation-free. `jobs` is read-only context for policies that want
+/// lengths or deadlines — it is the raw arena slot view, so only index
+/// ids taken from the queue.
 pub trait BatchPolicy: Send + Sync {
     fn name(&self) -> &'static str;
-    /// Remove and return up to `max` job ids for the next prefill batch.
-    fn select_prefill(&self, queue: &mut ClassQueue, jobs: &[Job], max: usize)
-        -> Vec<usize>;
-    /// Remove and return up to `max` job ids to admit into decode.
-    fn select_decode(&self, queue: &mut ClassQueue, jobs: &[Job], max: usize)
-        -> Vec<usize>;
+    /// Remove up to `max` job ids for the next prefill batch into `out`.
+    fn select_prefill(&self, queue: &mut ClassQueue, jobs: &[Job], max: usize,
+                      out: &mut Vec<usize>);
+    /// Remove up to `max` job ids to admit into decode into `out`.
+    fn select_decode(&self, queue: &mut ClassQueue, jobs: &[Job], max: usize,
+                     out: &mut Vec<usize>);
 }
 
 /// Join-shortest-queue over eligible servers (Splitwise's policy).
@@ -128,14 +131,14 @@ impl BatchPolicy for FifoBatch {
         "fifo"
     }
 
-    fn select_prefill(&self, queue: &mut ClassQueue, _jobs: &[Job], max: usize)
-        -> Vec<usize> {
-        queue.pop_fifo(max)
+    fn select_prefill(&self, queue: &mut ClassQueue, _jobs: &[Job], max: usize,
+                      out: &mut Vec<usize>) {
+        queue.pop_fifo_into(max, out);
     }
 
-    fn select_decode(&self, queue: &mut ClassQueue, _jobs: &[Job], max: usize)
-        -> Vec<usize> {
-        queue.pop_fifo(max)
+    fn select_decode(&self, queue: &mut ClassQueue, _jobs: &[Job], max: usize,
+                     out: &mut Vec<usize>) {
+        queue.pop_fifo_into(max, out);
     }
 }
 
@@ -149,14 +152,14 @@ impl BatchPolicy for OnlineFirstBatch {
         "online-first"
     }
 
-    fn select_prefill(&self, queue: &mut ClassQueue, _jobs: &[Job], max: usize)
-        -> Vec<usize> {
-        queue.pop_online_first(max)
+    fn select_prefill(&self, queue: &mut ClassQueue, _jobs: &[Job], max: usize,
+                      out: &mut Vec<usize>) {
+        queue.pop_online_first_into(max, out);
     }
 
-    fn select_decode(&self, queue: &mut ClassQueue, _jobs: &[Job], max: usize)
-        -> Vec<usize> {
-        queue.pop_online_first(max)
+    fn select_decode(&self, queue: &mut ClassQueue, _jobs: &[Job], max: usize,
+                     out: &mut Vec<usize>) {
+        queue.pop_online_first_into(max, out);
     }
 }
 
@@ -437,17 +440,20 @@ mod tests {
             }
             q
         };
+        let select = |policy: &dyn BatchPolicy, q: &mut ClassQueue, max| {
+            let mut out = Vec::new();
+            policy.select_prefill(q, &jobs, max, &mut out);
+            out
+        };
         // Online 0,3,4,5 fill the batch before offline 1,2 get a slot.
         let mut q = fill(&jobs);
-        assert_eq!(OnlineFirstBatch.select_prefill(&mut q, &jobs, 4),
-                   vec![0, 3, 4, 5]);
+        assert_eq!(select(&OnlineFirstBatch, &mut q, 4), vec![0, 3, 4, 5]);
         assert_eq!(q.len(), 2, "unpicked jobs stay queued");
         let mut q = fill(&jobs);
-        assert_eq!(OnlineFirstBatch.select_prefill(&mut q, &jobs, 5),
-                   vec![0, 3, 4, 5, 1]);
+        assert_eq!(select(&OnlineFirstBatch, &mut q, 5), vec![0, 3, 4, 5, 1]);
         // Strict FIFO is blind to class.
         let mut q = fill(&jobs);
-        assert_eq!(FifoBatch.select_prefill(&mut q, &jobs, 4), vec![0, 1, 2, 3]);
+        assert_eq!(select(&FifoBatch, &mut q, 4), vec![0, 1, 2, 3]);
     }
 
     #[test]
@@ -493,8 +499,8 @@ mod tests {
                                       vec![0.005; n]);
             simulate(m, &tr, &cfg, 10.0, 0.2)
         };
-        let mut jsq = mk(Router::Jsq);
-        let mut wa = mk(Router::WorkloadAware);
+        let jsq = mk(Router::Jsq);
+        let wa = mk(Router::WorkloadAware);
         // Workload-aware must not be worse on p90 TTFT (usually better).
         assert!(wa.ttft.p90() <= jsq.ttft.p90() * 1.35,
                 "wa {} jsq {}", wa.ttft.p90(), jsq.ttft.p90());

@@ -2,12 +2,19 @@
 //! event core. Batch formation and routing are delegated to the policy
 //! traits in `policy.rs`; energy goes to the server ledger and the
 //! carbon meter; latency/SLO samples go to the metrics sink.
+//!
+//! Job state lives in a [`JobArena`]: a compact slot arena that recycles
+//! retired jobs' slots, so the sim's memory footprint follows the number
+//! of *in-flight* jobs (fleet-bounded in steady state) rather than the
+//! trace length — the invariant that lets a multi-million-request
+//! production day stream through the core.
 
 use crate::carbon::intensity::Region;
 use crate::models::LlmSpec;
 use crate::perf::roofline::{self, Device};
 use crate::workload::RequestClass;
 use std::collections::VecDeque;
+use std::ops::{Index, IndexMut};
 
 use super::core::{EventKind, Sim};
 
@@ -75,9 +82,99 @@ pub struct Job {
     pub decoded: usize,
 }
 
+/// Compact slot arena for job state. `alloc` reuses the slot of the most
+/// recently retired job before growing, so capacity tracks the *peak
+/// concurrent* job count, not the trace length. An `occupied` bitmap makes
+/// double-free and use-after-free structural errors rather than silent
+/// aliasing (`tests/prop_sim_core.rs` holds the recycler to that).
+#[derive(Debug, Default)]
+pub struct JobArena {
+    slots: Vec<Job>,
+    free: Vec<usize>,
+    occupied: Vec<bool>,
+    live: usize,
+    peak_live: usize,
+}
+
+impl JobArena {
+    pub fn new() -> JobArena {
+        JobArena::default()
+    }
+
+    /// Store `job`, returning its slot id (stable until [`JobArena::free`]).
+    pub fn alloc(&mut self, job: Job) -> usize {
+        self.live += 1;
+        self.peak_live = self.peak_live.max(self.live);
+        match self.free.pop() {
+            Some(i) => {
+                debug_assert!(!self.occupied[i], "free list held a live slot");
+                self.slots[i] = job;
+                self.occupied[i] = true;
+                i
+            }
+            None => {
+                self.slots.push(job);
+                self.occupied.push(true);
+                self.slots.len() - 1
+            }
+        }
+    }
+
+    /// Retire a job, recycling its slot for a future [`JobArena::alloc`].
+    pub fn free(&mut self, i: usize) {
+        assert!(self.occupied[i], "double free of job slot {i}");
+        self.occupied[i] = false;
+        self.live -= 1;
+        self.free.push(i);
+    }
+
+    /// Currently live jobs.
+    pub fn live(&self) -> usize {
+        self.live
+    }
+
+    /// High-water mark of concurrently live jobs — the sim's memory bound.
+    pub fn peak_live(&self) -> usize {
+        self.peak_live
+    }
+
+    /// Slots ever allocated (equals `peak_live` up to free-list reuse
+    /// order; always ≪ trace length for a streaming run).
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_live(&self, i: usize) -> bool {
+        self.occupied.get(i).copied().unwrap_or(false)
+    }
+
+    /// Raw slot view for read-only policy context. Freed slots hold stale
+    /// jobs; callers must only index ids they were handed for live work.
+    pub fn as_slice(&self) -> &[Job] {
+        &self.slots
+    }
+}
+
+impl Index<usize> for JobArena {
+    type Output = Job;
+
+    fn index(&self, i: usize) -> &Job {
+        debug_assert!(self.occupied[i], "read of freed job slot {i}");
+        &self.slots[i]
+    }
+}
+
+impl IndexMut<usize> for JobArena {
+    fn index_mut(&mut self, i: usize) -> &mut Job {
+        debug_assert!(self.occupied[i], "write to freed job slot {i}");
+        &mut self.slots[i]
+    }
+}
+
 /// A per-class FIFO queue with global arrival sequencing: batch policies
 /// take strict-FIFO or class-priority prefixes in O(batch) — no queue
-/// scans — and removal is a front pop, not a retain.
+/// scans — and removal is a front pop into a caller-owned scratch buffer,
+/// so the hot path neither scans nor allocates.
 #[derive(Debug, Default)]
 pub struct ClassQueue {
     online: VecDeque<(u64, usize)>,
@@ -86,7 +183,7 @@ pub struct ClassQueue {
 }
 
 impl ClassQueue {
-    pub(crate) fn push(&mut self, job: usize, class: RequestClass) {
+    pub fn push(&mut self, job: usize, class: RequestClass) {
         let seq = self.next_seq;
         self.next_seq += 1;
         match class {
@@ -103,11 +200,11 @@ impl ClassQueue {
         self.online.is_empty() && self.offline.is_empty()
     }
 
-    /// Remove and return up to `max` job ids in strict arrival order
-    /// (classes interleaved by enqueue sequence).
-    pub fn pop_fifo(&mut self, max: usize) -> Vec<usize> {
-        let mut out = Vec::with_capacity(max.min(self.len()));
-        while out.len() < max {
+    /// Remove up to `max` job ids in strict arrival order (classes
+    /// interleaved by enqueue sequence), appending to `out`.
+    pub fn pop_fifo_into(&mut self, max: usize, out: &mut Vec<usize>) {
+        let target = out.len() + max.min(self.len());
+        while out.len() < target {
             let take_online = match (self.online.front(), self.offline.front()) {
                 (Some(&(a, _)), Some(&(b, _))) => a < b,
                 (Some(_), None) => true,
@@ -117,21 +214,33 @@ impl ClassQueue {
             let q = if take_online { &mut self.online } else { &mut self.offline };
             out.push(q.pop_front().unwrap().1);
         }
-        out
     }
 
-    /// Remove and return up to `max` job ids, online class first (each
-    /// class in arrival order).
-    pub fn pop_online_first(&mut self, max: usize) -> Vec<usize> {
-        let mut out = Vec::with_capacity(max.min(self.len()));
-        while out.len() < max {
+    /// Remove up to `max` job ids, online class first (each class in
+    /// arrival order), appending to `out`.
+    pub fn pop_online_first_into(&mut self, max: usize, out: &mut Vec<usize>) {
+        let target = out.len() + max.min(self.len());
+        while out.len() < target {
             let Some((_, j)) = self.online.pop_front() else { break };
             out.push(j);
         }
-        while out.len() < max {
+        while out.len() < target {
             let Some((_, j)) = self.offline.pop_front() else { break };
             out.push(j);
         }
+    }
+
+    /// Vec-returning convenience over [`ClassQueue::pop_fifo_into`].
+    pub fn pop_fifo(&mut self, max: usize) -> Vec<usize> {
+        let mut out = Vec::with_capacity(max.min(self.len()));
+        self.pop_fifo_into(max, &mut out);
+        out
+    }
+
+    /// Vec-returning convenience over [`ClassQueue::pop_online_first_into`].
+    pub fn pop_online_first(&mut self, max: usize) -> Vec<usize> {
+        let mut out = Vec::with_capacity(max.min(self.len()));
+        self.pop_online_first_into(max, &mut out);
         out
     }
 }
@@ -224,10 +333,12 @@ impl<'a> Sim<'a> {
             return false;
         }
         let cap = self.servers[sid].spec.prefill_batch;
-        let batch = self.batch;
-        let picks =
-            batch.select_prefill(&mut self.servers[sid].prompt_q, &self.jobs, cap);
+        let mut picks = std::mem::take(&mut self.batch_scratch);
+        picks.clear();
+        self.batch.select_prefill(&mut self.servers[sid].prompt_q,
+                                  self.jobs.as_slice(), cap, &mut picks);
         if picks.is_empty() {
+            self.batch_scratch = picks;
             return false;
         }
 
@@ -257,6 +368,8 @@ impl<'a> Sim<'a> {
             self.queue.push(done_t + xfer,
                             EventKind::Handoff { job: ji, server: decode_sid });
         }
+        picks.clear();
+        self.batch_scratch = picks;
         true
     }
 
@@ -266,26 +379,35 @@ impl<'a> Sim<'a> {
             s.spec.max_batch.saturating_sub(s.active.len())
         };
         if slots > 0 && !self.servers[sid].decode_q.is_empty() {
-            let batch = self.batch;
-            let admit =
-                batch.select_decode(&mut self.servers[sid].decode_q, &self.jobs, slots);
-            self.servers[sid].active.extend_from_slice(&admit);
+            let mut picks = std::mem::take(&mut self.batch_scratch);
+            picks.clear();
+            self.batch.select_decode(&mut self.servers[sid].decode_q,
+                                     self.jobs.as_slice(), slots, &mut picks);
+            self.servers[sid].active.extend_from_slice(&picks);
+            picks.clear();
+            self.batch_scratch = picks;
         }
 
-        let active = self.servers[sid].active.clone();
-        if active.is_empty() {
+        if self.servers[sid].active.is_empty() {
             return;
         }
-        let mean_ctx = (active.iter()
-            .map(|&j| self.jobs[j].prompt + self.jobs[j].decoded)
-            .sum::<usize>() / active.len()).max(1);
+        let (n_active, ctx_sum) = {
+            let s = &self.servers[sid];
+            (s.active.len(),
+             s.active.iter()
+                 .map(|&j| self.jobs[j].prompt + self.jobs[j].decoded)
+                 .sum::<usize>())
+        };
+        let mean_ctx = (ctx_sum / n_active).max(1);
         let tp = self.servers[sid].spec.tp;
         let perf = roofline::decode_step_perf(self.model, &self.servers[sid].spec.device,
-                                              active.len(), mean_ctx, tp);
+                                              n_active, mean_ctx, tp);
         let done_t = self.begin_busy(sid, perf.latency_s, perf.energy_j);
 
-        let mut still = Vec::with_capacity(active.len());
-        for ji in active {
+        // Retain survivors in place: no per-step allocation, and finished
+        // jobs hand their arena slots back for recycling.
+        let mut active = std::mem::take(&mut self.servers[sid].active);
+        active.retain(|&ji| {
             self.jobs[ji].decoded += 1;
             self.metrics.generated_tokens += 1;
             let j = &self.jobs[ji];
@@ -301,11 +423,13 @@ impl<'a> Sim<'a> {
                     && tpot <= j.slo_tpot;
                 let on_time = done_t <= j.deadline;
                 self.metrics.complete(online, slo_hit, on_time, tpot);
+                self.jobs.free(ji);
+                false
             } else {
-                still.push(ji);
+                true
             }
-        }
-        self.servers[sid].active = still;
+        });
+        self.servers[sid].active = active;
     }
 
     /// Start a busy period ending at `now + latency_s`: bump the server's
@@ -399,5 +523,64 @@ mod tests {
         assert_eq!(q.pop_online_first(3), vec![0, 3, 1]);
         assert_eq!(q.pop_online_first(3), vec![2]);
         assert!(q.is_empty());
+    }
+
+    #[test]
+    fn class_queue_pop_into_appends_without_clearing() {
+        let mut q = ClassQueue::default();
+        for j in 0..5 {
+            q.push(j, RequestClass::Online);
+        }
+        let mut out = vec![99];
+        q.pop_fifo_into(2, &mut out);
+        assert_eq!(out, vec![99, 0, 1]);
+        q.pop_online_first_into(10, &mut out);
+        assert_eq!(out, vec![99, 0, 1, 2, 3, 4]);
+    }
+
+    fn job_with_tag(tag: f64) -> Job {
+        Job {
+            arrival: tag,
+            prompt: 8,
+            output: 4,
+            class: RequestClass::Online,
+            slo_ttft: 1.0,
+            slo_tpot: 0.1,
+            deadline: f64::INFINITY,
+            dispatched_t: tag,
+            first_token_t: None,
+            decoded: 0,
+        }
+    }
+
+    #[test]
+    fn arena_recycles_slots_and_tracks_peak() {
+        let mut a = JobArena::new();
+        let s0 = a.alloc(job_with_tag(0.0));
+        let s1 = a.alloc(job_with_tag(1.0));
+        assert_ne!(s0, s1);
+        assert_eq!(a.live(), 2);
+        a.free(s0);
+        assert_eq!(a.live(), 1);
+        // The freed slot is reused before the arena grows.
+        let s2 = a.alloc(job_with_tag(2.0));
+        assert_eq!(s2, s0);
+        assert_eq!(a[s2].arrival, 2.0);
+        assert_eq!(a[s1].arrival, 1.0, "live neighbor must be untouched");
+        assert_eq!(a.capacity(), 2);
+        assert_eq!(a.peak_live(), 2);
+        a.free(s1);
+        a.free(s2);
+        assert_eq!(a.live(), 0);
+        assert_eq!(a.peak_live(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn arena_double_free_panics() {
+        let mut a = JobArena::new();
+        let s = a.alloc(job_with_tag(0.0));
+        a.free(s);
+        a.free(s);
     }
 }

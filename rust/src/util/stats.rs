@@ -117,6 +117,125 @@ impl Samples {
     }
 }
 
+/// Fixed-bin log-spaced histogram for latency metrics at production trace
+/// scales: O(1) memory however many samples stream in, with deterministic
+/// percentile queries (no per-sample vector, no lazy sort). Bins span
+/// [`Histogram::LO`], 10^[`Histogram::DECADES`]·LO) at
+/// [`Histogram::BINS_PER_DECADE`] bins per decade (~3.7% resolution);
+/// percentiles interpolate geometrically inside a bin and clamp to the
+/// exactly-tracked [min, max], so they are monotone in q and never leave
+/// the observed range. Values at or below `LO` (e.g. a zero TPOT) land in
+/// the first bin and report as ≤ `LO` after the min-clamp.
+#[derive(Debug, Clone, Default)]
+pub struct Histogram {
+    /// Lazily allocated on first push so empty histograms stay tiny.
+    bins: Vec<u64>,
+    n: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Histogram {
+    /// Lower edge of the first bin, seconds (10 µs).
+    pub const LO: f64 = 1e-5;
+    pub const DECADES: usize = 9; // up to 10^4 s
+    pub const BINS_PER_DECADE: usize = 64;
+    const BINS: usize = Self::DECADES * Self::BINS_PER_DECADE;
+
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    fn bin_index(x: f64) -> usize {
+        if x.is_nan() || x <= Self::LO {
+            return 0; // underflow (and any NaN garbage) pools here
+        }
+        let i = ((x / Self::LO).log10() * Self::BINS_PER_DECADE as f64) as usize;
+        i.min(Self::BINS - 1)
+    }
+
+    fn edges(i: usize) -> (f64, f64) {
+        let b = Self::BINS_PER_DECADE as f64;
+        let lo = Self::LO * 10f64.powf(i as f64 / b);
+        let hi = Self::LO * 10f64.powf((i + 1) as f64 / b);
+        (lo, hi)
+    }
+
+    pub fn push(&mut self, x: f64) {
+        if self.bins.is_empty() {
+            self.bins = vec![0u64; Self::BINS];
+            self.min = f64::INFINITY;
+            self.max = f64::NEG_INFINITY;
+        }
+        self.bins[Self::bin_index(x)] += 1;
+        self.n += 1;
+        self.sum += x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn len(&self) -> usize {
+        self.n as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 { f64::NAN } else { self.sum / self.n as f64 }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.n == 0 { f64::NAN } else { self.min }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.n == 0 { f64::NAN } else { self.max }
+    }
+
+    /// Percentile, q in [0, 100]: rank interpolation across the binned
+    /// CDF (same rank convention as [`Samples::percentile`]), geometric
+    /// interpolation within a bin, clamped to the exact [min, max].
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.n == 0 {
+            return f64::NAN;
+        }
+        if self.n == 1 {
+            return self.min;
+        }
+        let rank = (q / 100.0).clamp(0.0, 1.0) * (self.n - 1) as f64;
+        let mut cum = 0u64;
+        for (i, &c) in self.bins.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let last_rank = (cum + c - 1) as f64;
+            if rank <= last_rank {
+                let frac = if c > 1 {
+                    ((rank - cum as f64) / (c - 1) as f64).clamp(0.0, 1.0)
+                } else {
+                    0.5
+                };
+                let (lo, hi) = Self::edges(i);
+                let v = lo * (hi / lo).powf(frac);
+                return v.clamp(self.min, self.max);
+            }
+            cum += c;
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> f64 { self.percentile(50.0) }
+    pub fn p90(&self) -> f64 { self.percentile(90.0) }
+    pub fn p99(&self) -> f64 { self.percentile(99.0) }
+}
+
 /// Exponential moving average for runtime load tracking.
 #[derive(Debug, Clone)]
 pub struct Ema {
@@ -201,6 +320,57 @@ mod tests {
         let mut s = Samples::new();
         s.extend(&[1.0, 1.0, 1.0, 1.0, 1000.0]);
         assert_eq!(s.mad(), 0.0);
+    }
+
+    #[test]
+    fn histogram_tracks_percentiles_within_bin_resolution() {
+        let mut h = Histogram::new();
+        let mut s = Samples::new();
+        // Latency-shaped values across four decades.
+        for i in 1..=1000 {
+            let x = 1e-3 * (i as f64).powf(1.7);
+            h.push(x);
+            s.push(x);
+        }
+        assert_eq!(h.len(), 1000);
+        for q in [10.0, 50.0, 90.0, 99.0] {
+            let exact = s.percentile(q);
+            let binned = h.percentile(q);
+            assert!((binned / exact - 1.0).abs() < 0.05,
+                    "q{q}: binned {binned} exact {exact}");
+        }
+        assert!((h.mean() - s.mean()).abs() < 1e-9 * s.mean());
+        assert_eq!(h.min(), s.percentile(0.0));
+        assert_eq!(h.max(), s.percentile(100.0));
+    }
+
+    #[test]
+    fn histogram_percentiles_are_monotone_and_clamped() {
+        let mut h = Histogram::new();
+        for x in [0.0, 2e-6, 0.04, 0.04, 0.05, 3.0, 20000.0] {
+            h.push(x);
+        }
+        let mut prev = f64::NEG_INFINITY;
+        for q in 0..=100 {
+            let v = h.percentile(q as f64);
+            assert!(v >= prev, "q{q}: {v} < {prev}");
+            assert!(v >= h.min() && v <= h.max(), "q{q}: {v} out of range");
+            prev = v;
+        }
+        // Underflow and overflow stay inside the observed extremes.
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 20000.0);
+    }
+
+    #[test]
+    fn histogram_empty_and_single() {
+        let mut h = Histogram::new();
+        assert!(h.p50().is_nan() && h.mean().is_nan());
+        assert_eq!(h.len(), 0);
+        h.push(0.25);
+        assert_eq!(h.p50(), 0.25);
+        assert_eq!(h.p99(), 0.25);
+        assert_eq!(h.len(), 1);
     }
 
     #[test]

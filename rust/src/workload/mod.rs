@@ -8,6 +8,9 @@
 
 pub mod demand;
 pub mod slo;
+pub mod stream;
+
+pub use stream::{ArrivalSource, GeneratorSource, MergedSource, SliceSource};
 
 use crate::util::rng::Rng;
 
@@ -97,6 +100,11 @@ pub enum Arrivals {
     /// `[start_frac, end_frac]` of the trace duration — the
     /// re-provisioning stress case (GreenLLM-style demand spikes).
     Step { base: f64, surge: f64, start_frac: f64, end_frac: f64 },
+    /// Seven compressed diurnal day cycles mapped onto the trace duration
+    /// with weekday/weekend amplitude: days 0–4 run at `rate`, the
+    /// weekend days 5–6 at `rate · weekend_factor` — one production week
+    /// for the scale scenarios.
+    Week { rate: f64, amplitude: f64, weekend_factor: f64 },
 }
 
 impl Arrivals {
@@ -126,6 +134,13 @@ impl Arrivals {
                 let rate = base + if in_surge { surge } else { 0.0 };
                 rng.exp(rate.max(1e-9))
             }
+            Arrivals::Week { rate, amplitude, weekend_factor } => {
+                let day_len = (duration_s / 7.0).max(1e-9);
+                let day = ((t_s / day_len) as usize).min(6);
+                let base = if day >= 5 { rate * weekend_factor } else { rate };
+                let hour = (t_s / day_len).fract() * 24.0;
+                rng.exp(diurnal_rate(base, amplitude, hour))
+            }
         }
     }
 }
@@ -138,7 +153,9 @@ fn diurnal_rate(rate: f64, amplitude: f64, hour: f64) -> f64 {
     modulated.max(rate * 0.05)
 }
 
-/// Generate a request trace.
+/// Generate a request trace by draining the equivalent lazy generator
+/// ([`GeneratorSource`] is the primary implementation; this materialized
+/// form remains for small planning windows, tests, and examples).
 pub fn generate_trace(
     arrivals: Arrivals,
     lengths: LengthDist,
@@ -146,20 +163,7 @@ pub fn generate_trace(
     duration_s: f64,
     seed: u64,
 ) -> Vec<Request> {
-    let mut rng = Rng::new(seed);
-    let mut out = Vec::new();
-    let mut t = 0.0;
-    let mut id = 0u64;
-    loop {
-        t += arrivals.next_gap(&mut rng, t, duration_s);
-        if t >= duration_s {
-            break;
-        }
-        let (p, o) = lengths.sample(&mut rng);
-        out.push(Request { id, arrival_s: t, prompt_tokens: p, output_tokens: o, class });
-        id += 1;
-    }
-    out
+    GeneratorSource::new(arrivals, lengths, class, duration_s, seed).materialize()
 }
 
 /// Merge traces preserving arrival order.
@@ -271,6 +275,27 @@ mod tests {
         let before = count_in(0.0, 120.0) as f64 / 120.0;
         assert!(surge > 5.0 * before, "surge {surge} base {before}");
         assert!((surge - 20.0).abs() < 5.0, "surge rate {surge}");
+    }
+
+    #[test]
+    fn week_weekends_are_quieter_and_days_cycle() {
+        // 7 compressed days over 700 s (100 s per day): weekday day 1
+        // must far outnumber weekend day 6 at weekend_factor 0.3, and
+        // each day keeps the afternoon-peak shape.
+        let tr = generate_trace(
+            Arrivals::Week { rate: 20.0, amplitude: 0.6, weekend_factor: 0.3 },
+            LengthDist::ShareGpt, RequestClass::Online, 700.0, 8);
+        let count_in = |lo: f64, hi: f64| tr.iter()
+            .filter(|r| r.arrival_s >= lo && r.arrival_s < hi)
+            .count();
+        let weekday = count_in(100.0, 200.0);
+        let weekend = count_in(600.0, 700.0);
+        assert!(weekday as f64 > 2.0 * weekend as f64,
+                "weekday {weekday} weekend {weekend}");
+        // Within day 0 the 12:00-16:00 band beats the 00:00-04:00 band.
+        let afternoon = count_in(50.0, 66.0);
+        let night = count_in(0.0, 16.0);
+        assert!(afternoon > night, "afternoon {afternoon} night {night}");
     }
 
     #[test]

@@ -1,0 +1,247 @@
+//! Streaming arrival sources: the workload layer as lazy generators.
+//!
+//! The materializing path (`generate_trace` → `Vec<Request>` →
+//! `merge_traces`) costs memory and startup time linear in the trace
+//! length, which caps the simulator at toy scales. An [`ArrivalSource`]
+//! yields requests one at a time in nondecreasing arrival order, so a
+//! multi-million-request production day streams through the discrete-event
+//! core with memory bounded by the fleet and the in-flight jobs — never by
+//! the trace length.
+//!
+//! Determinism contract: [`GeneratorSource`] consumes its RNG stream in
+//! exactly the order `generate_trace` does, and [`MergedSource`] merges
+//! component streams exactly as the stable sort in `merge_traces` would
+//! (ties at equal timestamps resolve to the earlier component). The
+//! differential suite (`tests/integration_streaming.rs`) holds every
+//! registry scenario to byte-identical outcomes across the two paths.
+
+use crate::util::rng::Rng;
+
+use super::{Arrivals, LengthDist, Request, RequestClass};
+
+/// A time-ordered stream of requests. `next_request` returns `None` once
+/// the trace is exhausted (sources are fused: further calls keep returning
+/// `None`). Arrival times must be nondecreasing.
+pub trait ArrivalSource {
+    fn next_request(&mut self) -> Option<Request>;
+
+    /// Drain the source into a vector — the bridge back to code that
+    /// still wants a materialized trace (tests, small planning windows).
+    fn materialize(&mut self) -> Vec<Request> {
+        let mut out = Vec::new();
+        while let Some(r) = self.next_request() {
+            out.push(r);
+        }
+        out
+    }
+}
+
+/// Lazy single-class generator: the streaming equivalent of
+/// [`super::generate_trace`], same seed, same RNG draw order, same
+/// requests.
+#[derive(Debug, Clone)]
+pub struct GeneratorSource {
+    arrivals: Arrivals,
+    lengths: LengthDist,
+    class: RequestClass,
+    duration_s: f64,
+    rng: Rng,
+    t: f64,
+    next_id: u64,
+    done: bool,
+}
+
+impl GeneratorSource {
+    pub fn new(arrivals: Arrivals, lengths: LengthDist, class: RequestClass,
+               duration_s: f64, seed: u64) -> GeneratorSource {
+        GeneratorSource {
+            arrivals,
+            lengths,
+            class,
+            duration_s,
+            rng: Rng::new(seed),
+            t: 0.0,
+            next_id: 0,
+            done: false,
+        }
+    }
+}
+
+impl ArrivalSource for GeneratorSource {
+    fn next_request(&mut self) -> Option<Request> {
+        if self.done {
+            return None;
+        }
+        self.t += self.arrivals.next_gap(&mut self.rng, self.t, self.duration_s);
+        if self.t >= self.duration_s {
+            self.done = true;
+            return None;
+        }
+        let (p, o) = self.lengths.sample(&mut self.rng);
+        let id = self.next_id;
+        self.next_id += 1;
+        Some(Request {
+            id,
+            arrival_s: self.t,
+            prompt_tokens: p,
+            output_tokens: o,
+            class: self.class,
+        })
+    }
+}
+
+/// K-way merge of component sources into one time-ordered multi-class
+/// stream, re-assigning ids in pop order — the streaming equivalent of
+/// [`super::merge_traces`]. Ties at equal arrival times resolve to the
+/// lowest component index, matching the stable sort over concatenated
+/// traces.
+#[derive(Debug)]
+pub struct MergedSource<S: ArrivalSource> {
+    sources: Vec<S>,
+    heads: Vec<Option<Request>>,
+    next_id: u64,
+}
+
+impl<S: ArrivalSource> MergedSource<S> {
+    pub fn new(mut sources: Vec<S>) -> MergedSource<S> {
+        let heads = sources.iter_mut().map(|s| s.next_request()).collect();
+        MergedSource { sources, heads, next_id: 0 }
+    }
+}
+
+impl<S: ArrivalSource> ArrivalSource for MergedSource<S> {
+    fn next_request(&mut self) -> Option<Request> {
+        let mut best: Option<(usize, f64)> = None;
+        for (i, h) in self.heads.iter().enumerate() {
+            if let Some(r) = h {
+                // Strict `<` keeps the first (lowest-index) head on ties —
+                // exactly the stable-sort order of `merge_traces`.
+                let better = match best {
+                    None => true,
+                    Some((_, bt)) => r.arrival_s < bt,
+                };
+                if better {
+                    best = Some((i, r.arrival_s));
+                }
+            }
+        }
+        let (i, _) = best?;
+        let mut r = self.heads[i].take().unwrap();
+        self.heads[i] = self.sources[i].next_request();
+        r.id = self.next_id;
+        self.next_id += 1;
+        Some(r)
+    }
+}
+
+/// Adapter over a materialized, arrival-sorted trace — the reference
+/// implementation the differential tests compare the lazy generators
+/// against, and the bridge for callers that already hold a `Vec<Request>`.
+#[derive(Debug)]
+pub struct SliceSource<'a> {
+    trace: &'a [Request],
+    i: usize,
+}
+
+impl<'a> SliceSource<'a> {
+    pub fn new(trace: &'a [Request]) -> SliceSource<'a> {
+        debug_assert!(trace.windows(2).all(|w| w[1].arrival_s >= w[0].arrival_s),
+                      "SliceSource requires an arrival-sorted trace");
+        SliceSource { trace, i: 0 }
+    }
+}
+
+impl ArrivalSource for SliceSource<'_> {
+    fn next_request(&mut self) -> Option<Request> {
+        let r = self.trace.get(self.i)?.clone();
+        self.i += 1;
+        Some(r)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{generate_trace, merge_traces};
+
+    fn eq_requests(a: &Request, b: &Request) -> bool {
+        a.id == b.id
+            && a.arrival_s.to_bits() == b.arrival_s.to_bits()
+            && a.prompt_tokens == b.prompt_tokens
+            && a.output_tokens == b.output_tokens
+            && a.class == b.class
+    }
+
+    #[test]
+    fn generator_source_matches_generate_trace_bit_for_bit() {
+        for (arrivals, seed) in [
+            (Arrivals::Poisson { rate: 6.0 }, 3u64),
+            (Arrivals::Bursty { rate: 4.0, cv: 2.5 }, 4),
+            (Arrivals::CompressedDiurnal { rate: 10.0, amplitude: 0.7,
+                                           period_s: 0.0 }, 5),
+            (Arrivals::Step { base: 2.0, surge: 10.0, start_frac: 0.3,
+                              end_frac: 0.5 }, 6),
+            (Arrivals::Week { rate: 8.0, amplitude: 0.6,
+                              weekend_factor: 0.5 }, 7),
+        ] {
+            let eager = generate_trace(arrivals, LengthDist::ShareGpt,
+                                       RequestClass::Online, 90.0, seed);
+            let lazy = GeneratorSource::new(arrivals, LengthDist::ShareGpt,
+                                            RequestClass::Online, 90.0, seed)
+                .materialize();
+            assert_eq!(eager.len(), lazy.len(), "{arrivals:?}");
+            assert!(eager.iter().zip(&lazy).all(|(a, b)| eq_requests(a, b)),
+                    "{arrivals:?}: stream diverged from the eager trace");
+        }
+    }
+
+    #[test]
+    fn merged_source_matches_merge_traces() {
+        let mk = |seed| (
+            generate_trace(Arrivals::Poisson { rate: 3.0 },
+                           LengthDist::ShareGpt, RequestClass::Online,
+                           60.0, seed),
+            GeneratorSource::new(Arrivals::Poisson { rate: 3.0 },
+                                 LengthDist::ShareGpt, RequestClass::Online,
+                                 60.0, seed),
+        );
+        let mk_off = |seed| (
+            generate_trace(Arrivals::Bursty { rate: 2.0, cv: 2.0 },
+                           LengthDist::LongBench, RequestClass::Offline,
+                           60.0, seed),
+            GeneratorSource::new(Arrivals::Bursty { rate: 2.0, cv: 2.0 },
+                                 LengthDist::LongBench, RequestClass::Offline,
+                                 60.0, seed),
+        );
+        let (ea, la) = mk(11);
+        let (eb, lb) = mk_off(12);
+        let eager = merge_traces(vec![ea, eb]);
+        let lazy = MergedSource::new(vec![la, lb]).materialize();
+        assert_eq!(eager.len(), lazy.len());
+        assert!(eager.iter().zip(&lazy).all(|(a, b)| eq_requests(a, b)),
+                "merged stream diverged from merge_traces");
+        assert!(lazy.windows(2).all(|w| w[1].arrival_s >= w[0].arrival_s));
+    }
+
+    #[test]
+    fn sources_are_fused() {
+        let mut s = GeneratorSource::new(Arrivals::Poisson { rate: 5.0 },
+                                         LengthDist::ShareGpt,
+                                         RequestClass::Online, 10.0, 1);
+        while s.next_request().is_some() {}
+        assert!(s.next_request().is_none());
+        assert!(s.next_request().is_none());
+        let mut m: MergedSource<GeneratorSource> = MergedSource::new(vec![]);
+        assert!(m.next_request().is_none());
+    }
+
+    #[test]
+    fn slice_source_round_trips() {
+        let tr = generate_trace(Arrivals::Poisson { rate: 4.0 },
+                                LengthDist::AzureCode, RequestClass::Online,
+                                40.0, 9);
+        let back = SliceSource::new(&tr).materialize();
+        assert_eq!(tr.len(), back.len());
+        assert!(tr.iter().zip(&back).all(|(a, b)| eq_requests(a, b)));
+    }
+}

@@ -1,0 +1,120 @@
+//! Golden schema for the sweep report: the exact top-level key set of a
+//! `ScenarioOutcome`, the baseline `extras` keys of the carbon-aware
+//! scenarios, and the summary-table columns. Refactors may *add* report
+//! fields (update the goldens deliberately), but nothing can silently
+//! vanish.
+
+use ecoserve::scenarios::{catalog, run_sweep, SweepConfig};
+use ecoserve::util::json::Json;
+
+/// Every top-level key a scenario outcome must carry, sorted.
+const OUTCOME_KEYS: &[&str] = &[
+    "carbon_kg",
+    "ci_g_per_kwh",
+    "completed",
+    "decommission_events",
+    "deferred_requests",
+    "emb_kg",
+    "energy_j",
+    "extras",
+    "fleet_counts",
+    "fleet_gpus",
+    "fleet_servers",
+    "generated_tokens",
+    "model",
+    "name",
+    "offline_deadline_attainment",
+    "op_kg",
+    "peak_live_jobs",
+    "plan_cost_hr",
+    "plan_emb_kg_per_hr",
+    "plan_op_kg_per_hr",
+    "provision_events",
+    "provisioned_server_hours",
+    "region",
+    "requests",
+    "seed",
+    "slo_attainment",
+    "throughput_tok_s",
+    "tpot_p50_s",
+    "tpot_p90_s",
+    "tpot_p99_s",
+    "truncated_prompts",
+    "ttft_p50_s",
+    "ttft_p90_s",
+    "ttft_p99_s",
+];
+
+/// Summary-table columns, in order.
+const TABLE_COLUMNS: &[&str] = &[
+    "scenario", "carbon kg", "op kg", "emb kg", "TTFT p50 ms", "TTFT p90 ms",
+    "TPOT p50 ms", "SLO %", "gpus", "srv-hrs", "req", "peak-jobs", "trunc",
+];
+
+fn sweep_json() -> Json {
+    let sel = catalog::by_names(&["diurnal-shift", "carbon-router",
+                                  "autoscale-diurnal"]).unwrap();
+    let cfg = SweepConfig { threads: 1, seed: 5, duration_s: 40.0,
+                            ..Default::default() };
+    let report = run_sweep(&sel, &cfg);
+    Json::parse(&report.to_json().to_string()).expect("report must parse")
+}
+
+#[test]
+fn outcome_json_carries_the_exact_golden_key_set() {
+    let j = sweep_json();
+    assert!(j.get("master_seed").is_some() && j.get("duration_s").is_some(),
+            "report-level keys missing");
+    let scenarios = j.get("scenarios").and_then(|s| s.as_arr()).unwrap();
+    assert_eq!(scenarios.len(), 3);
+    for s in scenarios {
+        let name = s.get("name").unwrap().as_str().unwrap();
+        let keys: Vec<&str> = s.as_obj().unwrap().keys()
+            .map(|k| k.as_str())
+            .collect();
+        assert_eq!(keys, OUTCOME_KEYS,
+                   "{name}: outcome key set drifted from the golden schema");
+    }
+}
+
+#[test]
+fn baseline_extras_cannot_silently_vanish() {
+    let j = sweep_json();
+    let scenarios = j.get("scenarios").and_then(|s| s.as_arr()).unwrap();
+    let extras_of = |name: &str| -> Vec<String> {
+        let s = scenarios.iter()
+            .find(|s| s.get("name").unwrap().as_str() == Some(name))
+            .unwrap_or_else(|| panic!("scenario {name} missing from report"));
+        s.get("extras").and_then(|e| e.as_obj()).unwrap()
+            .keys().cloned().collect()
+    };
+    // Temporal shifting reports the run-immediately baseline.
+    assert_eq!(extras_of("diurnal-shift"),
+               vec!["carbon_kg_immediate", "op_kg_immediate",
+                    "slo_attainment_immediate", "ttft_p90_s_immediate"]);
+    // Carbon-greedy routing reports the carbon-blind JSQ baseline.
+    assert_eq!(extras_of("carbon-router"),
+               vec!["carbon_kg_jsq", "op_kg_jsq", "ttft_p90_s_jsq"]);
+    // Rolling-horizon elasticity reports the static peak-provisioned
+    // baseline.
+    assert_eq!(extras_of("autoscale-diurnal"),
+               vec!["carbon_kg_static", "emb_kg_static", "op_kg_static",
+                    "provisioned_server_hours_static", "slo_attainment_static",
+                    "ttft_p90_s_static"]);
+}
+
+#[test]
+fn summary_table_columns_match_the_golden_order() {
+    let sel = catalog::by_names(&["online-latency"]).unwrap();
+    let cfg = SweepConfig { threads: 1, seed: 5, duration_s: 30.0,
+                            ..Default::default() };
+    let table = run_sweep(&sel, &cfg).summary_table().render();
+    let header = table.lines().next().expect("empty table");
+    let mut pos = 0usize;
+    for col in TABLE_COLUMNS {
+        let at = header[pos..].find(col).unwrap_or_else(|| {
+            panic!("column '{col}' missing (or out of order) in '{header}'")
+        });
+        pos += at + col.len();
+    }
+}

@@ -1,0 +1,89 @@
+//! Differential suite for the streaming workload layer: for every
+//! registry scenario, the lazy-generator arrival path must produce a
+//! byte-identical `ScenarioOutcome` JSON to the reference
+//! materialized-trace adapter, the report must stay byte-identical across
+//! thread counts, and the scale scenarios must hold the streaming core's
+//! memory promise (peak live jobs ≪ trace length).
+
+use ecoserve::scenarios::{registry, run_spec_materialized, run_sweep,
+                          scenario_seed, SweepConfig};
+
+const DIFF_DURATION_S: f64 = 24.0;
+
+#[test]
+fn streaming_matches_materialized_for_every_registry_scenario() {
+    for sc in registry() {
+        let seed = scenario_seed(97, sc.name());
+        let streamed = sc.run(seed, DIFF_DURATION_S).to_json().to_string();
+        let materialized =
+            run_spec_materialized(sc.name(), &sc.spec(), seed, DIFF_DURATION_S)
+                .to_json()
+                .to_string();
+        assert_eq!(streamed, materialized,
+                   "{}: streaming and materialized outcomes diverge",
+                   sc.name());
+    }
+}
+
+#[test]
+fn streaming_sweep_is_byte_identical_across_thread_counts() {
+    let mk = |threads| {
+        let cfg = SweepConfig { threads, seed: 13, duration_s: DIFF_DURATION_S,
+                                ..Default::default() };
+        run_sweep(&registry(), &cfg).to_json().to_string()
+    };
+    assert_eq!(mk(1), mk(8),
+               "thread count changed the streaming sweep report bytes");
+}
+
+fn production_day_outcome(seed: u64, duration_s: f64)
+    -> ecoserve::scenarios::ScenarioOutcome {
+    let sel = ecoserve::scenarios::catalog::by_names(&["production-day"]).unwrap();
+    let cfg = SweepConfig { threads: 1, seed, duration_s,
+                            ..Default::default() };
+    run_sweep(&sel, &cfg).outcomes.remove(0)
+}
+
+#[test]
+fn production_day_smoke_streams_with_bounded_job_memory() {
+    // Trimmed slice of the production day: every request completes, the
+    // elastic fleet actually flexes, and the arena high-water mark stays
+    // far below the trace length (the memory-bound proxy the full-scale
+    // run relies on).
+    let o = production_day_outcome(7, 60.0);
+    assert!(o.requests > 10_000, "day too quiet: {} requests", o.requests);
+    assert_eq!(o.completed, o.requests, "requests lost");
+    assert!(o.peak_live_jobs * 2 < o.requests,
+            "peak live jobs {} vs {} requests — streaming bound broken",
+            o.peak_live_jobs, o.requests);
+    assert!(o.extras.contains_key("op_kg_jsq"),
+            "missing carbon-greedy routing baseline");
+    assert!(o.extras.contains_key("carbon_kg_static"),
+            "missing static provisioning baseline");
+}
+
+#[test]
+#[ignore = "full-scale production day (~2M requests); run with --ignored in release"]
+fn production_day_full_scale_completes_two_million_requests() {
+    let o = production_day_outcome(42, 7200.0);
+    assert!(o.requests >= 2_000_000,
+            "expected a >=2M-request day, got {}", o.requests);
+    assert_eq!(o.completed, o.requests, "requests lost at scale");
+    // Memory bounded by fleet + in-flight jobs: the arena never holds
+    // more than a sliver of the trace.
+    assert!(o.peak_live_jobs * 50 < o.requests,
+            "peak live jobs {} vs {} requests", o.peak_live_jobs, o.requests);
+    assert!(o.decommission_events > 0, "the elastic day never scaled down");
+}
+
+#[test]
+fn production_week_runs_with_weekend_lull_and_streams() {
+    let sel = ecoserve::scenarios::catalog::by_names(&["production-week"]).unwrap();
+    let cfg = SweepConfig { threads: 1, seed: 7, duration_s: 70.0,
+                            ..Default::default() };
+    let o = run_sweep(&sel, &cfg).outcomes.remove(0);
+    assert_eq!(o.completed, o.requests, "requests lost");
+    assert!(o.requests > 2_000, "week too quiet: {}", o.requests);
+    assert!(o.peak_live_jobs * 2 < o.requests,
+            "peak live jobs {} vs {} requests", o.peak_live_jobs, o.requests);
+}

@@ -24,13 +24,13 @@ fn sweep_is_deterministic_across_runs_and_thread_counts() {
     // sorted by name, carrying the required per-scenario metrics.
     let j = Json::parse(&a).expect("report must be valid JSON");
     let scenarios = j.get("scenarios").and_then(|s| s.as_arr()).unwrap();
-    assert!(scenarios.len() >= 10, "only {} scenarios", scenarios.len());
+    assert!(scenarios.len() >= 12, "only {} scenarios", scenarios.len());
     let names: Vec<&str> = scenarios.iter()
         .map(|s| s.get("name").and_then(|n| n.as_str()).unwrap())
         .collect();
     for want in ["diurnal-shift", "carbon-router", "autoscale-diurnal",
-                 "demand-surge"] {
-        assert!(names.contains(&want), "missing carbon-aware scenario {want}");
+                 "demand-surge", "production-day", "production-week"] {
+        assert!(names.contains(&want), "missing scenario {want}");
     }
     let mut sorted = names.clone();
     sorted.sort_unstable();
@@ -57,6 +57,10 @@ fn sweep_is_deterministic_across_runs_and_thread_counts() {
                 "{name}: missing truncated_prompts");
         assert!(s.get("provision_events").and_then(|v| v.as_usize()).is_some(),
                 "{name}: missing provision_events");
+        let peak = s.get("peak_live_jobs").and_then(|v| v.as_usize())
+            .unwrap_or_else(|| panic!("{name}: missing peak_live_jobs"));
+        let requests = s.get("requests").and_then(|v| v.as_usize()).unwrap();
+        assert!(peak <= requests, "{name}: peak {peak} > requests {requests}");
         let srv_hrs = num("provisioned_server_hours");
         assert!(srv_hrs > 0.0, "{name}: provisioned_server_hours {srv_hrs}");
         for k in ["ttft_p50_s", "ttft_p90_s", "ttft_p99_s", "tpot_p50_s",

@@ -74,7 +74,7 @@ fn ttft_never_precedes_arrival() {
             let servers = homogeneous_fleet("L4", 2, m, 2048);
             let cfg = SimConfig::flat(servers, Router::WorkloadAware, 100.0,
                                       vec![0.001; 2]);
-            let mut r = simulate(m, &tr, &cfg, 0.5, 0.1);
+            let r = simulate(m, &tr, &cfg, 0.5, 0.1);
             if r.ttft.min() < 0.0 {
                 return Err(format!("negative TTFT {}", r.ttft.min()));
             }

@@ -1,0 +1,281 @@
+//! Property tests (testkit::forall with shrinking) for the streaming
+//! core's data structures: the `(t, seq)` total-order event queue, the
+//! per-class FIFO `ClassQueue`, and the slot-recycling `JobArena`.
+
+use ecoserve::sim::{ClassQueue, EventKind, EventQueue, Job, JobArena};
+use ecoserve::testkit::{forall, shrink_vec, PropConfig};
+use ecoserve::util::rng::Rng;
+use ecoserve::workload::RequestClass;
+use std::collections::VecDeque;
+
+// ---------------------------------------------------------------------------
+// EventQueue: pops follow (t, seq) total order, ties FIFO.
+
+#[derive(Debug, Clone, Copy)]
+enum QueueOp {
+    /// Push at one of a small set of timestamps (small set ⇒ many ties).
+    Push(f64),
+    Pop,
+}
+
+fn gen_queue_ops(r: &mut Rng) -> Vec<QueueOp> {
+    let times = [0.0, 1.0, 1.0, 2.0, 2.5, f64::INFINITY];
+    (0..8 + r.below(60))
+        .map(|_| {
+            if r.bool(0.6) {
+                QueueOp::Push(times[r.below(times.len())])
+            } else {
+                QueueOp::Pop
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn prop_event_queue_pops_in_t_seq_order_with_fifo_ties() {
+    forall(
+        &PropConfig { cases: 300, ..Default::default() },
+        gen_queue_ops,
+        |ops| shrink_vec(ops, |_| Vec::new()),
+        |ops| {
+            let mut q = EventQueue::default();
+            // Shadow model: (t, push index) pairs still in the queue. The
+            // payload encodes the push index so pops are identifiable.
+            let mut shadow: Vec<(f64, usize)> = Vec::new();
+            let mut pushed = 0usize;
+            for op in ops {
+                match *op {
+                    QueueOp::Push(t) => {
+                        q.push(t, EventKind::Wake(pushed));
+                        shadow.push((t, pushed));
+                        pushed += 1;
+                    }
+                    QueueOp::Pop => {
+                        let got = q.pop();
+                        if shadow.is_empty() {
+                            if got.is_some() {
+                                return Err("pop from empty returned Some".into());
+                            }
+                            continue;
+                        }
+                        // Expected: min by (total_cmp t, push order). The
+                        // shadow list is push-ordered, so the first minimal
+                        // t is the FIFO tie-winner.
+                        let (best_i, &(bt, bid)) = shadow.iter().enumerate()
+                            .min_by(|(_, a), (_, b)| a.0.total_cmp(&b.0))
+                            .unwrap();
+                        let ev = got.ok_or("pop returned None with items queued")?;
+                        let EventKind::Wake(gid) = ev.kind else {
+                            return Err("payload corrupted".into());
+                        };
+                        if gid != bid || ev.t.to_bits() != bt.to_bits() {
+                            return Err(format!(
+                                "popped (t={}, id={gid}), expected (t={bt}, id={bid})",
+                                ev.t));
+                        }
+                        shadow.remove(best_i);
+                    }
+                }
+            }
+            // Drain: the remainder must come out sorted by (t, push id).
+            let mut last: Option<(f64, u64)> = None;
+            while let Some(ev) = q.pop() {
+                if let Some((lt, ls)) = last {
+                    if ev.t.total_cmp(&lt) == std::cmp::Ordering::Less
+                        || (ev.t.to_bits() == lt.to_bits() && ev.seq < ls)
+                    {
+                        return Err(format!(
+                            "drain out of order: ({}, {}) after ({lt}, {ls})",
+                            ev.t, ev.seq));
+                    }
+                }
+                last = Some((ev.t, ev.seq));
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// ClassQueue: per-class FIFO, cross-class arrival interleaving, O(batch)
+// pops that agree with a straightforward shadow model.
+
+#[derive(Debug, Clone, Copy)]
+enum CqOp {
+    Push(bool), // true = online
+    PopFifo(usize),
+    PopOnlineFirst(usize),
+}
+
+fn gen_cq_ops(r: &mut Rng) -> Vec<CqOp> {
+    (0..8 + r.below(80))
+        .map(|_| match r.below(4) {
+            0 | 1 => CqOp::Push(r.bool(0.5)),
+            2 => CqOp::PopFifo(r.below(6)),
+            _ => CqOp::PopOnlineFirst(r.below(6)),
+        })
+        .collect()
+}
+
+#[test]
+fn prop_class_queue_preserves_per_class_fifo_under_random_ops() {
+    forall(
+        &PropConfig { cases: 300, ..Default::default() },
+        gen_cq_ops,
+        |ops| shrink_vec(ops, |_| Vec::new()),
+        |ops| {
+            let mut q = ClassQueue::default();
+            // Shadow: (global seq, job id) per class.
+            let mut online: VecDeque<(usize, usize)> = VecDeque::new();
+            let mut offline: VecDeque<(usize, usize)> = VecDeque::new();
+            let mut next = 0usize;
+            for op in ops {
+                match *op {
+                    CqOp::Push(is_online) => {
+                        let class = if is_online { RequestClass::Online }
+                                    else { RequestClass::Offline };
+                        q.push(next, class);
+                        if is_online { online.push_back((next, next)); }
+                        else { offline.push_back((next, next)); }
+                        next += 1;
+                    }
+                    CqOp::PopFifo(max) => {
+                        let got = q.pop_fifo(max);
+                        let mut want = Vec::new();
+                        while want.len() < max {
+                            let take_online =
+                                match (online.front(), offline.front()) {
+                                    (Some(a), Some(b)) => a.0 < b.0,
+                                    (Some(_), None) => true,
+                                    (None, Some(_)) => false,
+                                    (None, None) => break,
+                                };
+                            let d = if take_online { &mut online }
+                                    else { &mut offline };
+                            want.push(d.pop_front().unwrap().1);
+                        }
+                        if got != want {
+                            return Err(format!("fifo {got:?} != {want:?}"));
+                        }
+                    }
+                    CqOp::PopOnlineFirst(max) => {
+                        let got = q.pop_online_first(max);
+                        let mut want = Vec::new();
+                        while want.len() < max {
+                            let Some((_, j)) = online.pop_front() else { break };
+                            want.push(j);
+                        }
+                        while want.len() < max {
+                            let Some((_, j)) = offline.pop_front() else { break };
+                            want.push(j);
+                        }
+                        if got != want {
+                            return Err(format!("online-first {got:?} != {want:?}"));
+                        }
+                    }
+                }
+                if q.len() != online.len() + offline.len() {
+                    return Err(format!("len {} != shadow {}", q.len(),
+                                       online.len() + offline.len()));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// JobArena: slot recycling never aliases a live job.
+
+#[derive(Debug, Clone, Copy)]
+enum ArenaOp {
+    Alloc,
+    /// Free the live slot at this (modular) position.
+    Free(usize),
+}
+
+fn gen_arena_ops(r: &mut Rng) -> Vec<ArenaOp> {
+    (0..8 + r.below(100))
+        .map(|_| {
+            if r.bool(0.6) { ArenaOp::Alloc } else { ArenaOp::Free(r.below(64)) }
+        })
+        .collect()
+}
+
+fn tagged_job(tag: f64) -> Job {
+    Job {
+        arrival: tag,
+        prompt: 8,
+        output: 4,
+        class: RequestClass::Online,
+        slo_ttft: 1.0,
+        slo_tpot: 0.1,
+        deadline: f64::INFINITY,
+        dispatched_t: tag,
+        first_token_t: None,
+        decoded: 0,
+    }
+}
+
+#[test]
+fn prop_arena_recycling_never_aliases_a_live_job() {
+    forall(
+        &PropConfig { cases: 300, ..Default::default() },
+        gen_arena_ops,
+        |ops| shrink_vec(ops, |_| Vec::new()),
+        |ops| {
+            let mut arena = JobArena::new();
+            // Shadow: live slot -> unique tag, in insertion order.
+            let mut live: Vec<(usize, f64)> = Vec::new();
+            let mut next_tag = 0.0f64;
+            let mut peak = 0usize;
+            for op in ops {
+                match *op {
+                    ArenaOp::Alloc => {
+                        next_tag += 1.0;
+                        let slot = arena.alloc(tagged_job(next_tag));
+                        if live.iter().any(|&(s, _)| s == slot) {
+                            return Err(format!(
+                                "alloc returned live slot {slot}"));
+                        }
+                        live.push((slot, next_tag));
+                        peak = peak.max(live.len());
+                    }
+                    ArenaOp::Free(i) => {
+                        if live.is_empty() {
+                            continue;
+                        }
+                        let (slot, _) = live.remove(i % live.len());
+                        arena.free(slot);
+                    }
+                }
+                // Every live job still carries its own tag — no aliasing.
+                for &(slot, tag) in &live {
+                    if !arena.is_live(slot) {
+                        return Err(format!("live slot {slot} reported dead"));
+                    }
+                    if arena[slot].arrival != tag {
+                        return Err(format!(
+                            "slot {slot} holds tag {} instead of {tag}",
+                            arena[slot].arrival));
+                    }
+                }
+                if arena.live() != live.len() {
+                    return Err(format!("live {} != shadow {}", arena.live(),
+                                       live.len()));
+                }
+                if arena.peak_live() != peak {
+                    return Err(format!("peak {} != shadow {peak}",
+                                       arena.peak_live()));
+                }
+            }
+            // Capacity is bounded by the peak concurrency, not the number
+            // of allocations — the recycling guarantee itself.
+            if arena.capacity() > peak {
+                return Err(format!("capacity {} > peak {peak}",
+                                   arena.capacity()));
+            }
+            Ok(())
+        },
+    );
+}
