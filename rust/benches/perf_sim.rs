@@ -5,14 +5,20 @@
 //! directory cargo was invoked from) so sim-core perf regressions are
 //! visible across PRs and comparable on CI. The committed baseline lives
 //! at `rust/benches/BENCH_sim_baseline.json`; the CI `perf-sim` job fails
-//! on a >30% events/sec regression against it. Each measured iteration
-//! drives the full streaming path: lazy trace generation → pull-on-pop
-//! arrivals → arena-recycled jobs → histogram metrics.
+//! on a >30% events/sec regression against it (single-core key:
+//! `events_per_sec`). Each measured iteration drives the full streaming
+//! path: lazy trace generation → pull-on-pop arrivals → arena-recycled
+//! jobs → histogram metrics. A second leg runs the same fleet on the
+//! sharded runtime (per-cluster partition, scoped threads) and reports
+//! `sharded_events_per_sec` — the wall-clock scaling the `scale`
+//! subcommand studies, not a gated metric.
 use ecoserve::bench::{run, BenchConfig};
 use ecoserve::models;
-use ecoserve::sim::{homogeneous_fleet, simulate_stream, Router, SimConfig};
+use ecoserve::sim::{homogeneous_fleet, simulate_sharded, simulate_stream,
+                    Router, ShardPlan, SimConfig};
 use ecoserve::util::json::Json;
-use ecoserve::workload::{Arrivals, GeneratorSource, LengthDist, RequestClass};
+use ecoserve::workload::{Arrivals, ArrivalSource, GeneratorSource, LengthDist,
+                         RequestClass};
 use std::time::Duration;
 
 fn main() {
@@ -53,6 +59,31 @@ fn main() {
              probe.events, probe.arrivals, probe.generated_tokens,
              probe.peak_live_jobs);
 
+    // Sharded leg: the same fleet partitioned per cluster (32 servers →
+    // 4 shards of 8), simulated on 4 scoped threads. Its event count
+    // differs from the single-core run's (two-level routing is its own
+    // design point); the metric is merged events per wall-second.
+    let plan = ShardPlan::partition(&cfg, 42);
+    let shards = plan.len();
+    let mk = || {
+        Box::new(GeneratorSource::new(Arrivals::Poisson { rate: 250.0 },
+                                      LengthDist::ShareGpt,
+                                      RequestClass::Online, duration, 42))
+            as Box<dyn ArrivalSource>
+    };
+    let sharded_probe = simulate_sharded(m, &cfg, 0.5, 0.1, &plan, shards,
+                                         &mk, None);
+    assert_eq!(sharded_probe.completed, sharded_probe.arrivals);
+    let rs = run("sim_50k_requests_sharded", &bcfg, || {
+        std::hint::black_box(simulate_sharded(m, &cfg, 0.5, 0.1, &plan,
+                                              shards, &mk, None));
+    });
+    println!("{}", rs.report());
+    let sharded_events_per_sec = sharded_probe.events as f64 / rs.mean_s;
+    println!("sharded events/sec: {sharded_events_per_sec:.0}  \
+              ({shards} shards, {} events, {} requests)",
+             sharded_probe.events, sharded_probe.arrivals);
+
     let j = Json::obj()
         .set("bench", "perf_sim")
         .set("trace_duration_s", duration)
@@ -63,7 +94,11 @@ fn main() {
         .set("peak_live_jobs", probe.peak_live_jobs)
         .set("mean_s", r.mean_s)
         .set("p50_s", r.p50_s)
-        .set("events_per_sec", events_per_sec);
+        .set("events_per_sec", events_per_sec)
+        .set("shards", shards)
+        .set("sharded_events", sharded_probe.events)
+        .set("sharded_mean_s", rs.mean_s)
+        .set("sharded_events_per_sec", sharded_events_per_sec);
     // The package lives at <repo>/rust; the report belongs at <repo>.
     let manifest = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
     let out = manifest.parent().unwrap_or(manifest).join("BENCH_sim.json");

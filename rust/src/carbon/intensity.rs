@@ -45,6 +45,27 @@ impl Region {
         }
     }
 
+    /// Representative grid longitude, degrees east — sets how far a
+    /// region's solar day is phase-shifted from another's (15° ≈ 1 h).
+    /// Multi-grid fleets use this so e.g. SE-North's midday dip does not
+    /// implausibly coincide with MISO's.
+    pub fn longitude_deg(&self) -> f64 {
+        match self {
+            Region::SwedenNorth => 17.0,
+            Region::California => -120.0,
+            Region::Midcontinent => -93.0,
+            Region::UsEast => -77.0,
+            Region::Europe => 10.0,
+            Region::UsCentral => -97.0,
+            Region::HyperscaleRenewable => -100.0,
+        }
+    }
+
+    /// Hours by which this region's solar day leads `other`'s.
+    pub fn solar_offset_hours(&self, other: Region) -> f64 {
+        (self.longitude_deg() - other.longitude_deg()) / 15.0
+    }
+
     /// Fraction of the day-night CI swing (solar share proxy).
     fn diurnal_swing(&self) -> f64 {
         match self {
@@ -117,14 +138,27 @@ impl CiTrace {
     /// swings (the temporal-shifting lever) without simulating 24 h.
     pub fn compressed_diurnal(region: Region, period_s: f64, periods: usize,
                               steps_per_period: usize, seed: u64) -> CiTrace {
+        Self::compressed_diurnal_shifted(region, period_s, periods,
+                                         steps_per_period, seed, 0.0)
+    }
+
+    /// [`CiTrace::compressed_diurnal`] with the solar day phase-shifted by
+    /// `shift_hours` (positive = this grid's clock runs ahead): sample
+    /// hour `h` reads the day shape at `h + shift`. Multi-grid fleets use
+    /// [`Region::solar_offset_hours`] so each grid's dip lands where its
+    /// longitude puts it instead of all grids dipping in lockstep.
+    pub fn compressed_diurnal_shifted(region: Region, period_s: f64,
+                                      periods: usize, steps_per_period: usize,
+                                      seed: u64, shift_hours: f64) -> CiTrace {
         assert!(period_s > 0.0 && steps_per_period > 0);
         let mut rng = Rng::new(seed ^ 0xC1);
         let step_s = period_s / steps_per_period as f64;
         let mut noise = 0.0f64;
         let values = (0..periods.max(1) * steps_per_period)
             .map(|i| {
-                let hour = (i % steps_per_period) as f64
-                    / steps_per_period as f64 * 24.0;
+                let hour = ((i % steps_per_period) as f64
+                    / steps_per_period as f64 * 24.0
+                    + shift_hours).rem_euclid(24.0);
                 noise = 0.9 * noise + 0.1 * rng.normal() * 0.05;
                 region.ci_at_hour(hour, noise)
             })
@@ -275,6 +309,29 @@ mod tests {
         // Second period repeats the day shape (modulo AR(1) noise).
         let dip2 = tr.at(180.0 + 13.0 / 24.0 * 180.0);
         assert!(dip2 < tr.at(180.0 + 3.0 / 24.0 * 180.0));
+    }
+
+    #[test]
+    fn shifted_day_moves_the_dip_by_the_phase() {
+        // A +6 h shift pulls the 13:00 solar dip back to 07:00 trace time:
+        // the value sampled at trace-hour 7 reads the shape at 7+6 = 13.
+        let base = CiTrace::compressed_diurnal(Region::California,
+                                               240.0, 1, 96, 11);
+        let shifted = CiTrace::compressed_diurnal_shifted(
+            Region::California, 240.0, 1, 96, 11, 6.0);
+        let at_hour = |tr: &CiTrace, h: f64| tr.at(h / 24.0 * 240.0);
+        assert!((at_hour(&shifted, 7.0) - at_hour(&base, 13.0)).abs()
+                    < 0.05 * 261.0,
+                "shifted@7h {} vs base@13h {}",
+                at_hour(&shifted, 7.0), at_hour(&base, 13.0));
+        // Zero shift is bit-identical to the unshifted constructor.
+        let zero = CiTrace::compressed_diurnal_shifted(
+            Region::California, 240.0, 1, 96, 11, 0.0);
+        assert!(base.values.iter().zip(&zero.values)
+                    .all(|(a, b)| a.to_bits() == b.to_bits()));
+        // SE-North leads MISO by its longitude gap (~7.3 h).
+        let off = Region::SwedenNorth.solar_offset_hours(Region::Midcontinent);
+        assert!((off - (17.0 + 93.0) / 15.0).abs() < 1e-12);
     }
 
     #[test]

@@ -1,6 +1,6 @@
 //! `ecoserve` CLI: serve (real AOT model), plan (capacity planner),
 //! simulate (cluster sim), report (carbon models), sweep (parallel
-//! scenario-sweep engine).
+//! scenario-sweep engine), scale (sharded-runtime capacity study).
 
 use ecoserve::util::cli::Args;
 
@@ -15,11 +15,18 @@ commands:
   report    --gpu SKU                               embodied-carbon breakdown
   sweep     --all | --scenario A,B [--list] [--threads N] [--seed S]
             [--duration SECS] [--ci-trace flat|diurnal|week] [--epoch SECS]
-            [--out FILE] [--json]
+            [--shards N] [--out FILE] [--json]
             run registered end-to-end scenarios in parallel (--epoch
-            overrides the rolling-horizon re-provisioning period;
-            long-haul scale scenarios join --all only when --duration
-            is given, or when selected by name)
+            overrides the rolling-horizon re-provisioning period; --shards
+            runs every scenario on the sharded runtime with up to N shard
+            threads, byte-identical for any N; long-haul scale scenarios
+            join --all only when --duration is given, or when selected by
+            name)
+  scale     [--scenario production-day] [--durations A,B] [--shards 1,2,4]
+            [--seed S] [--out FILE] [--json]
+            simulator-capacity study: sweep trace duration x shard count,
+            report events/sec + peak RSS + peak live jobs per cell, and
+            verify the outcome bytes are shard-count-invariant
 ";
 
 fn main() -> anyhow::Result<()> {
@@ -30,6 +37,7 @@ fn main() -> anyhow::Result<()> {
         Some("simulate") => simulate(&args),
         Some("report") => { report(&args); Ok(()) }
         Some("sweep") => sweep(&args),
+        Some("scale") => scale(&args),
         _ => {
             print!("{USAGE}");
             Ok(())
@@ -95,18 +103,27 @@ fn sweep(args: &Args) -> anyhow::Result<()> {
     } else {
         None
     };
+    let shards = if args.has("shards") {
+        Some(args.usize("shards", 1))
+    } else {
+        None
+    };
     let cfg = SweepConfig {
         threads: args.usize("threads", 0),
         seed: args.u64("seed", 42),
         duration_s: args.f64("duration", 180.0),
         ci_profile: ci_profile_flag(args)?,
         epoch_s,
+        shards,
     };
     anyhow::ensure!(cfg.duration_s.is_finite() && cfg.duration_s > 0.0,
                     "--duration must be a positive finite number of seconds");
     if let Some(e) = cfg.epoch_s {
         anyhow::ensure!(e.is_finite() && e > 0.0,
                         "--epoch must be a positive finite number of seconds");
+    }
+    if let Some(n) = cfg.shards {
+        anyhow::ensure!(n >= 1, "--shards must be at least 1");
     }
     eprintln!("sweeping {} scenarios (seed {}, {}s traces) ...",
               scenarios.len(), cfg.seed, cfg.duration_s);
@@ -138,6 +155,146 @@ fn sweep(args: &Args) -> anyhow::Result<()> {
     } else {
         eprintln!("{} scenarios in {:.1}s", report.outcomes.len(), wall);
     }
+    Ok(())
+}
+
+/// Peak resident-set size of this process so far, in KB (Linux `VmHWM`;
+/// `None` elsewhere). Pair with [`reset_peak_rss`] before each cell;
+/// where the reset is unsupported the numbers degrade to a monotone
+/// high-water mark that bounds each cell from above — CI additionally
+/// wraps the whole run in `/usr/bin/time -v` for an exact envelope.
+fn peak_rss_kb() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    status.lines()
+        .find(|l| l.starts_with("VmHWM:"))?
+        .split_whitespace()
+        .nth(1)?
+        .parse()
+        .ok()
+}
+
+/// Reset the kernel's peak-RSS watermark (`echo 5 > /proc/self/clear_refs`)
+/// so each capacity-study cell reports its own high-water mark. Best
+/// effort: silently a no-op where unsupported.
+fn reset_peak_rss() {
+    let _ = std::fs::write("/proc/self/clear_refs", "5");
+}
+
+/// The Özcan-style simulator-capacity study: sweep trace duration x shard
+/// count on one scenario, measure events/sec, peak live jobs, and peak
+/// RSS per cell, and check that the outcome bytes are shard-count
+/// invariant within each duration. Wall-clock numbers are measurements
+/// (not deterministic); the outcome JSON they are computed from is.
+///
+/// `events_per_sec` is *pipeline* throughput: the main run's event count
+/// over the wall time of the full scenario pipeline (planning passes and
+/// baseline simulations included) — a conservative lower bound on raw
+/// core throughput (`perf_sim` measures that), but every cell runs the
+/// identical pipeline, so the duration x shards scaling curve is
+/// apples-to-apples.
+fn scale(args: &Args) -> anyhow::Result<()> {
+    use ecoserve::scenarios::{catalog, scenario_seed, Overrides};
+    use ecoserve::util::json::Json;
+    use ecoserve::util::table::{fnum, Table};
+
+    let name = args.str("scenario", "production-day");
+    let sc = catalog::by_names(&[name.as_str()])
+        .ok_or_else(|| anyhow::anyhow!(
+            "unknown scenario '{name}' (try `ecoserve sweep --list`)"))?
+        .remove(0);
+    let durations: Vec<f64> = args.str("durations", "300,900")
+        .split(',')
+        .map(|s| s.trim().parse::<f64>()
+            .map_err(|_| anyhow::anyhow!("bad --durations entry '{s}'")))
+        .collect::<Result<_, _>>()?;
+    anyhow::ensure!(!durations.is_empty()
+                        && durations.iter().all(|d| d.is_finite() && *d > 0.0),
+                    "--durations must be positive finite seconds");
+    let shard_counts: Vec<usize> = args.str("shards", "1,2,4")
+        .split(',')
+        .map(|s| s.trim().parse::<usize>()
+            .map_err(|_| anyhow::anyhow!("bad --shards entry '{s}'")))
+        .collect::<Result<_, _>>()?;
+    anyhow::ensure!(!shard_counts.is_empty()
+                        && shard_counts.iter().all(|n| *n >= 1),
+                    "--shards must be counts of at least 1");
+    let master_seed = args.u64("seed", 42);
+    let seed = scenario_seed(master_seed, sc.name());
+
+    eprintln!("scale study: {} over {} durations x {} shard counts ...",
+              sc.name(), durations.len(), shard_counts.len());
+    let mut table = Table::new(&[
+        "duration s", "shards", "req", "events", "wall s", "events/s",
+        "peak-jobs", "peak-RSS MB", "det",
+    ]);
+    let mut cells: Vec<Json> = Vec::new();
+    let mut all_deterministic = true;
+    for &d in &durations {
+        let mut reference: Option<String> = None;
+        for &n in &shard_counts {
+            let ov = Overrides { shards: Some(n), ..Default::default() };
+            reset_peak_rss();
+            let t0 = std::time::Instant::now();
+            let o = sc.run_with(seed, d, &ov);
+            let wall = t0.elapsed().as_secs_f64();
+            let outcome_json = o.to_json().to_string();
+            let deterministic = match &reference {
+                None => {
+                    reference = Some(outcome_json.clone());
+                    true
+                }
+                Some(r) => *r == outcome_json,
+            };
+            all_deterministic &= deterministic;
+            let events_per_sec = o.events as f64 / wall.max(1e-9);
+            let rss_kb = peak_rss_kb();
+            table.row(&[
+                fnum(d),
+                format!("{n}"),
+                format!("{}", o.requests),
+                format!("{}", o.events),
+                fnum(wall),
+                fnum(events_per_sec),
+                format!("{}", o.peak_live_jobs),
+                rss_kb.map(|kb| fnum(kb as f64 / 1024.0))
+                    .unwrap_or_else(|| "-".into()),
+                if deterministic { "ok".into() } else { "DIVERGED".into() },
+            ]);
+            cells.push(Json::obj()
+                .set("duration_s", d)
+                .set("shards", n)
+                .set("requests", o.requests)
+                .set("events", o.events)
+                .set("peak_live_jobs", o.peak_live_jobs)
+                .set("wall_s", wall)
+                .set("events_per_sec", events_per_sec)
+                .set("peak_rss_kb", match rss_kb {
+                    Some(kb) => Json::Num(kb as f64),
+                    None => Json::Null,
+                })
+                .set("identical_across_shards", deterministic));
+        }
+    }
+
+    let report = Json::obj()
+        .set("bench", "scale")
+        .set("scenario", sc.name())
+        .set("master_seed", format!("{master_seed:#018x}"))
+        .set("cells", cells);
+    let json = report.to_string();
+    if args.bool("json") {
+        println!("{json}");
+    } else {
+        table.print();
+    }
+    if !args.bool("json") || args.has("out") {
+        let out = args.str("out", "scale-report.json");
+        std::fs::write(&out, json.as_bytes())
+            .map_err(|e| anyhow::anyhow!("writing {out}: {e}"))?;
+        eprintln!("capacity curve -> {out}");
+    }
+    anyhow::ensure!(all_deterministic,
+                    "sharded outcomes diverged across shard counts");
     Ok(())
 }
 

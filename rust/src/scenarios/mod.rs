@@ -25,8 +25,8 @@ use crate::carbon::intensity::{CiSignal, CiTrace, Region};
 use crate::planner::horizon::{self, HorizonConfig};
 use crate::planner::slicing::SliceAccum;
 use crate::planner::{self, PlanConfig};
-use crate::sim::{simulate_stream, DeferralPolicy, FleetSchedule, Router,
-                 SimReport};
+use crate::sim::{shard, simulate_stream, DeferralPolicy, FleetSchedule,
+                 Router, SimConfig, SimReport};
 use crate::strategies::{fleet_from_plan, sim_config, splitwise_fleet, Strategy};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -115,6 +115,11 @@ pub struct Overrides {
     /// Override the re-provisioning epoch (seconds) for scenarios that
     /// run the rolling-horizon controller; ignored for static fleets.
     pub epoch_s: Option<f64>,
+    /// Run on the sharded runtime with up to N shard worker threads (the
+    /// CLI `--shards` knob); `None` keeps the single-core engine. The
+    /// fleet partition never depends on N, so the outcome bytes are
+    /// invariant in N — N only buys wall-clock.
+    pub shards: Option<usize>,
 }
 
 /// A named design point that the sweep runner can execute.
@@ -146,7 +151,10 @@ pub trait Scenario: Send + Sync {
         if let (Some(e), Some(h)) = (ov.epoch_s, spec.reprovision.as_mut()) {
             h.epoch_s = e;
         }
-        run_spec(self.name(), &spec, seed, duration_s)
+        match ov.shards {
+            Some(n) => run_spec_sharded(self.name(), &spec, seed, duration_s, n),
+            None => run_spec(self.name(), &spec, seed, duration_s),
+        }
     }
 }
 
@@ -163,6 +171,9 @@ pub struct ScenarioOutcome {
     pub requests: usize,
     pub completed: usize,
     pub generated_tokens: usize,
+    /// Discrete events processed by the sim core — the capacity study's
+    /// throughput numerator (`ecoserve scale` reports events/sec).
+    pub events: usize,
     /// Provisioned GPUs (plan) and simulated servers (TP groups).
     pub fleet_gpus: usize,
     pub fleet_servers: usize,
@@ -224,6 +235,7 @@ impl ScenarioOutcome {
             .set("requests", self.requests)
             .set("completed", self.completed)
             .set("generated_tokens", self.generated_tokens)
+            .set("events", self.events)
             .set("fleet_gpus", self.fleet_gpus)
             .set("fleet_servers", self.fleet_servers)
             .set("fleet_counts", counts)
@@ -317,10 +329,25 @@ fn scenario_trace(spec: &ScenarioSpec, seed: u64, duration_s: f64) -> Vec<Reques
 /// re-provisioning scenarios) one observation window of demand.
 pub fn run_spec(name: &str, spec: &ScenarioSpec, seed: u64, duration_s: f64)
     -> ScenarioOutcome {
-    let mut fresh = || {
+    let fresh = || {
         Box::new(scenario_sources(spec, seed, duration_s)) as Box<dyn ArrivalSource>
     };
-    run_spec_with_sources(name, spec, seed, duration_s, &mut fresh)
+    run_spec_with_sources(name, spec, seed, duration_s, &fresh, None)
+}
+
+/// [`run_spec`] on the sharded runtime: the same global planning passes,
+/// then the fleet partitions into per-region/per-cluster shards that
+/// simulate (and, for re-provisioning scenarios, schedule) their own
+/// deterministic substreams on up to `shards` scoped threads. The
+/// outcome bytes are invariant in `shards` — the partition comes from the
+/// fleet, never from the thread budget.
+pub fn run_spec_sharded(name: &str, spec: &ScenarioSpec, seed: u64,
+                        duration_s: f64, shards: usize) -> ScenarioOutcome {
+    let fresh = || {
+        Box::new(scenario_sources(spec, seed, duration_s)) as Box<dyn ArrivalSource>
+    };
+    run_spec_with_sources(name, spec, seed, duration_s, &fresh,
+                          Some(shards.max(1)))
 }
 
 /// Reference implementation for the differential suite: materialize the
@@ -331,15 +358,30 @@ pub fn run_spec(name: &str, spec: &ScenarioSpec, seed: u64, duration_s: f64)
 pub fn run_spec_materialized(name: &str, spec: &ScenarioSpec, seed: u64,
                              duration_s: f64) -> ScenarioOutcome {
     let trace = scenario_trace(spec, seed, duration_s);
-    let mut fresh = || {
+    let fresh = || {
         Box::new(SliceSource::new(&trace)) as Box<dyn ArrivalSource + '_>
     };
-    run_spec_with_sources(name, spec, seed, duration_s, &mut fresh)
+    run_spec_with_sources(name, spec, seed, duration_s, &fresh, None)
+}
+
+/// Materialized reference for the *sharded* differential: byte-identical
+/// to [`run_spec_sharded`] at any shard count —
+/// `tests/integration_shard.rs` enforces it.
+pub fn run_spec_sharded_materialized(name: &str, spec: &ScenarioSpec,
+                                     seed: u64, duration_s: f64,
+                                     shards: usize) -> ScenarioOutcome {
+    let trace = scenario_trace(spec, seed, duration_s);
+    let fresh = || {
+        Box::new(SliceSource::new(&trace)) as Box<dyn ArrivalSource + '_>
+    };
+    run_spec_with_sources(name, spec, seed, duration_s, &fresh,
+                          Some(shards.max(1)))
 }
 
 /// Factory handing out a fresh copy of a scenario's arrival stream; each
-/// demand pass over the workload pulls its own.
-type SourceFactory<'a> = dyn FnMut() -> Box<dyn ArrivalSource + 'a>;
+/// demand pass over the workload pulls its own. `Sync` so shard workers
+/// can pull fresh streams concurrently.
+type SourceFactory<'a> = dyn Fn() -> Box<dyn ArrivalSource + 'a> + Sync;
 
 /// The shared pipeline: every demand pass (peak-window scan, slicing,
 /// horizon scheduling, simulation, baselines) pulls a fresh stream from
@@ -350,8 +392,14 @@ type SourceFactory<'a> = dyn FnMut() -> Box<dyn ArrivalSource + 'a>;
 /// *peak* epoch window (what a peak-provisioned operator would deploy)
 /// and the rolling-horizon controller then schedules provisioning events
 /// over that template; the static all-on baseline lands in `extras`.
+///
+/// With `shards` set, every simulation pass (main run and baselines) runs
+/// on the sharded runtime: the fleet partitions per region/cluster, each
+/// shard re-provisions against and simulates its own substream, and the
+/// merged report is invariant in the thread budget.
 fn run_spec_with_sources<'a>(name: &str, spec: &ScenarioSpec, seed: u64,
-                             duration_s: f64, fresh: &mut SourceFactory<'a>)
+                             duration_s: f64, fresh: &SourceFactory<'a>,
+                             shards: Option<usize>)
     -> ScenarioOutcome {
     use crate::planner::slicing::cluster_slices;
 
@@ -432,6 +480,26 @@ fn run_spec_with_sources<'a>(name: &str, spec: &ScenarioSpec, seed: u64,
             CiTrace::compressed_diurnal(spec.region, duration_s / 7.0, 8, 96,
                                         seed ^ 0xD1A)),
     };
+    // Per-region CI traces: under a time-varying profile, the pinned half
+    // of a TwoRegion fleet gets its *own* compressed diurnal day,
+    // phase-shifted by the longitude gap between the grids — both grids
+    // see diurnal CI instead of the pinned one flat-lining at its
+    // average.
+    if let FleetPolicy::TwoRegion { low } = spec.fleet {
+        let day = match spec.ci_profile {
+            CiProfile::Flat => None,
+            CiProfile::CompressedDiurnal => Some((duration_s, 2)),
+            CiProfile::CompressedWeek => Some((duration_s / 7.0, 8)),
+        };
+        if let Some((period_s, periods)) = day {
+            cfg.region_signals = vec![(
+                low,
+                CiSignal::Trace(CiTrace::compressed_diurnal_shifted(
+                    low, period_s, periods, 96, seed ^ 0xD1B,
+                    low.solar_offset_hours(spec.region))),
+            )];
+        }
+    }
     if spec.defer_offline {
         cfg.deferral = DeferralPolicy::LowCiWindow {
             deadline_s: 0.8 * duration_s,
@@ -439,13 +507,40 @@ fn run_spec_with_sources<'a>(name: &str, spec: &ScenarioSpec, seed: u64,
             horizon_s: duration_s,
         };
     }
-    if let Some(h) = &spec.reprovision {
+    // Unsharded runs schedule the whole fleet off the whole stream; the
+    // sharded runtime instead re-provisions each shard against its own
+    // substream (see `sched` below).
+    if let (Some(h), None) = (&spec.reprovision, shards) {
         cfg.fleet_plan = horizon::plan_schedule_stream(
             model, &mut *fresh(), &cfg.servers, &plan_cfg, &cfg.ci, slo, h,
             duration_s);
     }
-    let r: SimReport =
-        simulate_stream(model, &mut *fresh(), &cfg, slo.ttft_s, slo.tpot_s);
+
+    // The partition is a pure function of the fleet, shared by the main
+    // run and every baseline below (their fleets are identical).
+    let shard_ctx = shards.map(|threads| {
+        (shard::ShardPlan::partition(&cfg, seed), threads)
+    });
+    let plan_cfg_ref = &plan_cfg;
+    let sched = spec.reprovision.as_ref().map(|h| {
+        Box::new(move |sub: &SimConfig, src: &mut dyn ArrivalSource| {
+            horizon::plan_schedule_stream(model, src, &sub.servers,
+                                          plan_cfg_ref, &sub.ci, slo, h,
+                                          duration_s)
+        }) as Box<shard::ScheduleFn<'_>>
+    });
+    // One simulation pass: `reprovision` says whether this pass runs the
+    // rolling-horizon controller (the static baseline switches it off).
+    let run_sim = |c: &SimConfig, reprovision: bool| -> SimReport {
+        match &shard_ctx {
+            None => simulate_stream(model, &mut *fresh(), c, slo.ttft_s,
+                                    slo.tpot_s),
+            Some((sp, threads)) => shard::simulate_sharded(
+                model, c, slo.ttft_s, slo.tpot_s, sp, *threads, fresh,
+                if reprovision { sched.as_deref() } else { None }),
+        }
+    };
+    let r: SimReport = run_sim(&cfg, true);
 
     let mut extras = BTreeMap::new();
     for region in &spec.compare_regions {
@@ -460,8 +555,7 @@ fn run_spec_with_sources<'a>(name: &str, spec: &ScenarioSpec, seed: u64,
         // Run-immediately baseline: same trace/fleet/signal, no shifting.
         let mut base_cfg = cfg.clone();
         base_cfg.deferral = DeferralPolicy::Immediate;
-        let base = simulate_stream(model, &mut *fresh(), &base_cfg,
-                                   slo.ttft_s, slo.tpot_s);
+        let base = run_sim(&base_cfg, true);
         extras.insert("op_kg_immediate".into(), base.op_kg);
         extras.insert("carbon_kg_immediate".into(), base.carbon_kg());
         extras.insert("slo_attainment_immediate".into(), base.slo_attainment);
@@ -471,8 +565,7 @@ fn run_spec_with_sources<'a>(name: &str, spec: &ScenarioSpec, seed: u64,
         // JSQ baseline: identical fleet/grids, carbon-blind routing.
         let mut base_cfg = cfg.clone();
         base_cfg.router = Router::Jsq;
-        let base = simulate_stream(model, &mut *fresh(), &base_cfg,
-                                   slo.ttft_s, slo.tpot_s);
+        let base = run_sim(&base_cfg, true);
         extras.insert("op_kg_jsq".into(), base.op_kg);
         extras.insert("carbon_kg_jsq".into(), base.carbon_kg());
         extras.insert("ttft_p90_s_jsq".into(), base.ttft.p90());
@@ -483,8 +576,7 @@ fn run_spec_with_sources<'a>(name: &str, spec: &ScenarioSpec, seed: u64,
         // must strictly beat on total (op + amortized embodied) carbon.
         let mut base_cfg = cfg.clone();
         base_cfg.fleet_plan = FleetSchedule::default();
-        let base = simulate_stream(model, &mut *fresh(), &base_cfg,
-                                   slo.ttft_s, slo.tpot_s);
+        let base = run_sim(&base_cfg, false);
         extras.insert("op_kg_static".into(), base.op_kg);
         extras.insert("emb_kg_static".into(), base.emb_kg);
         extras.insert("carbon_kg_static".into(), base.carbon_kg());
@@ -503,6 +595,7 @@ fn run_spec_with_sources<'a>(name: &str, spec: &ScenarioSpec, seed: u64,
         requests: r.arrivals,
         completed: r.completed,
         generated_tokens: r.generated_tokens,
+        events: r.events,
         fleet_gpus: plan.total_gpus(),
         fleet_servers,
         counts: plan.counts.clone(),

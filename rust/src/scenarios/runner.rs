@@ -25,12 +25,16 @@ pub struct SweepConfig {
     /// Override the re-provisioning epoch for rolling-horizon scenarios
     /// (the `--epoch` knob); `None` keeps each scenario's own epoch.
     pub epoch_s: Option<f64>,
+    /// Run every scenario on the sharded runtime with up to N shard
+    /// worker threads (the `--shards` knob); `None` keeps the unsharded
+    /// engine. Outcome bytes are invariant in N.
+    pub shards: Option<usize>,
 }
 
 impl Default for SweepConfig {
     fn default() -> Self {
         SweepConfig { threads: 0, seed: 42, duration_s: 180.0,
-                      ci_profile: None, epoch_s: None }
+                      ci_profile: None, epoch_s: None, shards: None }
     }
 }
 
@@ -128,6 +132,7 @@ pub fn run_sweep(scenarios: &[Box<dyn Scenario>], cfg: &SweepConfig) -> SweepRep
                 let ov = Overrides {
                     ci_profile: cfg.ci_profile,
                     epoch_s: cfg.epoch_s,
+                    shards: cfg.shards,
                 };
                 let outcome = sc.run_with(seed, cfg.duration_s, &ov);
                 *slots[i].lock().unwrap() = Some(outcome);

@@ -1,8 +1,10 @@
 //! Carbon-meter observer: integrates operational carbon against the
 //! deployment's time-varying CI signal as the simulation runs, instead of
 //! multiplying total energy by a scalar CI after the fact. Multi-region
-//! fleets attach per-server flat overrides (a server's grid does not move
-//! with the primary region's trace).
+//! fleets attach per-server overrides — full [`CiSignal`]s, so a pinned
+//! grid can carry its own (phase-shifted) diurnal trace rather than a
+//! flat average; `SimConfig::region_signals` supplies the traces and an
+//! empty map falls back to the flat published average per region.
 //!
 //! The meter also keeps each server's **provisioned intervals** — opened
 //! by `Provision`, closed by `Decommission` events — so embodied carbon
@@ -18,9 +20,9 @@ use super::core::SimConfig;
 #[derive(Debug)]
 pub struct CarbonMeter {
     primary: CiSignal,
-    /// Per-server flat CI overrides (multi-region fleets), indexed like
-    /// `SimConfig::servers`.
-    overrides: Vec<Option<f64>>,
+    /// Per-server CI-signal overrides (multi-region fleets), indexed like
+    /// `SimConfig::servers`. Flat for regions without a configured trace.
+    overrides: Vec<Option<CiSignal>>,
     op_kg: f64,
     /// Closed provisioned intervals per server, in time order (consulted
     /// only for traced signals when pricing idle energy).
@@ -39,7 +41,7 @@ impl CarbonMeter {
         CarbonMeter {
             primary: cfg.ci.clone(),
             overrides: cfg.servers.iter()
-                .map(|s| s.region.map(|r| r.avg_ci()))
+                .map(|s| s.region.map(|r| cfg.region_signal(r)))
                 .collect(),
             op_kg: 0.0,
             intervals: vec![Vec::new(); n],
@@ -78,22 +80,23 @@ impl CarbonMeter {
         self.total_s[server]
     }
 
-    /// Mean CI over `server`'s provisioned intervals, weighted by
+    /// Mean of `sig` over `server`'s provisioned intervals, weighted by
     /// interval length — what idle draw should be priced at (an elastic
     /// server is only idle while it is provisioned). Falls back to the
     /// horizon mean for a never-provisioned server (its idle energy is
     /// zero anyway).
-    fn provisioned_mean_ci(&self, server: usize, horizon_s: f64) -> f64 {
-        if let CiSignal::Flat(ci) = &self.primary {
+    fn provisioned_mean_ci(&self, server: usize, horizon_s: f64,
+                           sig: &CiSignal) -> f64 {
+        if let CiSignal::Flat(ci) = sig {
             return *ci; // interval weighting is moot for a flat signal
         }
         let iv = &self.intervals[server];
         let total: f64 = iv.iter().map(|(a, b)| b - a).sum();
         if total <= 0.0 {
-            return self.primary.mean_over(0.0, horizon_s);
+            return sig.mean_over(0.0, horizon_s);
         }
         iv.iter()
-            .map(|(a, b)| self.primary.mean_over(*a, *b) * (b - a))
+            .map(|(a, b)| sig.mean_over(*a, *b) * (b - a))
             .sum::<f64>()
             / total
     }
@@ -103,24 +106,27 @@ impl CarbonMeter {
         &self.primary
     }
 
-    /// Grid CI seen by `server` at time `t`.
-    pub fn ci_at(&self, server: usize, t_s: f64) -> f64 {
-        match self.overrides.get(server).copied().flatten() {
-            Some(ci) => ci,
-            None => self.primary.at(t_s),
+    /// The signal `server` meters against: its region override, else the
+    /// deployment's primary signal.
+    fn signal_for(&self, server: usize) -> &CiSignal {
+        match self.overrides.get(server).and_then(|o| o.as_ref()) {
+            Some(sig) => sig,
+            None => &self.primary,
         }
     }
 
+    /// Grid CI seen by `server` at time `t`.
+    pub fn ci_at(&self, server: usize, t_s: f64) -> f64 {
+        self.signal_for(server).at(t_s)
+    }
+
     /// Charge a busy interval's energy at the mean CI over the interval.
-    /// Called once per busy period — the meter's hot path — so the flat
-    /// signal skips the interval-integration machinery entirely.
+    /// Called once per busy period — the meter's hot path — so flat
+    /// signals skip the interval-integration machinery entirely.
     pub fn record(&mut self, server: usize, t0_s: f64, dur_s: f64, energy_j: f64) {
-        let ci = match self.overrides.get(server).copied().flatten() {
-            Some(ci) => ci,
-            None => match &self.primary {
-                CiSignal::Flat(ci) => *ci,
-                sig => sig.mean_over(t0_s, t0_s + dur_s.max(0.0)),
-            },
+        let ci = match self.signal_for(server) {
+            CiSignal::Flat(ci) => *ci,
+            sig => sig.mean_over(t0_s, t0_s + dur_s.max(0.0)),
         };
         self.op_kg += op_kg_from_joules(energy_j, ci);
     }
@@ -129,16 +135,34 @@ impl CarbonMeter {
     /// provisioned intervals (idle draw is spread across the time the
     /// server was actually up — the whole run for a static fleet).
     pub fn record_idle(&mut self, server: usize, energy_j: f64, dur_s: f64) {
-        let ci = match self.overrides.get(server).copied().flatten() {
-            Some(ci) => ci,
-            None => self.provisioned_mean_ci(server, dur_s),
-        };
+        let ci = self.provisioned_mean_ci(server, dur_s,
+                                          self.signal_for(server));
         self.op_kg += op_kg_from_joules(energy_j, ci);
     }
 
     /// Accumulated operational carbon, kgCO₂e.
     pub fn op_kg(&self) -> f64 {
         self.op_kg
+    }
+
+    /// Fold a shard meter covering a *disjoint* slice of the fleet into
+    /// this fleet-wide meter: `global_idx[local]` names the global server
+    /// each of `other`'s slots corresponds to. Interval lists and
+    /// provisioned totals scatter exactly (disjoint slots); `op_kg` is an
+    /// f64 accumulation, so the sharded runtime always folds shards in
+    /// ascending shard-index order to keep the total a pure function of
+    /// the partition set.
+    pub fn merge_shard(&mut self, other: &CarbonMeter, global_idx: &[usize]) {
+        assert_eq!(other.total_s.len(), global_idx.len(),
+                   "shard meter / index map size mismatch");
+        for (local, &g) in global_idx.iter().enumerate() {
+            assert!(self.intervals[g].is_empty() && self.total_s[g] == 0.0,
+                    "shard meters overlap on server {g}");
+            self.intervals[g] = other.intervals[local].clone();
+            self.open_since[g] = other.open_since[local];
+            self.total_s[g] = other.total_s[local];
+        }
+        self.op_kg += other.op_kg;
     }
 }
 
@@ -204,6 +228,48 @@ mod tests {
         // Closing an already-closed interval is a no-op.
         m.decommission(0, 40.0);
         assert!((m.provisioned_s(0) - 20.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn region_trace_override_is_time_varying() {
+        let mut c = cfg(CiSignal::flat(501.0), &[Some(Region::SwedenNorth), None]);
+        c.region_signals = vec![(
+            Region::SwedenNorth,
+            CiSignal::Trace(CiTrace::compressed_diurnal(
+                Region::SwedenNorth, 240.0, 1, 96, 3)),
+        )];
+        let m = CarbonMeter::new(&c);
+        // The pinned server follows its own diurnal trace, not a flat 17.
+        let dip = m.ci_at(0, 13.0 / 24.0 * 240.0);
+        let night = m.ci_at(0, 3.0 / 24.0 * 240.0);
+        assert!(dip < night, "dip {dip} night {night}");
+        assert!((dip - 17.0).abs() > 1e-9 || (night - 17.0).abs() > 1e-9,
+                "trace override collapsed to the flat average");
+        // The unpinned server still sees the primary signal.
+        assert_eq!(m.ci_at(1, 120.0), 501.0);
+    }
+
+    #[test]
+    fn merge_shard_scatters_disjoint_interval_totals() {
+        let c = cfg(CiSignal::flat(261.0), &[None, None, None]);
+        let mut whole = CarbonMeter::new(&c);
+        let shard_cfg = cfg(CiSignal::flat(261.0), &[None]);
+        let mut a = CarbonMeter::new(&shard_cfg);
+        a.provision(0, 0.0);
+        a.record(0, 0.0, 5.0, 3.6e6);
+        a.finalize(50.0);
+        let shard_cfg2 = cfg(CiSignal::flat(261.0), &[None, None]);
+        let mut b = CarbonMeter::new(&shard_cfg2);
+        b.provision(0, 10.0);
+        b.provision(1, 0.0);
+        b.record(1, 0.0, 2.0, 3.6e6);
+        b.finalize(30.0);
+        whole.merge_shard(&a, &[1]);
+        whole.merge_shard(&b, &[0, 2]);
+        assert!((whole.provisioned_s(1) - 50.0).abs() < 1e-12);
+        assert!((whole.provisioned_s(0) - 20.0).abs() < 1e-12);
+        assert!((whole.provisioned_s(2) - 30.0).abs() < 1e-12);
+        assert!((whole.op_kg() - (a.op_kg() + b.op_kg())).abs() < 1e-15);
     }
 
     #[test]

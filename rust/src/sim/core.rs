@@ -18,7 +18,7 @@
 //! `production-day`/`production-week` scale scenarios (and the CI
 //! `scale-smoke` RSS gate) exercise end to end.
 
-use crate::carbon::intensity::CiSignal;
+use crate::carbon::intensity::{CiSignal, Region};
 use crate::models::LlmSpec;
 use crate::workload::{ArrivalSource, RequestClass};
 use std::cmp::Ordering;
@@ -90,6 +90,11 @@ pub struct SimConfig {
     pub deferral: DeferralPolicy,
     /// Fleet provisioning schedule (default: static all-on fleet).
     pub fleet_plan: FleetSchedule,
+    /// Time-varying CI signals for pinned-region servers: a server whose
+    /// `ServerSpec::region` matches an entry sees that signal instead of
+    /// the region's flat published average. Empty (the default) keeps the
+    /// pre-existing flat-override behavior bit for bit.
+    pub region_signals: Vec<(Region, CiSignal)>,
 }
 
 impl SimConfig {
@@ -106,7 +111,18 @@ impl SimConfig {
             kv_transfer_bw: 64e9,
             deferral: DeferralPolicy::Immediate,
             fleet_plan: FleetSchedule::default(),
+            region_signals: Vec::new(),
         }
+    }
+
+    /// Effective CI signal for a pinned server in `region`: the
+    /// configured per-region trace when one exists, else the region's
+    /// flat published average.
+    pub fn region_signal(&self, region: Region) -> CiSignal {
+        self.region_signals.iter()
+            .find(|(r, _)| *r == region)
+            .map(|(_, s)| s.clone())
+            .unwrap_or(CiSignal::Flat(region.avg_ci()))
     }
 }
 
@@ -441,7 +457,15 @@ impl<'a> Sim<'a> {
     /// server-hour (the meter's intervals), so an elastic fleet that
     /// decommissions surplus servers is visibly cheaper than a static
     /// peak-provisioned one.
-    pub fn finish(mut self) -> SimReport {
+    pub fn finish(self) -> SimReport {
+        self.finish_parts().0
+    }
+
+    /// [`Sim::finish`] that also hands back the closed-books carbon meter,
+    /// so the sharded runtime can merge shard meters (disjoint server
+    /// partitions) into one fleet-wide meter instead of reconstructing
+    /// interval totals from the report.
+    pub fn finish_parts(mut self) -> (SimReport, CarbonMeter) {
         debug_assert_eq!(self.jobs.live(), 0,
                          "jobs still live after the event queue drained");
         let dur = self.now.max(self.last_arrival);
@@ -466,7 +490,9 @@ impl<'a> Sim<'a> {
             });
         }
         self.metrics.peak_live_jobs = self.jobs.peak_live();
-        self.metrics.into_report(dur, energy, self.meter.op_kg(), emb, per_server)
+        let report = self.metrics.into_report(dur, energy, self.meter.op_kg(),
+                                              emb, per_server);
+        (report, self.meter)
     }
 }
 

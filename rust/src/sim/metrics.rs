@@ -96,6 +96,10 @@ impl MetricsSink {
             emb_kg,
             slo_attainment,
             offline_deadline_attainment,
+            online_done: self.online_done,
+            slo_ok: self.slo_ok,
+            offline_done: self.offline_done,
+            offline_on_time: self.offline_on_time,
             deferred_requests: self.deferred,
             truncated_prompts: self.truncated_prompts,
             events: self.events,
@@ -139,6 +143,13 @@ pub struct SimReport {
     /// Fraction of deadline-carrying offline requests finishing on time
     /// (1.0 when no deadlines are tracked).
     pub offline_deadline_attainment: f64,
+    /// Raw attainment counters — kept alongside the ratios so shard
+    /// merging recomputes attainment from exact sums instead of averaging
+    /// per-shard fractions.
+    pub online_done: usize,
+    pub slo_ok: usize,
+    pub offline_done: usize,
+    pub offline_on_time: usize,
     /// Offline requests shifted into a later low-CI release slot.
     pub deferred_requests: usize,
     /// Requests whose prompts were silently clipped to the context cap —

@@ -28,16 +28,25 @@
 //! job slots recycled by a [`JobArena`], latency percentiles in fixed-bin
 //! histograms), so a multi-million-request production day runs in memory
 //! bounded by the fleet and the in-flight jobs, not the trace length.
+//!
+//! The core is also *shardable* ([`shard`]): a fleet partitions into
+//! per-region/per-cluster shards that run on scoped threads over
+//! deterministic substreams and merge order-invariantly back into one
+//! [`SimReport`] — wall-clock scaling with a byte-identical report for
+//! any shard-thread count.
 
 pub mod carbon_meter;
 pub mod core;
 pub mod metrics;
 pub mod policy;
 pub mod server;
+pub mod shard;
 
 pub use self::carbon_meter::CarbonMeter;
 pub use self::core::{Event, EventKind, EventQueue, FleetAction, FleetEvent,
                      FleetSchedule, SimConfig};
+pub use self::shard::{simulate_sharded, ShardPlan, ShardSpec, ShardSplitter,
+                      MAX_SHARD_SERVERS};
 pub use self::metrics::{MetricsSink, ServerUsage, SimReport};
 pub use self::policy::{BatchPolicy, Batcher, CarbonGreedy, DeferralPolicy,
                        FifoBatch, Jsq, OnlineFirstBatch, RouteCtx, RoutePolicy,

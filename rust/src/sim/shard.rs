@@ -1,0 +1,679 @@
+//! Sharded multi-region simulation runtime: partition one scenario's
+//! fleet into per-region / per-cluster shards, run each shard's
+//! discrete-event core on its own scoped thread over a deterministic
+//! substream of the arrivals, and merge the shard results into one
+//! [`SimReport`] — so a multi-million-request production day scales in
+//! *wall-clock*, not just memory.
+//!
+//! ## Determinism contract
+//!
+//! The partition ([`ShardPlan::partition`]) is a pure function of the
+//! fleet: servers group by pinned region (first-appearance order), groups
+//! split into clusters of at most [`MAX_SHARD_SERVERS`], and a repair
+//! pass merges clusters until every shard can both prefill and decode.
+//! The shard *count* therefore never depends on how many worker threads
+//! (`--shards N`) execute the plan — N only caps parallelism — which is
+//! what makes an N-shard run byte-identical to a 1-shard run by
+//! construction.
+//!
+//! Requests split across shards via a two-level routing decomposition: a
+//! top-level splitter ([`ShardSplitter`]) reuses the [`Router`] semantics
+//! at shard granularity (JSQ by normalized assigned load, workload-aware
+//! by shard memory, carbon-greedy by the shard's current grid CI), as a
+//! pure state machine over the request sequence — no execution-time
+//! inputs — so every shard independently reconstructs the same partition
+//! of the stream ([`PartitionSource`]). Within a shard, the existing
+//! per-server policies run unchanged.
+//!
+//! Merging is order-fixed: shard results fold in ascending shard index
+//! (histogram bins, counter sums, and [`CarbonMeter::merge_shard`]
+//! interval totals), so the merged report is a pure function of the
+//! partition set and never of thread interleaving.
+//!
+//! ## What sharding means semantically
+//!
+//! A sharded run is its *own* deterministic design point, not a bitwise
+//! re-execution of the unsharded run: routing state does not cross shard
+//! boundaries (the splitter sees assigned-load proxies, not live queue
+//! depths), KV handoffs stay within a shard, and each shard defers and
+//! re-provisions against its own substream. The invariant the runtime
+//! guarantees — and the one `tests/integration_shard.rs` enforces — is
+//! shard-count/interleaving invariance, plus exact equality with the
+//! unsharded engine whenever the partition degenerates to a single shard.
+
+use crate::carbon::intensity::CiSignal;
+use crate::models::LlmSpec;
+use crate::util::stats::Histogram;
+use crate::workload::{ArrivalSource, PartitionSource, Request};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use super::carbon_meter::CarbonMeter;
+use super::core::{FleetSchedule, Sim, SimConfig};
+use super::metrics::{ServerUsage, SimReport};
+use super::policy::{Router, LONG_PROMPT_TOKENS};
+use super::server::Role;
+
+/// Largest server group a single shard may hold; region groups larger
+/// than this split into balanced clusters. A fixed constant (never the
+/// CLI thread count) so the partition — and with it every merged byte —
+/// is independent of how much parallelism a run asks for.
+pub const MAX_SHARD_SERVERS: usize = 8;
+
+/// One shard of a partitioned fleet.
+#[derive(Debug, Clone)]
+pub struct ShardSpec {
+    /// Stable identity: `<region name or "primary">/<cluster index>`.
+    pub key: String,
+    /// Global indices into `SimConfig::servers`, in fleet order.
+    pub servers: Vec<usize>,
+    /// Shard-derived deterministic seed (FNV of the key mixed with the
+    /// run seed): the identity future per-shard noise sources key off.
+    /// Independent of shard count and execution order.
+    pub seed: u64,
+}
+
+/// A deterministic partition of a fleet into shards.
+#[derive(Debug, Clone)]
+pub struct ShardPlan {
+    pub shards: Vec<ShardSpec>,
+}
+
+fn shard_seed(master: u64, key: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in key.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h ^ master.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+impl ShardPlan {
+    /// Partition `cfg`'s fleet: group by pinned region in first-appearance
+    /// order, split groups into clusters of ≤ [`MAX_SHARD_SERVERS`], then
+    /// merge neighbours until every shard holds at least one
+    /// prompt-capable and one decode-capable server (a disaggregated
+    /// prompt/decode fleet may collapse to one shard — KV handoffs never
+    /// cross shard boundaries). Pure function of the fleet + seed.
+    pub fn partition(cfg: &SimConfig, seed: u64) -> ShardPlan {
+        assert!(!cfg.servers.is_empty(), "cannot shard an empty fleet");
+        // Region groups in first-appearance order.
+        let mut names: Vec<String> = Vec::new();
+        let mut groups: Vec<Vec<usize>> = Vec::new();
+        for (i, s) in cfg.servers.iter().enumerate() {
+            let name = match s.region {
+                Some(r) => r.name().to_string(),
+                None => "primary".to_string(),
+            };
+            match names.iter().position(|n| *n == name) {
+                Some(g) => groups[g].push(i),
+                None => {
+                    names.push(name);
+                    groups.push(vec![i]);
+                }
+            }
+        }
+        // Balanced clusters of at most MAX_SHARD_SERVERS per group.
+        let mut shards: Vec<(String, Vec<usize>)> = Vec::new();
+        for (name, idxs) in names.iter().zip(&groups) {
+            let k = idxs.len().div_ceil(MAX_SHARD_SERVERS);
+            let per = idxs.len().div_ceil(k);
+            for (c, chunk) in idxs.chunks(per).enumerate() {
+                shards.push((format!("{name}/{c}"), chunk.to_vec()));
+            }
+        }
+        // Repair: merge shards that cannot serve a request end to end.
+        let valid = |cfg: &SimConfig, servers: &[usize]| {
+            servers.iter().any(|&i| cfg.servers[i].role != Role::Decode)
+                && servers.iter().any(|&i| cfg.servers[i].role != Role::Prompt)
+        };
+        let mut i = 0usize;
+        while i < shards.len() {
+            if valid(cfg, &shards[i].1) || shards.len() == 1 {
+                i += 1;
+                continue;
+            }
+            // Fold into the previous shard when one exists, else absorb
+            // the next — indices stay sorted within a shard only if we
+            // re-sort after the merge, which keeps per_server scatter and
+            // fleet-order invariants simple.
+            let j = if i > 0 { i - 1 } else { 0 };
+            let (_, moved) = shards.remove(if i > 0 { i } else { 1 });
+            shards[j].1.extend(moved);
+            shards[j].1.sort_unstable();
+            i = j; // re-check the merged shard
+        }
+        let shards = shards
+            .into_iter()
+            .map(|(key, servers)| {
+                let seed = shard_seed(seed, &key);
+                ShardSpec { key, servers, seed }
+            })
+            .collect();
+        ShardPlan { shards }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.shards.is_empty()
+    }
+
+    /// The sub-fleet `SimConfig` for shard `k`: server/embodied slices in
+    /// fleet order, the shared CI signal and policies, and the global
+    /// fleet schedule filtered + re-indexed to the shard's servers.
+    pub fn sub_config(&self, cfg: &SimConfig, k: usize) -> SimConfig {
+        let shard = &self.shards[k];
+        let local_of = |g: usize| shard.servers.iter().position(|&i| i == g);
+        let mut fleet_plan = FleetSchedule::default();
+        if !cfg.fleet_plan.initially_active.is_empty() {
+            fleet_plan.initially_active = shard.servers.iter()
+                .map(|&g| cfg.fleet_plan.initially_active[g])
+                .collect();
+        }
+        for e in &cfg.fleet_plan.events {
+            if let Some(local) = local_of(e.server) {
+                let mut e = *e;
+                e.server = local;
+                fleet_plan.events.push(e);
+            }
+        }
+        SimConfig {
+            servers: shard.servers.iter()
+                .map(|&g| cfg.servers[g].clone())
+                .collect(),
+            router: cfg.router,
+            batcher: cfg.batcher,
+            ci: cfg.ci.clone(),
+            emb_kg_per_hr: shard.servers.iter()
+                .map(|&g| cfg.emb_kg_per_hr[g])
+                .collect(),
+            kv_transfer_bw: cfg.kv_transfer_bw,
+            deferral: cfg.deferral,
+            fleet_plan,
+            region_signals: cfg.region_signals.clone(),
+        }
+    }
+}
+
+/// Per-shard facts the splitter scores against.
+#[derive(Debug, Clone)]
+struct ShardMeta {
+    n_servers: f64,
+    max_mem_gb: f64,
+    min_mem_gb: f64,
+    /// Effective CI signal of each server in the shard (region override
+    /// or the primary signal).
+    signals: Vec<CiSignal>,
+}
+
+/// The top-level region splitter: assigns each request to a shard with
+/// the configured [`Router`]'s semantics lifted to shard granularity,
+/// using a per-shard assigned-load proxy (assigned count / servers) in
+/// place of live queue depth. A pure state machine over the request
+/// sequence: every [`PartitionSource`] rebuilds an identical instance and
+/// reaches identical decisions with no cross-thread coordination.
+#[derive(Debug, Clone)]
+pub struct ShardSplitter {
+    router: Router,
+    metas: Vec<ShardMeta>,
+    assigned: Vec<u64>,
+    /// Per-request shard-CI scratch (carbon-greedy): each shard's CI at
+    /// the arrival time is computed once per request, not once per
+    /// comparison inside the argmin.
+    ci_scratch: Vec<f64>,
+}
+
+/// Queue-pressure discount mirroring the per-server carbon-greedy
+/// policy's default weight.
+const SPLIT_QUEUE_WEIGHT: f64 = 0.25;
+
+impl ShardSplitter {
+    pub fn new(cfg: &SimConfig, plan: &ShardPlan) -> ShardSplitter {
+        let metas = plan.shards.iter()
+            .map(|sh| {
+                let mems: Vec<f64> = sh.servers.iter()
+                    .map(|&g| cfg.servers[g].device.mem_gb)
+                    .collect();
+                ShardMeta {
+                    n_servers: sh.servers.len() as f64,
+                    max_mem_gb: mems.iter().copied().fold(f64::MIN, f64::max),
+                    min_mem_gb: mems.iter().copied().fold(f64::MAX, f64::min),
+                    signals: sh.servers.iter()
+                        .map(|&g| match cfg.servers[g].region {
+                            Some(r) => cfg.region_signal(r),
+                            None => cfg.ci.clone(),
+                        })
+                        .collect(),
+                }
+            })
+            .collect::<Vec<_>>();
+        let n = metas.len();
+        ShardSplitter {
+            router: cfg.router,
+            metas,
+            assigned: vec![0; n],
+            ci_scratch: Vec::with_capacity(n),
+        }
+    }
+
+    /// Mean grid CI this shard's servers see at time `t`.
+    fn ci(&self, k: usize, t_s: f64) -> f64 {
+        let m = &self.metas[k];
+        m.signals.iter().map(|s| s.at(t_s)).sum::<f64>() / m.n_servers
+    }
+
+    /// Assigned-load proxy: requests routed here per server.
+    fn load(&self, k: usize) -> f64 {
+        self.assigned[k] as f64 / self.metas[k].n_servers
+    }
+
+    /// Pick the shard for `r` and record the assignment. Ties break to
+    /// the lowest shard index, mirroring the per-server policies.
+    pub fn assign(&mut self, r: &Request) -> usize {
+        let n = self.metas.len();
+        if n == 1 {
+            self.assigned[0] += 1;
+            return 0;
+        }
+        let best = match self.router {
+            Router::Jsq => argmin(n, |k| (self.load(k), 0.0)),
+            Router::WorkloadAware => {
+                let long = r.prompt_tokens >= LONG_PROMPT_TOKENS;
+                argmin(n, |k| {
+                    let m = &self.metas[k];
+                    let pref = if long { -m.max_mem_gb } else { m.min_mem_gb };
+                    (pref, self.load(k))
+                })
+            }
+            Router::CarbonGreedy => {
+                let t = r.arrival_s;
+                self.ci_scratch.clear();
+                for k in 0..n {
+                    let ci = self.ci(k, t);
+                    self.ci_scratch.push(ci);
+                }
+                let mean_ci = (self.ci_scratch.iter().sum::<f64>()
+                    / n as f64).max(1e-9);
+                argmin(n, |k| {
+                    (self.ci_scratch[k] / mean_ci
+                         + SPLIT_QUEUE_WEIGHT * self.load(k),
+                     0.0)
+                })
+            }
+        };
+        self.assigned[best] += 1;
+        best
+    }
+}
+
+/// Index of the lexicographic minimum of `key` over `0..n`; first wins
+/// ties (total_cmp keeps the order total for any float garbage).
+fn argmin(n: usize, key: impl Fn(usize) -> (f64, f64)) -> usize {
+    (0..n)
+        .min_by(|&a, &b| {
+            let (pa, sa) = key(a);
+            let (pb, sb) = key(b);
+            pa.total_cmp(&pb).then_with(|| sa.total_cmp(&sb))
+        })
+        .unwrap()
+}
+
+/// Factory handing each shard a fresh copy of the *full* arrival stream
+/// (the shard filters it down itself).
+pub type SourceFn<'a> = dyn Fn() -> Box<dyn ArrivalSource + 'a> + Sync;
+
+/// What one shard worker hands back: its merged-ready report plus the
+/// closed-books meter (for interval-total merging).
+type ShardResult = (SimReport, CarbonMeter);
+
+/// Per-shard fleet scheduling hook: given the shard's sub-config and its
+/// arrival substream, produce the shard's [`FleetSchedule`] (the scenario
+/// layer plugs the rolling-horizon controller in here). `None` keeps the
+/// sub-config's own (typically static) schedule.
+pub type ScheduleFn<'a> =
+    dyn Fn(&SimConfig, &mut dyn ArrivalSource) -> FleetSchedule + Sync + 'a;
+
+/// Shard `shard`'s substream: the full stream filtered through a fresh
+/// deterministic splitter.
+pub fn shard_stream<'a>(cfg: &SimConfig, plan: &ShardPlan, shard: usize,
+                        inner: Box<dyn ArrivalSource + 'a>)
+    -> PartitionSource<'a> {
+    let mut splitter = ShardSplitter::new(cfg, plan);
+    PartitionSource::new(inner, shard, Box::new(move |r| splitter.assign(r)))
+}
+
+/// Run `cfg`'s fleet sharded under `plan` on up to `threads` scoped
+/// worker threads and merge the shard results into one [`SimReport`].
+/// Deterministic: the report depends only on (model, cfg, plan, stream),
+/// never on `threads` or scheduling order.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_sharded<'a, 'b>(model: &LlmSpec, cfg: &SimConfig,
+                                slo_ttft: f64, slo_tpot: f64,
+                                plan: &ShardPlan, threads: usize,
+                                make_source: &SourceFn<'a>,
+                                schedule: Option<&ScheduleFn<'b>>)
+    -> SimReport {
+    assert!(!plan.is_empty(), "empty shard plan");
+    let n = plan.len();
+    let threads = threads.clamp(1, n);
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<ShardResult>>> =
+        (0..n).map(|_| Mutex::new(None)).collect();
+
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let k = next.fetch_add(1, Ordering::SeqCst);
+                if k >= n {
+                    break;
+                }
+                let part = run_shard(model, cfg, plan, k, slo_ttft, slo_tpot,
+                                     make_source, schedule);
+                *slots[k].lock().unwrap() = Some(part);
+            });
+        }
+    });
+
+    let parts: Vec<ShardResult> = slots
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .expect("shard worker poisoned a result slot")
+                .expect("shard worker skipped a shard")
+        })
+        .collect();
+    merge_shard_reports(cfg, plan, parts)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_shard<'a, 'b>(model: &LlmSpec, cfg: &SimConfig, plan: &ShardPlan,
+                     k: usize, slo_ttft: f64, slo_tpot: f64,
+                     make_source: &SourceFn<'a>,
+                     schedule: Option<&ScheduleFn<'b>>)
+    -> (SimReport, CarbonMeter) {
+    let mut sub = plan.sub_config(cfg, k);
+    if let Some(sched) = schedule {
+        let mut src = shard_stream(cfg, plan, k, make_source());
+        sub.fleet_plan = sched(&sub, &mut src);
+    }
+    let mut src = shard_stream(cfg, plan, k, make_source());
+    let mut sim = Sim::new(model, &mut src, &sub, slo_ttft, slo_tpot,
+                           sub.router.policy(), sub.batcher.policy());
+    sim.run();
+    sim.finish_parts()
+}
+
+/// Fold shard `(SimReport, CarbonMeter)` pairs — in ascending shard index
+/// — into one fleet-wide report: histogram merge for latency, exact
+/// counter sums, attainment recomputed from the summed raw counters,
+/// per-server usage scattered back to global fleet order, and operational
+/// carbon taken from the merged meter's interval totals.
+fn merge_shard_reports(cfg: &SimConfig, plan: &ShardPlan,
+                       parts: Vec<ShardResult>) -> SimReport {
+    let n_servers = cfg.servers.len();
+    let mut meter = CarbonMeter::new(cfg);
+    let mut ttft = Histogram::new();
+    let mut tpot = Histogram::new();
+    let mut per_server = vec![ServerUsage::default(); n_servers];
+    let (mut arrivals, mut completed, mut generated_tokens) = (0usize, 0, 0);
+    let (mut online_done, mut slo_ok) = (0usize, 0);
+    let (mut offline_done, mut offline_on_time) = (0usize, 0);
+    let (mut deferred, mut truncated, mut events) = (0usize, 0, 0);
+    let (mut provision_events, mut decommission_events) = (0usize, 0);
+    let mut peak_live_jobs = 0usize;
+    let (mut sim_duration_s, mut energy_j, mut emb_kg) = (0.0f64, 0.0, 0.0);
+
+    for (k, (r, shard_meter)) in parts.iter().enumerate() {
+        meter.merge_shard(shard_meter, &plan.shards[k].servers);
+        ttft.merge(&r.ttft);
+        tpot.merge(&r.tpot);
+        arrivals += r.arrivals;
+        completed += r.completed;
+        generated_tokens += r.generated_tokens;
+        online_done += r.online_done;
+        slo_ok += r.slo_ok;
+        offline_done += r.offline_done;
+        offline_on_time += r.offline_on_time;
+        deferred += r.deferred_requests;
+        truncated += r.truncated_prompts;
+        events += r.events;
+        provision_events += r.provision_events;
+        decommission_events += r.decommission_events;
+        // Shards run concurrently, so the fleet-wide arena bound is the
+        // sum of the shard high-water marks (conservative: shard peaks
+        // need not coincide in time).
+        peak_live_jobs += r.peak_live_jobs;
+        sim_duration_s = sim_duration_s.max(r.sim_duration_s);
+        energy_j += r.energy_j;
+        emb_kg += r.emb_kg;
+        for (local, &g) in plan.shards[k].servers.iter().enumerate() {
+            per_server[g] = r.per_server[local].clone();
+            // The scatter and the meter merge must agree on the index
+            // map — a mismatch here means a shard plan / sub-config
+            // indexing bug, not a rounding issue.
+            debug_assert_eq!(per_server[g].provisioned_s.to_bits(),
+                             meter.provisioned_s(g).to_bits(),
+                             "per-server scatter diverged from the merged \
+                              meter at server {g}");
+        }
+    }
+
+    let slo_attainment = if online_done == 0 {
+        1.0
+    } else {
+        slo_ok as f64 / online_done as f64
+    };
+    let offline_deadline_attainment = if offline_done == 0 {
+        1.0
+    } else {
+        offline_on_time as f64 / offline_done as f64
+    };
+    // From the merged meter's interval totals, summed in fleet order —
+    // bitwise what `into_report` computes from `per_server` on the
+    // unsharded path.
+    let provisioned_server_hours = (0..n_servers)
+        .map(|i| meter.provisioned_s(i))
+        .sum::<f64>()
+        / 3600.0;
+    SimReport {
+        ttft,
+        tpot,
+        arrivals,
+        completed,
+        generated_tokens,
+        sim_duration_s,
+        energy_j,
+        op_kg: meter.op_kg(),
+        emb_kg,
+        slo_attainment,
+        offline_deadline_attainment,
+        online_done,
+        slo_ok,
+        offline_done,
+        offline_on_time,
+        deferred_requests: deferred,
+        truncated_prompts: truncated,
+        events,
+        provision_events,
+        decommission_events,
+        peak_live_jobs,
+        provisioned_server_hours,
+        per_server,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::carbon::intensity::Region;
+    use crate::models;
+    use crate::sim::{homogeneous_fleet, simulate_stream};
+    use crate::workload::{Arrivals, GeneratorSource, LengthDist, RequestClass};
+
+    fn fleet_cfg(n: usize, router: Router) -> SimConfig {
+        let m = models::llm("llama-8b").unwrap();
+        SimConfig::flat(homogeneous_fleet("A100-40", n, m, 2048), router,
+                        261.0, vec![0.005; n])
+    }
+
+    fn two_region_cfg(n: usize, router: Router) -> SimConfig {
+        let mut cfg = fleet_cfg(n, router);
+        for (i, s) in cfg.servers.iter_mut().enumerate() {
+            if i % 2 == 0 {
+                s.region = Some(Region::SwedenNorth);
+            }
+        }
+        cfg
+    }
+
+    fn source_fn(rate: f64, duration_s: f64, seed: u64)
+        -> impl Fn() -> Box<dyn ArrivalSource + 'static> + Sync {
+        move || {
+            Box::new(GeneratorSource::new(Arrivals::Poisson { rate },
+                                          LengthDist::ShareGpt,
+                                          RequestClass::Online, duration_s,
+                                          seed))
+        }
+    }
+
+    #[test]
+    fn partition_covers_the_fleet_once_and_respects_the_cluster_cap() {
+        let cfg = two_region_cfg(20, Router::Jsq);
+        let plan = ShardPlan::partition(&cfg, 42);
+        let mut seen: Vec<usize> =
+            plan.shards.iter().flat_map(|s| s.servers.clone()).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..20).collect::<Vec<_>>());
+        for sh in &plan.shards {
+            assert!(sh.servers.len() <= MAX_SHARD_SERVERS,
+                    "shard {} too large: {}", sh.key, sh.servers.len());
+            assert!(sh.servers.iter()
+                        .all(|&i| cfg.servers[i].region
+                            == cfg.servers[sh.servers[0]].region),
+                    "shard {} mixes regions", sh.key);
+        }
+        // 10 + 10 servers, cap 8 → 2 clusters per region.
+        assert_eq!(plan.len(), 4);
+        // Shard identity (key + seed) is stable and unique.
+        let plan2 = ShardPlan::partition(&cfg, 42);
+        let keys: Vec<&str> =
+            plan.shards.iter().map(|s| s.key.as_str()).collect();
+        let keys2: Vec<&str> =
+            plan2.shards.iter().map(|s| s.key.as_str()).collect();
+        assert_eq!(keys, keys2);
+        let mut seeds: Vec<u64> = plan.shards.iter().map(|s| s.seed).collect();
+        assert_eq!(seeds, plan2.shards.iter().map(|s| s.seed).collect::<Vec<_>>());
+        seeds.sort_unstable();
+        seeds.dedup();
+        assert_eq!(seeds.len(), plan.len(), "shard seeds collide");
+    }
+
+    #[test]
+    fn disaggregated_fleets_repair_to_servable_shards() {
+        let mut cfg = fleet_cfg(12, Router::Jsq);
+        for (i, s) in cfg.servers.iter_mut().enumerate() {
+            s.role = if i < 9 { Role::Prompt } else { Role::Decode };
+        }
+        let plan = ShardPlan::partition(&cfg, 7);
+        for sh in &plan.shards {
+            assert!(sh.servers.iter().any(|&i| cfg.servers[i].role != Role::Decode),
+                    "shard {} cannot prefill", sh.key);
+            assert!(sh.servers.iter().any(|&i| cfg.servers[i].role != Role::Prompt),
+                    "shard {} cannot decode", sh.key);
+        }
+    }
+
+    #[test]
+    fn splitter_instances_agree_and_balance_jsq() {
+        let cfg = two_region_cfg(8, Router::Jsq);
+        let plan = ShardPlan::partition(&cfg, 1);
+        assert!(plan.len() >= 2);
+        let mk = source_fn(8.0, 60.0, 5);
+        let trace: Vec<Request> = mk().materialize();
+        let mut a = ShardSplitter::new(&cfg, &plan);
+        let mut b = ShardSplitter::new(&cfg, &plan);
+        let mut counts = vec![0usize; plan.len()];
+        for r in &trace {
+            let ka = a.assign(r);
+            assert_eq!(ka, b.assign(r), "splitter instances diverged");
+            counts[ka] += 1;
+        }
+        // JSQ at shard level: equal-weight shards get near-equal load.
+        let max = *counts.iter().max().unwrap();
+        let min = *counts.iter().min().unwrap();
+        assert!(max - min <= 1, "unbalanced JSQ split: {counts:?}");
+    }
+
+    #[test]
+    fn carbon_greedy_splitter_prefers_the_clean_grid() {
+        let cfg = two_region_cfg(8, Router::CarbonGreedy);
+        let plan = ShardPlan::partition(&cfg, 1);
+        let clean: Vec<usize> = plan.shards.iter().enumerate()
+            .filter(|(_, s)| s.key.starts_with(Region::SwedenNorth.name()))
+            .map(|(k, _)| k)
+            .collect();
+        assert!(!clean.is_empty());
+        let mut sp = ShardSplitter::new(&cfg, &plan);
+        let mk = source_fn(8.0, 30.0, 9);
+        let trace = mk().materialize();
+        let (mut to_clean, mut total) = (0usize, 0usize);
+        for r in &trace {
+            if clean.contains(&sp.assign(r)) {
+                to_clean += 1;
+            }
+            total += 1;
+        }
+        assert!(to_clean * 2 > total,
+                "clean grid got only {to_clean}/{total} requests");
+    }
+
+    #[test]
+    fn single_shard_run_matches_the_unsharded_engine_bitwise() {
+        let m = models::llm("llama-8b").unwrap();
+        // 4 servers, one region, under the cluster cap → exactly 1 shard.
+        let cfg = fleet_cfg(4, Router::Jsq);
+        let plan = ShardPlan::partition(&cfg, 3);
+        assert_eq!(plan.len(), 1);
+        let mk = source_fn(4.0, 90.0, 11);
+        let sharded = simulate_sharded(m, &cfg, 0.5, 0.1, &plan, 2, &mk, None);
+        let flat = simulate_stream(m, &mut *mk(), &cfg, 0.5, 0.1);
+        assert_eq!(sharded.arrivals, flat.arrivals);
+        assert_eq!(sharded.completed, flat.completed);
+        assert_eq!(sharded.events, flat.events);
+        assert_eq!(sharded.energy_j.to_bits(), flat.energy_j.to_bits());
+        assert_eq!(sharded.op_kg.to_bits(), flat.op_kg.to_bits());
+        assert_eq!(sharded.emb_kg.to_bits(), flat.emb_kg.to_bits());
+        assert_eq!(sharded.ttft.p90().to_bits(), flat.ttft.p90().to_bits());
+        assert_eq!(sharded.peak_live_jobs, flat.peak_live_jobs);
+    }
+
+    #[test]
+    fn sharded_report_is_thread_count_invariant_and_complete() {
+        let m = models::llm("llama-8b").unwrap();
+        let cfg = two_region_cfg(20, Router::CarbonGreedy);
+        let plan = ShardPlan::partition(&cfg, 13);
+        assert!(plan.len() >= 4);
+        let mk = source_fn(10.0, 60.0, 17);
+        let total = mk().materialize().len();
+        let runs: Vec<SimReport> = [1, 2, 4]
+            .iter()
+            .map(|&t| simulate_sharded(m, &cfg, 0.5, 0.1, &plan, t, &mk, None))
+            .collect();
+        for r in &runs {
+            assert_eq!(r.arrivals, total, "requests lost across shards");
+            assert_eq!(r.completed, total);
+            assert_eq!(r.per_server.len(), 20);
+        }
+        for w in runs.windows(2) {
+            assert_eq!(w[0].events, w[1].events);
+            assert_eq!(w[0].energy_j.to_bits(), w[1].energy_j.to_bits());
+            assert_eq!(w[0].op_kg.to_bits(), w[1].op_kg.to_bits());
+            assert_eq!(w[0].ttft.p99().to_bits(), w[1].ttft.p99().to_bits());
+            assert_eq!(w[0].slo_attainment.to_bits(),
+                       w[1].slo_attainment.to_bits());
+        }
+    }
+}

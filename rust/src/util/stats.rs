@@ -234,6 +234,31 @@ impl Histogram {
     pub fn p50(&self) -> f64 { self.percentile(50.0) }
     pub fn p90(&self) -> f64 { self.percentile(90.0) }
     pub fn p99(&self) -> f64 { self.percentile(99.0) }
+
+    /// Fold `other` into `self` — the shard-merge primitive. Bin counts,
+    /// sample count, and min/max are exact, so every percentile of a
+    /// merged histogram is *bitwise* independent of merge order and
+    /// grouping. The running `sum` (and hence `mean`) is an f64
+    /// accumulation: commutative bitwise, associative only to rounding —
+    /// which is why the sharded runtime always folds shards in ascending
+    /// shard-index order (the merged report is then a pure function of
+    /// the partition set, never of thread interleaving).
+    pub fn merge(&mut self, other: &Histogram) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        for (a, b) in self.bins.iter_mut().zip(&other.bins) {
+            *a += b;
+        }
+        self.n += other.n;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
 }
 
 /// Exponential moving average for runtime load tracking.
@@ -360,6 +385,44 @@ mod tests {
         // Underflow and overflow stay inside the observed extremes.
         assert_eq!(h.min(), 0.0);
         assert_eq!(h.max(), 20000.0);
+    }
+
+    #[test]
+    fn histogram_merge_matches_sequential_pushes() {
+        let xs: Vec<f64> = (1..=500)
+            .map(|i| 1e-3 * (i as f64).powf(1.6))
+            .collect();
+        let mut whole = Histogram::new();
+        for &x in &xs {
+            whole.push(x);
+        }
+        let mut left = Histogram::new();
+        let mut right = Histogram::new();
+        for &x in &xs[..201] {
+            left.push(x);
+        }
+        for &x in &xs[201..] {
+            right.push(x);
+        }
+        left.merge(&right);
+        assert_eq!(left.len(), whole.len());
+        assert_eq!(left.min().to_bits(), whole.min().to_bits());
+        assert_eq!(left.max().to_bits(), whole.max().to_bits());
+        for q in [0.0, 10.0, 50.0, 90.0, 99.0, 100.0] {
+            assert_eq!(left.percentile(q).to_bits(),
+                       whole.percentile(q).to_bits(),
+                       "q{q} diverged after merge");
+        }
+        // Sum is a float accumulation: equal to rounding, not bitwise.
+        assert!((left.mean() - whole.mean()).abs() < 1e-12 * whole.mean());
+        // Merging an empty histogram is the identity in both directions.
+        let snap = left.percentile(50.0);
+        left.merge(&Histogram::new());
+        assert_eq!(left.percentile(50.0).to_bits(), snap.to_bits());
+        let mut empty = Histogram::new();
+        empty.merge(&whole);
+        assert_eq!(empty.len(), whole.len());
+        assert_eq!(empty.p90().to_bits(), whole.p90().to_bits());
     }
 
     #[test]

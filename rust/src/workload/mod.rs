@@ -10,7 +10,8 @@ pub mod demand;
 pub mod slo;
 pub mod stream;
 
-pub use stream::{ArrivalSource, GeneratorSource, MergedSource, SliceSource};
+pub use stream::{ArrivalSource, GeneratorSource, MergedSource, PartitionSource,
+                 SliceSource};
 
 use crate::util::rng::Rng;
 

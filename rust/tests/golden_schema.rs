@@ -16,6 +16,7 @@ const OUTCOME_KEYS: &[&str] = &[
     "deferred_requests",
     "emb_kg",
     "energy_j",
+    "events",
     "extras",
     "fleet_counts",
     "fleet_gpus",

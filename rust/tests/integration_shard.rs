@@ -1,0 +1,98 @@
+//! Determinism suite for the sharded multi-region runtime: the outcome
+//! JSON of a sharded scenario run must be byte-identical for any shard
+//! worker-thread count (the partition is a pure function of the fleet),
+//! stable across repeated runs (thread interleavings), and identical
+//! between the lazy-generator and materialized-trace arrival paths.
+
+use ecoserve::scenarios::{catalog, registry, run_spec_sharded,
+                          run_spec_sharded_materialized, run_sweep,
+                          scenario_seed, SweepConfig};
+
+fn sharded_json(name: &str, seed_master: u64, duration_s: f64, shards: usize)
+    -> String {
+    let sc = catalog::by_names(&[name]).unwrap().remove(0);
+    let seed = scenario_seed(seed_master, name);
+    run_spec_sharded(name, &sc.spec(), seed, duration_s, shards)
+        .to_json()
+        .to_string()
+}
+
+#[test]
+fn production_day_is_byte_identical_across_shard_counts() {
+    // The acceptance gate: --shards N ∈ {1, 2, 4} on production-day must
+    // produce identical outcome bytes — N buys wall-clock, never a
+    // different answer. A repeated 4-shard run covers interleaving
+    // nondeterminism within one count.
+    let runs: Vec<String> = [1usize, 2, 4]
+        .iter()
+        .map(|&n| sharded_json("production-day", 31, 45.0, n))
+        .collect();
+    assert_eq!(runs[0], runs[1], "1-shard vs 2-shard runs diverged");
+    assert_eq!(runs[1], runs[2], "2-shard vs 4-shard runs diverged");
+    assert_eq!(runs[2], sharded_json("production-day", 31, 45.0, 4),
+               "repeated 4-shard run diverged (interleaving leak)");
+}
+
+#[test]
+fn sharded_streaming_matches_materialized() {
+    for name in ["carbon-router", "production-day"] {
+        let sc = catalog::by_names(&[name]).unwrap().remove(0);
+        let seed = scenario_seed(61, name);
+        let streamed = run_spec_sharded(name, &sc.spec(), seed, 24.0, 2)
+            .to_json()
+            .to_string();
+        let materialized =
+            run_spec_sharded_materialized(name, &sc.spec(), seed, 24.0, 2)
+                .to_json()
+                .to_string();
+        assert_eq!(streamed, materialized,
+                   "{name}: sharded streaming and materialized diverge");
+    }
+}
+
+#[test]
+fn every_registry_scenario_runs_sharded() {
+    // Sharding is a total function over the registry: every design point
+    // (elastic, disaggregated, deferred, multi-region) partitions into
+    // servable shards, loses no requests, and keeps its baseline extras.
+    for sc in registry() {
+        let seed = scenario_seed(77, sc.name());
+        let o = run_spec_sharded(sc.name(), &sc.spec(), seed, 24.0, 2);
+        assert_eq!(o.completed, o.requests,
+                   "{}: requests lost under sharding", sc.name());
+        assert!(o.events > 0, "{}: no events", sc.name());
+    }
+}
+
+#[test]
+fn sharded_sweep_report_is_invariant_in_threads_and_shard_budget() {
+    let sel = ["carbon-router", "autoscale-diurnal"];
+    let mk = |threads: usize, shards: usize| {
+        let scenarios = catalog::by_names(&sel).unwrap();
+        let cfg = SweepConfig { threads, seed: 19, duration_s: 24.0,
+                                shards: Some(shards),
+                                ..Default::default() };
+        run_sweep(&scenarios, &cfg).to_json().to_string()
+    };
+    let a = mk(1, 1);
+    assert_eq!(a, mk(2, 3), "sweep --shards bytes depend on the budget");
+    assert_eq!(a, mk(4, 8), "sweep --shards bytes depend on thread count");
+}
+
+#[test]
+fn sharded_production_day_smoke_flexes_and_stays_bounded() {
+    let sc = catalog::by_names(&["production-day"]).unwrap().remove(0);
+    let seed = scenario_seed(7, "production-day");
+    let o = run_spec_sharded("production-day", &sc.spec(), seed, 60.0, 4);
+    assert!(o.requests > 10_000, "day too quiet: {}", o.requests);
+    assert_eq!(o.completed, o.requests, "requests lost");
+    // The merged arena bound (sum of shard peaks) must still be a sliver
+    // of the trace — sharding cannot silently break the streaming-memory
+    // contract.
+    assert!(o.peak_live_jobs * 2 < o.requests,
+            "peak live jobs {} vs {} requests", o.peak_live_jobs, o.requests);
+    assert!(o.extras.contains_key("op_kg_jsq"),
+            "missing routing baseline under sharding");
+    assert!(o.extras.contains_key("carbon_kg_static"),
+            "missing static provisioning baseline under sharding");
+}

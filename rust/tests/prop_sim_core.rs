@@ -279,3 +279,88 @@ fn prop_arena_recycling_never_aliases_a_live_job() {
         },
     );
 }
+
+// ---------------------------------------------------------------------------
+// Histogram::merge: the shard-merge primitive must be commutative and
+// associative on everything percentiles are computed from (bin counts,
+// sample count, min/max) — bitwise — and on the running sum to float
+// rounding. This is what makes a sharded run's latency report a pure
+// function of the partition set.
+
+use ecoserve::util::stats::Histogram;
+
+fn gen_latency_parts(r: &mut Rng) -> Vec<Vec<f64>> {
+    (0..3)
+        .map(|_| {
+            (0..r.below(120))
+                .map(|_| 1e-4 * (1.0 + r.below(1_000_000) as f64).powf(0.55))
+                .collect()
+        })
+        .collect()
+}
+
+fn hist_of(xs: &[f64]) -> Histogram {
+    let mut h = Histogram::new();
+    for &x in xs {
+        h.push(x);
+    }
+    h
+}
+
+fn same_shape(a: &Histogram, b: &Histogram) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("len {} vs {}", a.len(), b.len()));
+    }
+    if a.is_empty() {
+        return Ok(());
+    }
+    for q in [0.0, 10.0, 25.0, 50.0, 75.0, 90.0, 99.0, 100.0] {
+        let (pa, pb) = (a.percentile(q), b.percentile(q));
+        if pa.to_bits() != pb.to_bits() {
+            return Err(format!("p{q}: {pa} vs {pb}"));
+        }
+    }
+    if a.min().to_bits() != b.min().to_bits()
+        || a.max().to_bits() != b.max().to_bits()
+    {
+        return Err("min/max diverged".into());
+    }
+    let (ma, mb) = (a.mean(), b.mean());
+    if (ma - mb).abs() > 1e-12 * ma.abs().max(1.0) {
+        return Err(format!("mean {ma} vs {mb}"));
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_histogram_merge_is_commutative_and_associative() {
+    forall(
+        &PropConfig { cases: 200, ..Default::default() },
+        gen_latency_parts,
+        // No shrinking: the check indexes exactly three parts.
+        |_| Vec::new(),
+        |parts| {
+            let (a, b, c) = (hist_of(&parts[0]), hist_of(&parts[1]),
+                             hist_of(&parts[2]));
+            // Commutativity: a+b == b+a.
+            let mut ab = a.clone();
+            ab.merge(&b);
+            let mut ba = b.clone();
+            ba.merge(&a);
+            same_shape(&ab, &ba).map_err(|e| format!("commutativity: {e}"))?;
+            // Associativity: (a+b)+c == a+(b+c).
+            let mut left = ab.clone();
+            left.merge(&c);
+            let mut bc = b.clone();
+            bc.merge(&c);
+            let mut right = a.clone();
+            right.merge(&bc);
+            same_shape(&left, &right)
+                .map_err(|e| format!("associativity: {e}"))?;
+            // Merge == pushing every sample into one histogram.
+            let whole: Vec<f64> = parts.iter().flatten().copied().collect();
+            same_shape(&left, &hist_of(&whole))
+                .map_err(|e| format!("merge vs sequential: {e}"))
+        },
+    );
+}
