@@ -98,13 +98,22 @@ impl Region {
 
     /// CI at an hour-of-day for this region's synthetic solar day: dip
     /// centred at 13:00, evening ramp peak at 19:30, plus caller noise.
+    /// Gaussian distances are circular (mod 24), so a phase-shifted day
+    /// whose dip lands near midnight keeps its full curve instead of
+    /// being truncated at the 0/24 boundary.
     fn ci_at_hour(&self, hour: f64, noise: f64) -> f64 {
         let avg = self.avg_ci();
         let swing = self.diurnal_swing();
-        let solar = (-((hour - 13.0) / 3.5).powi(2)).exp();
-        let evening = (-((hour - 19.5) / 2.0).powi(2)).exp();
+        let solar = (-(circular_hours(hour, 13.0) / 3.5).powi(2)).exp();
+        let evening = (-(circular_hours(hour, 19.5) / 2.0).powi(2)).exp();
         (avg * (1.0 - swing * solar + 0.5 * swing * evening + noise)).max(1.0)
     }
+}
+
+/// Shortest distance between two points on the 24 h clock circle.
+fn circular_hours(a: f64, b: f64) -> f64 {
+    let d = (a - b).rem_euclid(24.0);
+    d.min(24.0 - d)
 }
 
 /// A CI time series at fixed resolution.
@@ -188,8 +197,10 @@ impl CiTrace {
         self.values.iter().sum::<f64>() / self.values.len() as f64
     }
 
-    /// Mean CI over [t0, t1] at step resolution (partial steps counted
-    /// whole; both endpoints clamped to the trace extent).
+    /// Mean CI over [t0, t1], length-weighted: each step contributes
+    /// exactly its overlap with the window, so an interval that barely
+    /// grazes a step no longer counts it whole. The final step extends
+    /// indefinitely (the trace clamps at its extent, matching [`at`]).
     pub fn mean_over(&self, t0_s: f64, t1_s: f64) -> f64 {
         if self.values.is_empty() {
             return self.region.avg_ci();
@@ -200,8 +211,15 @@ impl CiTrace {
         let last = self.values.len() - 1;
         let lo = ((t0_s / self.step_s) as usize).min(last);
         let hi = ((t1_s / self.step_s) as usize).min(last).max(lo);
-        let span = &self.values[lo..=hi];
-        span.iter().sum::<f64>() / span.len() as f64
+        let mut weighted = 0.0;
+        for (k, &v) in self.values[lo..=hi].iter().enumerate() {
+            let i = lo + k;
+            let s0 = i as f64 * self.step_s;
+            let s1 = if i == last { f64::INFINITY } else { s0 + self.step_s };
+            let w = (t1_s.min(s1) - t0_s.max(s0)).max(0.0);
+            weighted += w * v;
+        }
+        weighted / (t1_s - t0_s)
     }
 }
 
@@ -332,6 +350,51 @@ mod tests {
         // SE-North leads MISO by its longitude gap (~7.3 h).
         let off = Region::SwedenNorth.solar_offset_hours(Region::Midcontinent);
         assert!((off - (17.0 + 93.0) / 15.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mean_over_weights_partial_steps_by_overlap() {
+        let tr = CiTrace { region: Region::California, step_s: 10.0,
+                           values: vec![100.0, 200.0, 400.0] };
+        // [5, 15): half of step 0, half of step 1.
+        assert!((tr.mean_over(5.0, 15.0) - 150.0).abs() < 1e-9);
+        // Barely grazing the next step no longer counts it whole:
+        // [0, 10.1] is 10 s at 100 plus 0.1 s at 200.
+        let got = tr.mean_over(0.0, 10.1);
+        let want = (10.0 * 100.0 + 0.1 * 200.0) / 10.1;
+        assert!((got - want).abs() < 1e-9, "{got} vs {want}");
+        // The clamped tail holds the last value indefinitely.
+        assert!((tr.mean_over(25.0, 65.0) - 400.0).abs() < 1e-12);
+        // Degenerate windows fall back to point sampling.
+        assert_eq!(tr.mean_over(12.0, 12.0), 200.0);
+        // A window exactly covering one step is that step's value.
+        assert!((tr.mean_over(10.0, 20.0) - 200.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn phase_shift_is_a_rotation_not_a_truncation() {
+        // A +12 h shift parks the 13:00 solar dip at 01:00 trace time —
+        // right on the 0/24 boundary. With circular Gaussian distance the
+        // dip keeps its full depth there, and every shifted sample equals
+        // the base sample half a day ahead, up to the AR(1) noise band
+        // (the two traces draw different noise at the same index).
+        let spp = 96usize;
+        let base = CiTrace::compressed_diurnal(Region::California,
+                                               240.0, 1, spp, 11);
+        let sh = CiTrace::compressed_diurnal_shifted(
+            Region::California, 240.0, 1, spp, 11, 12.0);
+        let min_of = |tr: &CiTrace| {
+            tr.values.iter().cloned().fold(f64::INFINITY, f64::min)
+        };
+        assert!((min_of(&sh) - min_of(&base)).abs() < 0.07 * 261.0,
+                "dip truncated at the midnight boundary: {} vs {}",
+                min_of(&sh), min_of(&base));
+        for i in 0..spp {
+            let want = base.values[(i + spp / 2) % spp];
+            let got = sh.values[i];
+            assert!((got - want).abs() < 0.12 * 261.0,
+                    "sample {i}: shifted {got} vs rotated base {want}");
+        }
     }
 
     #[test]

@@ -10,4 +10,6 @@ pub mod reliability;
 
 pub use embodied::{gpu_embodied, host_embodied, platform_embodied, Breakdown};
 pub use intensity::{CiTrace, Region};
-pub use operational::{device_power, op_kg, task_carbon, TaskCarbon};
+pub use operational::{busy_energy_j, device_power, dynamic_power, idle_power,
+                      op_kg, op_kg_per_hr, server_power, task_carbon, Phase,
+                      TaskCarbon, PLANNING_UTIL};

@@ -91,6 +91,66 @@ pub fn device_power(idle_w: f64, tdp_w: f64, util: f64, gamma: f64) -> f64 {
 pub const GPU_POWER_GAMMA: f64 = 0.85;
 pub const CPU_POWER_GAMMA: f64 = 0.5;
 
+// ---------------------------------------------------------------------------
+// The one shared power model. Every operational-energy number in the
+// system — the roofline's per-batch draw, the simulator's idle floor,
+// the planner's marginal/idle objective columns — routes through the
+// functions below, so the ILP optimizes the exact energy landscape the
+// simulator meters. (`carbon` sits below `perf`/`planner`/`sim` in the
+// module DAG, so the helpers take scalars, not device structs.)
+
+/// Execution phase of an inference batch. Prefill is compute-bound,
+/// decode memory-bound — the per-phase frequency knob exploits that
+/// asymmetry ("Towards Sustainable LLM Serving").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Prefill,
+    Decode,
+}
+
+/// The utilization the planner prices capacity at: provisioned devices
+/// are assumed to run at this operating point when loaded. Shared with
+/// the parity tests so sim-vs-planner comparisons use one constant.
+pub const PLANNING_UTIL: f64 = 0.8;
+
+/// Dynamic (above-idle) device power at a utilization point.
+pub fn dynamic_power(idle_w: f64, tdp_w: f64, util: f64, gamma: f64) -> f64 {
+    device_power(idle_w, tdp_w, util, gamma) - idle_w
+}
+
+/// Idle floor of one server = one tensor-parallel group of `tp` devices.
+/// The *only* idle-power formula in the system: the simulator's
+/// provisioned-idle meter and the planner's idle objective columns both
+/// call this, so tp>1 servers are charged identically on both sides.
+pub fn idle_power(idle_w: f64, tp: usize) -> f64 {
+    idle_w * tp as f64
+}
+
+/// Busy power of one server (`tp` devices) at utilization `util` with a
+/// per-phase frequency scale. `freq_scale` models DVFS: dynamic power
+/// scales ~f³ while (in the roofline) latency scales 1/f, so energy per
+/// token moves ~f². `freq_scale = 1.0` is bit-identical to the unscaled
+/// curve.
+pub fn server_power(idle_w: f64, tdp_w: f64, util: f64, gamma: f64,
+                    freq_scale: f64, tp: usize) -> f64 {
+    (idle_w + (tdp_w - idle_w) * util.clamp(0.0, 1.0).powf(gamma)
+         * freq_scale.powi(3))
+        * tp as f64
+}
+
+/// Energy (J) of holding `power_w` for `dur_s` — the busy-period
+/// integrand `begin_busy` meters, kept here so sim and planner share the
+/// whole chain from curve to joules.
+pub fn busy_energy_j(power_w: f64, dur_s: f64) -> f64 {
+    power_w * dur_s
+}
+
+/// kgCO₂e per hour of drawing `power_w` at a flat CI — the planner's
+/// objective-column unit (W → kW, g → kg).
+pub fn op_kg_per_hr(power_w: f64, ci_g_per_kwh: f64) -> f64 {
+    power_w / 1000.0 * ci_g_per_kwh / 1000.0
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -140,6 +200,48 @@ mod tests {
         let dirty = mk(501.0);
         assert!(clean.emb_host_kg + clean.emb_gpu_kg > clean.op_kg);
         assert!(dirty.op_kg > dirty.emb_host_kg + dirty.emb_gpu_kg);
+    }
+
+    #[test]
+    fn server_power_reduces_to_device_power_at_defaults() {
+        // freq_scale = 1.0, tp = 1 must be bit-identical to the bare
+        // curve — this is what keeps every pre-existing golden stable.
+        for util in [0.0, 0.13, 0.5, 0.97, 1.0] {
+            let a = server_power(50.0, 400.0, util, GPU_POWER_GAMMA, 1.0, 1);
+            let b = device_power(50.0, 400.0, util, GPU_POWER_GAMMA);
+            assert_eq!(a.to_bits(), b.to_bits(), "util {util}");
+        }
+        // tp scales the whole server draw; idle_power is its util-0 line.
+        let s4 = server_power(50.0, 400.0, 0.0, GPU_POWER_GAMMA, 1.0, 4);
+        assert_eq!(s4.to_bits(), idle_power(50.0, 4).to_bits());
+    }
+
+    #[test]
+    fn frequency_scaling_moves_only_the_dynamic_term() {
+        let lo = server_power(50.0, 400.0, 0.8, GPU_POWER_GAMMA, 0.8, 1);
+        let hi = server_power(50.0, 400.0, 0.8, GPU_POWER_GAMMA, 1.0, 1);
+        assert!(lo < hi, "downclocking must cut power: {lo} vs {hi}");
+        // The idle floor is frequency-independent.
+        let idle_lo = server_power(50.0, 400.0, 0.0, GPU_POWER_GAMMA, 0.8, 1);
+        assert!((idle_lo - 50.0).abs() < 1e-12);
+        // f³ on the dynamic term exactly.
+        let dyn_hi = hi - 50.0;
+        let dyn_lo = lo - 50.0;
+        assert!((dyn_lo - dyn_hi * 0.8f64.powi(3)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn planner_units_round_trip() {
+        // 1 kW for an hour at CI 1000 g/kWh is 1 kg — and the kg/hr
+        // column times hours equals the joules-form meter.
+        assert!((op_kg_per_hr(1000.0, 1000.0) - 1.0).abs() < 1e-12);
+        let p = 732.5;
+        let hr = op_kg_per_hr(p, 261.0) * 2.0;
+        let metered = op_kg_from_joules(busy_energy_j(p, 7200.0), 261.0);
+        assert!((hr - metered).abs() < 1e-12, "{hr} vs {metered}");
+        assert!((dynamic_power(50.0, 400.0, 1.0, GPU_POWER_GAMMA) - 350.0)
+                    .abs() < 1e-12);
+        assert!(PLANNING_UTIL > 0.0 && PLANNING_UTIL <= 1.0);
     }
 
     #[test]

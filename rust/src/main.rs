@@ -15,13 +15,16 @@ commands:
   report    --gpu SKU                               embodied-carbon breakdown
   sweep     --all | --scenario A,B [--list] [--threads N] [--seed S]
             [--duration SECS] [--ci-trace flat|diurnal|week] [--epoch SECS]
-            [--shards N] [--out FILE] [--json]
+            [--shards N] [--coldstart SECS] [--keepalive POLICY]
+            [--out FILE] [--json]
             run registered end-to-end scenarios in parallel (--epoch
             overrides the rolling-horizon re-provisioning period; --shards
             runs every scenario on the sharded runtime with up to N shard
-            threads, byte-identical for any N; long-haul scale scenarios
-            join --all only when --duration is given, or when selected by
-            name)
+            threads, byte-identical for any N; --coldstart forces a
+            provisioning boot delay; --keepalive forces a drain policy:
+            immediate, fixed:SECS, or hybrid[:BIN_S:PCT:MAX_S]; long-haul
+            scale scenarios join --all only when --duration is given, or
+            when selected by name)
   scale     [--scenario production-day] [--durations A,B] [--shards 1,2,4]
             [--seed S] [--out FILE] [--json]
             simulator-capacity study: sweep trace duration x shard count,
@@ -54,6 +57,44 @@ fn ci_profile_flag(args: &Args) -> anyhow::Result<Option<ecoserve::scenarios::Ci
         Some("week") => Ok(Some(CiProfile::CompressedWeek)),
         Some(other) => anyhow::bail!(
             "unknown --ci-trace '{other}' (expected flat, diurnal, or week)"),
+    }
+}
+
+/// Parse the `--keepalive POLICY` grammar: `immediate`, `fixed:SECS`, or
+/// `hybrid[:BIN_S:PCT:MAX_S]` (hybrid defaults: 10s bins, p90, 60s cap).
+fn keepalive_flag(args: &Args)
+    -> anyhow::Result<Option<ecoserve::sim::KeepAlivePolicy>> {
+    use ecoserve::sim::KeepAlivePolicy;
+    let Some(spec) = args.opt_str("keepalive") else { return Ok(None) };
+    let parts: Vec<&str> = spec.split(':').collect();
+    let num = |s: &str, what: &str| -> anyhow::Result<f64> {
+        let v: f64 = s.parse()
+            .map_err(|_| anyhow::anyhow!("bad --keepalive {what} '{s}'"))?;
+        anyhow::ensure!(v.is_finite() && v >= 0.0,
+                        "--keepalive {what} must be finite and non-negative");
+        Ok(v)
+    };
+    match parts.as_slice() {
+        ["immediate"] => Ok(Some(KeepAlivePolicy::Immediate)),
+        ["fixed", w] => Ok(Some(KeepAlivePolicy::Fixed {
+            window_s: num(w, "window")?,
+        })),
+        ["hybrid"] => Ok(Some(KeepAlivePolicy::HybridHistogram {
+            bin_s: 10.0, percentile: 0.9, max_window_s: 60.0,
+        })),
+        ["hybrid", b, p, m] => {
+            let percentile = num(p, "percentile")?;
+            anyhow::ensure!((0.0..=1.0).contains(&percentile),
+                            "--keepalive percentile must be in [0, 1]");
+            Ok(Some(KeepAlivePolicy::HybridHistogram {
+                bin_s: num(b, "bin")?.max(1e-9),
+                percentile,
+                max_window_s: num(m, "max window")?,
+            }))
+        }
+        _ => anyhow::bail!(
+            "unknown --keepalive '{spec}' (expected immediate, fixed:SECS, \
+             or hybrid[:BIN_S:PCT:MAX_S])"),
     }
 }
 
@@ -108,6 +149,11 @@ fn sweep(args: &Args) -> anyhow::Result<()> {
     } else {
         None
     };
+    let coldstart_s = if args.has("coldstart") {
+        Some(args.f64("coldstart", 0.0))
+    } else {
+        None
+    };
     let cfg = SweepConfig {
         threads: args.usize("threads", 0),
         seed: args.u64("seed", 42),
@@ -115,9 +161,16 @@ fn sweep(args: &Args) -> anyhow::Result<()> {
         ci_profile: ci_profile_flag(args)?,
         epoch_s,
         shards,
+        coldstart_s,
+        keepalive: keepalive_flag(args)?,
     };
     anyhow::ensure!(cfg.duration_s.is_finite() && cfg.duration_s > 0.0,
                     "--duration must be a positive finite number of seconds");
+    if let Some(c) = cfg.coldstart_s {
+        anyhow::ensure!(c.is_finite() && c >= 0.0,
+                        "--coldstart must be a non-negative finite number of \
+                         seconds");
+    }
     if let Some(e) = cfg.epoch_s {
         anyhow::ensure!(e.is_finite() && e > 0.0,
                         "--epoch must be a positive finite number of seconds");

@@ -8,7 +8,8 @@
 //! compute-bound, decode is bandwidth-bound, H100 wins large prompts,
 //! A100 wins decode carbon (Fig 12), CPUs are decode-viable (Fig 8).
 
-use crate::carbon::operational::{device_power, CPU_POWER_GAMMA, GPU_POWER_GAMMA};
+use crate::carbon::operational::{busy_energy_j, server_power, Phase,
+                                 CPU_POWER_GAMMA, GPU_POWER_GAMMA};
 use crate::hw::{CpuSpec, GpuSpec};
 use crate::models::LlmSpec;
 
@@ -35,6 +36,13 @@ pub struct Device {
     /// Achievable fraction of peak bandwidth (decode-like streaming).
     pub mbu_cap: f64,
     pub power_gamma: f64,
+    /// Per-phase DVFS operating points: clock scale applied during
+    /// prefill (compute-bound) and decode (memory-bound). 1.0 = stock
+    /// clocks, bit-identical to the unscaled model. Decode is the natural
+    /// downclock target — bandwidth-bound work loses little latency while
+    /// dynamic power falls ~f³ ("Towards Sustainable LLM Serving").
+    pub prefill_freq: f64,
+    pub decode_freq: f64,
 }
 
 impl Device {
@@ -59,6 +67,8 @@ impl Device {
             mfu_cap: mfu,
             mbu_cap: mbu,
             power_gamma: GPU_POWER_GAMMA,
+            prefill_freq: 1.0,
+            decode_freq: 1.0,
         }
     }
 
@@ -73,6 +83,16 @@ impl Device {
             mfu_cap: 0.65,
             mbu_cap: 0.80,
             power_gamma: CPU_POWER_GAMMA,
+            prefill_freq: 1.0,
+            decode_freq: 1.0,
+        }
+    }
+
+    /// The DVFS clock scale for a phase.
+    pub fn freq_scale(&self, phase: Phase) -> f64 {
+        match phase {
+            Phase::Prefill => self.prefill_freq,
+            Phase::Decode => self.decode_freq,
         }
     }
 }
@@ -81,6 +101,10 @@ impl Device {
 #[derive(Debug, Clone, Copy)]
 pub struct PhasePerf {
     pub latency_s: f64,
+    /// Whole-server draw (all `tp` devices) over the phase, from the
+    /// shared `carbon::operational` power curve at the achieved
+    /// utilization — the number the simulator's meter integrates.
+    pub power_w: f64,
     pub energy_j: f64,
     /// Achieved fraction of device peak FLOPs.
     pub mfu: f64,
@@ -121,14 +145,22 @@ pub fn phase_time(dev: &Device, flops: f64, bytes: f64, tp: usize,
     (t_compute.max(t_memory) + t_comm + DISPATCH_OVERHEAD_S, bound)
 }
 
-fn perf(dev: &Device, flops: f64, bytes: f64, tp: usize, comm_bytes: f64) -> PhasePerf {
-    let (latency, bound) = phase_time(dev, flops, bytes, tp, comm_bytes);
+fn perf(dev: &Device, phase: Phase, flops: f64, bytes: f64, tp: usize,
+        comm_bytes: f64) -> PhasePerf {
+    let (raw_latency, bound) = phase_time(dev, flops, bytes, tp, comm_bytes);
     let tp_f = tp as f64;
-    let mfu = flops / tp_f / latency / dev.peak_flops;
-    let mbu = bytes / tp_f / latency / dev.mem_bw;
+    let mfu = flops / tp_f / raw_latency / dev.peak_flops;
+    let mbu = bytes / tp_f / raw_latency / dev.mem_bw;
     let util = (mfu / dev.mfu_cap).max(mbu / dev.mbu_cap).min(1.0);
-    let power = device_power(dev.idle_w, dev.tdp_w, util, dev.power_gamma) * tp_f;
-    PhasePerf { latency_s: latency, energy_j: power * latency, mfu, mbu, bound }
+    // The one shared power curve (carbon::operational::server_power):
+    // idle floor + nonlinear dynamic term × f³ at the phase's DVFS point,
+    // across all tp devices. Downclocking stretches latency by 1/f.
+    let freq = dev.freq_scale(phase);
+    let power = server_power(dev.idle_w, dev.tdp_w, util, dev.power_gamma,
+                             freq, tp);
+    let latency = raw_latency / freq;
+    PhasePerf { latency_s: latency, power_w: power,
+                energy_j: busy_energy_j(power, latency), mfu, mbu, bound }
 }
 
 /// TTFT-phase performance: prefill a batch of prompts.
@@ -139,16 +171,16 @@ pub fn prefill_perf(m: &LlmSpec, dev: &Device, batch: usize, prompt: usize,
     let sat = prefill_saturation(dev, batch * prompt);
     let mut sat_dev = dev.clone();
     sat_dev.mfu_cap = dev.mfu_cap * sat;
-    perf(&sat_dev, m.prefill_flops(batch, prompt), m.prefill_bytes(batch, prompt),
-         tp, comm)
+    perf(&sat_dev, Phase::Prefill, m.prefill_flops(batch, prompt),
+         m.prefill_bytes(batch, prompt), tp, comm)
 }
 
 /// One decode step across the batch (TPOT when divided by 1).
 pub fn decode_step_perf(m: &LlmSpec, dev: &Device, batch: usize, ctx: usize,
                         tp: usize) -> PhasePerf {
     let comm = m.n_layers as f64 * 2.0 * (batch * m.d_model) as f64 * m.dtype_bytes;
-    perf(dev, m.decode_step_flops(batch, ctx), m.decode_step_bytes(batch, ctx),
-         tp, comm)
+    perf(dev, Phase::Decode, m.decode_step_flops(batch, ctx),
+         m.decode_step_bytes(batch, ctx), tp, comm)
 }
 
 /// Decode throughput, tokens/s, at a steady context length.
@@ -256,6 +288,30 @@ mod tests {
         let e32 = decode_energy_per_token(m, &a100(), 32, 512, 1);
         assert!(e32 < e1, "batching must amortize energy: {e1} vs {e32}");
         assert!(e1 > 0.0);
+    }
+
+    #[test]
+    fn energy_flows_through_the_shared_power_curve() {
+        let m = models::llm("llama-8b").unwrap();
+        let dev = a100();
+        let p = decode_step_perf(m, &dev, 8, 1024, 1);
+        // energy is exactly the metered integral of the reported power.
+        assert_eq!(p.energy_j.to_bits(),
+                   busy_energy_j(p.power_w, p.latency_s).to_bits());
+        assert!(p.power_w >= dev.idle_w && p.power_w <= dev.tdp_w + 1e-9,
+                "power {} outside [{}, {}]", p.power_w, dev.idle_w, dev.tdp_w);
+        // Decode downclock: bandwidth-bound work pays latency 1/f but the
+        // f³ dynamic term wins — energy per step drops.
+        let mut slow = dev.clone();
+        slow.decode_freq = 0.7;
+        let q = decode_step_perf(m, &slow, 8, 1024, 1);
+        assert!(q.latency_s > p.latency_s);
+        assert!(q.energy_j < p.energy_j,
+                "downclock energy {} vs {}", q.energy_j, p.energy_j);
+        // Prefill clocks untouched by the decode knob.
+        let pf_stock = prefill_perf(m, &dev, 4, 1024, 1);
+        let pf_slow = prefill_perf(m, &slow, 4, 1024, 1);
+        assert_eq!(pf_stock.latency_s.to_bits(), pf_slow.latency_s.to_bits());
     }
 
     #[test]

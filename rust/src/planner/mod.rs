@@ -23,6 +23,8 @@ pub mod pools;
 pub mod slicing;
 
 use crate::carbon::embodied;
+use crate::carbon::operational::{dynamic_power, idle_power, op_kg_per_hr,
+                                 PLANNING_UTIL};
 use crate::hw::{self, platform};
 use crate::models::LlmSpec;
 use crate::perf::cpu::{self as cpuperf, CpuStrategy};
@@ -350,13 +352,35 @@ pub fn tp_for(m: &LlmSpec, opt: &DeviceOption) -> usize {
     8
 }
 
-/// Operating power attributed to serving on a device at high utilization.
-/// For reuse-CPU hosts only dynamic power is marginal — the host idles for
-/// its GPUs regardless (paper §4.1.1's "free lunch" accounting).
+/// Operating power attributed to serving on a device at the planning
+/// utilization ([`PLANNING_UTIL`]). For reuse-CPU hosts only dynamic power
+/// is marginal — the host idles for its GPUs regardless (paper §4.1.1's
+/// "free lunch" accounting). Priced on the same nonlinear curve the
+/// simulator's meter integrates.
 pub fn marginal_power(opt: &DeviceOption) -> f64 {
     let p = crate::carbon::device_power(
-        opt.dev.idle_w, opt.dev.tdp_w, 0.8, opt.dev.power_gamma);
+        opt.dev.idle_w, opt.dev.tdp_w, PLANNING_UTIL, opt.dev.power_gamma);
     if opt.is_cpu { p - opt.dev.idle_w } else { p }
+}
+
+/// Dynamic (above-idle) share of [`marginal_power`] — what busy (A)
+/// columns charge. Idle power is charged once, on the provisioned fleet
+/// (B) columns, via [`idle_power`]; this split is what keeps CPU reuse's
+/// marginal accounting and the GPU columns on one formula.
+fn busy_dynamic_power(opt: &DeviceOption) -> f64 {
+    dynamic_power(opt.dev.idle_w, opt.dev.tdp_w, PLANNING_UTIL,
+                  opt.dev.power_gamma)
+}
+
+/// Idle operational carbon (kg per device-hour) of one provisioned GPU.
+/// `B_j` counts *individual GPUs* (capacity rows scale loads by `tp`), so
+/// the per-unit idle floor is `idle_power(idle_w, 1)`; the simulator
+/// charges the same watts as `idle_power(idle_w, tp)` per tp-group server,
+/// which agrees whenever the GPU count divides evenly into servers (the
+/// `div_ceil` remainder in fleet materialization is the only slack — see
+/// the planner-vs-sim parity test).
+fn idle_op_kg_per_hr(opt: &DeviceOption, ci: f64) -> f64 {
+    op_kg_per_hr(idle_power(opt.dev.idle_w, 1), ci)
 }
 
 /// Solve the allocation ILP for a set of slices.
@@ -437,7 +461,7 @@ pub fn plan(slices: &[Slice], cfg: &PlanConfig) -> Plan {
     // what CPU reuse displaces (capacity, not just busy energy).
     let b_vars: Vec<Var> = opts.iter()
         .map(|o| {
-            let idle_op = o.dev.idle_w / 1000.0 * cfg.ci / 1000.0;
+            let idle_op = idle_op_kg_per_hr(o, cfg.ci);
             let obj = (1.0 - cfg.alpha) * o.cost_hr
                 + cfg.alpha * (o.emb_kg_per_hr + idle_op);
             pb.var(&format!("B_{}", o.name), obj, true)
@@ -451,8 +475,7 @@ pub fn plan(slices: &[Slice], cfg: &PlanConfig) -> Plan {
         let load = s.rate * c.load_per_rate;
         // Busy columns carry *dynamic* operational carbon only; idle
         // power and embodied are charged on the provisioned fleet (B).
-        let dyn_power = marginal_power(opt) - if opt.is_cpu { 0.0 } else { opt.dev.idle_w };
-        let op_rate = dyn_power / 1000.0 * cfg.ci / 1000.0; // kg per dev-hr
+        let op_rate = op_kg_per_hr(busy_dynamic_power(opt), cfg.ci);
         let carbon = load * op_rate * tp_for(s.model, opt) as f64;
         // CPU reuse pays a small marginal core-hour cost; GPUs are costed
         // on provisioning (B).
@@ -534,16 +557,14 @@ pub fn plan(slices: &[Slice], cfg: &PlanConfig) -> Plan {
     // lowest amortized objective; B = ceil of accumulated load. Used both
     // as a branch-and-bound cutoff and as a fallback when search truncates.
     let b_objs: Vec<f64> = opts.iter().map(|o| {
-        let idle_op = o.dev.idle_w / 1000.0 * cfg.ci / 1000.0;
+        let idle_op = idle_op_kg_per_hr(o, cfg.ci);
         (1.0 - cfg.alpha) * o.cost_hr + cfg.alpha * (o.emb_kg_per_hr + idle_op)
     }).collect();
     let col_obj = |c: &Col| -> f64 {
         let s = &slices[c.s];
         let opt = &opts[c.d];
         let load = s.rate * c.load_per_rate;
-        let dyn_power = marginal_power(opt)
-            - if opt.is_cpu { 0.0 } else { opt.dev.idle_w };
-        let carbon = load * dyn_power / 1000.0 * cfg.ci / 1000.0
+        let carbon = load * op_kg_per_hr(busy_dynamic_power(opt), cfg.ci)
             * tp_for(s.model, opt) as f64;
         let cost = if opt.is_cpu { load * opt.cost_hr } else { 0.0 };
         (1.0 - cfg.alpha) * cost + cfg.alpha * carbon
@@ -676,9 +697,7 @@ pub fn plan(slices: &[Slice], cfg: &PlanConfig) -> Plan {
             let opt = &opts[c.d];
             let tp = tp_for(s.model, opt) as f64;
             let load = x * s.rate * c.load_per_rate * tp;
-            let dyn_power = marginal_power(opt)
-                - if opt.is_cpu { 0.0 } else { opt.dev.idle_w };
-            op_kg += load * dyn_power / 1000.0 * cfg.ci / 1000.0;
+            op_kg += load * op_kg_per_hr(busy_dynamic_power(opt), cfg.ci);
             if opt.is_cpu {
                 cost += load * opt.cost_hr;
             }
@@ -697,7 +716,7 @@ pub fn plan(slices: &[Slice], cfg: &PlanConfig) -> Plan {
             continue;
         }
         let b = sol.x.get(b_vars[di].0).copied().unwrap_or(0.0);
-        op_kg += b * opt.dev.idle_w / 1000.0 * cfg.ci / 1000.0;
+        op_kg += b * idle_op_kg_per_hr(opt, cfg.ci);
         emb_kg += b * opt.emb_kg_per_hr;
         cost += b * opt.cost_hr;
     }
@@ -792,6 +811,26 @@ mod tests {
         let a100 = opts.iter().find(|o| o.name == "A100-40").unwrap();
         assert!(tp_for(big, a100) >= 4);
         assert_eq!(tp_for(small, a100), 1);
+    }
+
+    #[test]
+    fn planner_prices_the_shared_power_curve() {
+        let m = models::llm("llama-8b").unwrap();
+        let opts = device_options(&PlanConfig::default(), m);
+        let g = opts.iter().find(|o| !o.is_cpu).unwrap();
+        // GPU marginal power = idle floor + shared dynamic term; the CPU
+        // pseudo-device charges only the dynamic term (reuse accounting).
+        let d = dynamic_power(g.dev.idle_w, g.dev.tdp_w, PLANNING_UTIL,
+                              g.dev.power_gamma);
+        assert!((marginal_power(g) - (g.dev.idle_w + d)).abs() < 1e-9);
+        let c = opts.iter().find(|o| o.is_cpu).unwrap();
+        let dc = dynamic_power(c.dev.idle_w, c.dev.tdp_w, PLANNING_UTIL,
+                               c.dev.power_gamma);
+        assert!((marginal_power(c) - dc).abs() < 1e-9);
+        // The idle objective column is the shared helper in planner units.
+        assert!((idle_op_kg_per_hr(g, 261.0)
+                     - op_kg_per_hr(idle_power(g.dev.idle_w, 1), 261.0))
+                    .abs() < 1e-15);
     }
 
     #[test]

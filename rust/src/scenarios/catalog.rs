@@ -1,18 +1,20 @@
-//! The shipped scenario registry: 12 named end-to-end design points
+//! The shipped scenario registry: 14 named end-to-end design points
 //! spanning the paper's evaluation axes — latency-optimized online
 //! serving, offline batch, the mixed 4R deployment, Splitwise-style
 //! prefill/decode disaggregation, multi-region carbon intensity,
 //! legacy-hardware Reuse, temporal shifting, carbon-aware routing, the
 //! rolling-horizon autoscaling pair (diurnal tracking + demand surge),
-//! and the production-scale pair (`production-day` / `production-week`)
-//! that exercises the streaming core at multi-million-request trace
-//! lengths. Each wires config → planner → solver → sim → carbon into one
+//! the honest-energy pair (`keepalive-surge` cold-start/keep-alive
+//! tension + `nonlinear-power` per-phase DVFS), and the production-scale
+//! pair (`production-day` / `production-week`) that exercises the
+//! streaming core at multi-million-request trace lengths. Each wires
+//! config → planner → solver → sim → carbon into one
 //! [`super::ScenarioOutcome`].
 
 use super::{CiProfile, FleetPolicy, Scenario, ScenarioSpec, WorkloadSpec};
 use crate::carbon::intensity::Region;
 use crate::planner::horizon::HorizonConfig;
-use crate::sim::Router;
+use crate::sim::{KeepAlivePolicy, Router};
 use crate::strategies::Strategy;
 use crate::workload::slo::Slo;
 use crate::workload::{Arrivals, LengthDist, RequestClass};
@@ -60,6 +62,9 @@ fn base_spec(model: &'static str, region: Region, strategy: Strategy)
         defer_offline: false,
         reprovision: None,
         compare_regions: Vec::new(),
+        coldstart_s: 0.0,
+        keepalive: KeepAlivePolicy::Immediate,
+        decode_freq: 1.0,
     }
 }
 
@@ -255,6 +260,56 @@ fn demand_surge() -> ScenarioSpec {
     }
 }
 
+fn keepalive_surge() -> ScenarioSpec {
+    // The cold-start / keep-alive tension on a step surge: provisioning a
+    // retired server takes a real boot delay, so when the surge hits, an
+    // aggressively-retired fleet serves the ramp with too little capacity
+    // (SLO misses) while a keep-alive fleet paid warm idle carbon to be
+    // ready. The main run holds a fixed 30 s window; the extras panel
+    // (`*_ka_immediate` / `*_ka_fixed` / `*_ka_hybrid`) sweeps the
+    // policies on the identical schedule, with the static always-warm
+    // fleet (`*_static`) as the zero-cold-start anchor.
+    ScenarioSpec {
+        workloads: vec![WorkloadSpec {
+            arrivals: Arrivals::Step {
+                base: 3.0, surge: 15.0, start_frac: 0.35, end_frac: 0.55,
+            },
+            lengths: LengthDist::ShareGpt,
+            class: RequestClass::Online,
+        }],
+        slo: Some(Slo { ttft_s: 2.0, tpot_s: 0.2 }),
+        reprovision: Some(HorizonConfig { headroom: 1.2, ..Default::default() }),
+        coldstart_s: 20.0,
+        keepalive: KeepAlivePolicy::Fixed { window_s: 30.0 },
+        ..base_spec("llama-8b", Region::Midcontinent, Strategy::EcoFull)
+    }
+}
+
+fn nonlinear_power() -> ScenarioSpec {
+    // Per-phase DVFS on the shared nonlinear power curve: decode is
+    // memory-bound, so running it at 85% clocks cuts dynamic power ~f³
+    // while stretching decode latency only 1/f. The stock-clock baseline
+    // lands in extras (`*_stock_freq`), isolating the energy/latency
+    // trade on one fleet.
+    ScenarioSpec {
+        workloads: vec![
+            WorkloadSpec {
+                arrivals: Arrivals::Bursty { rate: 8.0, cv: 2.0 },
+                lengths: LengthDist::ShareGpt,
+                class: RequestClass::Online,
+            },
+            WorkloadSpec {
+                arrivals: Arrivals::Poisson { rate: 2.0 },
+                lengths: LengthDist::LongBench,
+                class: RequestClass::Offline,
+            },
+        ],
+        slo: Some(Slo { ttft_s: 2.0, tpot_s: 0.2 }),
+        decode_freq: 0.85,
+        ..base_spec("llama-8b", Region::Midcontinent, Strategy::EcoFull)
+    }
+}
+
 fn production_day() -> ScenarioSpec {
     // One compressed demand + CI day at production scale: ~300 req/s of
     // mixed chat + code traffic on a two-grid elastic fleet with
@@ -376,6 +431,16 @@ pub fn registry() -> Vec<Box<dyn Scenario>> {
                absorbs a 5x surge, then drains the surplus \
                (Llama-8B, MISO)",
               demand_surge),
+        point("keepalive-surge",
+              "cold-start vs keep-alive on a load surge: warm-idle \
+               carbon against boot-delay SLO misses, with a \
+               fixed/hybrid/immediate policy panel (Llama-8B, MISO)",
+              keepalive_surge),
+        point("nonlinear-power",
+              "per-phase DVFS on the shared nonlinear power curve: \
+               decode at 85% clocks vs stock, f^3 dynamic-power cut \
+               against the 1/f latency stretch (Llama-8B, MISO)",
+              nonlinear_power),
         point("production-day",
               "production-scale compressed demand+CI day (~300 req/s) on \
                a two-grid elastic fleet: streaming arrivals + \
@@ -409,9 +474,9 @@ mod tests {
     use super::*;
 
     #[test]
-    fn registry_has_at_least_twelve_unique_named_scenarios() {
+    fn registry_has_at_least_fourteen_unique_named_scenarios() {
         let r = registry();
-        assert!(r.len() >= 12, "only {} scenarios", r.len());
+        assert!(r.len() >= 14, "only {} scenarios", r.len());
         let mut names: Vec<&str> = r.iter().map(|s| s.name()).collect();
         names.sort_unstable();
         names.dedup();

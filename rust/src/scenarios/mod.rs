@@ -26,7 +26,7 @@ use crate::planner::horizon::{self, HorizonConfig};
 use crate::planner::slicing::SliceAccum;
 use crate::planner::{self, PlanConfig};
 use crate::sim::{shard, simulate_stream, DeferralPolicy, FleetSchedule,
-                 Router, SimConfig, SimReport};
+                 KeepAlivePolicy, Router, SimConfig, SimReport};
 use crate::strategies::{fleet_from_plan, sim_config, splitwise_fleet, Strategy};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -105,6 +105,16 @@ pub struct ScenarioSpec {
     /// Extra regions to cross-report carbon for (operational rescales
     /// linearly with CI; embodied is region-independent).
     pub compare_regions: Vec<Region>,
+    /// Cold-start delay (s) between a provisioning decision and the
+    /// server admitting work; 0.0 keeps the instant-activation engine.
+    pub coldstart_s: f64,
+    /// What drained-empty servers do: retire at once, or stay warm for a
+    /// window (paying idle carbon against the next surge's cold starts).
+    pub keepalive: KeepAlivePolicy,
+    /// DVFS frequency scale applied to the fleet's decode phase (decode
+    /// is memory-bound, so downclocking trades a little latency for an
+    /// f³ cut in dynamic power). 1.0 = stock clocks, bit-identical.
+    pub decode_freq: f64,
 }
 
 /// Sweep-level spec overrides (the CLI's `--ci-trace` / `--epoch` knobs).
@@ -120,6 +130,10 @@ pub struct Overrides {
     /// fleet partition never depends on N, so the outcome bytes are
     /// invariant in N — N only buys wall-clock.
     pub shards: Option<usize>,
+    /// Force a cold-start delay (the CLI `--coldstart` knob).
+    pub coldstart_s: Option<f64>,
+    /// Force a keep-alive policy (the CLI `--keepalive` knob).
+    pub keepalive: Option<KeepAlivePolicy>,
 }
 
 /// A named design point that the sweep runner can execute.
@@ -150,6 +164,12 @@ pub trait Scenario: Send + Sync {
         }
         if let (Some(e), Some(h)) = (ov.epoch_s, spec.reprovision.as_mut()) {
             h.epoch_s = e;
+        }
+        if let Some(cs) = ov.coldstart_s {
+            spec.coldstart_s = cs;
+        }
+        if let Some(ka) = ov.keepalive {
+            spec.keepalive = ka;
         }
         match ov.shards {
             Some(n) => run_spec_sharded(self.name(), &spec, seed, duration_s, n),
@@ -468,6 +488,13 @@ fn run_spec_with_sources<'a>(name: &str, spec: &ScenarioSpec, seed: u64,
     let fleet_servers = fleet.len();
     let mut cfg = sim_config(fleet, &plan, ci);
     cfg.router = spec.router;
+    cfg.coldstart_s = spec.coldstart_s;
+    cfg.keepalive = spec.keepalive;
+    if spec.decode_freq != 1.0 {
+        for s in &mut cfg.servers {
+            s.device.decode_freq = spec.decode_freq;
+        }
+    }
     cfg.ci = match spec.ci_profile {
         CiProfile::Flat => CiSignal::flat(ci),
         CiProfile::CompressedDiurnal => CiSignal::Trace(
@@ -569,6 +596,45 @@ fn run_spec_with_sources<'a>(name: &str, spec: &ScenarioSpec, seed: u64,
         extras.insert("op_kg_jsq".into(), base.op_kg);
         extras.insert("carbon_kg_jsq".into(), base.carbon_kg());
         extras.insert("ttft_p90_s_jsq".into(), base.ttft.p90());
+    }
+    if spec.coldstart_s > 0.0 {
+        // Keep-alive policy sweep on the identical elastic schedule: how
+        // each policy trades warm-idle carbon against the cold-start SLO
+        // misses the next surge pays. The always-warm anchor is the
+        // static baseline below (`carbon_kg_static` etc.).
+        let panel: [(&str, KeepAlivePolicy); 3] = [
+            ("ka_immediate", KeepAlivePolicy::Immediate),
+            ("ka_fixed", KeepAlivePolicy::Fixed { window_s: 30.0 }),
+            ("ka_hybrid", KeepAlivePolicy::HybridHistogram {
+                bin_s: 10.0, percentile: 0.9, max_window_s: 60.0 }),
+        ];
+        for (label, ka) in panel {
+            let mut c = cfg.clone();
+            c.keepalive = ka;
+            let b = run_sim(&c, true);
+            extras.insert(format!("op_kg_{label}"), b.op_kg);
+            extras.insert(format!("emb_kg_{label}"), b.emb_kg);
+            extras.insert(format!("carbon_kg_{label}"), b.carbon_kg());
+            extras.insert(format!("slo_attainment_{label}"), b.slo_attainment);
+            extras.insert(format!("ttft_p90_s_{label}"), b.ttft.p90());
+            extras.insert(format!("provisioned_server_hours_{label}"),
+                          b.provisioned_server_hours);
+        }
+    }
+    if spec.decode_freq != 1.0 {
+        // Stock-clock baseline: same fleet at decode_freq = 1.0, so the
+        // extras isolate what the f³ dynamic-power cut buys (and what the
+        // 1/f decode slowdown costs) on the shared nonlinear curve.
+        let mut base_cfg = cfg.clone();
+        for s in &mut base_cfg.servers {
+            s.device.decode_freq = 1.0;
+        }
+        let base = run_sim(&base_cfg, true);
+        extras.insert("energy_j_stock_freq".into(), base.energy_j);
+        extras.insert("op_kg_stock_freq".into(), base.op_kg);
+        extras.insert("carbon_kg_stock_freq".into(), base.carbon_kg());
+        extras.insert("tpot_p90_s_stock_freq".into(), base.tpot.p90());
+        extras.insert("slo_attainment_stock_freq".into(), base.slo_attainment);
     }
     if spec.reprovision.is_some() {
         // Static peak-provisioned baseline: the same template fleet kept

@@ -29,12 +29,19 @@ pub struct SweepConfig {
     /// worker threads (the `--shards` knob); `None` keeps the unsharded
     /// engine. Outcome bytes are invariant in N.
     pub shards: Option<usize>,
+    /// Force a provisioning cold-start delay in seconds on every scenario
+    /// (the `--coldstart` knob); `None` keeps each scenario's own delay.
+    pub coldstart_s: Option<f64>,
+    /// Force a keep-alive policy on every scenario (the `--keepalive`
+    /// knob); `None` keeps each scenario's own policy.
+    pub keepalive: Option<crate::sim::KeepAlivePolicy>,
 }
 
 impl Default for SweepConfig {
     fn default() -> Self {
         SweepConfig { threads: 0, seed: 42, duration_s: 180.0,
-                      ci_profile: None, epoch_s: None, shards: None }
+                      ci_profile: None, epoch_s: None, shards: None,
+                      coldstart_s: None, keepalive: None }
     }
 }
 
@@ -133,6 +140,8 @@ pub fn run_sweep(scenarios: &[Box<dyn Scenario>], cfg: &SweepConfig) -> SweepRep
                     ci_profile: cfg.ci_profile,
                     epoch_s: cfg.epoch_s,
                     shards: cfg.shards,
+                    coldstart_s: cfg.coldstart_s,
+                    keepalive: cfg.keepalive,
                 };
                 let outcome = sc.run_with(seed, cfg.duration_s, &ov);
                 *slots[i].lock().unwrap() = Some(outcome);

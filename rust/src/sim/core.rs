@@ -71,6 +71,49 @@ impl FleetSchedule {
     }
 }
 
+/// What happens to a draining server once it goes idle-empty: retire on
+/// the spot, or stay warm (paying idle power) for a window in case the
+/// next re-provision arrives before it — trading idle carbon against the
+/// cold-start latency a retired server pays on the next surge.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum KeepAlivePolicy {
+    /// Retire the instant the server drains empty (pre-existing behavior).
+    Immediate,
+    /// Hold every drained server warm for a fixed window.
+    Fixed { window_s: f64 },
+    /// Azure-style hybrid histogram: each server tracks how long it sat
+    /// warm before being reused, and its window is the `percentile` of
+    /// that distribution (bins of `bin_s`), capped at `max_window_s`.
+    /// While a server has no observations it keeps the conservative
+    /// `max_window_s`.
+    HybridHistogram { bin_s: f64, percentile: f64, max_window_s: f64 },
+}
+
+impl Default for KeepAlivePolicy {
+    fn default() -> KeepAlivePolicy {
+        KeepAlivePolicy::Immediate
+    }
+}
+
+/// Window implied by an idle-before-reuse histogram: the smallest bin
+/// boundary covering `percentile` of the observations, capped. Free
+/// function so the property suite can exercise it directly.
+pub fn histogram_window(hist: &[u64], total: u64, bin_s: f64,
+                        percentile: f64, max_window_s: f64) -> f64 {
+    if total == 0 {
+        return max_window_s;
+    }
+    let target = percentile.clamp(0.0, 1.0) * total as f64;
+    let mut cum = 0u64;
+    for (i, &c) in hist.iter().enumerate() {
+        cum += c;
+        if cum as f64 >= target {
+            return ((i as f64 + 1.0) * bin_s).min(max_window_s);
+        }
+    }
+    max_window_s
+}
+
 /// Simulator configuration.
 #[derive(Debug, Clone)]
 pub struct SimConfig {
@@ -95,6 +138,13 @@ pub struct SimConfig {
     /// the region's flat published average. Empty (the default) keeps the
     /// pre-existing flat-override behavior bit for bit.
     pub region_signals: Vec<(Region, CiSignal)>,
+    /// Cold-start delay (s): a `Provision` of a pending/retired server
+    /// takes this long before the server actually admits work. 0.0 (the
+    /// default) activates inline, pushing no extra events — byte-identical
+    /// to the pre-cold-start engine.
+    pub coldstart_s: f64,
+    /// Keep-alive policy for drained-empty servers.
+    pub keepalive: KeepAlivePolicy,
 }
 
 impl SimConfig {
@@ -112,6 +162,8 @@ impl SimConfig {
             deferral: DeferralPolicy::Immediate,
             fleet_plan: FleetSchedule::default(),
             region_signals: Vec::new(),
+            coldstart_s: 0.0,
+            keepalive: KeepAlivePolicy::Immediate,
         }
     }
 
@@ -143,6 +195,9 @@ pub enum EventKind {
     Complete { server: usize, gen: u64 },
     /// Bring `server` online (scheduled fleet elasticity).
     Provision(usize),
+    /// End of `server`'s cold-start: it actually comes online now. Only
+    /// scheduled when `SimConfig::coldstart_s > 0`.
+    Activate(usize),
     /// Stop admitting on `server`; it decommissions once empty.
     Drain(usize),
     /// Retire `server` if (and only if) it is draining and empty; a guard
@@ -226,6 +281,11 @@ pub(crate) struct Sim<'a> {
     slo_tpot: f64,
     /// Latest arrival time pulled so far (the demand horizon).
     last_arrival: f64,
+    /// Latest time any *work or capacity* event fired. Deferred
+    /// retirements (keep-alive windows expiring after the workload ends)
+    /// close their own server's interval but must not stretch the sim
+    /// horizon every other server's idle and embodied books close at.
+    work_end: f64,
     /// Reusable batch-selection buffer (hot-path allocation avoidance).
     pub(crate) batch_scratch: Vec<usize>,
 }
@@ -278,6 +338,7 @@ impl<'a> Sim<'a> {
             slo_ttft,
             slo_tpot,
             last_arrival: 0.0,
+            work_end: 0.0,
             batch_scratch: Vec::new(),
         };
         sim.pull_next_arrival();
@@ -326,13 +387,47 @@ impl<'a> Sim<'a> {
                 .map(|(i, _)| i));
     }
 
-    /// Schedule retirement for a draining server that has gone empty.
+    /// Schedule retirement for a draining server that has gone empty —
+    /// immediately, or after its keep-alive window (during which it stays
+    /// warm, paying idle power, ready to be reused without a cold start).
     fn maybe_retire(&mut self, sid: usize) {
         if self.servers[sid].lifecycle == Lifecycle::Draining
             && self.servers[sid].is_idle_empty()
         {
-            self.queue.push(self.now, EventKind::Decommission(sid));
+            let window = self.keepalive_window(sid);
+            let s = &mut self.servers[sid];
+            s.retire_at = self.now + window;
+            if window > 0.0 {
+                s.warm_since = Some(self.now);
+            }
+            self.queue.push(self.now + window, EventKind::Decommission(sid));
         }
+    }
+
+    /// How long `sid` should stay warm once drained empty, per the
+    /// configured keep-alive policy.
+    fn keepalive_window(&self, sid: usize) -> f64 {
+        match self.cfg.keepalive {
+            KeepAlivePolicy::Immediate => 0.0,
+            KeepAlivePolicy::Fixed { window_s } => window_s.max(0.0),
+            KeepAlivePolicy::HybridHistogram { bin_s, percentile,
+                                               max_window_s } => {
+                let s = &self.servers[sid];
+                histogram_window(&s.ka_hist, s.ka_obs, bin_s, percentile,
+                                 max_window_s)
+            }
+        }
+    }
+
+    /// Bring `sid` online from `Pending`: open its accounting interval
+    /// and nudge it. Shared by the inline (no cold-start) `Provision` arm
+    /// and the delayed `Activate` handler.
+    fn activate(&mut self, sid: usize) {
+        self.servers[sid].lifecycle = Lifecycle::Active;
+        self.meter.provision(sid, self.now);
+        self.metrics.provision_events += 1;
+        self.refresh_eligibility();
+        self.queue.push(self.now, EventKind::Wake(sid));
     }
 
     /// Drain the event queue to completion.
@@ -340,6 +435,9 @@ impl<'a> Sim<'a> {
         while let Some(ev) = self.queue.pop() {
             self.now = ev.t;
             self.metrics.events += 1;
+            if !matches!(ev.kind, EventKind::Decommission(_)) {
+                self.work_end = self.now;
+            }
             match ev.kind {
                 EventKind::Arrival(ji) => {
                     // Keep the stream primed before handling this arrival,
@@ -398,17 +496,40 @@ impl<'a> Sim<'a> {
                         Lifecycle::Active => {}
                         Lifecycle::Draining => {
                             // Cancel the drain; the accounting interval is
-                            // still open.
-                            self.servers[sid].lifecycle = Lifecycle::Active;
+                            // still open. If the server was sitting warm,
+                            // this is a reuse — record how long it waited
+                            // (the hybrid-histogram training signal).
+                            let now = self.now;
+                            let s = &mut self.servers[sid];
+                            if let Some(ws) = s.warm_since.take() {
+                                if let KeepAlivePolicy::HybridHistogram {
+                                    bin_s, ..
+                                } = self.cfg.keepalive {
+                                    s.record_warm_reuse(now - ws, bin_s);
+                                }
+                            }
+                            s.lifecycle = Lifecycle::Active;
                             self.refresh_eligibility();
                         }
                         Lifecycle::Pending | Lifecycle::Retired => {
-                            self.servers[sid].lifecycle = Lifecycle::Active;
-                            self.meter.provision(sid, self.now);
-                            self.metrics.provision_events += 1;
-                            self.refresh_eligibility();
-                            self.queue.push(self.now, EventKind::Wake(sid));
+                            if self.cfg.coldstart_s > 0.0 {
+                                // Boot takes a while: mark it pending and
+                                // come online only after the cold start.
+                                self.servers[sid].lifecycle = Lifecycle::Pending;
+                                self.queue.push(self.now + self.cfg.coldstart_s,
+                                                EventKind::Activate(sid));
+                            } else {
+                                self.activate(sid);
+                            }
                         }
+                    }
+                }
+                EventKind::Activate(sid) => {
+                    // Guarded like Decommission: a double Provision during
+                    // the boot window schedules two Activates; the second
+                    // finds the server already Active and no-ops.
+                    if self.servers[sid].lifecycle == Lifecycle::Pending {
+                        self.activate(sid);
                     }
                 }
                 EventKind::Drain(sid) => {
@@ -422,11 +543,15 @@ impl<'a> Sim<'a> {
                     // Guarded: only a draining *and empty* server retires;
                     // work that landed after the check was scheduled (e.g.
                     // an in-transit KV handoff) keeps it alive until the
-                    // next empty transition re-schedules retirement.
+                    // next empty transition re-schedules retirement. The
+                    // `retire_at` stamp additionally invalidates events
+                    // whose keep-alive window was re-armed later.
                     if self.servers[sid].lifecycle == Lifecycle::Draining
                         && self.servers[sid].is_idle_empty()
+                        && self.now >= self.servers[sid].retire_at
                     {
                         self.servers[sid].lifecycle = Lifecycle::Retired;
+                        self.servers[sid].warm_since = None;
                         self.meter.decommission(sid, self.now);
                         self.metrics.decommission_events += 1;
                     }
@@ -468,18 +593,19 @@ impl<'a> Sim<'a> {
     pub fn finish_parts(mut self) -> (SimReport, CarbonMeter) {
         debug_assert_eq!(self.jobs.live(), 0,
                          "jobs still live after the event queue drained");
-        let dur = self.now.max(self.last_arrival);
+        let dur = self.work_end.max(self.last_arrival);
         self.meter.finalize(dur);
         let mut energy = 0.0;
         let mut emb = 0.0;
         let mut per_server = Vec::with_capacity(self.servers.len());
         for (i, s) in self.servers.iter().enumerate() {
-            let tpf = s.spec.tp as f64;
             let prov_s = self.meter.provisioned_s(i);
             debug_assert!(s.busy_s <= prov_s + 1e-6,
                           "server {i} busy outside its provisioned interval");
             let idle_s = (prov_s - s.busy_s).max(0.0);
-            let idle_j = idle_s * s.spec.device.idle_w * tpf;
+            // The same idle floor the planner's objective columns price.
+            let idle_j = idle_s * crate::carbon::operational::idle_power(
+                s.spec.device.idle_w, s.spec.tp);
             self.meter.record_idle(i, idle_j, dur);
             energy += s.energy_j + idle_j;
             emb += self.cfg.emb_kg_per_hr[i] * prov_s / 3600.0;
@@ -705,6 +831,109 @@ mod tests {
         assert!(u.provisioned_s >= 40.0 - 1e-9);
         assert!(u.provisioned_s < r.sim_duration_s);
         assert!(u.busy_s <= u.provisioned_s + 1e-6);
+    }
+
+    #[test]
+    fn cold_start_delays_activation_and_its_accounting() {
+        let m = models::llm("llama-8b").unwrap();
+        let tr = small_trace(2.0, 11);
+        let mut cfg = cfg_for(homogeneous_fleet("A100-40", 2, m, 2048), Router::Jsq);
+        cfg.fleet_plan.initially_active = vec![true, false];
+        cfg.fleet_plan.events.push(FleetEvent {
+            t: 60.0, server: 1, action: FleetAction::Provision,
+        });
+        let mut cold = cfg.clone();
+        cold.coldstart_s = 30.0;
+        let warm = simulate(m, &tr, &cfg, 0.5, 0.1);
+        let r = simulate(m, &tr, &cold, 0.5, 0.1);
+        assert_eq!(r.completed, tr.len());
+        assert_eq!(r.provision_events, 1);
+        // Provision fires at 60, the server comes up at 90: its
+        // accounting interval (and capacity) starts 30 s later.
+        assert!((r.per_server[1].provisioned_s
+                     - (r.sim_duration_s - 90.0)).abs() < 1e-9,
+                "provisioned {} vs horizon {}", r.per_server[1].provisioned_s,
+                r.sim_duration_s);
+        assert!(r.per_server[1].provisioned_s
+                    < warm.per_server[1].provisioned_s);
+    }
+
+    #[test]
+    fn fixed_keepalive_holds_a_drained_server_warm() {
+        let m = models::llm("llama-8b").unwrap();
+        let tr = small_trace(2.0, 10);
+        let mut cfg = cfg_for(homogeneous_fleet("A100-40", 3, m, 2048), Router::Jsq);
+        cfg.fleet_plan.events.push(FleetEvent {
+            t: 0.0, server: 2, action: FleetAction::Drain,
+        });
+        let mut warm = cfg.clone();
+        warm.keepalive = KeepAlivePolicy::Fixed { window_s: 45.0 };
+        let imm = simulate(m, &tr, &cfg, 0.5, 0.1);
+        let r = simulate(m, &tr, &warm, 0.5, 0.1);
+        assert_eq!(r.completed, tr.len());
+        assert_eq!(r.decommission_events, 1);
+        // Warm for the window, then retired — and the warm seconds are
+        // idle-metered, so keep-alive strictly costs energy and carbon.
+        assert!((r.per_server[2].provisioned_s - 45.0).abs() < 1e-9,
+                "provisioned {}", r.per_server[2].provisioned_s);
+        assert!(r.energy_j > imm.energy_j);
+        assert!(r.op_kg > imm.op_kg);
+        assert!(r.emb_kg > imm.emb_kg);
+    }
+
+    #[test]
+    fn keepalive_window_crossing_reuse_cancels_retirement() {
+        let m = models::llm("llama-8b").unwrap();
+        let tr = small_trace(2.0, 13);
+        let mut cfg = cfg_for(homogeneous_fleet("A100-40", 2, m, 2048), Router::Jsq);
+        cfg.keepalive = KeepAlivePolicy::Fixed { window_s: 40.0 };
+        cfg.fleet_plan.events.push(FleetEvent {
+            t: 10.0, server: 1, action: FleetAction::Drain,
+        });
+        cfg.fleet_plan.events.push(FleetEvent {
+            t: 30.0, server: 1, action: FleetAction::Provision,
+        });
+        let r = simulate(m, &tr, &cfg, 0.5, 0.1);
+        // Re-provisioned inside the warm window: the stale Decommission is
+        // invalidated, the server serves to the end, nothing ever retires.
+        assert_eq!(r.completed, tr.len());
+        assert_eq!(r.decommission_events, 0);
+        assert_eq!(r.provision_events, 0);
+        assert!((r.per_server[1].provisioned_s - r.sim_duration_s).abs() < 1e-9);
+    }
+
+    #[test]
+    fn hybrid_histogram_window_learns_from_observations() {
+        // Empty histogram: conservative max.
+        assert_eq!(histogram_window(&[], 0, 60.0, 0.95, 600.0), 600.0);
+        // 10 reuses, 9 within the first minute, 1 in the fifth: p95 covers
+        // the straggler bin, p50 stops at the first.
+        let hist = [9u64, 0, 0, 0, 1];
+        assert_eq!(histogram_window(&hist, 10, 60.0, 0.5, 600.0), 60.0);
+        assert_eq!(histogram_window(&hist, 10, 60.0, 0.95, 600.0), 300.0);
+        // The cap binds.
+        assert_eq!(histogram_window(&hist, 10, 60.0, 0.95, 120.0), 120.0);
+    }
+
+    #[test]
+    fn immediate_keepalive_and_zero_coldstart_match_the_old_engine_bitwise() {
+        // The knobs' defaults must be invisible: an explicitly-spelled
+        // default config produces the same bytes and event count as flat().
+        let m = models::llm("llama-8b").unwrap();
+        let tr = small_trace(4.0, 14);
+        let mut cfg = cfg_for(homogeneous_fleet("A100-40", 3, m, 2048), Router::Jsq);
+        cfg.fleet_plan.events.push(FleetEvent {
+            t: 0.0, server: 2, action: FleetAction::Drain,
+        });
+        let mut explicit = cfg.clone();
+        explicit.coldstart_s = 0.0;
+        explicit.keepalive = KeepAlivePolicy::Immediate;
+        let a = simulate(m, &tr, &cfg, 0.5, 0.1);
+        let b = simulate(m, &tr, &explicit, 0.5, 0.1);
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits());
+        assert_eq!(a.op_kg.to_bits(), b.op_kg.to_bits());
+        assert_eq!(a.emb_kg.to_bits(), b.emb_kg.to_bits());
     }
 
     #[test]

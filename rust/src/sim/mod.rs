@@ -43,8 +43,9 @@ pub mod server;
 pub mod shard;
 
 pub use self::carbon_meter::CarbonMeter;
-pub use self::core::{Event, EventKind, EventQueue, FleetAction, FleetEvent,
-                     FleetSchedule, SimConfig};
+pub use self::core::{histogram_window, Event, EventKind, EventQueue,
+                     FleetAction, FleetEvent, FleetSchedule, KeepAlivePolicy,
+                     SimConfig};
 pub use self::shard::{simulate_sharded, ShardPlan, ShardSpec, ShardSplitter,
                       MAX_SHARD_SERVERS};
 pub use self::metrics::{MetricsSink, ServerUsage, SimReport};

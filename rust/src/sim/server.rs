@@ -260,7 +260,22 @@ pub struct Server {
     pub(crate) in_flight: bool,
     pub(crate) busy_s: f64,
     pub(crate) energy_j: f64,
+    /// When this draining server last went idle-empty (warm, awaiting
+    /// either reuse or its keep-alive window expiring).
+    pub(crate) warm_since: Option<f64>,
+    /// Earliest time a pending `Decommission` may actually retire this
+    /// server — re-arming the keep-alive window invalidates stale events.
+    pub(crate) retire_at: f64,
+    /// Per-server idle-before-reuse histogram for the hybrid-histogram
+    /// keep-alive policy. Per-server (not per-sim) so shard partitioning
+    /// cannot change what any server has observed.
+    pub(crate) ka_hist: Vec<u64>,
+    pub(crate) ka_obs: u64,
 }
+
+/// Histogram bins are capped so a pathological idle duration cannot grow
+/// the vector without bound.
+pub(crate) const KA_MAX_BINS: usize = 4096;
 
 impl Server {
     pub(crate) fn new(spec: &ServerSpec) -> Server {
@@ -274,7 +289,23 @@ impl Server {
             in_flight: false,
             busy_s: 0.0,
             energy_j: 0.0,
+            warm_since: None,
+            retire_at: 0.0,
+            ka_hist: Vec::new(),
+            ka_obs: 0,
         }
+    }
+
+    /// Record that this server sat warm for `idle_s` before being reused
+    /// (a `Provision` cancelled its drain). Feeds the hybrid-histogram
+    /// keep-alive window.
+    pub(crate) fn record_warm_reuse(&mut self, idle_s: f64, bin_s: f64) {
+        let bin = ((idle_s / bin_s.max(1e-9)) as usize).min(KA_MAX_BINS - 1);
+        if self.ka_hist.len() <= bin {
+            self.ka_hist.resize(bin + 1, 0);
+        }
+        self.ka_hist[bin] += 1;
+        self.ka_obs += 1;
     }
 
     /// Load the routing policies see: waiting prompts + running decodes.
@@ -346,7 +377,7 @@ impl<'a> Sim<'a> {
         let tp = self.servers[sid].spec.tp;
         let perf = roofline::prefill_perf(self.model, &self.servers[sid].spec.device,
                                           picks.len(), max_prompt, tp);
-        let done_t = self.begin_busy(sid, perf.latency_s, perf.energy_j);
+        let done_t = self.begin_busy(sid, perf.latency_s, perf.power_w);
 
         // First token is produced by prefill. TTFT is measured from the
         // dispatch time (== arrival unless the job was deferred).
@@ -402,7 +433,7 @@ impl<'a> Sim<'a> {
         let tp = self.servers[sid].spec.tp;
         let perf = roofline::decode_step_perf(self.model, &self.servers[sid].spec.device,
                                               n_active, mean_ctx, tp);
-        let done_t = self.begin_busy(sid, perf.latency_s, perf.energy_j);
+        let done_t = self.begin_busy(sid, perf.latency_s, perf.power_w);
 
         // Retain survivors in place: no per-step allocation, and finished
         // jobs hand their arena slots back for recycling.
@@ -434,7 +465,11 @@ impl<'a> Sim<'a> {
 
     /// Start a busy period ending at `now + latency_s`: bump the server's
     /// generation, charge the meter, and schedule the matching `Complete`.
-    fn begin_busy(&mut self, sid: usize, latency_s: f64, energy_j: f64) -> f64 {
+    /// The meter integrates the shared power curve directly — energy is
+    /// `busy_energy_j(power_w, latency_s)`, not a precomputed figure, so
+    /// the simulator and planner price the same curve.
+    fn begin_busy(&mut self, sid: usize, latency_s: f64, power_w: f64) -> f64 {
+        let energy_j = crate::carbon::operational::busy_energy_j(power_w, latency_s);
         let done_t = self.now + latency_s;
         let s = &mut self.servers[sid];
         s.busy_gen += 1;

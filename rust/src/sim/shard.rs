@@ -194,6 +194,8 @@ impl ShardPlan {
             deferral: cfg.deferral,
             fleet_plan,
             region_signals: cfg.region_signals.clone(),
+            coldstart_s: cfg.coldstart_s,
+            keepalive: cfg.keepalive,
         }
     }
 }

@@ -1,9 +1,9 @@
 //! Carbon-accounting invariants: the simulator's energy/carbon bookkeeping
 //! and the operational/embodied task model stay self-consistent.
 
-use ecoserve::carbon::operational::{amortized_emb_kg, device_power, op_kg,
-                                    op_kg_from_joules, task_carbon,
-                                    GPU_POWER_GAMMA};
+use ecoserve::carbon::operational::{amortized_emb_kg, device_power, idle_power,
+                                    op_kg, op_kg_from_joules, op_kg_per_hr,
+                                    task_carbon, GPU_POWER_GAMMA};
 use ecoserve::models;
 use ecoserve::sim::{homogeneous_fleet, simulate, Router, SimConfig, SimReport};
 use ecoserve::workload::{generate_trace, Arrivals, LengthDist, Request,
@@ -83,6 +83,47 @@ fn task_carbon_components_sum() {
     assert!((tc.op_kg - op_kg(700.0, 7200.0, 261.0)).abs() < 1e-12);
     let full_lt_s = 3.0 * 365.25 * 86_400.0;
     assert!((amortized_emb_kg(120.0, full_lt_s, 3.0) - 120.0).abs() < 1e-9);
+}
+
+#[test]
+fn planner_idle_pricing_matches_the_sim_meter_on_flat_ci() {
+    let m = models::llm("llama-8b").unwrap();
+    let specs = homogeneous_fleet("A100-40", 4, m, 2048);
+
+    // The planner's objective columns price idle per *individual GPU*
+    // (idle_power(idle_w, 1), B_j counts GPUs); the sim meters idle per
+    // tp-group server (idle_power(idle_w, tp)). Both are the one shared
+    // function, and for any concrete fleet — where GPUs come in whole
+    // tp-groups — the two views are bit-identical.
+    let planner_idle_w: f64 = specs.iter()
+        .map(|s| s.tp as f64 * idle_power(s.device.idle_w, 1))
+        .sum();
+    let sim_idle_w: f64 = specs.iter()
+        .map(|s| idle_power(s.device.idle_w, s.tp))
+        .sum();
+    assert_eq!(planner_idle_w.to_bits(), sim_idle_w.to_bits());
+
+    // Flat-CI run: the meter's fleet energy must reconstruct exactly from
+    // the shared model — per-server busy draw plus idle seconds priced at
+    // the planner's per-GPU floor.
+    let (r, _) = run_sim(4, 0.3, 261.0, RequestClass::Online);
+    let mut reconstructed = 0.0;
+    for (u, s) in r.per_server.iter().zip(&specs) {
+        let idle_s = (u.provisioned_s - u.busy_s).max(0.0);
+        let busy_j = u.energy_j - idle_s * idle_power(s.device.idle_w, s.tp);
+        assert!(busy_j >= -1e-6, "negative busy energy {busy_j}");
+        reconstructed += busy_j
+            + idle_s * (s.tp as f64 * idle_power(s.device.idle_w, 1));
+    }
+    assert!((reconstructed - r.energy_j).abs() <= 1e-9 * r.energy_j.max(1.0),
+            "planner reconstruction {reconstructed} vs metered {}", r.energy_j);
+
+    // And the op charge is that energy priced through the same W -> kg/hr
+    // conversion (op_kg_per_hr) the planner's columns apply.
+    let mean_w = r.energy_j / r.sim_duration_s.max(1e-9);
+    let predicted_op = op_kg_per_hr(mean_w, 261.0) * (r.sim_duration_s / 3600.0);
+    assert!((predicted_op - r.op_kg).abs() <= 1e-9 * r.op_kg.max(1e-12),
+            "planner op pricing {predicted_op} vs metered {}", r.op_kg);
 }
 
 #[test]

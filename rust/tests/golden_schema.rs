@@ -105,6 +105,40 @@ fn baseline_extras_cannot_silently_vanish() {
 }
 
 #[test]
+fn honest_energy_extras_cannot_silently_vanish() {
+    // The honest-energy pair: keepalive-surge reports the keep-alive
+    // policy panel next to its static baseline; nonlinear-power reports
+    // the stock-clock baseline for its decode DVFS point.
+    let sel = catalog::by_names(&["keepalive-surge", "nonlinear-power"])
+        .unwrap();
+    let cfg = SweepConfig { threads: 1, seed: 5, duration_s: 40.0,
+                            ..Default::default() };
+    let report = run_sweep(&sel, &cfg);
+    let j = Json::parse(&report.to_json().to_string()).expect("must parse");
+    let scenarios = j.get("scenarios").and_then(|s| s.as_arr()).unwrap();
+    let extras_of = |name: &str| -> Vec<String> {
+        let s = scenarios.iter()
+            .find(|s| s.get("name").unwrap().as_str() == Some(name))
+            .unwrap_or_else(|| panic!("scenario {name} missing from report"));
+        s.get("extras").and_then(|e| e.as_obj()).unwrap()
+            .keys().cloned().collect()
+    };
+    let ka = extras_of("keepalive-surge");
+    for label in ["ka_immediate", "ka_fixed", "ka_hybrid", "static"] {
+        for metric in ["op_kg", "emb_kg", "carbon_kg", "slo_attainment",
+                       "ttft_p90_s", "provisioned_server_hours"] {
+            let key = format!("{metric}_{label}");
+            assert!(ka.contains(&key),
+                    "keepalive-surge missing extra '{key}' (has {ka:?})");
+        }
+    }
+    let nl = extras_of("nonlinear-power");
+    assert_eq!(nl, vec!["carbon_kg_stock_freq", "energy_j_stock_freq",
+                        "op_kg_stock_freq", "slo_attainment_stock_freq",
+                        "tpot_p90_s_stock_freq"]);
+}
+
+#[test]
 fn summary_table_columns_match_the_golden_order() {
     let sel = catalog::by_names(&["online-latency"]).unwrap();
     let cfg = SweepConfig { threads: 1, seed: 5, duration_s: 30.0,

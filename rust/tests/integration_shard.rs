@@ -35,7 +35,7 @@ fn production_day_is_byte_identical_across_shard_counts() {
 
 #[test]
 fn sharded_streaming_matches_materialized() {
-    for name in ["carbon-router", "production-day"] {
+    for name in ["carbon-router", "production-day", "nonlinear-power"] {
         let sc = catalog::by_names(&[name]).unwrap().remove(0);
         let seed = scenario_seed(61, name);
         let streamed = run_spec_sharded(name, &sc.spec(), seed, 24.0, 2)
@@ -47,6 +47,41 @@ fn sharded_streaming_matches_materialized() {
                 .to_string();
         assert_eq!(streamed, materialized,
                    "{name}: sharded streaming and materialized diverge");
+    }
+}
+
+#[test]
+fn cold_start_and_keepalive_keep_shard_byte_identity() {
+    // The honest-energy knobs ride the same determinism contract: a boot
+    // delay plus each keep-alive policy — including the per-server hybrid
+    // histogram, whose reuse observations must not depend on how the
+    // fleet was partitioned — cannot change a byte across shard counts,
+    // nor between the streaming and materialized arrival paths.
+    use ecoserve::sim::KeepAlivePolicy;
+    let sc = catalog::by_names(&["keepalive-surge"]).unwrap().remove(0);
+    let seed = scenario_seed(53, "keepalive-surge");
+    for keepalive in [
+        KeepAlivePolicy::Fixed { window_s: 30.0 },
+        KeepAlivePolicy::HybridHistogram {
+            bin_s: 10.0, percentile: 0.9, max_window_s: 60.0,
+        },
+    ] {
+        let mut spec = sc.spec();
+        spec.keepalive = keepalive;
+        let runs: Vec<String> = [1usize, 2, 4]
+            .iter()
+            .map(|&n| run_spec_sharded("keepalive-surge", &spec, seed, 40.0, n)
+                .to_json()
+                .to_string())
+            .collect();
+        assert_eq!(runs[0], runs[1], "{keepalive:?}: 1 vs 2 shards diverged");
+        assert_eq!(runs[1], runs[2], "{keepalive:?}: 2 vs 4 shards diverged");
+        let materialized = run_spec_sharded_materialized(
+            "keepalive-surge", &spec, seed, 40.0, 2)
+            .to_json()
+            .to_string();
+        assert_eq!(runs[1], materialized,
+                   "{keepalive:?}: streaming vs materialized diverged");
     }
 }
 

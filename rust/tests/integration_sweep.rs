@@ -24,12 +24,13 @@ fn sweep_is_deterministic_across_runs_and_thread_counts() {
     // sorted by name, carrying the required per-scenario metrics.
     let j = Json::parse(&a).expect("report must be valid JSON");
     let scenarios = j.get("scenarios").and_then(|s| s.as_arr()).unwrap();
-    assert!(scenarios.len() >= 12, "only {} scenarios", scenarios.len());
+    assert!(scenarios.len() >= 14, "only {} scenarios", scenarios.len());
     let names: Vec<&str> = scenarios.iter()
         .map(|s| s.get("name").and_then(|n| n.as_str()).unwrap())
         .collect();
     for want in ["diurnal-shift", "carbon-router", "autoscale-diurnal",
-                 "demand-surge", "production-day", "production-week"] {
+                 "demand-surge", "production-day", "production-week",
+                 "keepalive-surge", "nonlinear-power"] {
         assert!(names.contains(&want), "missing scenario {want}");
     }
     let mut sorted = names.clone();

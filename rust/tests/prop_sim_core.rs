@@ -281,6 +281,69 @@ fn prop_arena_recycling_never_aliases_a_live_job() {
 }
 
 // ---------------------------------------------------------------------------
+// histogram_window: the hybrid keep-alive policy's window choice is the
+// smallest bin boundary covering the requested observation mass, capped at
+// the policy maximum, and monotone in the percentile.
+
+use ecoserve::sim::histogram_window;
+
+fn gen_window_case(r: &mut Rng) -> (Vec<u64>, f64, f64, f64) {
+    let hist: Vec<u64> = (0..r.below(8)).map(|_| r.below(5) as u64).collect();
+    let bins = [1.0, 10.0, 60.0];
+    let pcts = [0.0, 0.1, 0.5, 0.9, 0.95, 1.0];
+    let caps = [0.0, 30.0, 600.0];
+    (hist, bins[r.below(3)], pcts[r.below(6)], caps[r.below(3)])
+}
+
+#[test]
+fn prop_histogram_window_is_a_minimal_covering_bin_boundary() {
+    forall(
+        &PropConfig { cases: 400, ..Default::default() },
+        gen_window_case,
+        |_| Vec::new(),
+        |(hist, bin_s, pct, max_w)| {
+            let total: u64 = hist.iter().sum();
+            let w = histogram_window(hist, total, *bin_s, *pct, *max_w);
+            if total == 0 {
+                // No observations: conservatively hold the full cap.
+                return if w == *max_w { Ok(()) } else {
+                    Err(format!("empty histogram gave {w}, not cap {max_w}"))
+                };
+            }
+            if !(0.0..=*max_w).contains(&w) {
+                return Err(format!("window {w} outside [0, {max_w}]"));
+            }
+            // Shadow: smallest boundary whose cumulative count covers the
+            // requested mass, then capped — exactly the policy contract.
+            let target = pct * total as f64;
+            let mut cum = 0u64;
+            let mut want = *max_w;
+            for (i, &c) in hist.iter().enumerate() {
+                cum += c;
+                if cum as f64 >= target {
+                    want = ((i as f64 + 1.0) * bin_s).min(*max_w);
+                    break;
+                }
+            }
+            if w.to_bits() != want.to_bits() {
+                return Err(format!(
+                    "window {w} != minimal covering boundary {want} \
+                     (hist {hist:?}, bin {bin_s}, pct {pct}, cap {max_w})"));
+            }
+            // Monotone in the percentile: asking for less mass never asks
+            // for a longer window.
+            let lo = histogram_window(hist, total, *bin_s, pct * 0.5, *max_w);
+            if lo > w {
+                return Err(format!(
+                    "not monotone: p{} -> {lo} exceeds p{pct} -> {w}",
+                    pct * 0.5));
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
 // Histogram::merge: the shard-merge primitive must be commutative and
 // associative on everything percentiles are computed from (bin counts,
 // sample count, min/max) — bitwise — and on the running sum to float
