@@ -30,6 +30,13 @@ commands:
             simulator-capacity study: sweep trace duration x shard count,
             report events/sec + peak RSS + peak live jobs per cell, and
             verify the outcome bytes are shard-count-invariant
+  plan-bench [--fleets 100,1000,10000] [--epochs 32] [--reps 3] [--seed S]
+            [--out FILE] [--json]
+            planner-scaling study: schedule a step-surge day over fleets of
+            each size twice — cold (full ILP re-solve every epoch) and warm
+            (incremental planner: memoization + drift early-out + interval
+            cuts) — and report plans/sec, warm/cold speedup, and where each
+            epoch went (solves / hits / skips / cut patches)
 ";
 
 fn main() -> anyhow::Result<()> {
@@ -41,6 +48,7 @@ fn main() -> anyhow::Result<()> {
         Some("report") => { report(&args); Ok(()) }
         Some("sweep") => sweep(&args),
         Some("scale") => scale(&args),
+        Some("plan-bench") => plan_bench(&args),
         _ => {
             print!("{USAGE}");
             Ok(())
@@ -348,6 +356,155 @@ fn scale(args: &Args) -> anyhow::Result<()> {
     }
     anyhow::ensure!(all_deterministic,
                     "sharded outcomes diverged across shard counts");
+    Ok(())
+}
+
+/// The planner-scaling study behind the CI `plan-scale` gate: for each
+/// fleet size, build one fused [`DemandProfile`] of a step-surge day and
+/// schedule it twice over the same template — cold (a full ILP re-solve
+/// every epoch, `IncrementalPlanner::disabled()`) and warm (memoization +
+/// drift early-out + interval cuts). Wall clocks are measurements; the
+/// schedules themselves stay deterministic, and the epoch accounting
+/// (solves / hits / skips / patches) is byte-stable evidence of *why* the
+/// warm planner is faster.
+fn plan_bench(args: &Args) -> anyhow::Result<()> {
+    use ecoserve::carbon::intensity::CiSignal;
+    use ecoserve::planner::fused::DemandProfile;
+    use ecoserve::planner::horizon::{self, HorizonConfig, IncrementalPlanner,
+                                     PlannerStats};
+    use ecoserve::planner::PlanConfig;
+    use ecoserve::sim::homogeneous_fleet;
+    use ecoserve::util::json::Json;
+    use ecoserve::util::table::{fnum, Table};
+    use ecoserve::workload::slo::{slo_for, Slo};
+    use ecoserve::workload::{Arrivals, GeneratorSource, LengthDist,
+                             RequestClass};
+
+    let fleets: Vec<usize> = args.str("fleets", "100,1000,10000")
+        .split(',')
+        .map(|s| s.trim().parse::<usize>()
+            .map_err(|_| anyhow::anyhow!("bad --fleets entry '{s}'")))
+        .collect::<Result<_, _>>()?;
+    anyhow::ensure!(!fleets.is_empty() && fleets.iter().all(|f| *f >= 1),
+                    "--fleets must be counts of at least 1");
+    let epochs = args.usize("epochs", 32);
+    anyhow::ensure!(epochs >= 4, "--epochs must be at least 4");
+    let reps = args.usize("reps", 3).max(1);
+    let seed = args.u64("seed", 42);
+
+    let model = "llama-8b";
+    let m = ecoserve::models::llm(model).expect("catalog model");
+    let slo = slo_for(model, false).map(|w| w.slo)
+        .unwrap_or(Slo { ttft_s: 2.0, tpot_s: 0.2 });
+    let cold_h = HorizonConfig::default();
+    let warm_h = HorizonConfig { drift_tol: 0.1, interval_cuts: true,
+                                 ..Default::default() };
+    let duration_s = epochs as f64 * cold_h.epoch_s;
+    let ci = CiSignal::flat(261.0);
+    let plan_cfg = PlanConfig::default();
+
+    eprintln!("plan-bench: {} fleet sizes x {} epochs (best of {} reps) ...",
+              fleets.len(), epochs, reps);
+    let mut table = Table::new(&[
+        "fleet", "epochs", "cold s", "cold plans/s", "warm s", "warm plans/s",
+        "speedup", "solves", "hits", "skips", "patches", "cuts",
+    ]);
+    let mut cells: Vec<Json> = Vec::new();
+    for &fleet in &fleets {
+        let template = homogeneous_fleet("A100-40", fleet, m, 2048);
+        // Demand scales with the fleet: a steady base with one 2.5x step
+        // surge mid-day, so the warm planner sees plateaus (skips), one
+        // growth edge (cut patch), and one shrink edge (forced re-solve).
+        let arrivals = Arrivals::Step {
+            base: 0.1 * fleet as f64,
+            surge: 0.25 * fleet as f64,
+            start_frac: 0.55,
+            end_frac: 0.7,
+        };
+        let mut src = GeneratorSource::new(arrivals, LengthDist::ShareGpt,
+                                           RequestClass::Online, duration_s,
+                                           seed ^ fleet as u64);
+        let epoch = cold_h.effective_epoch(duration_s);
+        let profile = DemandProfile::build(&mut src, epoch, cold_h.window_s,
+                                           duration_s);
+
+        // Best-of-N wall clock per planner; stats are identical across
+        // reps (the planner is deterministic), so keep the last.
+        let run = |h: &HorizonConfig, warm: bool| -> (f64, PlannerStats) {
+            let mut best = f64::INFINITY;
+            let mut stats = PlannerStats::default();
+            for _ in 0..reps {
+                let mut inc = if warm {
+                    IncrementalPlanner::from_horizon(h)
+                } else {
+                    IncrementalPlanner::disabled()
+                };
+                let t0 = std::time::Instant::now();
+                let sched = horizon::plan_schedule_from_profile(
+                    m, &profile, &template, &plan_cfg, &ci, slo, h,
+                    duration_s, &mut inc);
+                best = best.min(t0.elapsed().as_secs_f64());
+                stats = inc.stats();
+                assert!(sched.events.windows(2).all(|w| w[0].t <= w[1].t));
+            }
+            (best, stats)
+        };
+        let (cold_s, cold) = run(&cold_h, false);
+        let (warm_s, warm) = run(&warm_h, true);
+
+        let cold_pps = cold.epochs as f64 / cold_s.max(1e-9);
+        let warm_pps = warm.epochs as f64 / warm_s.max(1e-9);
+        let speedup = cold_s / warm_s.max(1e-9);
+        table.row(&[
+            format!("{fleet}"),
+            format!("{}", warm.epochs),
+            fnum(cold_s),
+            fnum(cold_pps),
+            fnum(warm_s),
+            fnum(warm_pps),
+            fnum(speedup),
+            format!("{}", warm.full_solves),
+            format!("{}", warm.warm_hits),
+            format!("{}", warm.drift_skips),
+            format!("{}", warm.cut_patches),
+            format!("{}", warm.cuts),
+        ]);
+        cells.push(Json::obj()
+            .set("fleet", fleet)
+            .set("epochs", warm.epochs)
+            .set("cold_wall_s", cold_s)
+            .set("cold_plans_per_sec", cold_pps)
+            .set("cold_nodes", cold.nodes)
+            .set("warm_wall_s", warm_s)
+            .set("warm_plans_per_sec", warm_pps)
+            .set("warm_nodes", warm.nodes)
+            .set("speedup", speedup)
+            .set("full_solves", warm.full_solves)
+            .set("warm_hits", warm.warm_hits)
+            .set("drift_skips", warm.drift_skips)
+            .set("cut_patches", warm.cut_patches)
+            .set("cuts", warm.cuts));
+    }
+
+    let report = Json::obj()
+        .set("bench", "plan")
+        .set("model", model)
+        .set("epochs", epochs)
+        .set("reps", reps)
+        .set("seed", format!("{seed:#018x}"))
+        .set("cells", cells);
+    let json = report.to_string();
+    if args.bool("json") {
+        println!("{json}");
+    } else {
+        table.print();
+    }
+    if !args.bool("json") || args.has("out") {
+        let out = args.str("out", "BENCH_plan.json");
+        std::fs::write(&out, json.as_bytes())
+            .map_err(|e| anyhow::anyhow!("writing {out}: {e}"))?;
+        eprintln!("planner scaling curve -> {out}");
+    }
     Ok(())
 }
 

@@ -1,0 +1,322 @@
+//! Benders-style interval cuts for the rolling-horizon re-solve.
+//!
+//! Decomposition: the cached epoch plan is the *master* — it fixed the
+//! slice-phase → device assignment and the fleet sizing for the demand it
+//! was solved against. When the next epoch's demand grows, we do not
+//! re-solve the full horizon MILP; instead we sweep the epoch's
+//! quarter-chunk arrival/departure events (the dslab-faas `benders.cpp`
+//! recipe: sort event edges, walk them once, track the alive total) to
+//! find the intervals where offered load exceeds the master's capacity,
+//! and solve one *small* feasibility subproblem per overload interval —
+//! integer device-count increments over the master's own device support,
+//! a handful of variables instead of the full slice×phase×device
+//! assignment polytope. The resulting capacity cuts patch the cached
+//! plan's counts (elementwise max across intervals: capacity must cover
+//! the worst interval, the intervals are disjoint in time).
+//!
+//! Cuts only ever *add* capacity; scale-down and demand that appears in
+//! buckets the master never assigned (no column to scale) fall back to a
+//! full re-solve upstream in [`super::horizon::IncrementalPlanner`]. This
+//! whole layer sits behind `HorizonConfig::interval_cuts` (default off)
+//! — it is a modeling shortcut, deliberately not bitwise-equal to the
+//! from-scratch solve.
+
+use super::{device_options, idle_op_kg_per_hr, Phase, Plan, PlanConfig,
+            WarmStart};
+use crate::solver::{MilpConfig, MilpStatus, ProblemBuilder};
+
+/// A time interval where offered load exceeds the master plan's capacity.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OverloadInterval {
+    pub t_lo: f64,
+    pub t_hi: f64,
+    /// Peak alive total inside the interval (same units as the events).
+    pub peak: f64,
+}
+
+/// Sweep `(time, ±delta)` events and return the maximal intervals where
+/// the running total strictly exceeds `threshold`. Events at equal times
+/// apply releases (negative deltas) before admissions, so a burst handing
+/// over to another at the same instant never fabricates an overload.
+pub fn sweep_overloads(events: &[(f64, f64)], threshold: f64)
+    -> Vec<OverloadInterval> {
+    let mut ev = events.to_vec();
+    ev.sort_by(|a, b| {
+        a.0.partial_cmp(&b.0).unwrap()
+            .then(a.1.partial_cmp(&b.1).unwrap())
+    });
+    let mut out = Vec::new();
+    let mut alive = 0.0f64;
+    let mut open: Option<(f64, f64)> = None; // (t_lo, peak)
+    let mut i = 0usize;
+    while i < ev.len() {
+        let t = ev[i].0;
+        // Apply every delta at this instant before judging the level.
+        while i < ev.len() && ev[i].0 == t {
+            alive += ev[i].1;
+            i += 1;
+        }
+        match (&mut open, alive > threshold) {
+            (None, true) => open = Some((t, alive)),
+            (Some((_, peak)), true) => *peak = peak.max(alive),
+            (Some((t_lo, peak)), false) => {
+                out.push(OverloadInterval { t_lo: *t_lo, t_hi: t, peak: *peak });
+                open = None;
+            }
+            (None, false) => {}
+        }
+    }
+    if let Some((t_lo, peak)) = open {
+        // Trailing overload: close at the last event edge.
+        let t_hi = ev.last().map(|e| e.0).unwrap_or(t_lo);
+        out.push(OverloadInterval { t_lo, t_hi, peak });
+    }
+    out
+}
+
+/// Rate-weighted mean request dwell (service residence) under the master
+/// plan's assignments: prompt latency plus the decode-phase latency of
+/// whatever device each slice landed on. A fluid smoothing constant for
+/// the sweep, not a latency model — clamped to at least a quarter chunk.
+fn service_dwell_s(prev: &WarmStart, q: f64) -> f64 {
+    let mut rate = 0.0f64;
+    let mut weighted = 0.0f64;
+    for (i, s) in prev.slices.iter().enumerate() {
+        let service: f64 = prev.plan.assignments.iter()
+            .filter(|a| a.slice_idx == i)
+            .map(|a| a.latency_s)
+            .sum();
+        if service > 0.0 && s.rate > 0.0 {
+            rate += s.rate;
+            weighted += s.rate * service;
+        }
+    }
+    if rate > 0.0 { (weighted / rate).max(q * 0.25) } else { q }
+}
+
+/// What one patch pass produced.
+#[derive(Debug, Clone)]
+pub struct CutOutcome {
+    pub plan: Plan,
+    /// Per-interval feasibility subproblems solved.
+    pub cuts: usize,
+    /// Branch-and-bound nodes spent across the subproblems.
+    pub nodes: usize,
+}
+
+/// Patch the master plan against this epoch's chunk demand.
+///
+/// `chunks` are `(chunk_start_s, raw_rate_req_per_s)` at quarter-epoch
+/// resolution `q`; `headroom` is the horizon's capacity margin (the
+/// master's slices already carry it, so the chunk rates must too).
+/// Returns `None` when the master gives the cut generator nothing to work
+/// with (no GPU support with served rate) — the caller falls back to a
+/// full re-solve. `cuts == 0` means the master's capacity already covers
+/// every interval and the cached plan is returned untouched.
+pub fn patch_plan(prev: &WarmStart, cfg: &PlanConfig,
+                  chunks: &[(f64, f64)], q: f64, headroom: f64)
+    -> Option<CutOutcome> {
+    assert!(q > 0.0);
+    let r_prev: f64 = prev.slices.iter().map(|s| s.rate).sum();
+    if !(r_prev > 0.0) {
+        return None;
+    }
+
+    // Effective request rate one provisioned device of each type carries
+    // under the master's assignment (prompt admissions per GPU). The cut
+    // subproblem scales these columns instead of re-deriving rooflines.
+    let mut support: Vec<(String, f64)> = Vec::new(); // (device, eff rate)
+    for (name, &count) in &prev.plan.counts {
+        if name == "cpu-host" || count == 0 {
+            continue;
+        }
+        let served: f64 = prev.plan.assignments.iter()
+            .filter(|a| a.phase == Phase::Prompt && &a.device == name)
+            .map(|a| prev.slices[a.slice_idx].rate)
+            .sum();
+        if served > 0.0 {
+            support.push((name.clone(), served / count as f64));
+        }
+    }
+    if support.is_empty() {
+        return None;
+    }
+
+    // Fluid sweep: each chunk's (headroom-scaled) rate stays alive for the
+    // chunk plus one mean service dwell, so the alive total at time t is
+    // the trailing (q + dwell)-window mean rate scaled by (q + dwell)/q.
+    // Comparing it against r_prev in the same units finds the intervals
+    // where smoothed demand outruns what the master was sized for.
+    let dwell = service_dwell_s(prev, q);
+    let stretch = (q + dwell) / q;
+    let mut events = Vec::with_capacity(chunks.len() * 2);
+    for &(t, r) in chunks {
+        if r > 0.0 {
+            let scaled = r * headroom;
+            events.push((t, scaled));
+            events.push((t + q + dwell, -scaled));
+        }
+    }
+    let intervals = sweep_overloads(&events, r_prev * stretch);
+
+    let mut patched = prev.plan.clone();
+    patched.solve_s = 0.0;
+    patched.nodes = 0;
+    if intervals.is_empty() {
+        return Some(CutOutcome { plan: patched, cuts: 0, nodes: 0 });
+    }
+
+    // One tiny feasibility ILP per overload interval: integer extra
+    // devices E_d ≥ 0 over the master's support, covering the interval's
+    // excess rate at minimum provisioning objective (same (1-α)·cost +
+    // α·(embodied + idle) pricing as the full ILP's B columns). Disjoint
+    // intervals need the elementwise max, not the sum.
+    let opts = device_options(cfg, prev.slices[0].model);
+    let milp = MilpConfig { max_nodes: 64, ..Default::default() };
+    let mut extra: Vec<usize> = vec![0; support.len()];
+    let mut cuts = 0usize;
+    let mut nodes = 0usize;
+    for iv in &intervals {
+        let excess = iv.peak / stretch - r_prev;
+        if !(excess > 0.0) {
+            continue;
+        }
+        cuts += 1;
+        let mut pb = ProblemBuilder::new();
+        let mut cover = Vec::with_capacity(support.len());
+        let vars: Vec<_> = support.iter().map(|(name, eff)| {
+            let opt = opts.iter().find(|o| &o.name == name)
+                .expect("master device missing from menu");
+            let obj = (1.0 - cfg.alpha) * opt.cost_hr
+                + cfg.alpha * (opt.emb_kg_per_hr + idle_op_kg_per_hr(opt, cfg.ci));
+            let v = pb.var(&format!("E_{name}"), obj, true);
+            cover.push((v, *eff));
+            v
+        }).collect();
+        pb.ge(&cover, excess);
+        let sol = pb.solve(&milp);
+        nodes += sol.nodes;
+        if matches!(sol.status, MilpStatus::Optimal | MilpStatus::Feasible) {
+            for (d, v) in vars.iter().enumerate() {
+                let e = pb.value(&sol, *v).round().max(0.0) as usize;
+                extra[d] = extra[d].max(e);
+            }
+        } else {
+            // Degenerate subproblem: cover with the highest-rate column.
+            let d = support.iter().enumerate()
+                .max_by(|a, b| a.1 .1.total_cmp(&b.1 .1))
+                .map(|(d, _)| d)
+                .unwrap();
+            extra[d] = extra[d].max((excess / support[d].1).ceil() as usize);
+        }
+    }
+
+    for (d, (name, _)) in support.iter().enumerate() {
+        if extra[d] == 0 {
+            continue;
+        }
+        let opt = opts.iter().find(|o| &o.name == name).unwrap();
+        *patched.counts.get_mut(name).unwrap() += extra[d];
+        let e = extra[d] as f64;
+        patched.cost_hr += e * opt.cost_hr;
+        patched.emb_kg_per_hr += e * opt.emb_kg_per_hr;
+        patched.op_kg_per_hr += e * idle_op_kg_per_hr(opt, cfg.ci);
+    }
+    patched.status = MilpStatus::Feasible;
+    Some(CutOutcome { plan: patched, cuts, nodes })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+    use crate::planner::slicing::Slice;
+    use crate::planner::{plan, WarmStart};
+    use crate::workload::slo::Slo;
+
+    #[test]
+    fn sweep_finds_step_overload() {
+        // Base rate 2.0 with a surge to 8.0 over [40, 60).
+        let mut ev = Vec::new();
+        for j in 0..10 {
+            let t = j as f64 * 10.0;
+            let r = if (40.0..60.0).contains(&t) { 8.0 } else { 2.0 };
+            ev.push((t, r));
+            ev.push((t + 10.0, -r));
+        }
+        let ivs = sweep_overloads(&ev, 5.0);
+        assert_eq!(ivs.len(), 1, "{ivs:?}");
+        assert_eq!(ivs[0].t_lo, 40.0);
+        assert_eq!(ivs[0].t_hi, 60.0);
+        assert_eq!(ivs[0].peak, 8.0);
+    }
+
+    #[test]
+    fn sweep_applies_releases_before_admissions() {
+        // 4.0 hands over to 4.0 at t=10: never above 6.0 at any instant.
+        let ev = vec![(0.0, 4.0), (10.0, -4.0), (10.0, 4.0), (20.0, -4.0)];
+        assert!(sweep_overloads(&ev, 6.0).is_empty());
+        // Overlapping instead of handing over: exceeds.
+        let ev = vec![(0.0, 4.0), (12.0, -4.0), (10.0, 4.0), (20.0, -4.0)];
+        let ivs = sweep_overloads(&ev, 6.0);
+        assert_eq!(ivs.len(), 1);
+        assert_eq!(ivs[0].peak, 8.0);
+    }
+
+    #[test]
+    fn sweep_separates_two_bursts() {
+        let ev = vec![
+            (0.0, 10.0), (5.0, -10.0),
+            (20.0, 12.0), (25.0, -12.0),
+        ];
+        let ivs = sweep_overloads(&ev, 6.0);
+        assert_eq!(ivs.len(), 2);
+        assert!(ivs[0].t_hi <= ivs[1].t_lo);
+    }
+
+    fn master(rate: f64) -> (WarmStart, PlanConfig) {
+        let m = models::llm("llama-8b").unwrap();
+        let slo = Slo { ttft_s: 2.0, tpot_s: 0.2 };
+        let slices = vec![Slice {
+            model: m, rate, prompt: 256, output: 128, slo, offline: false,
+        }];
+        let cfg = PlanConfig {
+            gpu_menu: vec!["A100-40"],
+            cpu_reuse: false,
+            ..Default::default()
+        };
+        let p = plan(&slices, &cfg);
+        assert!(p.total_gpus() > 0);
+        (WarmStart::new(&slices, &cfg, p), cfg)
+    }
+
+    #[test]
+    fn no_overload_returns_master_untouched() {
+        let (prev, cfg) = master(8.0);
+        // Chunk demand well below what the master was sized for.
+        let chunks: Vec<(f64, f64)> = (0..4)
+            .map(|j| (j as f64 * 5.0, 2.0)).collect();
+        let out = patch_plan(&prev, &cfg, &chunks, 5.0, 1.0).unwrap();
+        assert_eq!(out.cuts, 0);
+        assert_eq!(out.plan.counts, prev.plan.counts);
+        assert_eq!(out.plan.cost_hr.to_bits(), prev.plan.cost_hr.to_bits());
+    }
+
+    #[test]
+    fn surge_generates_capacity_cuts() {
+        let (prev, cfg) = master(8.0);
+        // One chunk spikes to 5x the planned rate.
+        let chunks: Vec<(f64, f64)> = (0..8)
+            .map(|j| (j as f64 * 5.0, if j == 4 { 40.0 } else { 8.0 }))
+            .collect();
+        let out = patch_plan(&prev, &cfg, &chunks, 5.0, 1.0).unwrap();
+        assert!(out.cuts >= 1, "no cuts for a 5x surge");
+        let before = prev.plan.total_gpus();
+        let after = out.plan.total_gpus();
+        assert!(after > before, "counts never grew: {before} -> {after}");
+        assert!(out.plan.cost_hr > prev.plan.cost_hr);
+        assert!(out.plan.emb_kg_per_hr > prev.plan.emb_kg_per_hr);
+        // Assignments are the master's — cuts only add capacity.
+        assert_eq!(out.plan.assignments.len(), prev.plan.assignments.len());
+    }
+}

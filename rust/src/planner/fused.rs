@@ -1,0 +1,430 @@
+//! Fused single-pass demand analysis.
+//!
+//! Reprovision runs used to walk the arrival stream three times before the
+//! simulator ever saw a request: once for the peak-window scan
+//! ([`super::horizon::peak_window_over`]), once to re-materialize the peak
+//! window into a [`SliceAccum`], and once inside
+//! [`super::horizon::plan_schedule_stream`]'s sliding observation buffer.
+//! A [`DemandProfile`] collapses all three into one streaming pass — one
+//! `ArrivalSource` materialization per run — and can shard that pass
+//! across worker threads the way `sim/shard.rs` shards the simulator,
+//! with an order-fixed merge.
+//!
+//! Bitwise contract: every histogram in the profile is integer counts
+//! accumulated under the *exact* float membership tests the separate
+//! passes used (`t_k <= a && a < t_k + epoch` for grid windows,
+//! `t_k - w <= a && a < t_k` for epoch windows, with `t_k = k as f64 *
+//! epoch` and `w = window.min(t_k)` computed by the same expressions).
+//! Window edges are never reconstructed from partial sums — a derived
+//! edge like `fl(fl(k*q) + epoch)` can differ from `fl((k+4)*q)` by one
+//! ulp, which would move boundary arrivals between windows. Because the
+//! per-window contents are integers, merging modulo-partitioned partial
+//! profiles in worker-index order reproduces the single-threaded profile
+//! exactly, for any worker count.
+
+use crate::planner::slicing::SliceAccum;
+use crate::workload::{ArrivalSource, Request};
+
+/// Quarter-epoch sliding peak grid: window `k` covers
+/// `[k·q, k·q + epoch)` with `q = epoch/4`, so a burst straddling an
+/// epoch-aligned boundary is never undercounted. Shared by
+/// [`super::horizon::peak_window_over`] and [`DemandProfile`], so the
+/// streaming, materialized, and fused paths cannot disagree — on ties the
+/// first strictly-maximal window always wins.
+#[derive(Debug, Clone)]
+pub(crate) struct PeakGrid {
+    epoch_s: f64,
+    q: f64,
+    counts: Vec<usize>,
+}
+
+impl PeakGrid {
+    pub(crate) fn new(epoch_s: f64, duration_s: f64) -> PeakGrid {
+        assert!(epoch_s > 0.0 && duration_s > 0.0);
+        let q = epoch_s / 4.0;
+        // Enumerate every k with k·q inside the trace. The effective epoch
+        // is clamped to duration/96, so this is at most a few hundred
+        // counters.
+        let mut n_windows = 0usize;
+        while (n_windows as f64) * q < duration_s {
+            n_windows += 1;
+        }
+        PeakGrid { epoch_s, q, counts: vec![0usize; n_windows] }
+    }
+
+    pub(crate) fn len(&self) -> usize {
+        self.counts.len()
+    }
+
+    /// Count arrival `a` into every grid window containing it, invoking
+    /// `hit(k)` per member window (the fused pass hangs its per-window
+    /// histograms off this callback; the plain peak scan passes a no-op).
+    pub(crate) fn observe(&mut self, a: f64, mut hit: impl FnMut(usize)) {
+        let n_windows = self.counts.len();
+        // Guarded index range: derive candidates by division, confirm
+        // membership against the exact k·q edges.
+        let k_hi = ((a / self.q) as usize).min(n_windows.saturating_sub(1));
+        let k_lo = (((a - self.epoch_s) / self.q).floor().max(0.0)) as usize;
+        for k in k_lo.saturating_sub(1)..=(k_hi + 1).min(n_windows - 1) {
+            let t_k = k as f64 * self.q;
+            if t_k <= a && a < t_k + self.epoch_s {
+                self.counts[k] += 1;
+                hit(k);
+            }
+        }
+    }
+
+    /// First strictly-maximal window index and its count.
+    pub(crate) fn best_index(&self) -> (usize, usize) {
+        let mut best_k = 0usize;
+        let mut best_n = 0usize;
+        for (k, &n) in self.counts.iter().enumerate() {
+            if n > best_n {
+                best_n = n;
+                best_k = k;
+            }
+        }
+        (best_k, best_n)
+    }
+
+    /// First strictly-maximal window: `(t_lo, t_hi, count)`; `count == 0`
+    /// means no arrivals were observed.
+    pub(crate) fn best(&self) -> (f64, f64, usize) {
+        let (best_k, best_n) = self.best_index();
+        let t_lo = best_k as f64 * self.q;
+        (t_lo, t_lo + self.epoch_s, best_n)
+    }
+
+    /// Sum the partial grid into this one (integer adds; order-free).
+    pub(crate) fn merge(&mut self, other: &PeakGrid) {
+        debug_assert_eq!(self.counts.len(), other.counts.len());
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+    }
+}
+
+/// Everything the planning layer needs from one walk of the demand
+/// stream: the peak grid with per-window slice histograms, every schedule
+/// epoch's trailing-window histogram, and plain quarter-epoch chunk
+/// counts (the event resolution of the Benders interval sweep). Memory is
+/// O(windows × buckets) — a few hundred KiB — independent of trace
+/// length.
+#[derive(Debug, Clone)]
+pub struct DemandProfile {
+    /// Effective re-plan period (already clamped by the caller).
+    pub epoch_s: f64,
+    /// Observation window (resolved: never 0).
+    pub window_s: f64,
+    pub duration_s: f64,
+    grid: PeakGrid,
+    /// Per grid-window slice histograms (same membership as `grid`).
+    grid_accums: Vec<SliceAccum>,
+    /// `epoch_accums[k-1]`: arrivals in `[t_k - w_k, t_k)` for schedule
+    /// epoch `k`, under the old sliding-buffer float semantics.
+    epoch_accums: Vec<SliceAccum>,
+    /// Arrivals per quarter-epoch chunk `[j·q, (j+1)·q)` — the demand
+    /// events the interval-cut sweep runs over.
+    chunk_counts: Vec<usize>,
+    total: usize,
+}
+
+impl DemandProfile {
+    fn empty(epoch_s: f64, window_s: f64, duration_s: f64) -> DemandProfile {
+        let grid = PeakGrid::new(epoch_s, duration_s);
+        let n_windows = grid.len();
+        // Schedule epochs: k = 1 while k·epoch < duration (same loop bound
+        // as the rolling-horizon controller).
+        let mut n_epochs = 0usize;
+        while ((n_epochs + 1) as f64) * epoch_s < duration_s {
+            n_epochs += 1;
+        }
+        DemandProfile {
+            epoch_s,
+            window_s,
+            duration_s,
+            grid,
+            grid_accums: vec![SliceAccum::new(); n_windows],
+            epoch_accums: vec![SliceAccum::new(); n_epochs],
+            chunk_counts: vec![0usize; n_windows],
+            total: 0,
+        }
+    }
+
+    /// Build the profile in one pass over `source`. `window_s == 0` means
+    /// one epoch, mirroring [`super::horizon::HorizonConfig::window_s`].
+    pub fn build(source: &mut dyn ArrivalSource, epoch_s: f64,
+                 window_s: f64, duration_s: f64) -> DemandProfile {
+        let window_s = if window_s > 0.0 { window_s } else { epoch_s };
+        let mut p = DemandProfile::empty(epoch_s, window_s, duration_s);
+        while let Some(r) = source.next_request() {
+            p.ingest(&r);
+        }
+        p
+    }
+
+    /// Build the profile sharded across up to `threads` worker threads.
+    /// Worker `w` walks its own fresh stream and keeps arrivals with
+    /// sequence index ≡ w (mod workers); the partial profiles merge in
+    /// ascending worker index. Every histogram is integer counts, so the
+    /// result is byte-identical to [`DemandProfile::build`] for any
+    /// worker count.
+    pub fn build_sharded<'a>(
+        fresh: &(dyn Fn() -> Box<dyn ArrivalSource + 'a> + Sync),
+        threads: usize, epoch_s: f64, window_s: f64, duration_s: f64,
+    ) -> DemandProfile {
+        let window_s = if window_s > 0.0 { window_s } else { epoch_s };
+        let workers = threads.max(1);
+        if workers == 1 {
+            return DemandProfile::build(&mut *fresh(), epoch_s, window_s,
+                                        duration_s);
+        }
+        let parts = crate::sim::shard::parallel_slots(workers, workers, |me| {
+            let mut part = DemandProfile::empty(epoch_s, window_s, duration_s);
+            let mut src = fresh();
+            let mut seq = 0usize;
+            while let Some(r) = src.next_request() {
+                if seq % workers == me {
+                    part.ingest(&r);
+                }
+                seq += 1;
+            }
+            part
+        });
+        let mut it = parts.into_iter();
+        let mut merged = it.next().expect("at least one worker");
+        for p in it {
+            merged.merge(&p);
+        }
+        merged
+    }
+
+    fn ingest(&mut self, r: &Request) {
+        let a = r.arrival_s;
+        let (c, p, o) = SliceAccum::bucket(r);
+
+        // 1. Peak grid + per-window histograms (shared membership).
+        let accums = &mut self.grid_accums;
+        self.grid.observe(a, |k| accums[k].push_bucket(c, p, o));
+
+        // 2. Quarter-epoch chunk counts (guarded index).
+        let q = self.epoch_s / 4.0;
+        let n_chunks = self.chunk_counts.len();
+        let mut j = ((a / q) as usize).min(n_chunks - 1);
+        while j > 0 && (j as f64) * q > a {
+            j -= 1;
+        }
+        while j + 1 < n_chunks && ((j + 1) as f64) * q <= a {
+            j += 1;
+        }
+        self.chunk_counts[j] += 1;
+
+        // 3. Schedule-epoch trailing windows. Epoch k observes
+        // [t_k - w_k, t_k) with t_k = k·epoch and w_k = window.min(t_k);
+        // an arrival near an ulp-misaligned boundary can fall in zero or
+        // several epochs, and with window > epoch it falls in many. Find
+        // the first epoch with t_k > a by guarded division, then walk
+        // while the (nondecreasing) lower edge still admits `a`.
+        let n_epochs = self.epoch_accums.len();
+        let mut k = ((a / self.epoch_s) as usize).max(1);
+        while k > 1 && ((k - 1) as f64) * self.epoch_s > a {
+            k -= 1;
+        }
+        while k <= n_epochs && (k as f64) * self.epoch_s <= a {
+            k += 1;
+        }
+        while k <= n_epochs {
+            let t_k = k as f64 * self.epoch_s;
+            let w = self.window_s.min(t_k);
+            // Exact lower-edge expression of the old sliding buffer's pop
+            // test (`arrival < t_k - w` evicted): admitted iff NOT below.
+            if a < t_k - w {
+                break;
+            }
+            self.epoch_accums[k - 1].push_bucket(c, p, o);
+            k += 1;
+        }
+
+        self.total += 1;
+    }
+
+    /// Sum another (modulo-partitioned) partial profile into this one.
+    pub fn merge(&mut self, other: &DemandProfile) {
+        debug_assert_eq!(self.epoch_accums.len(), other.epoch_accums.len());
+        self.grid.merge(&other.grid);
+        for (a, b) in self.grid_accums.iter_mut().zip(&other.grid_accums) {
+            a.merge(b);
+        }
+        for (a, b) in self.epoch_accums.iter_mut().zip(&other.epoch_accums) {
+            a.merge(b);
+        }
+        for (a, b) in self.chunk_counts.iter_mut().zip(&other.chunk_counts) {
+            *a += b;
+        }
+        self.total += other.total;
+    }
+
+    /// Total arrivals observed.
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    /// The busiest epoch-sized window: `(t_lo, t_hi, count)` — identical
+    /// to what [`super::horizon::peak_window_over`] returns on the same
+    /// stream (shared [`PeakGrid`], first strict max wins ties).
+    pub fn peak(&self) -> (f64, f64, usize) {
+        self.grid.best()
+    }
+
+    /// Slice histogram of the peak window (empty when the stream was).
+    pub fn peak_accum(&self) -> SliceAccum {
+        let (best_k, n) = self.grid.best_index();
+        if n == 0 {
+            return SliceAccum::new();
+        }
+        self.grid_accums[best_k].clone()
+    }
+
+    /// Number of schedule epochs (`k` runs `1..=epochs()`).
+    pub fn epochs(&self) -> usize {
+        self.epoch_accums.len()
+    }
+
+    /// Trailing-window histogram of schedule epoch `k` (1-based).
+    pub fn epoch_accum(&self, k: usize) -> &SliceAccum {
+        &self.epoch_accums[k - 1]
+    }
+
+    /// Quarter-epoch chunk arrival rates (req/s) overlapping
+    /// `[t_lo, t_hi)`, as `(chunk_start_s, rate)` events for the interval
+    /// sweep. Chunk resolution, not request resolution — the cut layer is
+    /// a capacity model, not a bitwise one.
+    pub fn chunk_rates(&self, t_lo: f64, t_hi: f64) -> Vec<(f64, f64)> {
+        let q = self.epoch_s / 4.0;
+        let mut out = Vec::new();
+        for (j, &n) in self.chunk_counts.iter().enumerate() {
+            let start = j as f64 * q;
+            if start + q <= t_lo || start >= t_hi {
+                continue;
+            }
+            out.push((start, n as f64 / q));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::planner::horizon::peak_window_over;
+    use crate::workload::{generate_trace, Arrivals, LengthDist, RequestClass,
+                          SliceSource};
+
+    fn trace(duration_s: f64, seed: u64) -> Vec<Request> {
+        generate_trace(
+            Arrivals::Step { base: 2.0, surge: 14.0, start_frac: 0.5,
+                             end_frac: 0.7 },
+            LengthDist::ShareGpt, RequestClass::Online, duration_s, seed)
+    }
+
+    /// The fused grid and the standalone peak scan share one PeakGrid, but
+    /// pin the equality anyway — it is the contract the scenario layer
+    /// relies on when it swaps three passes for one.
+    #[test]
+    fn fused_peak_matches_peak_window_over() {
+        for seed in [3u64, 17, 40] {
+            let tr = trace(300.0, seed);
+            let p = DemandProfile::build(&mut SliceSource::new(&tr), 20.0,
+                                         0.0, 300.0);
+            let sep = peak_window_over(&mut SliceSource::new(&tr), 20.0, 300.0);
+            let fused = p.peak();
+            assert_eq!(fused.2, sep.2);
+            assert_eq!(fused.0.to_bits(), sep.0.to_bits());
+            assert_eq!(fused.1.to_bits(), sep.1.to_bits());
+        }
+    }
+
+    /// Epoch histograms must match a literal re-implementation of the old
+    /// sliding-buffer walk, byte for byte.
+    #[test]
+    fn fused_epoch_accums_match_sliding_buffer() {
+        use std::collections::VecDeque;
+        for (window_s, seed) in [(0.0, 5u64), (45.0, 6), (200.0, 7)] {
+            let duration = 300.0;
+            let epoch = 15.0;
+            let tr = trace(duration, seed);
+            let p = DemandProfile::build(&mut SliceSource::new(&tr), epoch,
+                                         window_s, duration);
+            let window = if window_s > 0.0 { window_s } else { epoch };
+
+            let mut src = SliceSource::new(&tr);
+            let mut buf: VecDeque<Request> = VecDeque::new();
+            let mut lookahead = src.next_request();
+            let mut k = 1usize;
+            while (k as f64) * epoch < duration {
+                let t_k = k as f64 * epoch;
+                let w = window.min(t_k);
+                while let Some(r) = lookahead.take() {
+                    if r.arrival_s < t_k {
+                        buf.push_back(r);
+                        lookahead = src.next_request();
+                    } else {
+                        lookahead = Some(r);
+                        break;
+                    }
+                }
+                while buf.front().is_some_and(|r| r.arrival_s < t_k - w) {
+                    buf.pop_front();
+                }
+                let mut acc = SliceAccum::new();
+                for r in &buf {
+                    acc.push(r);
+                }
+                assert_eq!(&acc, p.epoch_accum(k),
+                           "epoch {k} diverged (window {window_s})");
+                k += 1;
+            }
+            assert_eq!(p.epochs(), k - 1);
+        }
+    }
+
+    /// Sharded build is byte-identical to the single-threaded build for
+    /// any worker count.
+    #[test]
+    fn sharded_build_is_worker_count_invariant() {
+        let tr = trace(300.0, 9);
+        let single = DemandProfile::build(&mut SliceSource::new(&tr), 20.0,
+                                          60.0, 300.0);
+        for threads in [2usize, 3, 8] {
+            let fresh = || {
+                Box::new(SliceSource::new(&tr)) as Box<dyn ArrivalSource + '_>
+            };
+            let sharded = DemandProfile::build_sharded(&fresh, threads, 20.0,
+                                                       60.0, 300.0);
+            assert_eq!(sharded.total(), single.total());
+            assert_eq!(sharded.peak(), single.peak());
+            assert_eq!(sharded.peak_accum(), single.peak_accum());
+            for k in 1..=single.epochs() {
+                assert_eq!(sharded.epoch_accum(k), single.epoch_accum(k),
+                           "epoch {k} diverged at {threads} workers");
+            }
+            assert_eq!(sharded.chunk_rates(0.0, 300.0),
+                       single.chunk_rates(0.0, 300.0));
+        }
+    }
+
+    #[test]
+    fn chunk_rates_cover_the_surge() {
+        let tr = trace(400.0, 11);
+        let p = DemandProfile::build(&mut SliceSource::new(&tr), 20.0, 0.0,
+                                     400.0);
+        // Rates over the surge [200, 280) should dominate the quiet head.
+        let quiet: f64 = p.chunk_rates(0.0, 100.0).iter()
+            .map(|(_, r)| *r).sum::<f64>()
+            / p.chunk_rates(0.0, 100.0).len() as f64;
+        let surge: f64 = p.chunk_rates(210.0, 270.0).iter()
+            .map(|(_, r)| *r).sum::<f64>()
+            / p.chunk_rates(210.0, 270.0).len() as f64;
+        assert!(surge > 3.0 * quiet, "surge {surge} quiet {quiet}");
+    }
+}

@@ -19,12 +19,14 @@
 
 use crate::carbon::intensity::CiSignal;
 use crate::models::LlmSpec;
-use crate::planner::slicing::{cluster_slices, SliceAccum};
-use crate::planner::{self, PlanConfig};
+use crate::planner::benders;
+use crate::planner::fused::{DemandProfile, PeakGrid};
+use crate::planner::slicing::{cluster_slices, Slice, SliceAccum};
+use crate::planner::{self, Plan, PlanConfig, WarmStart};
 use crate::sim::{FleetAction, FleetEvent, FleetSchedule, Role, ServerSpec};
 use crate::workload::slo::Slo;
 use crate::workload::{ArrivalSource, Request, SliceSource};
-use std::collections::{BTreeMap, VecDeque};
+use std::collections::BTreeMap;
 
 /// Controller knobs. All durations are simulated seconds (a compressed
 /// trace maps "every 15 real minutes" onto its own time scale).
@@ -43,6 +45,17 @@ pub struct HorizonConfig {
     /// Branch-and-bound node budget per epoch solve (node-bound, never
     /// wall-clock-bound, to keep schedules deterministic).
     pub milp_nodes: usize,
+    /// Reuse the previous epoch's plan when the demand histogram moved by
+    /// at most this fraction (relative L1 over bucket counts, and the
+    /// planning CI within the same fraction). At the default `0.0`, reuse
+    /// happens only on *bitwise-identical* inputs, which is output-neutral
+    /// by construction — nonzero tolerances trade plan freshness for
+    /// re-solve count and legitimately change schedules.
+    pub drift_tol: f64,
+    /// Patch demand growth with Benders-style interval capacity cuts
+    /// instead of full re-solves (see [`crate::planner::benders`]). A
+    /// modeling shortcut, off by default to keep schedules bitwise-stable.
+    pub interval_cuts: bool,
 }
 
 impl Default for HorizonConfig {
@@ -53,6 +66,8 @@ impl Default for HorizonConfig {
             headroom: 1.3,
             min_active: 1,
             milp_nodes: 200,
+            drift_tol: 0.0,
+            interval_cuts: false,
         }
     }
 }
@@ -73,39 +88,14 @@ impl HorizonConfig {
 /// `(t_lo, t_hi, count)`; `count == 0` means the stream was empty.
 pub fn peak_window_over(source: &mut dyn ArrivalSource, epoch_s: f64,
                         duration_s: f64) -> (f64, f64, usize) {
-    assert!(epoch_s > 0.0 && duration_s > 0.0);
-    let q = epoch_s / 4.0;
-    // Window k covers [k·q, k·q + epoch); enumerate every k with k·q
-    // inside the trace. The effective epoch is clamped to duration/96, so
-    // this is at most a few hundred counters.
-    let mut n_windows = 0usize;
-    while (n_windows as f64) * q < duration_s {
-        n_windows += 1;
-    }
-    let mut counts = vec![0usize; n_windows];
+    // One shared PeakGrid implementation (`planner::fused`) backs this
+    // scan, the materialized adapter below, and the fused DemandProfile —
+    // the three paths cannot disagree, on ties or otherwise.
+    let mut grid = PeakGrid::new(epoch_s, duration_s);
     while let Some(r) = source.next_request() {
-        let a = r.arrival_s;
-        // Guarded index range: derive candidates by division, confirm
-        // membership against the exact k·q edges.
-        let k_hi = ((a / q) as usize).min(n_windows.saturating_sub(1));
-        let k_lo = (((a - epoch_s) / q).floor().max(0.0)) as usize;
-        for k in k_lo.saturating_sub(1)..=(k_hi + 1).min(n_windows - 1) {
-            let t_k = k as f64 * q;
-            if t_k <= a && a < t_k + epoch_s {
-                counts[k] += 1;
-            }
-        }
+        grid.observe(r.arrival_s, |_| {});
     }
-    let mut best_k = 0usize;
-    let mut best_n = 0usize;
-    for (k, &n) in counts.iter().enumerate() {
-        if n > best_n {
-            best_n = n;
-            best_k = k;
-        }
-    }
-    let t_lo = best_k as f64 * q;
-    (t_lo, t_lo + epoch_s, best_n)
+    grid.best()
 }
 
 /// Index range (into an arrival-sorted trace) of the busiest epoch-sized
@@ -135,25 +125,224 @@ pub fn plan_schedule(model: &'static LlmSpec, trace: &[Request],
                          ci, slo, h, duration_s)
 }
 
+/// Cross-epoch incremental state of the rolling-horizon controller: the
+/// previous epoch's demand histogram and solved plan, plus counters for
+/// what each epoch cost.
+///
+/// Decision ladder per epoch (first match wins):
+/// 1. **warm hit** — bitwise-identical `(histogram, window, ci)`: return
+///    the cached plan. [`planner::plan`] is pure in its inputs, so this is
+///    exact memoization, on by default and output-neutral.
+/// 2. **drift skip** — inputs moved, but by at most `drift_tol`: return
+///    the cached plan anyway. Drift is measured against the demand the
+///    plan was last (re)solved for — never against the previous skip — so
+///    slow creep accumulates until it trips the threshold instead of
+///    being re-absorbed forever.
+/// 3. **cut patch** (`interval_cuts`) — demand grew without opening new
+///    buckets: sweep the epoch's chunk events for overload intervals and
+///    patch the cached plan with per-interval capacity cuts
+///    ([`benders::patch_plan`]); re-anchor on the patched plan.
+/// 4. **full re-solve** — anything else (including any demand *shrink*:
+///    cuts only add capacity, scale-down needs the real ILP).
+pub struct IncrementalPlanner {
+    drift_tol: f64,
+    cuts: bool,
+    /// `false` disables every reuse path — the cold from-scratch baseline
+    /// `plan-bench` compares against.
+    enabled: bool,
+    last: Option<EpochSolve>,
+    stats: PlannerStats,
+}
+
+struct EpochSolve {
+    acc: SliceAccum,
+    w_bits: u64,
+    warm: WarmStart,
+}
+
+/// Where the controller's epochs went — the sublinearity evidence
+/// `plan-bench` reports.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PlannerStats {
+    pub epochs: usize,
+    pub full_solves: usize,
+    /// Exact-match memoization hits.
+    pub warm_hits: usize,
+    /// Within-tolerance reuses of a drifted histogram.
+    pub drift_skips: usize,
+    /// Epochs resolved by patching the master with interval cuts.
+    pub cut_patches: usize,
+    /// Per-interval feasibility subproblems solved.
+    pub cuts: usize,
+    /// Branch-and-bound nodes across full solves and cut subproblems.
+    pub nodes: usize,
+}
+
+impl IncrementalPlanner {
+    pub fn new(drift_tol: f64, interval_cuts: bool) -> IncrementalPlanner {
+        IncrementalPlanner {
+            drift_tol,
+            cuts: interval_cuts,
+            enabled: true,
+            last: None,
+            stats: PlannerStats::default(),
+        }
+    }
+
+    /// Planner configured from the horizon knobs (what
+    /// [`plan_schedule_stream`] runs).
+    pub fn from_horizon(h: &HorizonConfig) -> IncrementalPlanner {
+        IncrementalPlanner::new(h.drift_tol, h.interval_cuts)
+    }
+
+    /// Every epoch re-solves from scratch: the cold baseline.
+    pub fn disabled() -> IncrementalPlanner {
+        let mut p = IncrementalPlanner::new(0.0, false);
+        p.enabled = false;
+        p
+    }
+
+    pub fn stats(&self) -> PlannerStats {
+        self.stats
+    }
+
+    /// The observed-demand slices of one epoch window, headroom-scaled —
+    /// exactly what the per-epoch ILP solves over.
+    fn window_slices(acc: &SliceAccum, model: &'static LlmSpec, w: f64,
+                     slo: Slo, headroom: f64) -> Vec<Slice> {
+        let mut slices = cluster_slices(&acc.slices(model, w, slo, 1));
+        for s in &mut slices {
+            s.rate *= headroom;
+        }
+        slices
+    }
+
+    /// Plan schedule epoch `k` (1-based) of `profile`. `cfg` must already
+    /// carry this epoch's CI forecast; every other field must be held
+    /// constant across the planner's lifetime.
+    pub fn epoch_plan(&mut self, profile: &DemandProfile, k: usize,
+                      cfg: &PlanConfig, model: &'static LlmSpec, slo: Slo,
+                      h: &HorizonConfig) -> Plan {
+        self.stats.epochs += 1;
+        let t_k = k as f64 * profile.epoch_s;
+        let w = profile.window_s.min(t_k);
+        let acc = profile.epoch_accum(k);
+
+        if !self.enabled {
+            let slices = Self::window_slices(acc, model, w, slo, h.headroom);
+            let p = planner::plan(&slices, cfg);
+            self.stats.full_solves += 1;
+            self.stats.nodes += p.nodes;
+            return p;
+        }
+
+        if let Some(last) = &self.last {
+            let same_w = last.w_bits == w.to_bits();
+            // 1. Exact memoization: bitwise-identical inputs.
+            if same_w && last.warm.ci.to_bits() == cfg.ci.to_bits()
+                && last.acc == *acc {
+                self.stats.warm_hits += 1;
+                let mut p = last.warm.plan.clone();
+                p.solve_s = 0.0;
+                p.nodes = 0;
+                return p;
+            }
+            // 2. Delta-aware early-out: within tolerance of the demand the
+            // plan was last solved/patched for.
+            if self.drift_tol > 0.0 && same_w {
+                let denom = last.acc.total().max(acc.total()).max(1) as f64;
+                let drift_hist = last.acc.l1_delta(acc) as f64 / denom;
+                let drift_ci = (cfg.ci - last.warm.ci).abs()
+                    / last.warm.ci.abs().max(1e-9);
+                if drift_hist <= self.drift_tol && drift_ci <= self.drift_tol {
+                    self.stats.drift_skips += 1;
+                    let mut p = last.warm.plan.clone();
+                    p.solve_s = 0.0;
+                    p.nodes = 0;
+                    return p;
+                }
+            }
+            // 3. Interval cuts: growth the master's columns can absorb.
+            if self.cuts && same_w && acc.total() >= last.acc.total()
+                && !last.acc.has_new_bucket(acc) {
+                let q = profile.epoch_s / 4.0;
+                let chunks = profile.chunk_rates(t_k - w, t_k);
+                if let Some(out) = benders::patch_plan(&last.warm, cfg,
+                                                       &chunks, q, h.headroom) {
+                    self.stats.cut_patches += 1;
+                    self.stats.cuts += out.cuts;
+                    self.stats.nodes += out.nodes;
+                    let slices =
+                        Self::window_slices(acc, model, w, slo, h.headroom);
+                    let plan = out.plan.clone();
+                    self.last = Some(EpochSolve {
+                        acc: acc.clone(),
+                        w_bits: w.to_bits(),
+                        warm: WarmStart { slices, ci: cfg.ci, plan: out.plan },
+                    });
+                    return plan;
+                }
+            }
+        }
+
+        // 4. Full re-solve; re-anchor the incremental state on it.
+        let slices = Self::window_slices(acc, model, w, slo, h.headroom);
+        let p = planner::plan_warm(&slices, cfg,
+                                   self.last.as_ref().map(|l| &l.warm));
+        self.stats.full_solves += 1;
+        self.stats.nodes += p.nodes;
+        self.last = Some(EpochSolve {
+            acc: acc.clone(),
+            w_bits: w.to_bits(),
+            warm: WarmStart::new(&slices, cfg, p.clone()),
+        });
+        p
+    }
+}
+
 /// Build the provisioning schedule for `template` over a streaming
 /// arrival source.
 ///
 /// The template is the peak-provisioned fleet (every server the schedule
 /// may ever use); the whole template starts active, and from the first
 /// epoch boundary on, the observed-demand ILP decides how much of it
-/// stays up. The stream is consumed forward, holding only the trailing
-/// observation window in memory (≤ rate·window requests — never the whole
-/// trace). Deterministic: same inputs, same schedule, independent of
-/// thread count (the per-epoch MILP is node-bounded).
+/// stays up. One fused pass over the stream builds the demand profile
+/// (O(windows × buckets) memory — never the whole trace), then the
+/// incremental planner walks the epochs. Deterministic: same inputs, same
+/// schedule, independent of thread count (the per-epoch MILP is
+/// node-bounded).
 #[allow(clippy::too_many_arguments)]
 pub fn plan_schedule_stream(model: &'static LlmSpec,
                             source: &mut dyn ArrivalSource,
                             template: &[ServerSpec], base: &PlanConfig,
                             ci: &CiSignal, slo: Slo, h: &HorizonConfig,
                             duration_s: f64) -> FleetSchedule {
+    let epoch = h.effective_epoch(duration_s);
+    let profile = DemandProfile::build(source, epoch, h.window_s, duration_s);
+    let mut inc = IncrementalPlanner::from_horizon(h);
+    plan_schedule_from_profile(model, &profile, template, base, ci, slo, h,
+                               duration_s, &mut inc)
+}
+
+/// The epoch loop of [`plan_schedule_stream`], decoupled from the demand
+/// walk: plan every schedule epoch of an already-built [`DemandProfile`]
+/// through `inc`. `plan-bench` drives this directly to compare cold and
+/// warm planners over one shared profile.
+#[allow(clippy::too_many_arguments)]
+pub fn plan_schedule_from_profile(model: &'static LlmSpec,
+                                  profile: &DemandProfile,
+                                  template: &[ServerSpec], base: &PlanConfig,
+                                  ci: &CiSignal, slo: Slo, h: &HorizonConfig,
+                                  duration_s: f64,
+                                  inc: &mut IncrementalPlanner)
+    -> FleetSchedule {
     assert!(!template.is_empty(), "empty template fleet");
     let epoch = h.effective_epoch(duration_s);
+    assert_eq!(profile.epoch_s.to_bits(), epoch.to_bits(),
+               "profile built for a different epoch");
     let window = if h.window_s > 0.0 { h.window_s } else { epoch };
+    assert_eq!(profile.window_s.to_bits(), window.to_bits(),
+               "profile built for a different observation window");
 
     // Template servers grouped by SKU (BTreeMap: deterministic order).
     // Within a group, low indices activate first and high indices drain
@@ -167,52 +356,24 @@ pub fn plan_schedule_stream(model: &'static LlmSpec,
     assert!(!groups.is_empty(), "template has no catalog GPUs");
     let menu: Vec<&'static str> = groups.keys().copied().collect();
 
-    // Sliding observation window: arrivals in [t_k - w, t_k), ingested
-    // forward with one request of lookahead.
-    let mut buf: VecDeque<Request> = VecDeque::new();
-    let mut lookahead = source.next_request();
+    // Per-epoch solve config; only `ci` varies inside the loop (the
+    // incremental planner's warm-start contract).
+    let mut cfg = base.clone();
+    cfg.gpu_menu = menu.clone();
+    cfg.milp.max_nodes = h.milp_nodes;
+    cfg.milp.time_limit = std::time::Duration::from_secs(3600);
 
     let mut active: Vec<bool> = vec![true; template.len()];
     let mut events = Vec::new();
-    let mut k = 1usize;
-    while (k as f64) * epoch < duration_s {
+    for k in 1..=profile.epochs() {
         let t_k = k as f64 * epoch;
-        k += 1;
 
-        // Observed demand: arrivals in the trailing window (clipped to
-        // the elapsed trace so early epochs don't dilute their rates),
-        // scaled by the headroom margin.
-        let w = window.min(t_k);
-        while let Some(r) = lookahead.take() {
-            if r.arrival_s < t_k {
-                buf.push_back(r);
-                lookahead = source.next_request();
-            } else {
-                lookahead = Some(r);
-                break;
-            }
-        }
-        while buf.front().is_some_and(|r| r.arrival_s < t_k - w) {
-            buf.pop_front();
-        }
         let mut desired: BTreeMap<&'static str, usize> =
             menu.iter().map(|n| (*n, 0)).collect();
-        if !buf.is_empty() {
-            let mut acc = SliceAccum::new();
-            for r in &buf {
-                acc.push(r);
-            }
-            let mut slices = cluster_slices(&acc.slices(model, w, slo, 1));
-            for s in &mut slices {
-                s.rate *= h.headroom;
-            }
-            let mut cfg = base.clone();
-            cfg.gpu_menu = menu.clone();
-            cfg.milp.max_nodes = h.milp_nodes;
-            cfg.milp.time_limit = std::time::Duration::from_secs(3600);
+        if profile.epoch_accum(k).total() > 0 {
             // CI forecast for the next epoch: the planning carbon price.
             cfg.ci = ci.mean_over(t_k, (t_k + epoch).min(duration_s));
-            let plan = planner::plan(&slices, &cfg);
+            let plan = inc.epoch_plan(profile, k, &cfg, model, slo, h);
             for (name, &gpus) in &plan.counts {
                 let Some((sku, idxs)) = groups.get_key_value(name.as_str()) else {
                     continue; // cpu-host reuse consumes no template server
@@ -360,6 +521,149 @@ mod tests {
         for (t, n) in replay(template.len(), &sched) {
             assert!(n >= 2, "active fleet fell to {n} at t={t}");
         }
+    }
+
+    /// One arrival per second at a fixed length: dozens of equally-busy
+    /// windows. Regression for the tie-break contract — the *first*
+    /// strictly-maximal window wins, identically across the streaming
+    /// scan, the materialized adapter, and the fused profile.
+    #[test]
+    fn peak_tie_break_is_first_strict_max_on_plateau() {
+        use crate::planner::fused::DemandProfile;
+        use crate::workload::RequestClass;
+        let tr: Vec<Request> = (0..200)
+            .map(|i| Request {
+                id: i,
+                arrival_s: i as f64 + 0.5,
+                prompt_tokens: 256,
+                output_tokens: 128,
+                class: RequestClass::Online,
+            })
+            .collect();
+        let (t_lo, t_hi, n) =
+            peak_window_over(&mut SliceSource::new(&tr), 20.0, 200.0);
+        // Every interior 20 s window holds exactly 20 arrivals; the
+        // earliest must win the tie.
+        assert_eq!((t_lo.to_bits(), t_hi.to_bits(), n),
+                   (0.0f64.to_bits(), 20.0f64.to_bits(), 20));
+        let (lo, hi) = peak_epoch_window(&tr, 20.0, 200.0);
+        assert_eq!((lo, hi), (0, 20));
+        let p = DemandProfile::build(&mut SliceSource::new(&tr), 20.0, 0.0,
+                                     200.0);
+        let fused = p.peak();
+        assert_eq!(fused.0.to_bits(), t_lo.to_bits());
+        assert_eq!(fused.1.to_bits(), t_hi.to_bits());
+        assert_eq!(fused.2, n);
+    }
+
+    /// Exact-match memoization is output-neutral: the warm planner's
+    /// schedule is bitwise the cold planner's, and on a plateau it pays
+    /// for one full solve instead of one per epoch.
+    #[test]
+    fn warm_schedule_matches_cold_bitwise() {
+        use crate::planner::fused::DemandProfile;
+        use crate::workload::RequestClass;
+        let (m, template, cfg, slo) = controller_inputs();
+        let tr: Vec<Request> = (0..240)
+            .map(|i| Request {
+                id: i,
+                arrival_s: i as f64 + 0.5,
+                prompt_tokens: 256,
+                output_tokens: 128,
+                class: RequestClass::Online,
+            })
+            .collect();
+        let h = HorizonConfig::default();
+        let ci = CiSignal::flat(261.0);
+        let epoch = h.effective_epoch(240.0);
+        let profile = DemandProfile::build(&mut SliceSource::new(&tr), epoch,
+                                           h.window_s, 240.0);
+        let mut cold = IncrementalPlanner::disabled();
+        let a = plan_schedule_from_profile(m, &profile, &template, &cfg, &ci,
+                                           slo, &h, 240.0, &mut cold);
+        let mut warm = IncrementalPlanner::from_horizon(&h);
+        let b = plan_schedule_from_profile(m, &profile, &template, &cfg, &ci,
+                                           slo, &h, 240.0, &mut warm);
+        assert_eq!(a, b, "memoized schedule diverged from cold re-solves");
+        let s = warm.stats();
+        assert_eq!(s.full_solves, 1, "plateau should solve once: {s:?}");
+        assert_eq!(s.warm_hits, s.epochs - 1, "{s:?}");
+        assert_eq!(cold.stats().full_solves, cold.stats().epochs);
+    }
+
+    /// Creep protection: drift is measured against the demand the plan was
+    /// last *solved* for, so a slow ramp accumulates until it trips the
+    /// tolerance instead of being re-absorbed skip after skip.
+    #[test]
+    fn drift_skip_never_outlives_the_tolerance() {
+        use crate::planner::fused::DemandProfile;
+        use crate::workload::RequestClass;
+        // 10 → ~20 arrivals/s ramp at a fixed length: per-epoch drift is a
+        // few percent (under tol), but it compounds across epochs.
+        let mut tr = Vec::new();
+        for s in 0..300u64 {
+            for j in 0..(10 + s / 30) {
+                tr.push(Request {
+                    id: s * 32 + j,
+                    arrival_s: s as f64 + (j as f64 + 0.5) / 32.0,
+                    prompt_tokens: 256,
+                    output_tokens: 128,
+                    class: RequestClass::Online,
+                });
+            }
+        }
+        let (m, template, cfg, slo) = controller_inputs();
+        let h = HorizonConfig { drift_tol: 0.2, ..Default::default() };
+        let ci = CiSignal::flat(261.0);
+        let epoch = h.effective_epoch(300.0);
+        let profile = DemandProfile::build(&mut SliceSource::new(&tr), epoch,
+                                           h.window_s, 300.0);
+        let mut inc = IncrementalPlanner::from_horizon(&h);
+        let sched = plan_schedule_from_profile(m, &profile, &template, &cfg,
+                                               &ci, slo, &h, 300.0, &mut inc);
+        assert!(sched.events.windows(2).all(|w| w[0].t <= w[1].t));
+        let s = inc.stats();
+        assert!(s.drift_skips > 0, "tolerance never engaged: {s:?}");
+        assert!(s.full_solves > 1,
+                "a ramp past the tolerance must re-solve: {s:?}");
+        assert_eq!(s.epochs,
+                   s.full_solves + s.warm_hits + s.drift_skips + s.cut_patches);
+    }
+
+    /// With interval cuts on, a step surge at constant request shape is
+    /// absorbed by patching the master plan instead of a full re-solve.
+    #[test]
+    fn step_surge_takes_the_cut_path() {
+        use crate::planner::fused::DemandProfile;
+        use crate::workload::RequestClass;
+        let mut tr = Vec::new();
+        let mut id = 0u64;
+        for s in 0..300u64 {
+            let n = if (150..225).contains(&s) { 12 } else { 3 };
+            for j in 0..n {
+                tr.push(Request {
+                    id,
+                    arrival_s: s as f64 + (j as f64 + 0.5) / 16.0,
+                    prompt_tokens: 256,
+                    output_tokens: 128,
+                    class: RequestClass::Online,
+                });
+                id += 1;
+            }
+        }
+        let (m, template, cfg, slo) = controller_inputs();
+        let h = HorizonConfig { interval_cuts: true, ..Default::default() };
+        let ci = CiSignal::flat(261.0);
+        let epoch = h.effective_epoch(300.0);
+        let profile = DemandProfile::build(&mut SliceSource::new(&tr), epoch,
+                                           h.window_s, 300.0);
+        let mut inc = IncrementalPlanner::from_horizon(&h);
+        let sched = plan_schedule_from_profile(m, &profile, &template, &cfg,
+                                               &ci, slo, &h, 300.0, &mut inc);
+        assert!(sched.events.windows(2).all(|w| w[0].t <= w[1].t));
+        let s = inc.stats();
+        assert!(s.cut_patches > 0, "surge never took the cut path: {s:?}");
+        assert!(s.full_solves < s.epochs, "{s:?}");
     }
 
     #[test]

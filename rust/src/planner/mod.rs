@@ -18,6 +18,8 @@
 //! forecast every epoch and emits fleet provisioning events for the
 //! simulator (periodic pool management).
 
+pub mod benders;
+pub mod fused;
 pub mod horizon;
 pub mod pools;
 pub mod slicing;
@@ -379,8 +381,64 @@ fn busy_dynamic_power(opt: &DeviceOption) -> f64 {
 /// which agrees whenever the GPU count divides evenly into servers (the
 /// `div_ceil` remainder in fleet materialization is the only slack — see
 /// the planner-vs-sim parity test).
-fn idle_op_kg_per_hr(opt: &DeviceOption, ci: f64) -> f64 {
+pub(crate) fn idle_op_kg_per_hr(opt: &DeviceOption, ci: f64) -> f64 {
     op_kg_per_hr(idle_power(opt.dev.idle_w, 1), ci)
+}
+
+/// A previous solve to warm-start from: the plan plus the exact inputs it
+/// was solved against. [`plan_warm`] reuses the plan only on a *bitwise*
+/// input match, so warm starts can never perturb the branch-and-bound
+/// search (a tighter incumbent cutoff would change which nodes consume a
+/// truncated node budget, and with it the returned plan). The caller must
+/// hold every `PlanConfig` field other than `ci` fixed between epochs —
+/// `ci` is the one knob the rolling horizon varies, so it is captured
+/// here.
+#[derive(Debug, Clone)]
+pub struct WarmStart {
+    pub slices: Vec<Slice>,
+    pub ci: f64,
+    pub plan: Plan,
+}
+
+impl WarmStart {
+    pub fn new(slices: &[Slice], cfg: &PlanConfig, plan: Plan) -> WarmStart {
+        WarmStart { slices: slices.to_vec(), ci: cfg.ci, plan }
+    }
+
+    /// Bitwise input match: same slice sequence (rates compared on bits,
+    /// not epsilon) and the same planning carbon intensity.
+    pub fn matches(&self, slices: &[Slice], cfg: &PlanConfig) -> bool {
+        self.ci.to_bits() == cfg.ci.to_bits()
+            && self.slices.len() == slices.len()
+            && self.slices.iter().zip(slices).all(|(a, b)| {
+                a.model.name == b.model.name
+                    && a.rate.to_bits() == b.rate.to_bits()
+                    && a.prompt == b.prompt
+                    && a.output == b.output
+                    && a.offline == b.offline
+                    && a.slo.ttft_s.to_bits() == b.slo.ttft_s.to_bits()
+                    && a.slo.tpot_s.to_bits() == b.slo.tpot_s.to_bits()
+            })
+    }
+}
+
+/// [`plan`] with cross-solve memoization: when `warm` carries a plan
+/// solved for bitwise-identical inputs, return it without re-running the
+/// MILP ([`plan`] is a pure function of `(slices, cfg)` apart from the
+/// wall-clock `solve_s`, which a memoized return reports as `0.0` — no
+/// solve happened). Anything short of an exact match falls through to a
+/// full cold solve, so the output is always byte-identical to [`plan`].
+pub fn plan_warm(slices: &[Slice], cfg: &PlanConfig,
+                 warm: Option<&WarmStart>) -> Plan {
+    if let Some(w) = warm {
+        if w.matches(slices, cfg) {
+            let mut p = w.plan.clone();
+            p.solve_s = 0.0;
+            p.nodes = 0;
+            return p;
+        }
+    }
+    plan(slices, cfg)
 }
 
 /// Solve the allocation ILP for a set of slices.

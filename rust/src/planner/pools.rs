@@ -9,7 +9,7 @@
 //! reuse pool absorbs — the machinery behind Figs 10/11.
 
 use super::slicing::Slice;
-use super::{plan, Phase, Plan, PlanConfig};
+use super::{plan_warm, Phase, Plan, PlanConfig, WarmStart};
 use crate::models::LlmSpec;
 use crate::workload::demand::DemandPoint;
 use crate::workload::slo::{Slo, OFFLINE_DEADLINE_S};
@@ -79,6 +79,11 @@ pub fn manage_pools(
     }
     let step = demand.get(1).map(|p| p.t_s - demand[0].t_s).unwrap_or(1.0).max(1.0);
     let per_window = (pool_cfg.interval_s / step).ceil() as usize;
+    // Consecutive windows often see the same peak demand (flat stretches
+    // of the diurnal curve); carry the previous solve across windows so
+    // those re-plans are memoized instead of re-solved. Bitwise-neutral:
+    // plan_warm reuses only on an exact input match.
+    let mut warm: Option<WarmStart> = None;
     for window in demand.chunks(per_window.max(1)) {
         // Plan for the window's PEAK demand (capacity must cover it).
         let online = window.iter().map(|p| p.online).fold(0.0, f64::max);
@@ -103,8 +108,9 @@ pub fn manage_pools(
                 offline: true,
             });
         }
-        let p = plan(&slices, plan_cfg);
+        let p = plan_warm(&slices, plan_cfg, warm.as_ref());
         out.push(decision_from_plan(window[0].t_s, online, offline, &p, &slices));
+        warm = Some(WarmStart::new(&slices, plan_cfg, p));
     }
     out
 }

@@ -45,7 +45,7 @@ fn representative(edges: &[usize], idx: usize) -> usize {
 /// trace. `slice_trace` delegates here, so the two paths are identical by
 /// construction — bucket counts are integers, and the rate arithmetic in
 /// [`SliceAccum::slices`] is shared.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct SliceAccum {
     /// counts[class][p][o]
     counts: Vec<Vec<Vec<usize>>>,
@@ -66,11 +66,64 @@ impl SliceAccum {
     }
 
     pub fn push(&mut self, r: &Request) {
+        let (ci, p, o) = Self::bucket(r);
+        self.push_bucket(ci, p, o);
+    }
+
+    /// Bucket coordinates `(class, prompt, output)` of a request. Split out
+    /// so the fused demand pass can bucket each arrival once and then fan
+    /// the increment out to every window accumulator it falls in.
+    pub fn bucket(r: &Request) -> (usize, usize, usize) {
         let ci = match r.class { RequestClass::Online => 0, RequestClass::Offline => 1 };
         let p = bucket_of(r.prompt_tokens, PROMPT_EDGES);
         let o = bucket_of(r.output_tokens, OUTPUT_EDGES);
-        self.counts[ci][p][o] += 1;
+        (ci, p, o)
+    }
+
+    /// Increment one pre-computed bucket (see [`SliceAccum::bucket`]).
+    pub fn push_bucket(&mut self, class: usize, p: usize, o: usize) {
+        self.counts[class][p][o] += 1;
         self.total += 1;
+    }
+
+    /// Add another accumulator's counts into this one. Integer sums
+    /// commute, so merging per-worker partial accumulators in any order
+    /// yields the same histogram as a single-threaded ingest.
+    pub fn merge(&mut self, other: &SliceAccum) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            for (ar, br) in a.iter_mut().zip(b) {
+                for (ac, bc) in ar.iter_mut().zip(br) {
+                    *ac += bc;
+                }
+            }
+        }
+        self.total += other.total;
+    }
+
+    /// L1 distance between two bucket histograms: the total number of
+    /// requests that moved bucket (or appeared/disappeared). The
+    /// incremental planner's drift metric is this over `max(total)`.
+    pub fn l1_delta(&self, other: &SliceAccum) -> usize {
+        let mut d = 0usize;
+        for (a, b) in self.counts.iter().zip(&other.counts) {
+            for (ar, br) in a.iter().zip(b) {
+                for (ac, bc) in ar.iter().zip(br) {
+                    d += ac.abs_diff(*bc);
+                }
+            }
+        }
+        d
+    }
+
+    /// True when `other` has arrivals in a bucket this histogram has none
+    /// in — demand the previous solve never assigned capacity for, which
+    /// the cut patcher cannot cover by scaling existing assignments.
+    pub fn has_new_bucket(&self, other: &SliceAccum) -> bool {
+        self.counts.iter().zip(&other.counts).any(|(a, b)| {
+            a.iter().zip(b).any(|(ar, br)| {
+                ar.iter().zip(br).any(|(ac, bc)| *ac == 0 && *bc > 0)
+            })
+        })
     }
 
     /// Requests ingested so far.
@@ -133,19 +186,38 @@ pub fn slice_trace(
 
 /// Merge slices that are identical (bucket, class) — the clustering that
 /// gives the control plane its sub-linear scaling (paper §6.2.2).
+///
+/// Pre-sorts an index permutation by bucket key (index-tiebroken, so equal
+/// keys stay in input order) and merges each run in one pass, then emits
+/// the merged groups in first-appearance order. Output order and the rate
+/// summation order both match the old linear-rescan implementation
+/// exactly, so the result is bit-identical — without the O(n²) `find` on
+/// large slice sets.
 pub fn cluster_slices(slices: &[Slice]) -> Vec<Slice> {
-    let mut out: Vec<Slice> = Vec::new();
-    for s in slices {
-        if let Some(e) = out.iter_mut().find(|e| {
-            e.prompt == s.prompt && e.output == s.output && e.offline == s.offline
-                && e.model.name == s.model.name
-        }) {
-            e.rate += s.rate;
-        } else {
-            out.push(s.clone());
+    if slices.len() <= 1 {
+        return slices.to_vec();
+    }
+    let key = |i: usize| {
+        let s = &slices[i];
+        (s.model.name, s.prompt, s.output, s.offline, i)
+    };
+    let mut idx: Vec<usize> = (0..slices.len()).collect();
+    idx.sort_unstable_by(|&a, &b| key(a).cmp(&key(b)));
+    let same = |a: &Slice, b: &Slice| {
+        a.prompt == b.prompt && a.output == b.output && a.offline == b.offline
+            && a.model.name == b.model.name
+    };
+    // (first input index, merged slice); rates accumulate in ascending
+    // input order within a group — the same float-add sequence as before.
+    let mut groups: Vec<(usize, Slice)> = Vec::new();
+    for &i in &idx {
+        match groups.last_mut() {
+            Some((_, g)) if same(g, &slices[i]) => g.rate += slices[i].rate,
+            _ => groups.push((i, slices[i].clone())),
         }
     }
-    out
+    groups.sort_unstable_by_key(|&(first, _)| first);
+    groups.into_iter().map(|(_, s)| s).collect()
 }
 
 #[cfg(test)]
@@ -191,6 +263,81 @@ mod tests {
         let clustered = cluster_slices(&s4);
         let s1 = slice_trace(m, &tr, 600.0, slo, 1);
         assert_eq!(clustered.len(), s1.len());
+    }
+
+    /// The pre-sort + merge clustering must reproduce the old quadratic
+    /// rescan bit-for-bit: same group order, same float-add order.
+    #[test]
+    fn clustering_matches_naive_rescan_bitwise() {
+        fn naive(slices: &[Slice]) -> Vec<Slice> {
+            let mut out: Vec<Slice> = Vec::new();
+            for s in slices {
+                if let Some(e) = out.iter_mut().find(|e| {
+                    e.prompt == s.prompt && e.output == s.output
+                        && e.offline == s.offline && e.model.name == s.model.name
+                }) {
+                    e.rate += s.rate;
+                } else {
+                    out.push(s.clone());
+                }
+            }
+            out
+        }
+        let m = models::llm("llama-8b").unwrap();
+        let slo = Slo { ttft_s: 0.5, tpot_s: 0.1 };
+        // Interleaved duplicates with awkward rates exercise both the
+        // grouping and the summation order.
+        let mut rng = crate::util::rng::Rng::new(7);
+        let mut slices = Vec::new();
+        for i in 0..200 {
+            let p = [64usize, 300, 1000, 9000][i % 4];
+            let o = [32usize, 100, 500][rng.below(3)];
+            slices.push(Slice {
+                model: m,
+                rate: 0.1 + rng.f64() * 3.0,
+                prompt: p,
+                output: o,
+                slo,
+                offline: rng.below(2) == 1,
+            });
+        }
+        let fast = cluster_slices(&slices);
+        let slow = naive(&slices);
+        assert_eq!(fast.len(), slow.len());
+        for (a, b) in fast.iter().zip(&slow) {
+            assert_eq!(a.prompt, b.prompt);
+            assert_eq!(a.output, b.output);
+            assert_eq!(a.offline, b.offline);
+            assert_eq!(a.rate.to_bits(), b.rate.to_bits(), "rate diverged");
+        }
+    }
+
+    #[test]
+    fn accum_merge_matches_single_ingest() {
+        let tr = trace();
+        let mut whole = SliceAccum::new();
+        for r in &tr {
+            whole.push(r);
+        }
+        // Modulo-partitioned partial accumulators merged in index order.
+        for workers in [2usize, 3, 8] {
+            let mut parts = vec![SliceAccum::new(); workers];
+            for (i, r) in tr.iter().enumerate() {
+                parts[i % workers].push(r);
+            }
+            let mut merged = SliceAccum::new();
+            for p in &parts {
+                merged.merge(p);
+            }
+            assert_eq!(merged, whole);
+        }
+        assert_eq!(whole.l1_delta(&whole), 0);
+        let mut shifted = whole.clone();
+        shifted.push_bucket(0, 0, 0);
+        assert_eq!(whole.l1_delta(&shifted), 1);
+        let empty = SliceAccum::new();
+        assert!(empty.has_new_bucket(&whole));
+        assert!(!whole.has_new_bucket(&empty));
     }
 
     #[test]

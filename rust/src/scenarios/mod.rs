@@ -22,7 +22,8 @@ pub use catalog::registry;
 pub use runner::{run_sweep, SweepConfig, SweepReport};
 
 use crate::carbon::intensity::{CiSignal, CiTrace, Region};
-use crate::planner::horizon::{self, HorizonConfig};
+use crate::planner::fused::DemandProfile;
+use crate::planner::horizon::{self, HorizonConfig, IncrementalPlanner};
 use crate::planner::slicing::SliceAccum;
 use crate::planner::{self, PlanConfig};
 use crate::sim::{shard, simulate_stream, DeferralPolicy, FleetSchedule,
@@ -431,27 +432,27 @@ fn run_spec_with_sources<'a>(name: &str, spec: &ScenarioSpec, seed: u64,
         .unwrap_or(Slo { ttft_s: 2.0, tpot_s: 0.2 });
 
     let plan_cfg = scenario_plan_config(spec, ci);
-    let plan = match &spec.reprovision {
-        Some(h) => {
-            let epoch = h.effective_epoch(duration_s);
-            let (t_lo, t_hi, n) =
-                horizon::peak_window_over(&mut *fresh(), epoch, duration_s);
-            let mut acc = SliceAccum::new();
-            let mut src = fresh();
-            while let Some(r) = src.next_request() {
-                // Empty stream: degenerate fallback over everything (which
-                // is also nothing); otherwise only the peak window counts,
-                // and the time-ordered stream contract lets us stop as
-                // soon as the window has passed instead of draining (and
-                // generating) the rest of a multi-million-request day.
-                if n > 0 && r.arrival_s >= t_hi {
-                    break;
-                }
-                if n == 0 || r.arrival_s >= t_lo {
-                    acc.push(&r);
-                }
-            }
-            let slices = cluster_slices(&acc.slices(model, epoch, slo, 1));
+    // Re-provisioning scenarios used to walk the stream three times before
+    // simulating (peak scan, peak re-materialization, sliding observation
+    // buffer); one fused [`DemandProfile`] pass now feeds both the
+    // peak-window plan and the rolling-horizon controller. Sharded runs
+    // build it on the shard thread budget — byte-identical by contract.
+    let profile = spec.reprovision.as_ref().map(|h| {
+        let epoch = h.effective_epoch(duration_s);
+        match shards {
+            None => DemandProfile::build(&mut *fresh(), epoch, h.window_s,
+                                         duration_s),
+            Some(threads) => DemandProfile::build_sharded(
+                fresh, threads, epoch, h.window_s, duration_s),
+        }
+    });
+    let plan = match &profile {
+        Some(profile) => {
+            // The one-shot plan is sized on the peak epoch window's slice
+            // histogram — same bytes the old scan-then-rewalk produced
+            // (the grid accumulates under the identical membership test).
+            let slices = cluster_slices(
+                &profile.peak_accum().slices(model, profile.epoch_s, slo, 1));
             planner::plan(&slices, &plan_cfg)
         }
         None => {
@@ -534,13 +535,14 @@ fn run_spec_with_sources<'a>(name: &str, spec: &ScenarioSpec, seed: u64,
             horizon_s: duration_s,
         };
     }
-    // Unsharded runs schedule the whole fleet off the whole stream; the
-    // sharded runtime instead re-provisions each shard against its own
-    // substream (see `sched` below).
-    if let (Some(h), None) = (&spec.reprovision, shards) {
-        cfg.fleet_plan = horizon::plan_schedule_stream(
-            model, &mut *fresh(), &cfg.servers, &plan_cfg, &cfg.ci, slo, h,
-            duration_s);
+    // Unsharded runs schedule the whole fleet off the fused profile (no
+    // extra demand pass); the sharded runtime instead re-provisions each
+    // shard against its own substream (see `sched` below).
+    if let (Some(h), None, Some(profile)) = (&spec.reprovision, shards, &profile) {
+        let mut inc = IncrementalPlanner::from_horizon(h);
+        cfg.fleet_plan = horizon::plan_schedule_from_profile(
+            model, profile, &cfg.servers, &plan_cfg, &cfg.ci, slo, h,
+            duration_s, &mut inc);
     }
 
     // The partition is a pure function of the fleet, shared by the main

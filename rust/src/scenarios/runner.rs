@@ -2,6 +2,14 @@
 //! scoped workers with deterministic per-scenario seeds, and renders the
 //! combined [`SweepReport`] as machine-readable JSON (util::json) and a
 //! human summary table (util::table).
+//!
+//! Re-provisioning scenarios run one fused demand pass per design point
+//! (`planner::fused::DemandProfile`) that feeds both the peak-window plan
+//! and the rolling-horizon controller, which itself re-solves the epoch
+//! ILP only when the demand histogram actually moved
+//! (`planner::horizon::IncrementalPlanner`) — the sweep stays
+//! byte-identical while planning cost scales with demand *change*, not
+//! epoch count.
 
 use super::{scenario_seed, CiProfile, Overrides, Scenario, ScenarioOutcome};
 use crate::util::json::Json;

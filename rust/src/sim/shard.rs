@@ -347,6 +347,44 @@ pub fn shard_stream<'a>(cfg: &SimConfig, plan: &ShardPlan, shard: usize,
     PartitionSource::new(inner, shard, Box::new(move |r| splitter.assign(r)))
 }
 
+/// Run `n` independent jobs on up to `threads` scoped worker threads and
+/// return the results in job order. The order-fixed slot collection is
+/// what makes every fan-out in the codebase (shard sims, the fused
+/// planner pass) thread-count-deterministic: workers race only for *which*
+/// job to pull, never for where its result lands.
+pub fn parallel_slots<T, F>(n: usize, threads: usize, job: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    assert!(n > 0, "parallel_slots needs at least one job");
+    let threads = threads.clamp(1, n);
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let k = next.fetch_add(1, Ordering::SeqCst);
+                if k >= n {
+                    break;
+                }
+                let part = job(k);
+                *slots[k].lock().unwrap() = Some(part);
+            });
+        }
+    });
+
+    slots
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .expect("worker poisoned a result slot")
+                .expect("worker skipped a job")
+        })
+        .collect()
+}
+
 /// Run `cfg`'s fleet sharded under `plan` on up to `threads` scoped
 /// worker threads and merge the shard results into one [`SimReport`].
 /// Deterministic: the report depends only on (model, cfg, plan, stream),
@@ -359,34 +397,10 @@ pub fn simulate_sharded<'a, 'b>(model: &LlmSpec, cfg: &SimConfig,
                                 schedule: Option<&ScheduleFn<'b>>)
     -> SimReport {
     assert!(!plan.is_empty(), "empty shard plan");
-    let n = plan.len();
-    let threads = threads.clamp(1, n);
-    let next = AtomicUsize::new(0);
-    let slots: Vec<Mutex<Option<ShardResult>>> =
-        (0..n).map(|_| Mutex::new(None)).collect();
-
-    std::thread::scope(|s| {
-        for _ in 0..threads {
-            s.spawn(|| loop {
-                let k = next.fetch_add(1, Ordering::SeqCst);
-                if k >= n {
-                    break;
-                }
-                let part = run_shard(model, cfg, plan, k, slo_ttft, slo_tpot,
-                                     make_source, schedule);
-                *slots[k].lock().unwrap() = Some(part);
-            });
-        }
+    let parts: Vec<ShardResult> = parallel_slots(plan.len(), threads, |k| {
+        run_shard(model, cfg, plan, k, slo_ttft, slo_tpot, make_source,
+                  schedule)
     });
-
-    let parts: Vec<ShardResult> = slots
-        .into_iter()
-        .map(|m| {
-            m.into_inner()
-                .expect("shard worker poisoned a result slot")
-                .expect("shard worker skipped a shard")
-        })
-        .collect();
     merge_shard_reports(cfg, plan, parts)
 }
 

@@ -1,0 +1,217 @@
+//! Property suite for the incremental rolling-horizon planner: for all
+//! epoch sequences, (1) the warm-started planner at default knobs is
+//! bitwise-identical to cold full re-solves, and (2) the drift early-out
+//! never skips a re-solve the tolerance does not license — an independent
+//! replay of the decision ladder over the demand profile must predict the
+//! planner's epoch accounting exactly.
+
+use ecoserve::carbon::intensity::CiSignal;
+use ecoserve::planner::fused::DemandProfile;
+use ecoserve::planner::horizon::{plan_schedule_from_profile, HorizonConfig,
+                                 IncrementalPlanner};
+use ecoserve::planner::slicing::SliceAccum;
+use ecoserve::planner::PlanConfig;
+use ecoserve::sim::homogeneous_fleet;
+use ecoserve::testkit::{forall, PropConfig};
+use ecoserve::workload::slo::Slo;
+use ecoserve::workload::{generate_trace, Arrivals, LengthDist, Request,
+                         RequestClass, SliceSource};
+
+#[derive(Debug, Clone)]
+struct Case {
+    seed: u64,
+    duration_s: f64,
+    epoch_s: f64,
+    /// 0.0 = one epoch (the config default); otherwise an explicit window.
+    window_s: f64,
+    pattern: u8,
+    rate: f64,
+    drift_tol: f64,
+}
+
+fn gen_case(r: &mut ecoserve::util::rng::Rng) -> Case {
+    let epoch_s = 8.0 + r.f64() * 24.0;
+    let window_s = match r.below(3) {
+        0 => 0.0,
+        1 => epoch_s * 0.5,
+        _ => epoch_s * 2.0,
+    };
+    Case {
+        seed: r.next_u64(),
+        duration_s: 120.0 + r.f64() * 200.0,
+        epoch_s,
+        window_s,
+        pattern: r.below(3) as u8,
+        rate: 0.5 + r.f64() * 6.0,
+        drift_tol: 0.02 + r.f64() * 0.3,
+    }
+}
+
+fn shrink_case(c: &Case) -> Vec<Case> {
+    let mut out = Vec::new();
+    if c.duration_s > 120.0 {
+        out.push(Case { duration_s: 120.0, ..c.clone() });
+    }
+    if c.rate > 0.5 {
+        out.push(Case { rate: c.rate / 2.0, ..c.clone() });
+    }
+    if c.pattern != 0 {
+        out.push(Case { pattern: 0, ..c.clone() });
+    }
+    if c.window_s != 0.0 {
+        out.push(Case { window_s: 0.0, ..c.clone() });
+    }
+    out
+}
+
+fn trace_for(c: &Case) -> Vec<Request> {
+    let arrivals = match c.pattern {
+        0 => Arrivals::Poisson { rate: c.rate },
+        1 => Arrivals::Step { base: c.rate, surge: 4.0 * c.rate,
+                              start_frac: 0.5, end_frac: 0.75 },
+        _ => Arrivals::CompressedDiurnal { rate: c.rate, amplitude: 0.7,
+                                           period_s: 0.0 },
+    };
+    generate_trace(arrivals, LengthDist::ShareGpt, RequestClass::Online,
+                   c.duration_s, c.seed)
+}
+
+struct Setup {
+    h: HorizonConfig,
+    profile: DemandProfile,
+    template: Vec<ecoserve::sim::ServerSpec>,
+    cfg: PlanConfig,
+    ci: CiSignal,
+    slo: Slo,
+}
+
+fn setup(c: &Case, drift_tol: f64) -> Setup {
+    let m = ecoserve::models::llm("llama-8b").unwrap();
+    let h = HorizonConfig { epoch_s: c.epoch_s, window_s: c.window_s,
+                            drift_tol, ..Default::default() };
+    let epoch = h.effective_epoch(c.duration_s);
+    let tr = trace_for(c);
+    let profile = DemandProfile::build(&mut SliceSource::new(&tr), epoch,
+                                       h.window_s, c.duration_s);
+    Setup {
+        h,
+        profile,
+        template: homogeneous_fleet("A100-40", 5, m, 2048),
+        cfg: PlanConfig { cpu_reuse: false, ..Default::default() },
+        ci: CiSignal::flat(261.0),
+        slo: Slo { ttft_s: 2.0, tpot_s: 0.2 },
+    }
+}
+
+/// For all epoch sequences: the memoizing warm planner at the default
+/// knobs (`drift_tol = 0`, cuts off) produces a bitwise-identical
+/// [`ecoserve::sim::FleetSchedule`] to cold per-epoch re-solves.
+#[test]
+fn warm_schedule_is_bitwise_cold_for_all_epoch_sequences() {
+    let m = ecoserve::models::llm("llama-8b").unwrap();
+    forall(
+        &PropConfig { cases: 40, ..Default::default() },
+        gen_case,
+        shrink_case,
+        |c| {
+            let s = setup(c, 0.0);
+            let mut cold = IncrementalPlanner::disabled();
+            let a = plan_schedule_from_profile(m, &s.profile, &s.template,
+                                               &s.cfg, &s.ci, s.slo, &s.h,
+                                               c.duration_s, &mut cold);
+            let mut warm = IncrementalPlanner::from_horizon(&s.h);
+            let b = plan_schedule_from_profile(m, &s.profile, &s.template,
+                                               &s.cfg, &s.ci, s.slo, &s.h,
+                                               c.duration_s, &mut warm);
+            if a != b {
+                return Err(format!(
+                    "warm schedule diverged from cold ({} vs {} events, \
+                     stats {:?})",
+                    b.events.len(), a.events.len(), warm.stats()));
+            }
+            let ws = warm.stats();
+            if ws.full_solves + ws.warm_hits != ws.epochs
+                || ws.drift_skips != 0 || ws.cut_patches != 0 {
+                return Err(format!("default-knob epochs leaked into a \
+                                    tolerance path: {ws:?}"));
+            }
+            if cold.stats().full_solves != cold.stats().epochs {
+                return Err(format!("cold planner reused a solve: {:?}",
+                                   cold.stats()));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// For all epoch sequences and tolerances: an independent replay of the
+/// decision ladder over the same [`DemandProfile`] predicts the planner's
+/// epoch accounting exactly — in particular, every drift skip it takes is
+/// one the replay licenses (relative L1 within tolerance of the *anchor*
+/// demand, the histogram the plan was last solved for), and every epoch
+/// the replay says drifted past the tolerance is a real re-solve.
+#[test]
+fn drift_early_out_never_skips_past_the_tolerance() {
+    let m = ecoserve::models::llm("llama-8b").unwrap();
+    forall(
+        &PropConfig { cases: 40, ..Default::default() },
+        gen_case,
+        shrink_case,
+        |c| {
+            let s = setup(c, c.drift_tol);
+            let mut warm = IncrementalPlanner::from_horizon(&s.h);
+            let sched = plan_schedule_from_profile(m, &s.profile, &s.template,
+                                                   &s.cfg, &s.ci, s.slo, &s.h,
+                                                   c.duration_s, &mut warm);
+            if !sched.events.windows(2).all(|w| w[0].t <= w[1].t) {
+                return Err("schedule events out of order".into());
+            }
+
+            // Independent ladder replay (flat CI, cuts off): exact match
+            // -> hit; within-tolerance L1 drift vs the anchor -> skip
+            // (anchor unchanged); anything else -> full solve, re-anchor.
+            let epoch = s.h.effective_epoch(c.duration_s);
+            let window = if s.h.window_s > 0.0 { s.h.window_s } else { epoch };
+            let mut anchor: Option<(u64, SliceAccum)> = None;
+            let mut epochs = 0usize;
+            let mut full = 0usize;
+            let mut hits = 0usize;
+            let mut skips = 0usize;
+            for k in 1..=s.profile.epochs() {
+                let acc = s.profile.epoch_accum(k);
+                if acc.total() == 0 {
+                    continue; // scheduler plans nothing on an empty window
+                }
+                epochs += 1;
+                let w_bits = window.min(k as f64 * epoch).to_bits();
+                let licensed = match &anchor {
+                    Some((aw, aacc)) if *aw == w_bits && aacc == acc => {
+                        hits += 1;
+                        true
+                    }
+                    Some((aw, aacc)) if *aw == w_bits && {
+                        let denom =
+                            aacc.total().max(acc.total()).max(1) as f64;
+                        aacc.l1_delta(acc) as f64 / denom <= c.drift_tol
+                    } => {
+                        skips += 1;
+                        true
+                    }
+                    _ => false,
+                };
+                if !licensed {
+                    full += 1;
+                    anchor = Some((w_bits, acc.clone()));
+                }
+            }
+            let ws = warm.stats();
+            if (ws.epochs, ws.full_solves, ws.warm_hits, ws.drift_skips)
+                != (epochs, full, hits, skips) || ws.cut_patches != 0 {
+                return Err(format!(
+                    "ladder mismatch: planner {ws:?} vs replay (epochs \
+                     {epochs}, full {full}, hits {hits}, skips {skips})"));
+            }
+            Ok(())
+        },
+    );
+}
