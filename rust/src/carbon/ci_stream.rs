@@ -1,0 +1,428 @@
+//! File-backed grid-CI signals: a chunked [`CiStream`] reader that serves
+//! `at`/`mean_over` lookups from a sliding window over a CSV trace, so a
+//! year of 5-minute grid data feeds the planner's epoch-aligned forecast
+//! without materializing 100k+ samples per shard. The in-memory
+//! [`CiTrace`] stays the representation for synthetic profiles —
+//! bitwise-unchanged — and [`CiTrace::from_file`] materializes the same
+//! file through the same parser, which is exactly what the
+//! streaming-vs-materialized parity test leans on.
+//!
+//! File schema: CSV lines `t_seconds,ci_g_per_kwh` with optional `#`
+//! comments and an optional alphabetic header. Timestamps must be strictly
+//! increasing on a uniform step; the file's recorded span is mapped onto
+//! the run duration (`step_s = duration / n`), mirroring how
+//! `CompressedDiurnal` compresses a solar day onto a short trace and how
+//! `TraceRescale::fit_duration` maps request traces. CI files are curated
+//! inputs, not noisy production logs, so any malformed line fails the open
+//! — there is no skip-and-count mode on the carbon side.
+//!
+//! Concurrency: the window sits behind a `Mutex` because `&SimConfig`
+//! (which owns the `CiSignal`) is shared across shard worker threads;
+//! cloning a `CiStream` (as `sub_config` does per shard) shares the
+//! immutable metadata but gives the clone a fresh window, so shards never
+//! contend on one reader.
+//!
+//! Determinism: every query is answered with arithmetic identical to
+//! [`CiTrace`]'s (same index clamps, same overlap-weight loop, same
+//! in-order mean fold), so `CiSignal::Streaming` and a materialized
+//! `CiSignal::Trace` over the same file agree bitwise.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, Lines};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use super::intensity::{CiTrace, Region};
+
+/// Immutable facts about a validated CI file, shared by all clones of a
+/// [`CiStream`].
+#[derive(Debug)]
+pub struct CiFileMeta {
+    pub path: String,
+    pub region: Region,
+    /// Effective sample step in *simulation* seconds: `duration / n`.
+    pub step_s: f64,
+    /// Native step recorded in the file, seconds.
+    pub raw_step_s: f64,
+    /// Number of samples in the file.
+    pub n: usize,
+    /// Mean CI over the file (in-order fold, matching [`CiTrace::mean`]).
+    pub mean: f64,
+}
+
+/// Summary of one validating scan over a CI file.
+struct CiScan {
+    raw_step_s: f64,
+    n: usize,
+    mean: f64,
+}
+
+/// Stream every sample of the file through `sink` while validating the
+/// schema (strictly increasing timestamps, uniform step, finite
+/// non-negative CI). O(1) memory — the probe passes a no-op sink, the
+/// materializer pushes into a `Vec`.
+fn scan_ci_file<F: FnMut(f64)>(path: &str, mut sink: F) -> Result<CiScan> {
+    let f = File::open(path).map_err(|e| anyhow!("ci file {path}: {e}"))?;
+    let mut awaiting_first = true;
+    let mut line_no = 0u64;
+    let mut prev_t: Option<f64> = None;
+    let mut step: Option<f64> = None;
+    let mut n = 0usize;
+    let mut sum = 0.0f64;
+    for line in BufReader::new(f).lines() {
+        let line = line.map_err(|e| {
+            anyhow!("ci file {path}: line {}: {e}", line_no + 1)
+        })?;
+        line_no += 1;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') {
+            continue;
+        }
+        let mut fields = t.split(',').map(str::trim);
+        let (tf, cf) = (fields.next().unwrap_or(""),
+                        fields.next().unwrap_or(""));
+        let ts: f64 = match tf.parse() {
+            Ok(v) => v,
+            Err(_) if awaiting_first
+                && tf.chars().any(|c| c.is_ascii_alphabetic()) => {
+                awaiting_first = false;
+                continue; // header row
+            }
+            Err(_) => bail!("ci file {path}: line {line_no}: bad \
+                             timestamp '{tf}'"),
+        };
+        awaiting_first = false;
+        let ci: f64 = cf.parse().map_err(|_| {
+            anyhow!("ci file {path}: line {line_no}: bad ci value '{cf}'")
+        })?;
+        ensure!(ts.is_finite() && ci.is_finite() && ci >= 0.0,
+                "ci file {path}: line {line_no}: non-finite or negative \
+                 sample");
+        if let Some(p) = prev_t {
+            let gap = ts - p;
+            ensure!(gap > 0.0,
+                    "ci file {path}: line {line_no}: timestamps must be \
+                     strictly increasing");
+            match step {
+                None => step = Some(gap),
+                Some(s) => ensure!(
+                    (gap - s).abs() <= s * 1e-6,
+                    "ci file {path}: line {line_no}: non-uniform step \
+                     ({gap} vs {s})"),
+            }
+        }
+        prev_t = Some(ts);
+        n += 1;
+        sum += ci;
+        sink(ci);
+    }
+    ensure!(n >= 2, "ci file {path}: needs >= 2 samples, got {n}");
+    Ok(CiScan { raw_step_s: step.unwrap(), n, mean: sum / n as f64 })
+}
+
+/// Materialize a CI file into an in-memory [`CiTrace`], mapping the file's
+/// extent onto `duration_s` exactly as [`CiStream::open`] does — the
+/// reference the parity test compares the chunked reader against, and a
+/// convenient bridge for small files.
+impl CiTrace {
+    pub fn from_file(path: &str, region: Region, duration_s: f64)
+        -> Result<CiTrace>
+    {
+        ensure!(duration_s > 0.0,
+                "ci file {path}: duration must be positive");
+        let mut values = Vec::new();
+        let scan = scan_ci_file(path, |v| values.push(v))?;
+        Ok(CiTrace { region, step_s: duration_s / scan.n as f64, values })
+    }
+}
+
+/// Sliding-window state over the file: `values` caches samples
+/// `[start, start + values.len())` and the reader (when open) is
+/// positioned to yield sample `next_idx == start + values.len()`.
+struct CiWindow {
+    start: usize,
+    values: Vec<f64>,
+    reader: Option<CiRecords>,
+    next_idx: usize,
+}
+
+/// Forward-only sample iterator over the file, skipping the same
+/// non-sample lines the validating scan does.
+struct CiRecords {
+    lines: Lines<BufReader<File>>,
+    awaiting_first: bool,
+}
+
+impl CiRecords {
+    fn open(path: &str) -> CiRecords {
+        let f = File::open(path).unwrap_or_else(|e| {
+            panic!("ci file {path}: vanished after validation: {e}")
+        });
+        CiRecords { lines: BufReader::new(f).lines(), awaiting_first: true }
+    }
+
+    /// Next CI sample. The file validated at open time, so running out of
+    /// lines or failing to parse mid-run means the file changed under us —
+    /// a caller error worth a loud panic, not a silent fallback.
+    fn next_ci(&mut self, path: &str) -> f64 {
+        loop {
+            let line = match self.lines.next() {
+                Some(Ok(l)) => l,
+                Some(Err(e)) => panic!(
+                    "ci file {path}: unreadable after validation: {e}"),
+                None => panic!(
+                    "ci file {path}: truncated after validation"),
+            };
+            let t = line.trim();
+            if t.is_empty() || t.starts_with('#') {
+                continue;
+            }
+            let mut fields = t.split(',').map(str::trim);
+            let tf = fields.next().unwrap_or("");
+            if self.awaiting_first && tf.parse::<f64>().is_err() {
+                self.awaiting_first = false;
+                continue; // header row
+            }
+            self.awaiting_first = false;
+            let cf = fields.next().unwrap_or("");
+            return cf.parse().unwrap_or_else(|_| {
+                panic!("ci file {path}: sample changed after validation")
+            });
+        }
+    }
+}
+
+/// Chunked file-backed CI signal. See the module docs.
+pub struct CiStream {
+    meta: Arc<CiFileMeta>,
+    win: Mutex<CiWindow>,
+}
+
+impl CiStream {
+    /// Validate `path` and build a stream whose file extent maps onto
+    /// `duration_s` (`step_s = duration / n`, matching
+    /// [`CiTrace::from_file`] on the same arguments bitwise).
+    pub fn open(path: &str, region: Region, duration_s: f64)
+        -> Result<CiStream>
+    {
+        ensure!(duration_s > 0.0,
+                "ci file {path}: duration must be positive");
+        let scan = scan_ci_file(path, |_| {})?;
+        let meta = CiFileMeta {
+            path: path.to_string(),
+            region,
+            step_s: duration_s / scan.n as f64,
+            raw_step_s: scan.raw_step_s,
+            n: scan.n,
+            mean: scan.mean,
+        };
+        Ok(CiStream {
+            meta: Arc::new(meta),
+            win: Mutex::new(CiWindow {
+                start: 0,
+                values: Vec::new(),
+                reader: None,
+                next_idx: 0,
+            }),
+        })
+    }
+
+    pub fn meta(&self) -> &CiFileMeta {
+        &self.meta
+    }
+
+    /// Run `f` over the cached samples `[lo, hi]` (inclusive, already
+    /// clamped to the file extent by the callers). Forward queries advance
+    /// the persistent reader; a backward query rewinds to the file head
+    /// and skips forward — O(file) only on rewind, O(1) amortized for the
+    /// sim/planner's monotone scans.
+    fn with_range<R>(&self, lo: usize, hi: usize,
+                     f: impl FnOnce(&[f64]) -> R) -> R {
+        debug_assert!(lo <= hi && hi < self.meta.n);
+        let mut w = self.win.lock().unwrap();
+        if w.reader.is_none() || lo < w.start {
+            w.reader = Some(CiRecords::open(&self.meta.path));
+            w.next_idx = 0;
+            w.start = 0;
+            w.values.clear();
+        }
+        // Drop cached samples below lo; skip-read if the cache runs dry
+        // before reaching it.
+        if w.start < lo {
+            let cached_drop = (lo - w.start).min(w.values.len());
+            w.values.drain(..cached_drop);
+            w.start += cached_drop;
+            if w.values.is_empty() {
+                while w.next_idx < lo {
+                    let reader = w.reader.as_mut().unwrap();
+                    reader.next_ci(&self.meta.path);
+                    w.next_idx += 1;
+                }
+                w.start = w.next_idx;
+            }
+        }
+        // Extend the cache through hi.
+        while w.start + w.values.len() <= hi {
+            let reader = w.reader.as_mut().unwrap();
+            let v = reader.next_ci(&self.meta.path);
+            w.values.push(v);
+            w.next_idx += 1;
+        }
+        f(&w.values[..=(hi - w.start)])
+    }
+
+    /// CI at time t — arithmetic identical to [`CiTrace::at`].
+    pub fn at(&self, t_s: f64) -> f64 {
+        let idx = ((t_s / self.meta.step_s) as usize).min(self.meta.n - 1);
+        self.with_range(idx, idx, |v| v[0])
+    }
+
+    /// Mean CI over the whole file, precomputed at open.
+    pub fn mean(&self) -> f64 {
+        self.meta.mean
+    }
+
+    /// Length-weighted mean over `[t0, t1]` — arithmetic identical to
+    /// [`CiTrace::mean_over`], served from the window.
+    pub fn mean_over(&self, t0_s: f64, t1_s: f64) -> f64 {
+        if t1_s <= t0_s {
+            return self.at(t0_s);
+        }
+        let step_s = self.meta.step_s;
+        let last = self.meta.n - 1;
+        let lo = ((t0_s / step_s) as usize).min(last);
+        let hi = ((t1_s / step_s) as usize).min(last).max(lo);
+        self.with_range(lo, hi, |vals| {
+            let mut weighted = 0.0;
+            for (k, &v) in vals.iter().enumerate() {
+                let i = lo + k;
+                let s0 = i as f64 * step_s;
+                let s1 = if i == last { f64::INFINITY } else { s0 + step_s };
+                let w = (t1_s.min(s1) - t0_s.max(s0)).max(0.0);
+                weighted += w * v;
+            }
+            weighted / (t1_s - t0_s)
+        })
+    }
+
+    pub fn step_s(&self) -> f64 {
+        self.meta.step_s
+    }
+}
+
+impl Clone for CiStream {
+    /// Clones share the immutable metadata but get a fresh window — each
+    /// shard's `sub_config` reads the file through its own descriptor.
+    fn clone(&self) -> CiStream {
+        CiStream {
+            meta: Arc::clone(&self.meta),
+            win: Mutex::new(CiWindow {
+                start: 0,
+                values: Vec::new(),
+                reader: None,
+                next_idx: 0,
+            }),
+        }
+    }
+}
+
+impl std::fmt::Debug for CiStream {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("CiStream")
+            .field("path", &self.meta.path)
+            .field("n", &self.meta.n)
+            .field("step_s", &self.meta.step_s)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn tmp(name: &str, contents: &str) -> String {
+        let path = std::env::temp_dir()
+            .join(format!("ecoserve-ci-test-{name}-{}", std::process::id()));
+        let mut f = File::create(&path).unwrap();
+        f.write_all(contents.as_bytes()).unwrap();
+        path.to_string_lossy().into_owned()
+    }
+
+    fn sample_file(name: &str) -> String {
+        let mut s = String::from("# synthetic duck curve\nt_s,ci\n");
+        for i in 0..96 {
+            let hour = i as f64 * 0.25;
+            let ci = 300.0 - 120.0
+                * (-((hour - 13.0) / 3.5).powi(2)).exp();
+            s.push_str(&format!("{},{ci}\n", i * 900));
+        }
+        tmp(name, &s)
+    }
+
+    #[test]
+    fn stream_matches_materialized_trace_bitwise() {
+        let p = sample_file("parity");
+        let dur = 240.0;
+        let tr = CiTrace::from_file(&p, Region::California, dur).unwrap();
+        let st = CiStream::open(&p, Region::California, dur).unwrap();
+        assert_eq!(st.meta().n, 96);
+        assert_eq!(st.step_s().to_bits(), tr.step_s.to_bits());
+        assert_eq!(st.mean().to_bits(), tr.mean().to_bits());
+        // Forward scan, point lookups past the extent, backward seeks,
+        // and overlap-weighted windows all agree bitwise.
+        for k in 0..30 {
+            let t = k as f64 * 9.7;
+            assert_eq!(st.at(t).to_bits(), tr.at(t).to_bits(), "at({t})");
+        }
+        assert_eq!(st.at(1e9).to_bits(), tr.at(1e9).to_bits());
+        assert_eq!(st.at(3.0).to_bits(), tr.at(3.0).to_bits()); // rewind
+        for (a, b) in [(0.0, 240.0), (10.0, 20.0), (117.3, 119.9),
+                       (230.0, 500.0), (42.0, 42.0)] {
+            assert_eq!(st.mean_over(a, b).to_bits(),
+                       tr.mean_over(a, b).to_bits(), "mean_over({a},{b})");
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn clones_get_independent_windows() {
+        let p = sample_file("clone");
+        let a = CiStream::open(&p, Region::California, 100.0).unwrap();
+        let _ = a.at(90.0); // advance a's window to the tail
+        let b = a.clone();
+        // The clone starts cold and still answers head-of-file queries.
+        assert_eq!(b.at(0.0).to_bits(), a.at(0.0).to_bits());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn malformed_ci_files_fail_at_open() {
+        for (name, body) in [
+            ("short", "t,ci\n0,200\n"),
+            ("nonuniform", "0,200\n900,210\n2700,220\n"),
+            ("backwards", "0,200\n900,210\n450,220\n"),
+            ("garbage", "0,200\n900,duck\n1800,220\n"),
+            ("negative", "0,200\n900,-5\n1800,220\n"),
+        ] {
+            let p = tmp(name, body);
+            assert!(CiStream::open(&p, Region::California, 100.0).is_err(),
+                    "{name} should fail validation");
+            std::fs::remove_file(&p).ok();
+        }
+    }
+
+    #[test]
+    fn header_and_comments_are_skipped() {
+        let p = tmp("hdr", "# provenance note\nt_s,ci_g_per_kwh\n\
+                            0,100\n900,200\n1800,300\n");
+        let st = CiStream::open(&p, Region::California, 90.0).unwrap();
+        assert_eq!(st.meta().n, 3);
+        assert_eq!(st.meta().raw_step_s, 900.0);
+        assert_eq!(st.step_s(), 30.0);
+        assert_eq!(st.at(0.0), 100.0);
+        assert_eq!(st.at(89.0), 300.0);
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -224,14 +224,21 @@ impl CiTrace {
 }
 
 /// A grid-CI signal as the simulator consumes it: a flat scalar (the
-/// regional average) or a time-varying [`CiTrace`]. Keeping both under one
-/// type lets every sim/scenario knob accept either without special cases.
+/// regional average), a time-varying in-memory [`CiTrace`], or a chunked
+/// file-backed [`CiStream`](crate::carbon::ci_stream::CiStream). Keeping
+/// all three under one type lets every sim/scenario knob accept any
+/// without special cases.
 #[derive(Debug, Clone)]
 pub enum CiSignal {
     /// Constant CI, gCO₂e/kWh.
     Flat(f64),
     /// Time-varying CI sampled from a trace (clamped at the extent).
     Trace(CiTrace),
+    /// File-backed CI served from a sliding window — year-scale grid
+    /// traces without materializing (see [`crate::carbon::ci_stream`]).
+    /// Answers every query with arithmetic bitwise-identical to a
+    /// materialized [`CiTrace`] over the same file.
+    Streaming(crate::carbon::ci_stream::CiStream),
 }
 
 impl CiSignal {
@@ -244,6 +251,7 @@ impl CiSignal {
         match self {
             CiSignal::Flat(ci) => *ci,
             CiSignal::Trace(tr) => tr.at(t_s),
+            CiSignal::Streaming(st) => st.at(t_s),
         }
     }
 
@@ -251,6 +259,7 @@ impl CiSignal {
         match self {
             CiSignal::Flat(ci) => *ci,
             CiSignal::Trace(tr) => tr.mean(),
+            CiSignal::Streaming(st) => st.mean(),
         }
     }
 
@@ -259,6 +268,7 @@ impl CiSignal {
         match self {
             CiSignal::Flat(ci) => *ci,
             CiSignal::Trace(tr) => tr.mean_over(t0_s, t1_s),
+            CiSignal::Streaming(st) => st.mean_over(t0_s, t1_s),
         }
     }
 
@@ -267,6 +277,7 @@ impl CiSignal {
         match self {
             CiSignal::Flat(_) => None,
             CiSignal::Trace(tr) => Some(tr.step_s),
+            CiSignal::Streaming(st) => Some(st.step_s()),
         }
     }
 }

@@ -2,12 +2,14 @@
 //! grid carbon-intensity traces, component aging, and lifecycle/upgrade
 //! schedules. See DESIGN.md §3 and paper §3-4.
 
+pub mod ci_stream;
 pub mod embodied;
 pub mod intensity;
 pub mod lifecycle;
 pub mod operational;
 pub mod reliability;
 
+pub use ci_stream::CiStream;
 pub use embodied::{gpu_embodied, host_embodied, platform_embodied, Breakdown};
 pub use intensity::{CiTrace, Region};
 pub use operational::{busy_energy_j, device_power, dynamic_power, idle_power,

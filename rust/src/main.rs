@@ -14,7 +14,9 @@ commands:
             run the cluster sim
   report    --gpu SKU                               embodied-carbon breakdown
   sweep     --all | --scenario A,B [--list] [--threads N] [--seed S]
-            [--duration SECS] [--ci-trace flat|diurnal|week] [--epoch SECS]
+            [--duration SECS] [--ci-trace flat|diurnal|week] [--ci-file F]
+            [--trace FILE] [--trace-dialect azure|burstgpt|auto]
+            [--trace-errors skip|fail] [--trace-rate R] [--epoch SECS]
             [--shards N] [--coldstart SECS] [--keepalive POLICY]
             [--out FILE] [--json]
             run registered end-to-end scenarios in parallel (--epoch
@@ -22,9 +24,12 @@ commands:
             runs every scenario on the sharded runtime with up to N shard
             threads, byte-identical for any N; --coldstart forces a
             provisioning boot delay; --keepalive forces a drain policy:
-            immediate, fixed:SECS, or hybrid[:BIN_S:PCT:MAX_S]; long-haul
-            scale scenarios join --all only when --duration is given, or
-            when selected by name)
+            immediate, fixed:SECS, or hybrid[:BIN_S:PCT:MAX_S]; --trace
+            replays a production request-trace csv as every scenario's
+            workload, fit to --duration, with the dialect sniffed from the
+            file unless pinned; --ci-file streams a grid-CI csv as every
+            scenario's carbon signal; long-haul scale scenarios join --all
+            only when --duration is given, or when selected by name)
   scale     [--scenario production-day] [--durations A,B] [--shards 1,2,4]
             [--seed S] [--out FILE] [--json]
             simulator-capacity study: sweep trace duration x shard count,
@@ -66,6 +71,49 @@ fn ci_profile_flag(args: &Args) -> anyhow::Result<Option<ecoserve::scenarios::Ci
         Some(other) => anyhow::bail!(
             "unknown --ci-trace '{other}' (expected flat, diurnal, or week)"),
     }
+}
+
+/// Parse the `--trace FILE` replay family: `--trace-dialect
+/// azure|burstgpt|auto` (default: sniff the header/field shape),
+/// `--trace-errors skip|fail` (default: skip and count malformed lines),
+/// `--trace-rate R` (default 1.0; the recorded span is always fit to
+/// `--duration`). The file is probed up front so a malformed trace under
+/// the fail policy exits with a clean line-numbered error before any
+/// scenario runs; under the skip policy the skip/repair counts are echoed
+/// to stderr.
+fn trace_flag(args: &Args)
+    -> anyhow::Result<Option<ecoserve::scenarios::TraceOverride>> {
+    use ecoserve::scenarios::TraceOverride;
+    use ecoserve::workload::trace::{self, TraceDialect, TraceErrorPolicy};
+    let Some(path) = args.opt_str("trace") else {
+        for flag in ["trace-dialect", "trace-errors", "trace-rate"] {
+            anyhow::ensure!(!args.has(flag), "--{flag} requires --trace FILE");
+        }
+        return Ok(None);
+    };
+    let dialect = match args.opt_str("trace-dialect") {
+        None | Some("auto") => trace::sniff_dialect(path)?,
+        Some(f) => TraceDialect::from_flag(f).ok_or_else(|| anyhow::anyhow!(
+            "unknown --trace-dialect '{f}' (expected azure, burstgpt, or \
+             auto)"))?,
+    };
+    let errors = match args.opt_str("trace-errors") {
+        None => TraceErrorPolicy::Skip,
+        Some(f) => TraceErrorPolicy::from_flag(f).ok_or_else(|| anyhow::anyhow!(
+            "unknown --trace-errors '{f}' (expected skip or fail)"))?,
+    };
+    let rate = args.f64("trace-rate", 1.0);
+    anyhow::ensure!(rate.is_finite() && rate > 0.0,
+                    "--trace-rate must be a positive finite multiplier");
+    let stats = trace::probe(path, dialect, errors)?;
+    anyhow::ensure!(stats.records > 0, "trace {path}: no replayable records");
+    if stats.skipped_lines > 0 || stats.repaired_timestamps > 0 {
+        eprintln!("trace {path}: {} records ({} malformed lines skipped, \
+                   {} timestamps repaired)",
+                  stats.records, stats.skipped_lines,
+                  stats.repaired_timestamps);
+    }
+    Ok(Some(TraceOverride { path: path.to_string(), dialect, errors, rate }))
 }
 
 /// Parse the `--keepalive POLICY` grammar: `immediate`, `fixed:SECS`, or
@@ -162,6 +210,18 @@ fn sweep(args: &Args) -> anyhow::Result<()> {
     } else {
         None
     };
+    let ci_file = match args.opt_str("ci-file") {
+        None => None,
+        Some(p) => {
+            // Validate schema + monotonic uniform timestamps up front so a
+            // malformed CI file exits with a clean error before any
+            // scenario runs; the region and duration here are metadata
+            // only and never reach the sweep.
+            ecoserve::carbon::CiStream::open(
+                p, ecoserve::carbon::intensity::Region::California, 1.0)?;
+            Some(p.to_string())
+        }
+    };
     let cfg = SweepConfig {
         threads: args.usize("threads", 0),
         seed: args.u64("seed", 42),
@@ -171,6 +231,8 @@ fn sweep(args: &Args) -> anyhow::Result<()> {
         shards,
         coldstart_s,
         keepalive: keepalive_flag(args)?,
+        trace: trace_flag(args)?,
+        ci_file,
     };
     anyhow::ensure!(cfg.duration_s.is_finite() && cfg.duration_s > 0.0,
                     "--duration must be a positive finite number of seconds");
@@ -589,6 +651,9 @@ fn simulate(args: &Args) -> anyhow::Result<()> {
         Some(CiProfile::CompressedDiurnal) => Some((duration, 2)),
         Some(CiProfile::CompressedWeek) => Some((duration / 7.0, 8)),
         Some(CiProfile::Flat) | None => None,
+        Some(CiProfile::TraceFile { .. }) => unreachable!(
+            "--ci-trace only names synthetic profiles; file streaming is \
+             sweep --ci-file"),
     };
     if let Some((period_s, periods)) = day {
         let mut trace =

@@ -1,14 +1,16 @@
-//! The shipped scenario registry: 14 named end-to-end design points
+//! The shipped scenario registry: 16 named end-to-end design points
 //! spanning the paper's evaluation axes — latency-optimized online
 //! serving, offline batch, the mixed 4R deployment, Splitwise-style
 //! prefill/decode disaggregation, multi-region carbon intensity,
 //! legacy-hardware Reuse, temporal shifting, carbon-aware routing, the
 //! rolling-horizon autoscaling pair (diurnal tracking + demand surge),
 //! the honest-energy pair (`keepalive-surge` cold-start/keep-alive
-//! tension + `nonlinear-power` per-phase DVFS), and the production-scale
+//! tension + `nonlinear-power` per-phase DVFS), the production-scale
 //! pair (`production-day` / `production-week`) that exercises the
-//! streaming core at multi-million-request trace lengths. Each wires
-//! config → planner → solver → sim → carbon into one
+//! streaming core at multi-million-request trace lengths, and the
+//! trace-replay pair (`replay-day` / `replay-year`) that replays the
+//! committed production request + grid-CI fixtures through the full
+//! stack. Each wires config → planner → solver → sim → carbon into one
 //! [`super::ScenarioOutcome`].
 
 use super::{CiProfile, FleetPolicy, Scenario, ScenarioSpec, WorkloadSpec};
@@ -17,7 +19,15 @@ use crate::planner::horizon::HorizonConfig;
 use crate::sim::{KeepAlivePolicy, Router};
 use crate::strategies::Strategy;
 use crate::workload::slo::Slo;
-use crate::workload::{Arrivals, LengthDist, RequestClass};
+use crate::workload::{Arrivals, LengthDist, RequestClass, TraceDialect,
+                      TraceErrorPolicy, TraceRescale};
+
+/// Absolute path of a committed trace fixture. Resolved from the crate
+/// root at compile time so sweeps work from any working directory; the
+/// path never enters outcome JSON, so reports stay machine-portable.
+fn fixture(name: &str) -> String {
+    format!("{}/fixtures/traces/{name}", env!("CARGO_MANIFEST_DIR"))
+}
 
 /// A registry entry: static metadata plus a spec constructor.
 struct DesignPoint {
@@ -381,6 +391,86 @@ fn production_week() -> ScenarioSpec {
     }
 }
 
+fn replay_day() -> ScenarioSpec {
+    // Replay reality: one anonymized production day — Azure-LLM-style
+    // chat arrivals online, BurstGPT-style batch arrivals offline — with
+    // the grid CI streamed from a committed CAISO-shaped duck-curve file
+    // instead of a synthetic profile. Token counts come from the traces
+    // (the LengthDist fields are inert), `fit_duration` compresses the
+    // recorded day into the requested `--duration`, and the registry
+    // fixtures run under the fail-fast error policy so a corrupted
+    // checkout aborts loudly rather than silently skipping lines. The
+    // burstiness extras panel (`burst_cv_replay` vs `burst_cv_synthetic`)
+    // scores how well a rate-matched Poisson generator reproduces the
+    // replayed arrival process.
+    ScenarioSpec {
+        workloads: vec![
+            WorkloadSpec {
+                arrivals: Arrivals::Trace {
+                    path: fixture("azure_llm_day.csv"),
+                    dialect: TraceDialect::Azure,
+                    rescale: TraceRescale::default(),
+                    errors: TraceErrorPolicy::Fail,
+                },
+                lengths: LengthDist::ShareGpt,
+                class: RequestClass::Online,
+            },
+            WorkloadSpec {
+                arrivals: Arrivals::Trace {
+                    path: fixture("burstgpt_day.csv"),
+                    dialect: TraceDialect::BurstGpt,
+                    rescale: TraceRescale::default(),
+                    errors: TraceErrorPolicy::Fail,
+                },
+                lengths: LengthDist::LongBench,
+                class: RequestClass::Offline,
+            },
+        ],
+        slo: Some(Slo { ttft_s: 2.0, tpot_s: 0.2 }),
+        ci_profile: CiProfile::TraceFile {
+            path: fixture("caiso_ci_day.csv"),
+        },
+        reprovision: Some(HorizonConfig {
+            headroom: 1.5,
+            min_active: 2,
+            ..Default::default()
+        }),
+        ..base_spec("llama-8b", Region::California, Strategy::EcoFull)
+    }
+}
+
+fn replay_year() -> ScenarioSpec {
+    // Long-haul replay: the same recorded day looped at 3x the recorded
+    // rate so an explicit long `--duration` stands in for sustained
+    // production traffic — the densified replay keeps the recorded
+    // microstructure (bursts stay bursts) while the rolling-horizon
+    // controller re-provisions against the streamed CI file for the whole
+    // run. Gated behind `--duration` like `production-week`.
+    ScenarioSpec {
+        workloads: vec![WorkloadSpec {
+            arrivals: Arrivals::Trace {
+                path: fixture("azure_llm_day.csv"),
+                dialect: TraceDialect::Azure,
+                rescale: TraceRescale { fit_duration: true, rate: 3.0 },
+                errors: TraceErrorPolicy::Fail,
+            },
+            lengths: LengthDist::ShareGpt,
+            class: RequestClass::Online,
+        }],
+        slo: Some(Slo { ttft_s: 2.0, tpot_s: 0.2 }),
+        ci_profile: CiProfile::TraceFile {
+            path: fixture("caiso_ci_day.csv"),
+        },
+        reprovision: Some(HorizonConfig {
+            epoch_s: 300.0,
+            headroom: 1.5,
+            min_active: 2,
+            ..Default::default()
+        }),
+        ..base_spec("llama-8b", Region::California, Strategy::EcoFull)
+    }
+}
+
 /// All shipped design points, in a stable order (seeds do not depend on
 /// this order — see [`super::scenario_seed`]).
 pub fn registry() -> Vec<Box<dyn Scenario>> {
@@ -454,6 +544,21 @@ pub fn registry() -> Vec<Box<dyn Scenario>> {
                           re-provisioning; multi-million-request weeks at \
                           long --duration (Llama-8B)",
             build: production_week,
+            long_haul: true,
+        }),
+        point("replay-day",
+              "anonymized production-day replay: Azure-LLM chat + \
+               BurstGPT batch request traces with streamed CAISO \
+               duck-curve grid CI and a burstiness validation panel \
+               (Llama-8B)",
+              replay_day),
+        Box::new(DesignPoint {
+            name: "replay-year",
+            description: "long-haul trace replay: the recorded day \
+                          densified 3x under rolling-horizon \
+                          re-provisioning against the streamed CI file; \
+                          gated behind --duration (Llama-8B)",
+            build: replay_year,
             long_haul: true,
         }),
     ]
@@ -548,6 +653,48 @@ mod tests {
         assert!(spec.reprovision.is_some());
         assert!(spec.workloads.iter().any(|wl| matches!(
             wl.arrivals, Arrivals::Week { .. })));
+    }
+
+    #[test]
+    fn replay_specs_are_wired() {
+        let d = by_names(&["replay-day"]).unwrap().remove(0);
+        assert!(!d.long_haul(), "replay-day must run in default sweeps");
+        let spec = d.spec();
+        assert!(spec.reprovision.is_some(),
+                "replay-day must feed streamed CI into the planner");
+        assert!(matches!(spec.ci_profile, CiProfile::TraceFile { .. }));
+        assert_eq!(spec.workloads.len(), 2);
+        for w in &spec.workloads {
+            match &w.arrivals {
+                Arrivals::Trace { path, rescale, errors, .. } => {
+                    assert!(std::path::Path::new(path).is_file(),
+                            "missing committed fixture {path}");
+                    assert!(rescale.fit_duration);
+                    assert_eq!(*errors, TraceErrorPolicy::Fail,
+                               "registry fixtures must fail loud");
+                }
+                other => panic!("replay-day workload is not a trace: {other:?}"),
+            }
+        }
+        let dialects: Vec<TraceDialect> = spec.workloads.iter()
+            .map(|w| match &w.arrivals {
+                Arrivals::Trace { dialect, .. } => *dialect,
+                _ => unreachable!(),
+            }).collect();
+        assert!(dialects.contains(&TraceDialect::Azure));
+        assert!(dialects.contains(&TraceDialect::BurstGpt));
+        if let CiProfile::TraceFile { path } = &spec.ci_profile {
+            assert!(std::path::Path::new(path).is_file(),
+                    "missing committed CI fixture {path}");
+        }
+
+        let y = by_names(&["replay-year"]).unwrap().remove(0);
+        assert!(y.long_haul(), "replay-year is gated behind --duration");
+        let spec = y.spec();
+        assert!(matches!(spec.ci_profile, CiProfile::TraceFile { .. }));
+        assert!(spec.workloads.iter().any(|w| matches!(
+            &w.arrivals,
+            Arrivals::Trace { rescale, .. } if rescale.rate > 1.0)));
     }
 
     #[test]

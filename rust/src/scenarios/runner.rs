@@ -11,7 +11,8 @@
 //! byte-identical while planning cost scales with demand *change*, not
 //! epoch count.
 
-use super::{scenario_seed, CiProfile, Overrides, Scenario, ScenarioOutcome};
+use super::{scenario_seed, CiProfile, Overrides, Scenario, ScenarioOutcome,
+            TraceOverride};
 use crate::util::json::Json;
 use crate::util::table::{fnum, Table};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -43,13 +44,21 @@ pub struct SweepConfig {
     /// Force a keep-alive policy on every scenario (the `--keepalive`
     /// knob); `None` keeps each scenario's own policy.
     pub keepalive: Option<crate::sim::KeepAlivePolicy>,
+    /// Replace every scenario's workload mix with a single replayed
+    /// request trace (the `--trace` knob); `None` keeps each scenario's
+    /// own workloads.
+    pub trace: Option<TraceOverride>,
+    /// Replace every scenario's CI profile with a streamed grid-CI file
+    /// (the `--ci-file` knob); wins over `ci_profile` when both are set.
+    pub ci_file: Option<String>,
 }
 
 impl Default for SweepConfig {
     fn default() -> Self {
         SweepConfig { threads: 0, seed: 42, duration_s: 180.0,
                       ci_profile: None, epoch_s: None, shards: None,
-                      coldstart_s: None, keepalive: None }
+                      coldstart_s: None, keepalive: None, trace: None,
+                      ci_file: None }
     }
 }
 
@@ -145,11 +154,13 @@ pub fn run_sweep(scenarios: &[Box<dyn Scenario>], cfg: &SweepConfig) -> SweepRep
                 let sc = &scenarios[i];
                 let seed = scenario_seed(cfg.seed, sc.name());
                 let ov = Overrides {
-                    ci_profile: cfg.ci_profile,
+                    ci_profile: cfg.ci_profile.clone(),
                     epoch_s: cfg.epoch_s,
                     shards: cfg.shards,
                     coldstart_s: cfg.coldstart_s,
                     keepalive: cfg.keepalive,
+                    trace: cfg.trace.clone(),
+                    ci_file: cfg.ci_file.clone(),
                 };
                 let outcome = sc.run_with(seed, cfg.duration_s, &ov);
                 *slots[i].lock().unwrap() = Some(outcome);

@@ -9,9 +9,12 @@
 pub mod demand;
 pub mod slo;
 pub mod stream;
+pub mod trace;
 
 pub use stream::{ArrivalSource, GeneratorSource, MergedSource, PartitionSource,
                  SliceSource};
+pub use trace::{Burstiness, TraceDialect, TraceErrorPolicy, TraceRescale,
+                TraceSource, TraceStats};
 
 use crate::util::rng::Rng;
 
@@ -80,8 +83,9 @@ impl LengthDist {
     }
 }
 
-/// Arrival process.
-#[derive(Debug, Clone, Copy)]
+/// Arrival process. No longer `Copy`: the [`Arrivals::Trace`] variant
+/// owns its file path — clone at use sites instead.
+#[derive(Debug, Clone)]
 pub enum Arrivals {
     /// Memoryless with the given rate (req/s).
     Poisson { rate: f64 },
@@ -106,6 +110,17 @@ pub enum Arrivals {
     /// weekend days 5–6 at `rate · weekend_factor` — one production week
     /// for the scale scenarios.
     Week { rate: f64, amplitude: f64, weekend_factor: f64 },
+    /// Replay a recorded production trace from a CSV file — not a
+    /// generator at all: it streams through [`trace::TraceSource`], which
+    /// provides its own timestamps and token lengths (the workload's
+    /// `LengthDist` is ignored). See [`trace`] for dialects, the error
+    /// policy, and rescaling.
+    Trace {
+        path: String,
+        dialect: TraceDialect,
+        rescale: TraceRescale,
+        errors: TraceErrorPolicy,
+    },
 }
 
 impl Arrivals {
@@ -142,6 +157,9 @@ impl Arrivals {
                 let hour = (t_s / day_len).fract() * 24.0;
                 rng.exp(diurnal_rate(base, amplitude, hour))
             }
+            Arrivals::Trace { .. } => unreachable!(
+                "trace workloads replay through TraceSource, never through \
+                 a generator gap"),
         }
     }
 }

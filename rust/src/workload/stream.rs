@@ -54,6 +54,9 @@ pub struct GeneratorSource {
 impl GeneratorSource {
     pub fn new(arrivals: Arrivals, lengths: LengthDist, class: RequestClass,
                duration_s: f64, seed: u64) -> GeneratorSource {
+        assert!(!matches!(arrivals, Arrivals::Trace { .. }),
+                "Arrivals::Trace replays through TraceSource, not a \
+                 generator (see workload::trace)");
         GeneratorSource {
             arrivals,
             lengths,
@@ -106,6 +109,14 @@ impl<S: ArrivalSource> MergedSource<S> {
     pub fn new(mut sources: Vec<S>) -> MergedSource<S> {
         let heads = sources.iter_mut().map(|s| s.next_request()).collect();
         MergedSource { sources, heads, next_id: 0 }
+    }
+}
+
+/// Forwarding impl so heterogeneous component sets (generators mixed with
+/// trace replays) can run through [`MergedSource<Box<dyn ArrivalSource>>`].
+impl ArrivalSource for Box<dyn ArrivalSource + '_> {
+    fn next_request(&mut self) -> Option<Request> {
+        (**self).next_request()
     }
 }
 
@@ -221,9 +232,10 @@ mod tests {
             (Arrivals::Week { rate: 8.0, amplitude: 0.6,
                               weekend_factor: 0.5 }, 7),
         ] {
-            let eager = generate_trace(arrivals, LengthDist::ShareGpt,
+            let eager = generate_trace(arrivals.clone(), LengthDist::ShareGpt,
                                        RequestClass::Online, 90.0, seed);
-            let lazy = GeneratorSource::new(arrivals, LengthDist::ShareGpt,
+            let lazy = GeneratorSource::new(arrivals.clone(),
+                                            LengthDist::ShareGpt,
                                             RequestClass::Online, 90.0, seed)
                 .materialize();
             assert_eq!(eager.len(), lazy.len(), "{arrivals:?}");

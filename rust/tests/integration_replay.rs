@@ -1,0 +1,215 @@
+//! Replay suite over the committed production-trace fixtures: the
+//! streaming trace reader must agree byte-for-byte with the materialized
+//! path and be invariant in threads and shard counts, rate rescaling must
+//! be exact, the chunked CI-file stream must agree bitwise with the
+//! materialized `CiTrace`, the burstiness extras panel must land with the
+//! golden key set, and the malformed fixtures must produce *counted*
+//! skips/repairs — never panics — under the skip policy and line-numbered
+//! errors under fail-fast.
+
+use ecoserve::carbon::intensity::{CiTrace, Region};
+use ecoserve::carbon::CiStream;
+use ecoserve::scenarios::{catalog, run_spec_materialized, run_sweep,
+                          scenario_seed, SweepConfig, TraceOverride};
+use ecoserve::workload::trace::{probe, sniff_dialect};
+use ecoserve::workload::{ArrivalSource, TraceDialect, TraceErrorPolicy,
+                         TraceRescale, TraceSource};
+use ecoserve::workload::RequestClass;
+
+fn fixture(name: &str) -> String {
+    format!("{}/fixtures/traces/{name}", env!("CARGO_MANIFEST_DIR"))
+}
+
+#[test]
+fn replay_scenarios_match_materialized_and_are_shard_invariant() {
+    for name in ["replay-day", "replay-year"] {
+        let sc = catalog::by_names(&[name]).unwrap().remove(0);
+        let seed = scenario_seed(31, name);
+        let streamed = sc.run(seed, 48.0).to_json().to_string();
+        let materialized =
+            run_spec_materialized(name, &sc.spec(), seed, 48.0)
+                .to_json().to_string();
+        assert_eq!(streamed, materialized,
+                   "{name}: streaming and materialized replay diverge");
+    }
+    // Thread count and shard count must not move a byte of the report.
+    let run = |threads, shards| {
+        let sel = catalog::by_names(&["replay-day"]).unwrap();
+        let cfg = SweepConfig { threads, shards, seed: 31, duration_s: 48.0,
+                                ..Default::default() };
+        run_sweep(&sel, &cfg).to_json().to_string()
+    };
+    let reference = run(1, Some(1));
+    assert_eq!(reference, run(8, Some(1)), "threads changed replay bytes");
+    assert_eq!(reference, run(1, Some(4)), "shards changed replay bytes");
+    assert_eq!(reference, run(8, Some(4)),
+               "threads x shards changed replay bytes");
+}
+
+#[test]
+fn rescale_rate_is_exact_and_fit_duration_round_trips() {
+    let path = fixture("azure_llm_day.csv");
+    let count = |rate: f64, duration_s: f64| -> (usize, f64) {
+        let mut src = TraceSource::open(
+            &path, TraceDialect::Azure, TraceErrorPolicy::Fail,
+            TraceRescale { fit_duration: true, rate },
+            RequestClass::Online, duration_s).unwrap();
+        let mut n = 0usize;
+        let mut last = 0.0f64;
+        while let Some(r) = src.next_request() {
+            assert!(r.arrival_s >= last, "arrivals must be monotone");
+            assert!(r.arrival_s < duration_s, "arrival past the duration");
+            last = r.arrival_s;
+            n += 1;
+        }
+        (n, last)
+    };
+    let (base, last) = count(1.0, 100.0);
+    assert!(base > 1_000, "fixture too small: {base} arrivals");
+    // fit_duration maps the recorded span onto [0, duration): the stream
+    // fills the window at any duration, same arrival count either way.
+    assert!(last > 95.0, "replay did not cover the duration: last {last}");
+    let (base_long, _) = count(1.0, 10_000.0);
+    // The half-open [0, duration) cut can move the single span-end record
+    // in or out depending on how `span * (duration / span)` rounds.
+    assert!((base as i64 - base_long as i64).abs() <= 1,
+            "arrival count depends on duration: {base} vs {base_long}");
+    // The credit accumulator makes integer rates exact, not statistical.
+    let (doubled, _) = count(2.0, 100.0);
+    assert_eq!(doubled, base * 2, "2x rate must emit exactly 2x arrivals");
+    let (halved, _) = count(0.5, 100.0);
+    let expect = base / 2;
+    assert!(halved == expect || halved == expect + 1,
+            "0.5x rate: got {halved}, expected ~{expect}");
+}
+
+#[test]
+fn streamed_ci_file_matches_materialized_trace_bitwise() {
+    let path = fixture("caiso_ci_day.csv");
+    let dur = 300.0;
+    let tr = CiTrace::from_file(&path, Region::California, dur).unwrap();
+    let st = CiStream::open(&path, Region::California, dur).unwrap();
+    assert_eq!(st.meta().n, 288);
+    assert_eq!(st.step_s().to_bits(), tr.step_s.to_bits());
+    assert_eq!(st.mean().to_bits(), tr.mean().to_bits());
+    for k in 0..200 {
+        let t = k as f64 * 1.7;
+        assert_eq!(st.at(t).to_bits(), tr.at(t).to_bits(), "at({t})");
+    }
+    for (a, b) in [(0.0, dur), (12.5, 13.5), (250.0, 1e6), (7.0, 7.0),
+                   (299.0, 301.0)] {
+        assert_eq!(st.mean_over(a, b).to_bits(), tr.mean_over(a, b).to_bits(),
+                   "mean_over({a},{b})");
+    }
+    // Backward seek after a tail read (the rewind path).
+    let _ = st.at(299.0);
+    assert_eq!(st.at(1.0).to_bits(), tr.at(1.0).to_bits());
+}
+
+#[test]
+fn replay_day_extras_carry_the_golden_burstiness_panel() {
+    let sel = catalog::by_names(&["replay-day"]).unwrap();
+    let cfg = SweepConfig { threads: 1, seed: 5, duration_s: 48.0,
+                            ..Default::default() };
+    let o = run_sweep(&sel, &cfg).outcomes.remove(0);
+    let keys: Vec<&str> = o.extras.keys().map(|k| k.as_str()).collect();
+    assert_eq!(keys,
+               vec!["burst_cv_replay", "burst_cv_synthetic",
+                    "burst_peak_to_mean_replay",
+                    "burst_peak_to_mean_synthetic", "carbon_kg_static",
+                    "emb_kg_static", "op_kg_static",
+                    "provisioned_server_hours_static",
+                    "slo_attainment_static", "trace_records",
+                    "trace_repaired_timestamps", "trace_skipped_lines",
+                    "ttft_p90_s_static"],
+               "replay-day extras drifted from the golden key set");
+    // The committed fixtures are clean and bursty: the replayed CV must
+    // exceed the rate-matched Poisson baseline, and the health counters
+    // must report a full parse.
+    assert!(o.extras["burst_cv_replay"] > o.extras["burst_cv_synthetic"],
+            "replayed trace should be burstier than matched Poisson");
+    assert_eq!(o.extras["trace_skipped_lines"], 0.0);
+    assert_eq!(o.extras["trace_repaired_timestamps"], 0.0);
+    assert!(o.extras["trace_records"] >= 3_000.0,
+            "both fixtures should contribute records");
+    assert_eq!(o.completed, o.requests, "replayed requests lost");
+}
+
+#[test]
+fn trace_and_ci_file_overrides_rewire_any_scenario() {
+    let mk = |threads| {
+        let sel = catalog::by_names(&["online-latency"]).unwrap();
+        let cfg = SweepConfig {
+            threads,
+            seed: 9,
+            duration_s: 36.0,
+            trace: Some(TraceOverride {
+                path: fixture("burstgpt_day.csv"),
+                dialect: TraceDialect::BurstGpt,
+                errors: TraceErrorPolicy::Fail,
+                rate: 1.0,
+            }),
+            ci_file: Some(fixture("caiso_ci_day.csv")),
+            ..Default::default()
+        };
+        run_sweep(&sel, &cfg)
+    };
+    let r = mk(1);
+    let o = &r.outcomes[0];
+    assert!(o.requests > 500, "override replay too quiet: {}", o.requests);
+    assert!(o.extras.contains_key("burst_cv_replay"),
+            "trace override must light up the burstiness panel");
+    // The streamed duck curve replaces the flat default: the effective CI
+    // differs from the region's flat average.
+    assert!((o.ci - Region::California.avg_ci()).abs() > 1.0,
+            "ci file override did not take effect");
+    assert_eq!(r.to_json().to_string(), mk(4).to_json().to_string(),
+               "override replay must stay thread-invariant");
+}
+
+#[test]
+fn malformed_fixtures_are_counted_under_skip_and_fatal_under_fail() {
+    let cases = [
+        // (fixture, bad lines skipped, timestamps repaired, fail-fast errors)
+        ("malformed_truncated.csv", 2, 0, true),
+        ("malformed_nonmonotonic.csv", 0, 3, false),
+        ("malformed_badfields.csv", 3, 0, true),
+    ];
+    for (name, skipped, repaired, fail_errors) in cases {
+        let path = fixture(name);
+        let st = probe(&path, TraceDialect::Azure, TraceErrorPolicy::Skip)
+            .unwrap_or_else(|e| panic!("{name}: skip policy must not error: {e}"));
+        assert_eq!(st.skipped_lines, skipped, "{name}: skip count");
+        assert_eq!(st.repaired_timestamps, repaired, "{name}: repair count");
+        assert!(st.records >= 45, "{name}: good rows lost ({})", st.records);
+        let fail = probe(&path, TraceDialect::Azure, TraceErrorPolicy::Fail);
+        if fail_errors {
+            let e = fail.expect_err(
+                &format!("{name}: fail policy must reject bad lines"));
+            assert!(e.to_string().contains("line"),
+                    "{name}: error should cite a line number: {e}");
+        } else {
+            // Non-monotonic stamps are repaired-and-counted under *both*
+            // policies — never an error.
+            assert_eq!(fail.unwrap().repaired_timestamps, repaired,
+                       "{name}: fail policy must still repair");
+        }
+        // A skip-policy replay of a malformed file still serves requests.
+        let mut src = TraceSource::open(
+            &path, TraceDialect::Azure, TraceErrorPolicy::Skip,
+            TraceRescale::default(), RequestClass::Online, 30.0).unwrap();
+        let mut n = 0usize;
+        while src.next_request().is_some() {
+            n += 1;
+        }
+        assert!(n >= 40, "{name}: replay under skip lost requests ({n})");
+    }
+}
+
+#[test]
+fn committed_fixtures_sniff_to_their_documented_dialects() {
+    assert_eq!(sniff_dialect(&fixture("azure_llm_day.csv")).unwrap(),
+               TraceDialect::Azure);
+    assert_eq!(sniff_dialect(&fixture("burstgpt_day.csv")).unwrap(),
+               TraceDialect::BurstGpt);
+}

@@ -1,0 +1,34 @@
+#!/usr/bin/env python3
+"""Assert the peak RSS recorded by `/usr/bin/time -v` stays under a cap.
+
+Usage: check_rss.py TIME_V_FILE MAX_RSS_KB
+
+Shared by the scale-smoke, scale-matrix, and replay-determinism CI jobs:
+each wraps the binary under test in `/usr/bin/time -v`, captures stderr,
+and hands the transcript here. Exits nonzero (with the offending numbers)
+when the "Maximum resident set size" line is missing or over the cap, so
+the memory promise of the streaming core is a hard gate, not a log line.
+"""
+
+import sys
+
+
+def main(argv):
+    if len(argv) != 3:
+        sys.exit(f"usage: {argv[0]} TIME_V_FILE MAX_RSS_KB")
+    path, cap_kb = argv[1], int(argv[2])
+    rss_kb = None
+    with open(path) as f:
+        for line in f:
+            if "Maximum resident set size" in line:
+                rss_kb = int(line.rsplit(":", 1)[1].strip())
+    if rss_kb is None:
+        sys.exit(f"{path}: no 'Maximum resident set size' line — "
+                 "was the command wrapped in /usr/bin/time -v?")
+    print(f"peak RSS: {rss_kb} KB (cap {cap_kb} KB)")
+    if rss_kb > cap_kb:
+        sys.exit(f"peak RSS {rss_kb} KB exceeds cap {cap_kb} KB")
+
+
+if __name__ == "__main__":
+    main(sys.argv)
