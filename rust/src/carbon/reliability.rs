@@ -27,10 +27,18 @@ pub fn ssd_effective_age(years: f64, write_duty: f64) -> f64 {
 /// meaningfully increase) per the cited IRPS/Cielo studies.
 pub const DRAM_WEAROUT_YEARS: f64 = 10.0;
 
+/// Deployed years at `util` before DRAM retention errors meaningfully
+/// increase. Retention aging scales with activity (half-weighted, floored
+/// at 10% to keep near-idle hosts finite) — the single source of truth for
+/// both [`dram_is_safe`] and [`max_safe_host_lifetime`], which previously
+/// duplicated (and could drift on) this formula.
+pub fn dram_safe_lifetime_years(util: f64) -> f64 {
+    DRAM_WEAROUT_YEARS * 0.5 / util.clamp(0.0, 1.0).max(0.1)
+}
+
 /// Whether DRAM at `util` remains reliability-safe after `years`.
 pub fn dram_is_safe(years: f64, util: f64) -> bool {
-    // Retention aging scales with activity; low cloud utilization defers it.
-    years * util.clamp(0.0, 1.0).max(0.1) / 0.5 < DRAM_WEAROUT_YEARS
+    years < dram_safe_lifetime_years(util)
 }
 
 /// Max host lifetime (years) such that every component stays within its
@@ -40,11 +48,7 @@ pub fn max_safe_host_lifetime(util: f64, cpu_budget_years: f64,
     let u = util.clamp(0.0, 1.0);
     let cpu_lt = cpu_budget_years / (0.08 + 0.4 * u);
     let ssd_lt = if u <= 0.0 { f64::INFINITY } else { ssd_budget_years / u };
-    let mut lt = cpu_lt.min(ssd_lt);
-    // DRAM constraint.
-    let dram_lt = DRAM_WEAROUT_YEARS * 0.5 / u.max(0.1);
-    lt = lt.min(dram_lt);
-    lt
+    cpu_lt.min(ssd_lt).min(dram_safe_lifetime_years(u))
 }
 
 #[cfg(test)]
@@ -78,5 +82,17 @@ mod tests {
     fn heavy_use_limits_lifetime() {
         let lt = max_safe_host_lifetime(1.0, 5.0, 2.5);
         assert!(lt < 6.0, "max lifetime {lt}");
+    }
+
+    #[test]
+    fn dram_safety_check_and_lifetime_bound_agree() {
+        // Both callers must sit on the same wear formula: safe strictly
+        // below the bound, unsafe at and beyond it.
+        for util in [0.0, 0.05, 0.2, 0.5, 1.0] {
+            let lt = dram_safe_lifetime_years(util);
+            assert!(dram_is_safe(lt - 1e-9, util), "util {util}");
+            assert!(!dram_is_safe(lt, util), "util {util}");
+            assert!(max_safe_host_lifetime(util, 1e9, 1e9) <= lt + 1e-12);
+        }
     }
 }

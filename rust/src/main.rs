@@ -13,7 +13,8 @@ commands:
   simulate  --model NAME --gpus N --gpu SKU --rate R [--ci-trace diurnal]
             run the cluster sim
   report    --gpu SKU                               embodied-carbon breakdown
-  sweep     --all | --scenario A,B [--list] [--threads N] [--seed S]
+  sweep     --all | --scenario A,B | --pack core|replay|failure
+            [--list] [--threads N] [--seed S]
             [--duration SECS] [--ci-trace flat|diurnal|week] [--ci-file F]
             [--trace FILE] [--trace-dialect azure|burstgpt|auto]
             [--trace-errors skip|fail] [--trace-rate R] [--epoch SECS]
@@ -29,7 +30,9 @@ commands:
             workload, fit to --duration, with the dialect sniffed from the
             file unless pinned; --ci-file streams a grid-CI csv as every
             scenario's carbon signal; long-haul scale scenarios join --all
-            only when --duration is given, or when selected by name)
+            only when --duration is given, or when selected by name;
+            --pack sweeps one registry group: core design points, replay
+            trace studies, or the failure fault-injection pack)
   scale     [--scenario production-day] [--durations A,B] [--shards 1,2,4]
             [--seed S] [--out FILE] [--json]
             simulator-capacity study: sweep trace duration x shard count,
@@ -161,16 +164,39 @@ fn sweep(args: &Args) -> anyhow::Result<()> {
         println!("registered scenarios:");
         for s in registry() {
             let tag = if s.long_haul() { " [long-haul]" } else { "" };
-            println!("  {:<16} {}{tag}", s.name(), s.description());
+            println!("  {:<22} [{:<7}] {}{tag}", s.name(), s.pack().name(),
+                     s.description());
         }
         return Ok(());
     }
 
-    let scenarios = if args.bool("all") || !args.has("scenario") {
-        // Long-haul scale scenarios only join a full sweep when the
-        // caller sized it explicitly; `--scenario` selection by name
-        // always runs them.
+    let pack = match args.opt_str("pack") {
+        None => None,
+        Some(p) => Some(ecoserve::scenarios::Pack::parse(p).ok_or_else(|| {
+            anyhow::anyhow!("unknown --pack '{p}' (core, replay, failure)")
+        })?),
+    };
+    let scenarios = if args.has("scenario") {
+        anyhow::ensure!(pack.is_none(),
+                        "--pack and --scenario are mutually exclusive");
+        let spec = args.str("scenario", "");
+        let names: Vec<&str> = spec.split(',')
+            .map(|s| s.trim())
+            .filter(|s| !s.is_empty())
+            .collect();
+        anyhow::ensure!(!names.is_empty(), "empty --scenario list");
+        catalog::by_names(&names).ok_or_else(|| {
+            anyhow::anyhow!("unknown scenario in '{spec}' (try `ecoserve sweep --list`)")
+        })?
+    } else {
+        // Full sweep, optionally restricted to one `--pack` group.
+        // Long-haul scale scenarios only join when the caller sized the
+        // sweep explicitly; `--scenario` selection by name always runs
+        // them.
         let mut all = registry();
+        if let Some(p) = pack {
+            all.retain(|s| s.pack() == p);
+        }
         if !args.has("duration") {
             let skipped: Vec<&str> = all.iter()
                 .filter(|s| s.long_haul())
@@ -182,17 +208,8 @@ fn sweep(args: &Args) -> anyhow::Result<()> {
             }
             all.retain(|s| !s.long_haul());
         }
+        anyhow::ensure!(!all.is_empty(), "no scenarios selected");
         all
-    } else {
-        let spec = args.str("scenario", "");
-        let names: Vec<&str> = spec.split(',')
-            .map(|s| s.trim())
-            .filter(|s| !s.is_empty())
-            .collect();
-        anyhow::ensure!(!names.is_empty(), "empty --scenario list");
-        catalog::by_names(&names).ok_or_else(|| {
-            anyhow::anyhow!("unknown scenario in '{spec}' (try `ecoserve sweep --list`)")
-        })?
     };
 
     let epoch_s = if args.has("epoch") {

@@ -299,7 +299,15 @@ pub fn sample_topk(logits: &[f32], temperature: f32, k: usize, u: f64) -> i32 {
         return argmax(logits);
     }
     let mut idx: Vec<usize> = (0..logits.len()).collect();
-    idx.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+    // A NaN logit (overflowed kernel, bad checkpoint) used to abort the
+    // decode via partial_cmp().unwrap(); key it as -inf so it sorts out of
+    // the top-k window instead. (Plain total_cmp would rank +NaN *above*
+    // +inf and poison the softmax.)
+    let key = |i: usize| {
+        let v = logits[i];
+        if v.is_nan() { f32::NEG_INFINITY } else { v }
+    };
+    idx.sort_by(|&a, &b| key(b).total_cmp(&key(a)));
     idx.truncate(k);
     let max = logits[idx[0]];
     let weights: Vec<f64> = idx.iter()
@@ -353,5 +361,15 @@ mod tests {
         assert_eq!(sample_topk(&logits, 1.0, 2, 0.0), 1);
         let t = sample_topk(&logits, 1.0, 2, 0.999);
         assert!(t == 1 || t == 3);
+    }
+
+    #[test]
+    fn topk_survives_nan_logits() {
+        // Regression: the descending sort used partial_cmp().unwrap(), so
+        // one NaN logit aborted decoding. total_cmp sorts NaN last, out of
+        // the top-k window.
+        let logits = [0.1f32, f32::NAN, 2.0, 0.5];
+        let t = sample_topk(&logits, 1.0, 2, 0.0);
+        assert!(t == 2 || t == 3, "NaN must not enter the top-k: {t}");
     }
 }

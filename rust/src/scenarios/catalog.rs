@@ -13,10 +13,10 @@
 //! stack. Each wires config → planner → solver → sim → carbon into one
 //! [`super::ScenarioOutcome`].
 
-use super::{CiProfile, FleetPolicy, Scenario, ScenarioSpec, WorkloadSpec};
+use super::{CiProfile, FleetPolicy, Pack, Scenario, ScenarioSpec, WorkloadSpec};
 use crate::carbon::intensity::Region;
 use crate::planner::horizon::HorizonConfig;
-use crate::sim::{KeepAlivePolicy, Router};
+use crate::sim::{FaultPlan, KeepAlivePolicy, Router};
 use crate::strategies::Strategy;
 use crate::workload::slo::Slo;
 use crate::workload::{Arrivals, LengthDist, RequestClass, TraceDialect,
@@ -37,6 +37,8 @@ struct DesignPoint {
     /// Sized for explicit long `--duration` runs; skipped by `--all`
     /// sweeps that did not pass a duration.
     long_haul: bool,
+    /// `sweep --pack` group.
+    pack: Pack,
 }
 
 impl Scenario for DesignPoint {
@@ -54,6 +56,10 @@ impl Scenario for DesignPoint {
 
     fn long_haul(&self) -> bool {
         self.long_haul
+    }
+
+    fn pack(&self) -> Pack {
+        self.pack
     }
 }
 
@@ -75,6 +81,7 @@ fn base_spec(model: &'static str, region: Region, strategy: Strategy)
         coldstart_s: 0.0,
         keepalive: KeepAlivePolicy::Immediate,
         decode_freq: 1.0,
+        faults: FaultPlan::default(),
     }
 }
 
@@ -471,11 +478,78 @@ fn replay_year() -> ScenarioSpec {
     }
 }
 
+fn failure_storm() -> ScenarioSpec {
+    // Correlated infrastructure failure under a grid emergency: three
+    // server deaths land mid-trace (killing batches mid-flight) while the
+    // primary grid's CI spikes 2.5x over the same window — the
+    // fault-injection layer's flagship. Orphaned work re-routes to the
+    // survivors (server 0 always lives, so nothing parks), and the
+    // fault-free twin in extras (`*_nofault`) prices the storm in carbon
+    // and SLO terms. Fault times are fractions of the run duration.
+    ScenarioSpec {
+        workloads: vec![WorkloadSpec {
+            arrivals: Arrivals::Poisson { rate: 8.0 },
+            lengths: LengthDist::ShareGpt,
+            class: RequestClass::Online,
+        }],
+        slo: Some(Slo { ttft_s: 2.0, tpot_s: 0.2 }),
+        ci_profile: CiProfile::CompressedDiurnal,
+        faults: FaultPlan::new()
+            .server_death(0.45, 1)
+            .server_death(0.50, 2)
+            .server_death(0.55, 3)
+            .ci_spike(Region::California, 0.45, 0.65, 2.5),
+        ..base_spec("llama-8b", Region::California, Strategy::EcoFull)
+    }
+}
+
+fn region_outage() -> ScenarioSpec {
+    // A whole grid drops out: the half of a two-region fleet pinned to
+    // the dirty Californian grid dies at 30% of the trace and returns at
+    // 55%, spilling its arrivals onto the clean SE-North survivors. The
+    // carbon-greedy router absorbs the spill (JSQ baseline in extras);
+    // the `*_nofault` twin isolates what the outage cost in attainment
+    // and recovery wait.
+    ScenarioSpec {
+        workloads: vec![WorkloadSpec {
+            arrivals: Arrivals::Poisson { rate: 8.0 },
+            lengths: LengthDist::ShareGpt,
+            class: RequestClass::Online,
+        }],
+        slo: Some(Slo { ttft_s: 2.0, tpot_s: 0.2 }),
+        fleet: FleetPolicy::TwoRegion { low: Region::California },
+        router: Router::CarbonGreedy,
+        faults: FaultPlan::new()
+            .region_outage(Region::California, 0.30, 0.55),
+        ..base_spec("llama-8b", Region::SwedenNorth, Strategy::EcoFull)
+    }
+}
+
+fn hetero_disaggregation() -> ScenarioSpec {
+    // GreenLLM-style heterogeneous PD split: H100 prefill in front of a
+    // decode tier recycled from the oldest catalog GPU that still clears
+    // the component-reliability screens (carbon::reliability) at decode
+    // utilization — old silicon stays useful where bandwidth, not
+    // compute, is the binding resource.
+    ScenarioSpec {
+        workloads: vec![WorkloadSpec {
+            arrivals: Arrivals::Poisson { rate: 6.0 },
+            lengths: LengthDist::ShareGpt,
+            class: RequestClass::Online,
+        }],
+        slo: Some(Slo { ttft_s: 2.0, tpot_s: 0.2 }),
+        fleet: FleetPolicy::HeteroPd,
+        router: Router::Jsq,
+        ..base_spec("llama-8b", Region::California, Strategy::EcoFull)
+    }
+}
+
 /// All shipped design points, in a stable order (seeds do not depend on
 /// this order — see [`super::scenario_seed`]).
 pub fn registry() -> Vec<Box<dyn Scenario>> {
     let point = |name, description, build| {
-        Box::new(DesignPoint { name, description, build, long_haul: false })
+        Box::new(DesignPoint { name, description, build, long_haul: false,
+                               pack: Pack::Core })
             as Box<dyn Scenario>
     };
     vec![
@@ -545,13 +619,18 @@ pub fn registry() -> Vec<Box<dyn Scenario>> {
                           long --duration (Llama-8B)",
             build: production_week,
             long_haul: true,
+            pack: Pack::Core,
         }),
-        point("replay-day",
-              "anonymized production-day replay: Azure-LLM chat + \
-               BurstGPT batch request traces with streamed CAISO \
-               duck-curve grid CI and a burstiness validation panel \
-               (Llama-8B)",
-              replay_day),
+        Box::new(DesignPoint {
+            name: "replay-day",
+            description: "anonymized production-day replay: Azure-LLM chat + \
+                          BurstGPT batch request traces with streamed CAISO \
+                          duck-curve grid CI and a burstiness validation \
+                          panel (Llama-8B)",
+            build: replay_day,
+            long_haul: false,
+            pack: Pack::Replay,
+        }),
         Box::new(DesignPoint {
             name: "replay-year",
             description: "long-haul trace replay: the recorded day \
@@ -560,6 +639,35 @@ pub fn registry() -> Vec<Box<dyn Scenario>> {
                           gated behind --duration (Llama-8B)",
             build: replay_year,
             long_haul: true,
+            pack: Pack::Replay,
+        }),
+        Box::new(DesignPoint {
+            name: "failure-storm",
+            description: "correlated mid-trace server deaths plus a 2.5x \
+                          grid-CI spike: mid-batch kills, re-routing onto \
+                          survivors, fault-free twin in extras (Llama-8B)",
+            build: failure_storm,
+            long_haul: false,
+            pack: Pack::Failure,
+        }),
+        Box::new(DesignPoint {
+            name: "region-outage",
+            description: "the dirty half of a two-grid fleet drops out for \
+                          a quarter of the trace and arrivals spill onto \
+                          the clean survivors; recovery wait and nofault \
+                          twin in extras (Llama-8B)",
+            build: region_outage,
+            long_haul: false,
+            pack: Pack::Failure,
+        }),
+        Box::new(DesignPoint {
+            name: "hetero-disaggregation",
+            description: "H100 prefill in front of a decode tier recycled \
+                          from the oldest reliability-safe catalog GPU, \
+                          GreenLLM-style (Llama-8B)",
+            build: hetero_disaggregation,
+            long_haul: false,
+            pack: Pack::Failure,
         }),
     ]
 }
@@ -579,9 +687,9 @@ mod tests {
     use super::*;
 
     #[test]
-    fn registry_has_at_least_fourteen_unique_named_scenarios() {
+    fn registry_has_at_least_nineteen_unique_named_scenarios() {
         let r = registry();
-        assert!(r.len() >= 14, "only {} scenarios", r.len());
+        assert!(r.len() >= 19, "only {} scenarios", r.len());
         let mut names: Vec<&str> = r.iter().map(|s| s.name()).collect();
         names.sort_unstable();
         names.dedup();
@@ -695,6 +803,63 @@ mod tests {
         assert!(spec.workloads.iter().any(|w| matches!(
             &w.arrivals,
             Arrivals::Trace { rescale, .. } if rescale.rate > 1.0)));
+    }
+
+    #[test]
+    fn packs_partition_the_registry() {
+        let r = registry();
+        let count = |p: Pack| r.iter().filter(|s| s.pack() == p).count();
+        assert!(count(Pack::Core) >= 14);
+        assert_eq!(count(Pack::Replay), 2);
+        assert_eq!(count(Pack::Failure), 3);
+        assert_eq!(count(Pack::Core) + count(Pack::Replay)
+                       + count(Pack::Failure), r.len());
+        // Non-failure packs must stay fault-free: an empty FaultPlan is
+        // the engine's byte-neutrality guarantee for the legacy points.
+        for s in &r {
+            if s.pack() != Pack::Failure {
+                assert!(s.spec().faults.is_empty(),
+                        "{} injects faults outside the failure pack",
+                        s.name());
+            }
+        }
+        assert_eq!(Pack::parse("failure"), Some(Pack::Failure));
+        assert_eq!(Pack::parse("bogus"), None);
+        assert_eq!(Pack::Replay.name(), "replay");
+    }
+
+    #[test]
+    fn failure_specs_are_wired() {
+        let s = by_names(&["failure-storm"]).unwrap().remove(0);
+        assert_eq!(s.pack(), Pack::Failure);
+        let spec = s.spec();
+        assert!(!spec.faults.is_empty());
+        // Fraction-typed fault times: everything inside the unit run.
+        for f in &spec.faults.faults {
+            match *f {
+                crate::sim::Fault::ServerDeath { t, .. } => {
+                    assert!((0.0..=1.0).contains(&t));
+                }
+                crate::sim::Fault::CiSpike { t0, t1, factor, .. } => {
+                    assert!(t0 < t1 && t1 <= 1.0 && factor > 1.0);
+                }
+                crate::sim::Fault::RegionOutage { t0, t1, .. } => {
+                    assert!(t0 < t1 && t1 <= 1.0);
+                }
+            }
+        }
+
+        let o = by_names(&["region-outage"]).unwrap().remove(0).spec();
+        assert!(matches!(o.fleet,
+                         FleetPolicy::TwoRegion { low: Region::California }));
+        assert!(o.faults.faults.iter().any(|f| matches!(
+            f, crate::sim::Fault::RegionOutage {
+                region: Region::California, .. })));
+
+        let h = by_names(&["hetero-disaggregation"]).unwrap().remove(0).spec();
+        assert_eq!(h.fleet, FleetPolicy::HeteroPd);
+        assert!(h.faults.is_empty(),
+                "hetero-disaggregation studies the fleet, not faults");
     }
 
     #[test]

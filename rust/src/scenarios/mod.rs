@@ -27,9 +27,11 @@ use crate::planner::fused::DemandProfile;
 use crate::planner::horizon::{self, HorizonConfig, IncrementalPlanner};
 use crate::planner::slicing::SliceAccum;
 use crate::planner::{self, PlanConfig};
-use crate::sim::{shard, simulate_stream, DeferralPolicy, FleetSchedule,
-                 KeepAlivePolicy, Router, SimConfig, SimReport};
-use crate::strategies::{fleet_from_plan, sim_config, splitwise_fleet, Strategy};
+use crate::sim::{apply_ci_spikes, shard, simulate_stream, DeferralPolicy,
+                 FaultPlan, FleetSchedule, KeepAlivePolicy, Router, SimConfig,
+                 SimReport};
+use crate::strategies::{fleet_from_plan, hetero_pd_fleet, sim_config,
+                        splitwise_fleet, Strategy};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::workload::slo::{slo_for, Slo};
@@ -65,6 +67,41 @@ pub enum FleetPolicy {
     /// to the `low`-CI region, the rest stay in the primary region — the
     /// substrate for carbon-aware routing studies.
     TwoRegion { low: Region },
+    /// GreenLLM-style heterogeneous disaggregation sized to the plan's
+    /// GPU count: current-generation H100 prefill servers in front of a
+    /// decode tier recycled from the oldest reliability-safe catalog GPU
+    /// ([`crate::strategies::hetero_pd_fleet`]).
+    HeteroPd,
+}
+
+/// Scenario grouping for `sweep --pack`: the core synthetic design
+/// points, the production-trace replays, and the fault-injection /
+/// graceful-degradation studies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Pack {
+    Core,
+    Replay,
+    Failure,
+}
+
+impl Pack {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Pack::Core => "core",
+            Pack::Replay => "replay",
+            Pack::Failure => "failure",
+        }
+    }
+
+    /// Parse a CLI `--pack` argument.
+    pub fn parse(s: &str) -> Option<Pack> {
+        match s {
+            "core" => Some(Pack::Core),
+            "replay" => Some(Pack::Replay),
+            "failure" => Some(Pack::Failure),
+            _ => None,
+        }
+    }
 }
 
 /// Shape of the primary region's CI signal over the simulated trace.
@@ -130,6 +167,12 @@ pub struct ScenarioSpec {
     /// is memory-bound, so downclocking trades a little latency for an
     /// f³ cut in dynamic power). 1.0 = stock clocks, bit-identical.
     pub decode_freq: f64,
+    /// Deterministic fault plan with event times as *fractions* of the
+    /// run duration ([`FaultPlan::scale_to`] converts at run time), so one
+    /// spec stresses any `--duration`. Empty plans inject nothing and are
+    /// byte-neutral; non-empty plans land a fault-free twin run in
+    /// `extras` (`*_nofault`).
+    pub faults: FaultPlan,
 }
 
 /// CLI `--trace` override: replay a request-trace file as the scenario's
@@ -174,6 +217,11 @@ pub trait Scenario: Send + Sync {
     fn name(&self) -> &'static str;
     fn description(&self) -> &'static str;
     fn spec(&self) -> ScenarioSpec;
+
+    /// Which `sweep --pack` group this design point belongs to.
+    fn pack(&self) -> Pack {
+        Pack::Core
+    }
 
     /// Scale scenarios sized for explicit long `--duration` runs (e.g. a
     /// multi-million-request production week). The CLI skips these in
@@ -549,6 +597,14 @@ fn run_spec_with_sources<'a>(name: &str, spec: &ScenarioSpec, seed: u64,
             }
             fleet
         }
+        FleetPolicy::HeteroPd => {
+            // Same 3:1 sizing convention as SplitwisePd, but the decode
+            // tier comes from the recycled-GPU reliability screen.
+            let total = plan.total_gpus().max(4);
+            let prompt = (total * 3 / 4).max(1);
+            let token = (total - prompt).max(1);
+            hetero_pd_fleet(model, prompt, token, 2048)
+        }
     };
     let fleet_servers = fleet.len();
     let mut cfg = sim_config(fleet, &plan, ci);
@@ -618,6 +674,27 @@ fn run_spec_with_sources<'a>(name: &str, spec: &ScenarioSpec, seed: u64,
         cfg.fleet_plan = horizon::plan_schedule_from_profile(
             model, profile, &cfg.servers, &plan_cfg, &cfg.ci, slo, h,
             duration_s, &mut inc);
+    }
+
+    // Fault injection: the spec's fraction-typed fault times scale onto
+    // this run's duration, CI-spike windows transform the (already built)
+    // grid signals, and the server-level faults hand to the engine. The
+    // planner above saw the *unspiked* signals — an outage is an
+    // unforecast event, not something the ILP gets to hedge against. The
+    // pre-fault twin config backs the `*_nofault` extras baseline.
+    let faults = spec.faults.scale_to(duration_s);
+    let nofault_cfg = (!faults.is_empty()).then(|| cfg.clone());
+    if !faults.is_empty() {
+        cfg.ci = apply_ci_spikes(&cfg.ci, spec.region, &faults, duration_s);
+        let signals = std::mem::take(&mut cfg.region_signals);
+        cfg.region_signals = signals
+            .into_iter()
+            .map(|(rg, sig)| {
+                let spiked = apply_ci_spikes(&sig, rg, &faults, duration_s);
+                (rg, spiked)
+            })
+            .collect();
+        cfg.faults = faults;
     }
 
     // The partition is a pure function of the fleet, shared by the main
@@ -727,6 +804,21 @@ fn run_spec_with_sources<'a>(name: &str, spec: &ScenarioSpec, seed: u64,
         extras.insert("ttft_p90_s_static".into(), base.ttft.p90());
         extras.insert("provisioned_server_hours_static".into(),
                       base.provisioned_server_hours);
+    }
+    if let Some(base_cfg) = &nofault_cfg {
+        // Surface the engine's recovery accounting (golden_schema pins the
+        // top-level outcome keys, so fault metrics live in extras) and run
+        // the fault-free twin: same trace, fleet, schedule, and unspiked
+        // grid signals — the degradation cost in carbon and SLO terms.
+        extras.insert("faults_injected".into(), r.faults_injected as f64);
+        extras.insert("jobs_rescheduled".into(), r.jobs_rescheduled as f64);
+        extras.insert("jobs_recovered".into(), r.jobs_recovered as f64);
+        extras.insert("recovery_wait_s".into(), r.recovery_wait_s);
+        let base = run_sim(base_cfg, true);
+        extras.insert("op_kg_nofault".into(), base.op_kg);
+        extras.insert("carbon_kg_nofault".into(), base.carbon_kg());
+        extras.insert("slo_attainment_nofault".into(), base.slo_attainment);
+        extras.insert("ttft_p90_s_nofault".into(), base.ttft.p90());
     }
     if spec.workloads.iter()
         .any(|w| matches!(w.arrivals, Arrivals::Trace { .. }))

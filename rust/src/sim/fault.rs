@@ -1,0 +1,218 @@
+//! Deterministic fault injection for the discrete-event core.
+//!
+//! A [`FaultPlan`] is part of [`super::core::SimConfig`]: server deaths
+//! and region outages expand into ordinary [`super::core::EventQueue`]
+//! events at `Sim::new`, so a faulted run stays byte-identical across
+//! thread and shard counts exactly like a fault-free one. CI spikes are
+//! *signal* faults, not engine events — [`apply_ci_spikes`] transforms a
+//! [`CiSignal`] before the carbon meter is built, which keeps the meter's
+//! interval integrals and the planner's forecasts reading one consistent
+//! (spiked) signal.
+//!
+//! An empty plan is the default everywhere and injects **zero** events:
+//! every pre-existing scenario runs the identical event sequence it ran
+//! before this module existed.
+//!
+//! Scenario specs describe fault times as *fractions of the run duration*
+//! (so `sweep --duration` scales the storm with the trace); the scenario
+//! layer calls [`FaultPlan::scale_to`] once to produce the absolute-time
+//! plan the engine consumes.
+
+use crate::carbon::intensity::{CiSignal, CiTrace, Region};
+
+/// One injected fault. Times are seconds on the sim clock (after
+/// [`FaultPlan::scale_to`]; fractions of the duration before it).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Fault {
+    /// `server` dies abruptly at `t`: its in-flight batch is killed (the
+    /// partially-spent energy stays charged), queued and running jobs are
+    /// re-routed to surviving servers, and the server retires. A death
+    /// aimed at an index beyond the fleet is skipped — plans may be
+    /// written before the planner has sized the fleet.
+    ServerDeath { t: f64, server: usize },
+    /// The grid CI of `region` multiplies by `factor` over `[t0, t1)` —
+    /// a gas-peaker ramp or an interconnect import swing. Applied to the
+    /// signal itself (see [`apply_ci_spikes`]), never to the event queue.
+    CiSpike { region: Region, t0: f64, t1: f64, factor: f64 },
+    /// Every server pinned to `region` dies at `t0` and is re-provisioned
+    /// at `t1`; arrivals spill to the surviving regions in between, and
+    /// jobs that find no live capacity park in the recovery queue.
+    RegionOutage { region: Region, t0: f64, t1: f64 },
+}
+
+/// The fault schedule a run injects. `Default` (empty) is the fault-free
+/// engine, bit for bit.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    pub faults: Vec<Fault>,
+}
+
+impl FaultPlan {
+    pub fn new() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    /// Builder: kill one server at `t`.
+    pub fn server_death(mut self, t: f64, server: usize) -> FaultPlan {
+        self.faults.push(Fault::ServerDeath { t, server });
+        self
+    }
+
+    /// Builder: multiply `region`'s CI by `factor` over `[t0, t1)`.
+    pub fn ci_spike(mut self, region: Region, t0: f64, t1: f64, factor: f64)
+        -> FaultPlan {
+        self.faults.push(Fault::CiSpike { region, t0, t1, factor });
+        self
+    }
+
+    /// Builder: take `region` down over `[t0, t1)`.
+    pub fn region_outage(mut self, region: Region, t0: f64, t1: f64)
+        -> FaultPlan {
+        self.faults.push(Fault::RegionOutage { region, t0, t1 });
+        self
+    }
+
+    /// Interpret every time field as a fraction of `duration_s` and
+    /// return the absolute-time plan. Scenario specs store fractions so
+    /// the same storm shape lands mid-trace at any `--duration`.
+    pub fn scale_to(&self, duration_s: f64) -> FaultPlan {
+        FaultPlan {
+            faults: self.faults.iter()
+                .map(|f| match *f {
+                    Fault::ServerDeath { t, server } =>
+                        Fault::ServerDeath { t: t * duration_s, server },
+                    Fault::CiSpike { region, t0, t1, factor } =>
+                        Fault::CiSpike { region, t0: t0 * duration_s,
+                                         t1: t1 * duration_s, factor },
+                    Fault::RegionOutage { region, t0, t1 } =>
+                        Fault::RegionOutage { region, t0: t0 * duration_s,
+                                              t1: t1 * duration_s },
+                })
+                .collect(),
+        }
+    }
+
+    /// The spike windows this plan holds for `region`.
+    fn spikes_for(&self, region: Region) -> Vec<(f64, f64, f64)> {
+        self.faults.iter()
+            .filter_map(|f| match *f {
+                Fault::CiSpike { region: r, t0, t1, factor } if r == region =>
+                    Some((t0, t1, factor)),
+                _ => None,
+            })
+            .collect()
+    }
+}
+
+/// Apply the plan's CI-spike faults for `region` to `sig`, returning the
+/// spiked signal. With no matching spike the signal is returned untouched
+/// (same bytes), so wiring this into a scenario pipeline is free for
+/// fault-free runs.
+///
+/// The spiked signal is a materialized [`CiTrace`] sampled at the source
+/// signal's own step (60 s for flat signals): unspiked buckets keep their
+/// exact source values, buckets whose start falls in a spike window are
+/// multiplied, and coverage extends one bucket past both the source's own
+/// extent and the last spike window — so the clamped ∞-tail every
+/// [`CiTrace`] carries stays spike-free.
+pub fn apply_ci_spikes(sig: &CiSignal, region: Region, plan: &FaultPlan,
+                       horizon_s: f64) -> CiSignal {
+    let windows = plan.spikes_for(region);
+    if windows.is_empty() {
+        return sig.clone();
+    }
+    let step = sig.step_s().unwrap_or(60.0).max(1e-9);
+    let native_end = match sig {
+        CiSignal::Trace(t) => t.step_s * t.values.len() as f64,
+        _ => 0.0,
+    };
+    let max_t1 = windows.iter().fold(0.0f64, |m, &(_, t1, _)| m.max(t1));
+    let end = horizon_s.max(native_end).max(max_t1) + step;
+    let n = ((end / step).ceil() as usize).max(1) + 1;
+    let values = (0..n)
+        .map(|i| {
+            let t = i as f64 * step;
+            let mut v = sig.at(t);
+            for &(t0, t1, factor) in &windows {
+                if t >= t0 && t < t1 {
+                    v *= factor;
+                }
+            }
+            v
+        })
+        .collect();
+    CiSignal::Trace(CiTrace { region, step_s: step, values })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_to_turns_fractions_into_seconds() {
+        let plan = FaultPlan::new()
+            .server_death(0.5, 2)
+            .region_outage(Region::SwedenNorth, 0.25, 0.75);
+        let abs = plan.scale_to(1000.0);
+        assert_eq!(abs.faults[0], Fault::ServerDeath { t: 500.0, server: 2 });
+        assert_eq!(abs.faults[1],
+                   Fault::RegionOutage { region: Region::SwedenNorth,
+                                         t0: 250.0, t1: 750.0 });
+        // Scaling an empty plan stays empty (and cheap).
+        assert!(FaultPlan::new().scale_to(1000.0).is_empty());
+    }
+
+    #[test]
+    fn spikes_multiply_only_their_window_and_region() {
+        let plan = FaultPlan::new()
+            .ci_spike(Region::California, 100.0, 200.0, 3.0);
+        let flat = CiSignal::flat(100.0);
+        let spiked = apply_ci_spikes(&flat, Region::California, &plan, 300.0);
+        assert_eq!(spiked.at(50.0), 100.0);
+        assert_eq!(spiked.at(150.0), 300.0);
+        assert_eq!(spiked.at(250.0), 100.0);
+        // The clamped tail beyond coverage is unspiked.
+        assert_eq!(spiked.at(1e9), 100.0);
+        // A different region's signal passes through untouched (still the
+        // flat variant — no materialization happened).
+        let other = apply_ci_spikes(&flat, Region::SwedenNorth, &plan, 300.0);
+        assert!(matches!(other, CiSignal::Flat(v) if v == 100.0));
+    }
+
+    #[test]
+    fn spiking_a_trace_keeps_unspiked_buckets_exact() {
+        let base = CiTrace {
+            region: Region::California,
+            step_s: 10.0,
+            values: vec![1.0, 2.0, 3.0, 4.0],
+        };
+        let plan = FaultPlan::new()
+            .ci_spike(Region::California, 10.0, 30.0, 2.0);
+        let sig = CiSignal::Trace(base.clone());
+        let spiked = apply_ci_spikes(&sig, Region::California, &plan, 40.0);
+        assert_eq!(spiked.at(0.0).to_bits(), 1.0f64.to_bits());
+        assert_eq!(spiked.at(10.0), 4.0);
+        assert_eq!(spiked.at(20.0), 6.0);
+        assert_eq!(spiked.at(30.0).to_bits(), 4.0f64.to_bits());
+    }
+
+    #[test]
+    fn spike_window_past_trace_end_does_not_poison_the_tail() {
+        let base = CiTrace {
+            region: Region::California,
+            step_s: 10.0,
+            values: vec![5.0, 5.0],
+        };
+        let plan = FaultPlan::new()
+            .ci_spike(Region::California, 10.0, 100.0, 4.0);
+        let spiked = apply_ci_spikes(&CiSignal::Trace(base),
+                                     Region::California, &plan, 20.0);
+        assert_eq!(spiked.at(50.0), 20.0, "inside the window: spiked");
+        assert_eq!(spiked.at(100.0), 5.0, "window closed: back to base");
+        assert_eq!(spiked.at(1e9), 5.0, "clamped tail: unspiked");
+    }
+}

@@ -37,6 +37,14 @@ pub struct MetricsSink {
     /// High-water mark of concurrently live jobs in the arena — the
     /// streaming core's memory bound (set at finish).
     pub peak_live_jobs: usize,
+    /// Injected faults that actually hit a live (or booting) server.
+    pub faults_injected: usize,
+    /// Jobs displaced off a killed server and re-routed or parked.
+    pub jobs_rescheduled: usize,
+    /// Jobs drained out of the recovery queue after capacity returned.
+    pub jobs_recovered: usize,
+    /// Total seconds recovered jobs spent parked waiting for capacity.
+    pub recovery_wait_s: f64,
 }
 
 impl MetricsSink {
@@ -106,6 +114,10 @@ impl MetricsSink {
             provision_events: self.provision_events,
             decommission_events: self.decommission_events,
             peak_live_jobs: self.peak_live_jobs,
+            faults_injected: self.faults_injected,
+            jobs_rescheduled: self.jobs_rescheduled,
+            jobs_recovered: self.jobs_recovered,
+            recovery_wait_s: self.recovery_wait_s,
             provisioned_server_hours,
             per_server,
         }
@@ -164,6 +176,19 @@ pub struct SimReport {
     /// High-water mark of concurrently live jobs — memory is bounded by
     /// this (plus the fleet), never by `arrivals`.
     pub peak_live_jobs: usize,
+    /// Injected faults ([`crate::sim::fault`]) that hit a live or booting
+    /// server (deaths aimed past the fleet edge or at already-dead
+    /// servers don't count).
+    pub faults_injected: usize,
+    /// Jobs displaced off killed servers and re-routed to survivors (or
+    /// parked, when no survivor existed).
+    pub jobs_rescheduled: usize,
+    /// Jobs that sat in the recovery queue and drained once capacity
+    /// returned.
+    pub jobs_recovered: usize,
+    /// Total seconds recovered jobs spent parked — the latency price of
+    /// degrading gracefully instead of dropping work.
+    pub recovery_wait_s: f64,
     /// Fleet-wide provisioned server-hours — the base embodied and idle
     /// carbon amortize over (static fleets: n_servers · duration).
     pub provisioned_server_hours: f64,

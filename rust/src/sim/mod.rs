@@ -10,7 +10,11 @@
 //!   counters into a [`SimReport`];
 //! - [`carbon_meter`] — operational-carbon observer integrating energy
 //!   against a time-varying [`crate::carbon::intensity::CiSignal`], plus
-//!   per-server provisioned intervals for amortized embodied carbon.
+//!   per-server provisioned intervals for amortized embodied carbon;
+//! - [`fault`] — deterministic fault injection ([`FaultPlan`]: server
+//!   death mid-batch, grid CI spikes, region outages) expanded into
+//!   ordinary queue events, with recovery-queue parking instead of
+//!   panics when a fault removes the last live server.
 //!
 //! Fleets may be *elastic*: a [`FleetSchedule`] (typically produced by the
 //! rolling-horizon controller in [`crate::planner::horizon`]) provisions
@@ -37,6 +41,7 @@
 
 pub mod carbon_meter;
 pub mod core;
+pub mod fault;
 pub mod metrics;
 pub mod policy;
 pub mod server;
@@ -46,6 +51,7 @@ pub use self::carbon_meter::CarbonMeter;
 pub use self::core::{histogram_window, Event, EventKind, EventQueue,
                      FleetAction, FleetEvent, FleetSchedule, KeepAlivePolicy,
                      SimConfig};
+pub use self::fault::{apply_ci_spikes, Fault, FaultPlan};
 pub use self::shard::{simulate_sharded, ShardPlan, ShardSpec, ShardSplitter,
                       MAX_SHARD_SERVERS};
 pub use self::metrics::{MetricsSink, ServerUsage, SimReport};

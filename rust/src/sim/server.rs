@@ -259,6 +259,15 @@ pub struct Server {
     pub(crate) busy_gen: u64,
     pub(crate) in_flight: bool,
     pub(crate) busy_s: f64,
+    /// When the in-flight busy period ends — lets a mid-batch kill trim
+    /// the unserved remainder out of `busy_s` (the energy, already spent,
+    /// stays charged).
+    pub(crate) busy_until: f64,
+    /// A `Drain` arrived while this server was still cold-starting
+    /// (`Pending`): apply it the moment the boot completes instead of
+    /// silently dropping it. Cleared by a later `Provision` — the newest
+    /// scheduling intent wins.
+    pub(crate) drain_pending: bool,
     pub(crate) energy_j: f64,
     /// When this draining server last went idle-empty (warm, awaiting
     /// either reuse or its keep-alive window expiring).
@@ -288,6 +297,8 @@ impl Server {
             busy_gen: 0,
             in_flight: false,
             busy_s: 0.0,
+            busy_until: 0.0,
+            drain_pending: false,
             energy_j: 0.0,
             warm_since: None,
             retire_at: 0.0,
@@ -475,6 +486,7 @@ impl<'a> Sim<'a> {
         s.busy_gen += 1;
         s.in_flight = true;
         s.busy_s += latency_s;
+        s.busy_until = done_t;
         s.energy_j += energy_j;
         let gen = s.busy_gen;
         self.meter.record(sid, self.now, latency_s, energy_j);
@@ -494,6 +506,17 @@ impl<'a> Sim<'a> {
         if self.servers[from].spec.role == Role::Mixed && alive(&self.servers[from]) {
             return from;
         }
+        self.best_decode_target().unwrap_or(from)
+    }
+
+    /// The JSQ ladder behind [`Sim::pick_decode_server`], without the
+    /// keep-your-own-KV shortcut: `None` only when the whole fleet is
+    /// dead — the signal for the fault path to park the job in the
+    /// recovery queue instead of stranding it on a retired server.
+    pub(crate) fn best_decode_target(&self) -> Option<usize> {
+        let alive = |s: &Server| {
+            matches!(s.lifecycle, Lifecycle::Active | Lifecycle::Draining)
+        };
         let best = |decode_only: bool, admitting_only: bool| {
             self.servers.iter().enumerate()
                 .filter(|(_, s)| !decode_only || s.spec.role != Role::Prompt)
@@ -505,7 +528,6 @@ impl<'a> Sim<'a> {
             .or_else(|| best(true, false))
             .or_else(|| best(false, true))
             .or_else(|| best(false, false))
-            .unwrap_or(from)
     }
 }
 

@@ -50,6 +50,7 @@ use std::sync::Mutex;
 
 use super::carbon_meter::CarbonMeter;
 use super::core::{FleetSchedule, Sim, SimConfig};
+use super::fault::{Fault, FaultPlan};
 use super::metrics::{ServerUsage, SimReport};
 use super::policy::{Router, LONG_PROMPT_TOKENS};
 use super::server::Role;
@@ -180,6 +181,23 @@ impl ShardPlan {
                 fleet_plan.events.push(e);
             }
         }
+        // Fault plans shard like fleet schedules: server deaths re-index
+        // to shard-local ids (deaths outside the shard drop out); region
+        // outages and CI spikes pass through verbatim — an outage expands
+        // against the shard's own pinned servers at `Sim::new`, a spike
+        // was already applied to the signal upstream of the partition.
+        let mut faults = FaultPlan::default();
+        for f in &cfg.faults.faults {
+            match *f {
+                Fault::ServerDeath { t, server } => {
+                    if let Some(local) = local_of(server) {
+                        faults.faults.push(
+                            Fault::ServerDeath { t, server: local });
+                    }
+                }
+                other => faults.faults.push(other),
+            }
+        }
         SimConfig {
             servers: shard.servers.iter()
                 .map(|&g| cfg.servers[g].clone())
@@ -196,6 +214,7 @@ impl ShardPlan {
             region_signals: cfg.region_signals.clone(),
             coldstart_s: cfg.coldstart_s,
             keepalive: cfg.keepalive,
+            faults,
         }
     }
 }
@@ -440,6 +459,8 @@ fn merge_shard_reports(cfg: &SimConfig, plan: &ShardPlan,
     let (mut deferred, mut truncated, mut events) = (0usize, 0, 0);
     let (mut provision_events, mut decommission_events) = (0usize, 0);
     let mut peak_live_jobs = 0usize;
+    let (mut faults_injected, mut jobs_rescheduled) = (0usize, 0);
+    let (mut jobs_recovered, mut recovery_wait_s) = (0usize, 0.0f64);
     let (mut sim_duration_s, mut energy_j, mut emb_kg) = (0.0f64, 0.0, 0.0);
 
     for (k, (r, shard_meter)) in parts.iter().enumerate() {
@@ -462,6 +483,10 @@ fn merge_shard_reports(cfg: &SimConfig, plan: &ShardPlan,
         // sum of the shard high-water marks (conservative: shard peaks
         // need not coincide in time).
         peak_live_jobs += r.peak_live_jobs;
+        faults_injected += r.faults_injected;
+        jobs_rescheduled += r.jobs_rescheduled;
+        jobs_recovered += r.jobs_recovered;
+        recovery_wait_s += r.recovery_wait_s;
         sim_duration_s = sim_duration_s.max(r.sim_duration_s);
         energy_j += r.energy_j;
         emb_kg += r.emb_kg;
@@ -516,6 +541,10 @@ fn merge_shard_reports(cfg: &SimConfig, plan: &ShardPlan,
         provision_events,
         decommission_events,
         peak_live_jobs,
+        faults_injected,
+        jobs_rescheduled,
+        jobs_recovered,
+        recovery_wait_s,
         provisioned_server_hours,
         per_server,
     }

@@ -161,6 +161,56 @@ pub fn splitwise_fleet(model: &LlmSpec, n_prompt: usize, n_token: usize,
     fleet
 }
 
+/// Deployment reference year for lifecycle screening — the simulator has
+/// no wall clock, so deployed hardware ages are measured against this
+/// fixed anchor (keeps fleet selection deterministic run-to-run).
+pub const FLEET_YEAR: u32 = 2026;
+
+/// Utilization assumed when reliability-screening recycled decode gear:
+/// the decode tier is bandwidth-bound and batch-limited, so it runs well
+/// below prefill duty.
+const DECODE_TIER_UTIL: f64 = 0.4;
+
+/// Oldest catalog GPU that still clears the component-reliability screens
+/// ([`crate::carbon::reliability`]) at decode-tier utilization and can
+/// hold the model at TP ≤ 8. Decode is bandwidth-bound, so near-wearout
+/// generations stay useful there long after prefill outgrows them — the
+/// 4R Recycle lever applied to accelerators, not just hosts.
+pub fn oldest_safe_decode_gpu(model: &LlmSpec) -> &'static crate::hw::GpuSpec {
+    use crate::carbon::reliability::{cpu_effective_age, dram_is_safe};
+    crate::hw::gpu_catalog()
+        .iter()
+        .filter(|g| {
+            let age = FLEET_YEAR.saturating_sub(g.year) as f64;
+            // DRAM retention and host-aging budgets both must hold for the
+            // recycled board to be worth racking (CPU budget ≈ 5 design
+            // years, matching max_safe_host_lifetime's convention).
+            dram_is_safe(age, DECODE_TIER_UTIL)
+                && cpu_effective_age(age, DECODE_TIER_UTIL) <= 5.0
+                && model.weight_gb() < 0.45 * g.mem_gb * 8.0
+        })
+        .min_by_key(|g| g.year)
+        .expect("catalog always holds a reliability-safe decode GPU")
+}
+
+/// GreenLLM-style heterogeneous PD split: current-generation H100 prompt
+/// servers in front of a decode tier built from the oldest reliability-
+/// safe GPU in the catalog ([`oldest_safe_decode_gpu`]).
+pub fn hetero_pd_fleet(model: &LlmSpec, n_prompt: usize, n_token: usize,
+                       ctx: usize) -> Vec<ServerSpec> {
+    let old = oldest_safe_decode_gpu(model);
+    let mut fleet = crate::sim::homogeneous_fleet("H100", n_prompt, model, ctx);
+    for s in &mut fleet {
+        s.role = Role::Prompt;
+    }
+    let mut decode = crate::sim::homogeneous_fleet(old.name, n_token, model, ctx);
+    for s in &mut decode {
+        s.role = Role::Decode;
+    }
+    fleet.extend(decode);
+    fleet
+}
+
 /// SimConfig for a fleet under a strategy's carbon accounting: flat CI at
 /// the planning value, workload-aware routing, online-first batching.
 /// Callers swap `cfg.ci` for a [`crate::carbon::intensity::CiSignal`]
@@ -271,6 +321,23 @@ mod tests {
         let fleet = fleet_from_plan(&plan, m, 2048);
         assert!(!fleet.is_empty());
         assert!(fleet.iter().any(|s| s.role != Role::Decode));
+    }
+
+    #[test]
+    fn hetero_fleet_pairs_new_prefill_with_old_safe_decode() {
+        let m = models::llm("llama-8b").unwrap();
+        let old = oldest_safe_decode_gpu(m);
+        let age = (FLEET_YEAR - old.year) as f64;
+        assert!(crate::carbon::reliability::dram_is_safe(age, 0.4),
+                "{} at {age}y fails its own screen", old.name);
+        // Strictly older than the prefill tier's gear.
+        assert!(old.year < crate::hw::gpu("H100").unwrap().year);
+        let fleet = hetero_pd_fleet(m, 3, 2, 2048);
+        assert_eq!(fleet.len(), 5);
+        assert!(fleet[..3].iter()
+            .all(|s| s.role == Role::Prompt && s.device.name == "H100"));
+        assert!(fleet[3..].iter()
+            .all(|s| s.role == Role::Decode && s.device.name == old.name));
     }
 
     #[test]

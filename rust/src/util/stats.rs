@@ -83,7 +83,9 @@ impl Samples {
 
     fn ensure_sorted(&mut self) {
         if !self.sorted {
-            self.xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            // total_cmp: NaN sorts after +inf instead of panicking, so a
+            // stray NaN sample degrades a percentile, never the process.
+            self.xs.sort_by(|a, b| a.total_cmp(b));
             self.sorted = true;
         }
     }
@@ -338,6 +340,16 @@ mod tests {
         let mut s = Samples::new();
         assert!(s.p50().is_nan());
         assert!(s.mean().is_nan());
+    }
+
+    #[test]
+    fn nan_sample_degrades_percentiles_without_panicking() {
+        // Regression: the lazy sort used partial_cmp().unwrap(), so one
+        // NaN sample aborted the whole run. total_cmp sorts NaN last.
+        let mut s = Samples::new();
+        s.extend(&[3.0, f64::NAN, 1.0, 2.0]);
+        assert_eq!(s.p50(), 2.5);
+        assert!(s.percentile(100.0).is_nan());
     }
 
     #[test]

@@ -1,0 +1,99 @@
+//! Determinism and graceful-degradation suite for the fault-injection
+//! pack: every failure-pack scenario must be byte-identical across shard
+//! worker-thread counts and between the streaming and materialized
+//! arrival paths, the engine must survive total fleet death without
+//! panicking, and the recovery accounting must surface in extras.
+
+use ecoserve::scenarios::{catalog, registry, run_spec, run_spec_sharded,
+                          run_spec_sharded_materialized, scenario_seed, Pack};
+
+#[test]
+fn failure_pack_is_byte_identical_across_shard_counts() {
+    // The acceptance gate: injected faults ride the ordinary event queue,
+    // so a fault scenario's outcome bytes are invariant in the shard
+    // thread budget — and identical between arrival paths.
+    for s in registry().iter().filter(|s| s.pack() == Pack::Failure) {
+        let name = s.name();
+        let seed = scenario_seed(47, name);
+        let runs: Vec<String> = [1usize, 2, 4]
+            .iter()
+            .map(|&n| run_spec_sharded(name, &s.spec(), seed, 40.0, n)
+                .to_json()
+                .to_string())
+            .collect();
+        assert_eq!(runs[0], runs[1], "{name}: 1 vs 2 shards diverged");
+        assert_eq!(runs[1], runs[2], "{name}: 2 vs 4 shards diverged");
+        let materialized =
+            run_spec_sharded_materialized(name, &s.spec(), seed, 40.0, 2)
+                .to_json()
+                .to_string();
+        assert_eq!(runs[1], materialized,
+                   "{name}: streaming vs materialized diverged");
+    }
+}
+
+#[test]
+fn failure_storm_reroutes_and_reports_fault_metrics() {
+    let s = catalog::by_names(&["failure-storm"]).unwrap().remove(0);
+    let seed = scenario_seed(13, "failure-storm");
+    let out = run_spec("failure-storm", &s.spec(), seed, 60.0);
+    // Orphaned work finishes on the survivors — nothing is dropped.
+    assert_eq!(out.completed, out.requests,
+               "killed servers' jobs must finish elsewhere");
+    if out.fleet_servers > 1 {
+        assert!(out.extras["faults_injected"] >= 1.0,
+                "a multi-server fleet must take at least one death");
+    }
+    for k in ["faults_injected", "jobs_rescheduled", "jobs_recovered",
+              "recovery_wait_s", "op_kg_nofault", "carbon_kg_nofault",
+              "slo_attainment_nofault", "ttft_p90_s_nofault"] {
+        assert!(out.extras.contains_key(k), "missing extras key {k}");
+    }
+}
+
+#[test]
+fn region_outage_recovers_and_completes() {
+    let s = catalog::by_names(&["region-outage"]).unwrap().remove(0);
+    let seed = scenario_seed(29, "region-outage");
+    let out = run_spec("region-outage", &s.spec(), seed, 60.0);
+    // Capacity returns at 55% of the trace, so everything drains.
+    assert_eq!(out.completed, out.requests);
+    // Server 0 is always pinned to the outage region (i % 2 == 0), so at
+    // least one death lands whatever the planner provisioned.
+    assert!(out.extras["faults_injected"] >= 1.0);
+    // Losing half the fleet cannot *improve* attainment over the twin.
+    assert!(out.slo_attainment
+                <= out.extras["slo_attainment_nofault"] + 1e-9);
+}
+
+#[test]
+fn total_fleet_death_does_not_panic_at_the_scenario_layer() {
+    use ecoserve::sim::FaultPlan;
+    let s = catalog::by_names(&["failure-storm"]).unwrap().remove(0);
+    let mut spec = s.spec();
+    // Kill every server the planner could possibly provision, with no
+    // recovery: the run must close its books instead of panicking, with
+    // the post-death arrivals stranded (arrived, never completed).
+    let mut plan = FaultPlan::new();
+    for i in 0..64 {
+        plan = plan.server_death(0.5, i);
+    }
+    spec.faults = plan;
+    let seed = scenario_seed(17, "failure-storm");
+    let out = run_spec("failure-storm", &spec, seed, 45.0);
+    assert!(out.completed < out.requests,
+            "killing the whole fleet must strand the post-death tail");
+    assert!(out.extras["faults_injected"] >= 1.0);
+}
+
+#[test]
+fn hetero_disaggregation_serves_with_a_recycled_decode_tier() {
+    let s = catalog::by_names(&["hetero-disaggregation"]).unwrap().remove(0);
+    let seed = scenario_seed(19, "hetero-disaggregation");
+    let out = run_spec("hetero-disaggregation", &s.spec(), seed, 45.0);
+    assert_eq!(out.completed, out.requests);
+    assert!(out.generated_tokens > 0);
+    // No faults in this design point: the fault extras must be absent so
+    // the pack's byte-neutrality contract stays visible in reports.
+    assert!(!out.extras.contains_key("faults_injected"));
+}
