@@ -14,6 +14,7 @@ pub mod coordinator;
 pub mod runtime;
 pub mod hw;
 pub mod models;
+pub mod obs;
 pub mod planner;
 pub mod perf;
 pub mod scenarios;

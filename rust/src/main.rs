@@ -1,11 +1,17 @@
 //! `ecoserve` CLI: serve (real AOT model), plan (capacity planner),
 //! simulate (cluster sim), report (carbon models), sweep (parallel
-//! scenario-sweep engine), scale (sharded-runtime capacity study).
+//! scenario-sweep engine), scale (sharded-runtime capacity study),
+//! inspect (observability-artifact summarizer).
 
 use ecoserve::util::cli::Args;
+use ecoserve::util::log;
 
 const USAGE: &str = "\
 ecoserve <command> [--flags]
+
+global flags:
+  --quiet          only errors on stderr
+  -v, --verbose    debug logging on stderr
 
 commands:
   serve     --artifacts DIR --requests N --rate R   serve the AOT model
@@ -19,7 +25,8 @@ commands:
             [--trace FILE] [--trace-dialect azure|burstgpt|auto]
             [--trace-errors skip|fail] [--trace-rate R] [--epoch SECS]
             [--shards N] [--coldstart SECS] [--keepalive POLICY]
-            [--out FILE] [--json]
+            [--obs-dir DIR] [--obs-interval SECS] [--trace-jobs-rate R]
+            [--progress SECS] [--out FILE] [--json]
             run registered end-to-end scenarios in parallel (--epoch
             overrides the rolling-horizon re-provisioning period; --shards
             runs every scenario on the sharded runtime with up to N shard
@@ -32,7 +39,16 @@ commands:
             scenario's carbon signal; long-haul scale scenarios join --all
             only when --duration is given, or when selected by name;
             --pack sweeps one registry group: core design points, replay
-            trace studies, or the failure fault-injection pack)
+            trace studies, or the failure fault-injection pack;
+            --obs-dir writes per-scenario observability artifacts — a
+            fleet timeline csv, a Chrome-trace span json loadable in
+            Perfetto/chrome://tracing, and a self-profile json — sampled
+            every --obs-interval seconds with jobs span-traced at
+            --trace-jobs-rate, outcome bytes unchanged; --progress prints
+            a wall-clock heartbeat for long-haul runs)
+  inspect   <obs-dir>                               summarize a sweep's
+            observability artifacts (timeline coverage, carbon, spans,
+            stage timings)
   scale     [--scenario production-day] [--durations A,B] [--shards 1,2,4]
             [--seed S] [--out FILE] [--json]
             simulator-capacity study: sweep trace duration x shard count,
@@ -49,6 +65,7 @@ commands:
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse();
+    init_log(&args);
     match args.subcommand() {
         Some("serve") => serve(&args),
         Some("plan") => { plan(&args); Ok(()) }
@@ -57,10 +74,24 @@ fn main() -> anyhow::Result<()> {
         Some("sweep") => sweep(&args),
         Some("scale") => scale(&args),
         Some("plan-bench") => plan_bench(&args),
+        Some("inspect") => inspect(&args),
         _ => {
             print!("{USAGE}");
             Ok(())
         }
+    }
+}
+
+/// Resolve `--quiet` / `-v` / `--verbose` into the process log level
+/// (`-v` has no `--` prefix, so the parser files it as a positional).
+fn init_log(args: &Args) {
+    use ecoserve::util::log::Level;
+    let verbose = args.bool("verbose")
+        || args.positional().iter().any(|p| p == "-v");
+    if args.bool("quiet") {
+        log::set_level(Level::Error);
+    } else if verbose {
+        log::set_level(Level::Debug);
     }
 }
 
@@ -111,10 +142,10 @@ fn trace_flag(args: &Args)
     let stats = trace::probe(path, dialect, errors)?;
     anyhow::ensure!(stats.records > 0, "trace {path}: no replayable records");
     if stats.skipped_lines > 0 || stats.repaired_timestamps > 0 {
-        eprintln!("trace {path}: {} records ({} malformed lines skipped, \
-                   {} timestamps repaired)",
-                  stats.records, stats.skipped_lines,
-                  stats.repaired_timestamps);
+        log::warn(&format!(
+            "trace {path}: {} records ({} malformed lines skipped, \
+             {} timestamps repaired)",
+            stats.records, stats.skipped_lines, stats.repaired_timestamps));
     }
     Ok(Some(TraceOverride { path: path.to_string(), dialect, errors, rate }))
 }
@@ -203,8 +234,9 @@ fn sweep(args: &Args) -> anyhow::Result<()> {
                 .map(|s| s.name())
                 .collect();
             if !skipped.is_empty() {
-                eprintln!("skipping long-haul scenarios without --duration: {}",
-                          skipped.join(", "));
+                log::info(&format!(
+                    "skipping long-haul scenarios without --duration: {}",
+                    skipped.join(", ")));
             }
             all.retain(|s| !s.long_haul());
         }
@@ -239,6 +271,27 @@ fn sweep(args: &Args) -> anyhow::Result<()> {
             Some(p.to_string())
         }
     };
+    let obs_dir = args.opt_str("obs-dir").map(|s| s.to_string());
+    for flag in ["obs-interval", "trace-jobs-rate"] {
+        anyhow::ensure!(obs_dir.is_some() || !args.has(flag),
+                        "--{flag} requires --obs-dir DIR");
+    }
+    let obs_interval_s = args.f64("obs-interval", 60.0);
+    anyhow::ensure!(obs_interval_s.is_finite() && obs_interval_s > 0.0,
+                    "--obs-interval must be a positive finite number of \
+                     seconds");
+    let trace_jobs_rate = args.f64("trace-jobs-rate", 0.05);
+    anyhow::ensure!((0.0..=1.0).contains(&trace_jobs_rate),
+                    "--trace-jobs-rate must be in [0, 1]");
+    let progress_s = if args.has("progress") {
+        let p = args.f64("progress", 10.0);
+        anyhow::ensure!(p.is_finite() && p > 0.0,
+                        "--progress must be a positive finite number of \
+                         seconds");
+        Some(p)
+    } else {
+        None
+    };
     let cfg = SweepConfig {
         threads: args.usize("threads", 0),
         seed: args.u64("seed", 42),
@@ -250,6 +303,10 @@ fn sweep(args: &Args) -> anyhow::Result<()> {
         keepalive: keepalive_flag(args)?,
         trace: trace_flag(args)?,
         ci_file,
+        obs_dir,
+        obs_interval_s,
+        trace_jobs_rate,
+        progress_s,
     };
     anyhow::ensure!(cfg.duration_s.is_finite() && cfg.duration_s > 0.0,
                     "--duration must be a positive finite number of seconds");
@@ -265,8 +322,8 @@ fn sweep(args: &Args) -> anyhow::Result<()> {
     if let Some(n) = cfg.shards {
         anyhow::ensure!(n >= 1, "--shards must be at least 1");
     }
-    eprintln!("sweeping {} scenarios (seed {}, {}s traces) ...",
-              scenarios.len(), cfg.seed, cfg.duration_s);
+    log::info(&format!("sweeping {} scenarios (seed {}, {}s traces) ...",
+                       scenarios.len(), cfg.seed, cfg.duration_s));
     let t0 = std::time::Instant::now();
     let report = run_sweep(&scenarios, &cfg);
     let wall = t0.elapsed().as_secs_f64();
@@ -282,7 +339,7 @@ fn sweep(args: &Args) -> anyhow::Result<()> {
             }
         }
         for w in report.truncation_warnings() {
-            eprintln!("{w}");
+            log::warn(&w);
         }
     }
     // Table mode always persists the machine-readable report; --json mode
@@ -291,33 +348,121 @@ fn sweep(args: &Args) -> anyhow::Result<()> {
         let out = args.str("out", "sweep-report.json");
         std::fs::write(&out, json.as_bytes())
             .map_err(|e| anyhow::anyhow!("writing {out}: {e}"))?;
-        eprintln!("{} scenarios in {:.1}s -> {}", report.outcomes.len(), wall, out);
+        log::info(&format!("{} scenarios in {:.1}s -> {}",
+                           report.outcomes.len(), wall, out));
     } else {
-        eprintln!("{} scenarios in {:.1}s", report.outcomes.len(), wall);
+        log::info(&format!("{} scenarios in {:.1}s",
+                           report.outcomes.len(), wall));
     }
     Ok(())
 }
 
-/// Peak resident-set size of this process so far, in KB (Linux `VmHWM`;
-/// `None` elsewhere). Pair with [`reset_peak_rss`] before each cell;
-/// where the reset is unsupported the numbers degrade to a monotone
-/// high-water mark that bounds each cell from above — CI additionally
-/// wraps the whole run in `/usr/bin/time -v` for an exact envelope.
-fn peak_rss_kb() -> Option<u64> {
-    let status = std::fs::read_to_string("/proc/self/status").ok()?;
-    status.lines()
-        .find(|l| l.starts_with("VmHWM:"))?
-        .split_whitespace()
-        .nth(1)?
-        .parse()
-        .ok()
-}
+/// Summarize a directory of observability artifacts (`sweep --obs-dir`):
+/// one row per scenario with the timeline's coverage, peak fleet power,
+/// and final cumulative carbon, the span trace's event count, and the
+/// self-profile's stage split.
+fn inspect(args: &Args) -> anyhow::Result<()> {
+    use ecoserve::util::json::Json;
+    use ecoserve::util::table::{fnum, Table};
+    use std::collections::BTreeMap;
 
-/// Reset the kernel's peak-RSS watermark (`echo 5 > /proc/self/clear_refs`)
-/// so each capacity-study cell reports its own high-water mark. Best
-/// effort: silently a no-op where unsupported.
-fn reset_peak_rss() {
-    let _ = std::fs::write("/proc/self/clear_refs", "5");
+    let dir = args.positional().get(1).cloned()
+        .or_else(|| args.opt_str("dir").map(|s| s.to_string()))
+        .ok_or_else(|| anyhow::anyhow!("usage: ecoserve inspect <obs-dir>"))?;
+
+    #[derive(Default)]
+    struct Entry {
+        timeline: Option<String>,
+        spans: Option<String>,
+        profile: Option<String>,
+    }
+    let mut entries: BTreeMap<String, Entry> = BTreeMap::new();
+    let rd = std::fs::read_dir(&dir)
+        .map_err(|e| anyhow::anyhow!("reading {dir}: {e}"))?;
+    for e in rd {
+        let path = e?.path();
+        let Some(fname) = path.file_name().and_then(|s| s.to_str()) else {
+            continue;
+        };
+        for suffix in [".timeline.csv", ".spans.json", ".profile.json"] {
+            if let Some(name) = fname.strip_suffix(suffix) {
+                let body = std::fs::read_to_string(&path)
+                    .map_err(|e| anyhow::anyhow!("reading {fname}: {e}"))?;
+                let en = entries.entry(name.to_string()).or_default();
+                match suffix {
+                    ".timeline.csv" => en.timeline = Some(body),
+                    ".spans.json" => en.spans = Some(body),
+                    _ => en.profile = Some(body),
+                }
+            }
+        }
+    }
+    anyhow::ensure!(!entries.is_empty(),
+                    "{dir}: no observability artifacts (expected \
+                     *.timeline.csv / *.spans.json / *.profile.json from \
+                     `sweep --obs-dir`)");
+
+    let mut t = Table::new(&[
+        "scenario", "samples", "span s", "peak W", "op kg", "emb kg",
+        "spans ev", "plan s", "sim s",
+    ]);
+    for (name, en) in &entries {
+        let (mut rows, mut last_t, mut peak_w) = (0usize, 0.0f64, 0.0f64);
+        let (mut op, mut emb) = (0.0f64, 0.0f64);
+        if let Some(csv) = &en.timeline {
+            let mut lines = csv.lines();
+            let header: Vec<&str> =
+                lines.next().unwrap_or("").split(',').collect();
+            let col = |n: &str| header.iter().position(|h| *h == n);
+            let (it, ip, iop, iemb) =
+                (col("t_s"), col("power_w"), col("op_kg"), col("emb_kg"));
+            for line in lines.filter(|l| !l.is_empty()) {
+                let f: Vec<&str> = line.split(',').collect();
+                let num = |i: Option<usize>| {
+                    i.and_then(|i| f.get(i))
+                        .and_then(|v| v.parse::<f64>().ok())
+                        .unwrap_or(0.0)
+                };
+                rows += 1;
+                last_t = num(it);
+                peak_w = peak_w.max(num(ip));
+                op = num(iop); // cumulative: last row is the total
+                emb = num(iemb);
+            }
+        }
+        let span_events = en.spans.as_ref().map(|body| {
+            match Json::parse(body) {
+                Ok(j) => match j.get("traceEvents") {
+                    Some(Json::Arr(evs)) => evs.len(),
+                    _ => 0,
+                },
+                Err(_) => 0,
+            }
+        });
+        let stage = |key: &str| -> Option<f64> {
+            let body = en.profile.as_ref()?;
+            match Json::parse(body).ok()?.get(key)? {
+                Json::Num(v) => Some(*v),
+                _ => None,
+            }
+        };
+        let opt = |v: Option<f64>| {
+            v.map(fnum).unwrap_or_else(|| "-".into())
+        };
+        t.row(&[
+            name.clone(),
+            if en.timeline.is_some() { format!("{rows}") } else { "-".into() },
+            if en.timeline.is_some() { fnum(last_t) } else { "-".into() },
+            if en.timeline.is_some() { fnum(peak_w) } else { "-".into() },
+            if en.timeline.is_some() { fnum(op) } else { "-".into() },
+            if en.timeline.is_some() { fnum(emb) } else { "-".into() },
+            span_events.map(|n| format!("{n}")).unwrap_or_else(|| "-".into()),
+            opt(stage("plan_s")),
+            opt(stage("sim_s")),
+        ]);
+    }
+    t.print();
+    Ok(())
 }
 
 /// The Özcan-style simulator-capacity study: sweep trace duration x shard
@@ -333,6 +478,7 @@ fn reset_peak_rss() {
 /// identical pipeline, so the duration x shards scaling curve is
 /// apples-to-apples.
 fn scale(args: &Args) -> anyhow::Result<()> {
+    use ecoserve::obs::{peak_rss_kb, reset_peak_rss};
     use ecoserve::scenarios::{catalog, scenario_seed, Overrides};
     use ecoserve::util::json::Json;
     use ecoserve::util::table::{fnum, Table};
@@ -361,8 +507,9 @@ fn scale(args: &Args) -> anyhow::Result<()> {
     let master_seed = args.u64("seed", 42);
     let seed = scenario_seed(master_seed, sc.name());
 
-    eprintln!("scale study: {} over {} durations x {} shard counts ...",
-              sc.name(), durations.len(), shard_counts.len());
+    log::info(&format!(
+        "scale study: {} over {} durations x {} shard counts ...",
+        sc.name(), durations.len(), shard_counts.len()));
     let mut table = Table::new(&[
         "duration s", "shards", "req", "events", "wall s", "events/s",
         "peak-jobs", "peak-RSS MB", "det",
@@ -431,7 +578,7 @@ fn scale(args: &Args) -> anyhow::Result<()> {
         let out = args.str("out", "scale-report.json");
         std::fs::write(&out, json.as_bytes())
             .map_err(|e| anyhow::anyhow!("writing {out}: {e}"))?;
-        eprintln!("capacity curve -> {out}");
+        log::info(&format!("capacity curve -> {out}"));
     }
     anyhow::ensure!(all_deterministic,
                     "sharded outcomes diverged across shard counts");
@@ -482,8 +629,9 @@ fn plan_bench(args: &Args) -> anyhow::Result<()> {
     let ci = CiSignal::flat(261.0);
     let plan_cfg = PlanConfig::default();
 
-    eprintln!("plan-bench: {} fleet sizes x {} epochs (best of {} reps) ...",
-              fleets.len(), epochs, reps);
+    log::info(&format!(
+        "plan-bench: {} fleet sizes x {} epochs (best of {} reps) ...",
+        fleets.len(), epochs, reps));
     let mut table = Table::new(&[
         "fleet", "epochs", "cold s", "cold plans/s", "warm s", "warm plans/s",
         "speedup", "solves", "hits", "skips", "patches", "cuts",
@@ -582,7 +730,7 @@ fn plan_bench(args: &Args) -> anyhow::Result<()> {
         let out = args.str("out", "BENCH_plan.json");
         std::fs::write(&out, json.as_bytes())
             .map_err(|e| anyhow::anyhow!("writing {out}: {e}"))?;
-        eprintln!("planner scaling curve -> {out}");
+        log::info(&format!("planner scaling curve -> {out}"));
     }
     Ok(())
 }
@@ -693,8 +841,8 @@ fn simulate(args: &Args) -> anyhow::Result<()> {
              r.events, r.deferred_requests,
              100.0 * r.offline_deadline_attainment);
     if r.truncated_prompts > 0 {
-        eprintln!("warning: {} prompts clipped to {} tokens",
-                  r.truncated_prompts, MAX_PROMPT_TOKENS);
+        log::warn(&format!("warning: {} prompts clipped to {} tokens",
+                           r.truncated_prompts, MAX_PROMPT_TOKENS));
     }
     Ok(())
 }

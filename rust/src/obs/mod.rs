@@ -1,0 +1,155 @@
+//! Passive, deterministic observability: a fleet [`Timeline`]
+//! ([`timeline`]), per-job span tracing ([`spans`]), and harness
+//! self-profiling ([`profile`]) — all **byte-neutral when disabled**
+//! (the engine hooks are `Option`-gated reads that push zero events and
+//! never touch simulation state) and **order-fixed-mergeable** across
+//! shards, the same discipline as `Histogram::merge`. With observers off,
+//! every registry scenario's outcome bytes are unchanged; with observers
+//! on, the timeline/span artifacts are byte-identical across shard-thread
+//! budgets because the shard partition is a pure function of the fleet
+//! and recorders fold in ascending shard index.
+//!
+//! Surface: `sweep --obs-dir DIR [--obs-interval SECS]
+//! [--trace-jobs-rate R] [--progress SECS]` writes
+//! `<name>.timeline.csv`, `<name>.spans.json`, `<name>.profile.json` per
+//! scenario; `ecoserve inspect <obs-dir>` summarizes a directory of
+//! artifacts. The profile artifact carries wall clocks and is excluded
+//! from byte-diff gates; timeline and spans are fully deterministic.
+
+pub mod profile;
+pub mod spans;
+pub mod timeline;
+
+pub use self::profile::{peak_rss_kb, reset_peak_rss, Profile, Progress};
+pub use self::spans::{JobSpan, SpanEvent, SpanTrace};
+pub use self::timeline::{Timeline, TimelineSample};
+
+/// What to record, resolved from the CLI `--obs-*` flags.
+#[derive(Debug, Clone)]
+pub struct ObsSettings {
+    /// Fleet-timeline sample interval; `None` disables the timeline.
+    pub timeline_interval_s: Option<f64>,
+    /// Span-sampling rate in [0, 1]; 0 disables span tracing.
+    pub trace_jobs_rate: f64,
+    /// Record pipeline stage timings + planner counters.
+    pub profile: bool,
+    /// Wall-clock progress heartbeat period; `None` disables it.
+    pub progress_s: Option<f64>,
+}
+
+impl Default for ObsSettings {
+    fn default() -> ObsSettings {
+        ObsSettings {
+            timeline_interval_s: Some(60.0),
+            trace_jobs_rate: 0.05,
+            profile: true,
+            progress_s: None,
+        }
+    }
+}
+
+impl ObsSettings {
+    /// Heartbeat only — what `--progress` without `--obs-dir` requests.
+    pub fn progress_only(every_s: f64) -> ObsSettings {
+        ObsSettings {
+            timeline_interval_s: None,
+            trace_jobs_rate: 0.0,
+            profile: false,
+            progress_s: Some(every_s),
+        }
+    }
+}
+
+/// Rendered artifacts of one observed scenario run.
+#[derive(Debug, Clone, Default)]
+pub struct ObsArtifacts {
+    pub timeline_csv: Option<String>,
+    pub spans_json: Option<String>,
+    pub profile_json: Option<String>,
+}
+
+/// The recorder bundle the engine carries (`Option<&mut Observer>` beside
+/// the `MetricsSink`). A sharded run gives each shard a fresh
+/// [`Observer::shard`] clone and folds them back with
+/// [`Observer::merge`] in ascending shard index.
+#[derive(Debug)]
+pub struct Observer {
+    pub timeline: Option<Timeline>,
+    pub spans: Option<SpanTrace>,
+    pub progress: Option<Progress>,
+    /// Settings + grid facts kept for spawning shard observers.
+    settings: ObsSettings,
+    duration_s: f64,
+    span_seed: u64,
+    ci_names: Vec<String>,
+}
+
+impl Observer {
+    /// Build the fleet-level observer for one scenario run. `ci_names`
+    /// are the timeline's CI column labels (primary first, then one per
+    /// configured region signal); `span_seed` derives from the scenario
+    /// seed so span sampling is per-scenario deterministic.
+    pub fn for_run(settings: &ObsSettings, duration_s: f64, span_seed: u64,
+                   ci_names: Vec<String>, n_servers: usize) -> Observer {
+        let timeline = settings.timeline_interval_s.map(|iv| {
+            Timeline::new(iv, duration_s, ci_names.clone())
+        });
+        let spans = (settings.trace_jobs_rate > 0.0).then(|| {
+            SpanTrace::new(span_seed, settings.trace_jobs_rate,
+                           (0..n_servers).collect())
+        });
+        let progress = settings.progress_s.map(|p| {
+            Progress::new(p, "", duration_s)
+        });
+        Observer {
+            timeline,
+            spans,
+            progress,
+            settings: settings.clone(),
+            duration_s,
+            span_seed,
+            ci_names,
+        }
+    }
+
+    /// A fresh observer for one shard: same grids and seed, recorders
+    /// scoped to the shard's servers (`servers[local] = global id`).
+    pub fn shard(&self, servers: &[usize], label: &str) -> Observer {
+        let timeline = self.timeline.as_ref().and_then(|_| {
+            self.settings.timeline_interval_s.map(|iv| {
+                Timeline::new(iv, self.duration_s, self.ci_names.clone())
+            })
+        });
+        let spans = self.spans.as_ref().map(|_| {
+            SpanTrace::new(self.span_seed, self.settings.trace_jobs_rate,
+                           servers.to_vec())
+        });
+        let progress = self.progress.as_ref().and_then(|_| {
+            self.settings.progress_s.map(|p| {
+                Progress::new(p, label, self.duration_s)
+            })
+        });
+        Observer {
+            timeline,
+            spans,
+            progress,
+            settings: self.settings.clone(),
+            duration_s: self.duration_s,
+            span_seed: self.span_seed,
+            ci_names: self.ci_names.clone(),
+        }
+    }
+
+    /// Fold a shard observer back into the fleet-level one. Callers fold
+    /// in ascending shard index; see the recorder merge rules.
+    pub fn merge(&mut self, other: Observer) {
+        if let (Some(tl), Some(other_tl)) = (self.timeline.as_mut(),
+                                             other.timeline.as_ref()) {
+            tl.merge(other_tl);
+        }
+        if let (Some(sp), Some(other_sp)) = (self.spans.as_mut(),
+                                             other.spans) {
+            sp.merge(other_sp);
+        }
+    }
+}

@@ -1,0 +1,161 @@
+//! Harness self-profiling: wall-clock stage timings for the scenario
+//! pipeline (demand pass → planning → sim loop → shard merge) next to
+//! the planner's deterministic epoch accounting
+//! ([`crate::planner::horizon::PlannerStats`]), so a `plan-bench` or
+//! `scale` regression is attributable to a stage instead of a rerun
+//! guessing game. Wall clocks are *measurements* — the profile artifact
+//! is deliberately excluded from every byte-diff determinism gate; the
+//! planner counters inside it are exact and thread-invariant.
+//!
+//! This module also owns the process-RSS helpers (previously private to
+//! `main.rs`) and the opt-in wall-clock progress heartbeat for long-haul
+//! runs (`--progress SECS`).
+
+use std::time::Instant;
+
+use crate::planner::horizon::PlannerStats;
+use crate::util::log;
+
+/// Peak resident-set size of this process so far, in KB (Linux `VmHWM`;
+/// `None` elsewhere). Pair with [`reset_peak_rss`] before each cell;
+/// where the reset is unsupported the numbers degrade to a monotone
+/// high-water mark that bounds each cell from above — CI additionally
+/// wraps the whole run in `/usr/bin/time -v` for an exact envelope.
+pub fn peak_rss_kb() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    status.lines()
+        .find(|l| l.starts_with("VmHWM:"))?
+        .split_whitespace()
+        .nth(1)?
+        .parse()
+        .ok()
+}
+
+/// Reset the kernel's peak-RSS watermark (`echo 5 > /proc/self/clear_refs`)
+/// so each capacity-study cell reports its own high-water mark. Best
+/// effort: silently a no-op where unsupported.
+pub fn reset_peak_rss() {
+    let _ = std::fs::write("/proc/self/clear_refs", "5");
+}
+
+/// Stage wall clocks + planner epoch accounting for one scenario run.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Profile {
+    /// Fused single-pass demand analysis (reprovision scenarios; 0 when
+    /// the scenario plans from a materialized slice instead).
+    pub demand_pass_s: f64,
+    /// Rolling-horizon schedule construction (epoch ILP ladder).
+    pub plan_s: f64,
+    /// The primary simulation itself (sharded: all shard workers,
+    /// wall-clock of the scoped-thread scope).
+    pub sim_s: f64,
+    /// Order-fixed shard merge back into one report (0 unsharded).
+    pub merge_s: f64,
+    /// Planner decision-ladder counters summed over every horizon solve
+    /// of the primary run (deterministic — `usize` sums commute).
+    pub planner: PlannerStats,
+}
+
+impl Profile {
+    /// Time `f`, crediting its wall clock to the stage slot `pick`
+    /// selects.
+    pub fn stage<R>(&mut self, pick: fn(&mut Profile) -> &mut f64,
+                    f: impl FnOnce() -> R) -> R {
+        let t0 = Instant::now();
+        let out = f();
+        *pick(self) += t0.elapsed().as_secs_f64();
+        out
+    }
+
+    /// Render as a small JSON object (sorted keys via the `Json` object
+    /// representation).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        crate::util::json::Json::obj()
+            .set("demand_pass_s", self.demand_pass_s)
+            .set("plan_s", self.plan_s)
+            .set("sim_s", self.sim_s)
+            .set("merge_s", self.merge_s)
+            .set("planner_epochs", self.planner.epochs as f64)
+            .set("planner_full_solves", self.planner.full_solves as f64)
+            .set("planner_warm_hits", self.planner.warm_hits as f64)
+            .set("planner_drift_skips", self.planner.drift_skips as f64)
+            .set("planner_cut_patches", self.planner.cut_patches as f64)
+            .set("planner_cuts", self.planner.cuts as f64)
+            .set("planner_nodes", self.planner.nodes as f64)
+    }
+
+    /// Accumulate another run's planner counters (e.g. per-shard stats).
+    pub fn add_planner(&mut self, s: PlannerStats) {
+        self.planner.absorb(s);
+    }
+}
+
+/// Wall-clock progress heartbeat for long-haul runs: events processed,
+/// sim-time fraction, and peak RSS, printed to stderr at most once per
+/// `every_s` seconds of wall time. Stderr-only and wall-clock-driven —
+/// it never touches an artifact, so determinism gates are unaffected.
+#[derive(Debug)]
+pub struct Progress {
+    every_s: f64,
+    last: Instant,
+    label: String,
+    duration_s: f64,
+}
+
+impl Progress {
+    pub fn new(every_s: f64, label: &str, duration_s: f64) -> Progress {
+        Progress {
+            every_s: every_s.max(0.01),
+            last: Instant::now(),
+            label: label.to_string(),
+            duration_s: duration_s.max(1e-9),
+        }
+    }
+
+    /// Called from the engine loop (rate-limited by the caller's event
+    /// mask before it ever reaches the clock).
+    pub fn maybe_emit(&mut self, events: usize, now_s: f64) {
+        if self.last.elapsed().as_secs_f64() < self.every_s {
+            return;
+        }
+        self.last = Instant::now();
+        let pct = (now_s / self.duration_s * 100.0).min(100.0);
+        let rss = peak_rss_kb()
+            .map(|kb| format!("{} MiB", kb / 1024))
+            .unwrap_or_else(|| "n/a".to_string());
+        log::info_now(&format!(
+            "[progress{}] {events} events, sim t {:.0}/{:.0}s ({pct:.0}%), \
+             peak rss {rss}",
+            self.label, now_s.min(self.duration_s), self.duration_s));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_accumulates_and_json_is_stable() {
+        let mut p = Profile::default();
+        let v = p.stage(|p| &mut p.sim_s, || 41 + 1);
+        assert_eq!(v, 42);
+        assert!(p.sim_s >= 0.0);
+        p.add_planner(PlannerStats { epochs: 3, full_solves: 1,
+                                     warm_hits: 2, ..Default::default() });
+        p.add_planner(PlannerStats { epochs: 2, ..Default::default() });
+        assert_eq!(p.planner.epochs, 5);
+        assert_eq!(p.planner.warm_hits, 2);
+        let j = p.to_json().to_string();
+        assert!(j.contains("\"planner_epochs\""), "{j}");
+        assert!(j.contains("\"sim_s\""), "{j}");
+    }
+
+    #[test]
+    fn rss_probe_is_best_effort() {
+        // On Linux this returns a positive watermark; elsewhere None.
+        if let Some(kb) = peak_rss_kb() {
+            assert!(kb > 0);
+        }
+        reset_peak_rss(); // must never panic
+    }
+}

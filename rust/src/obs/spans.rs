@@ -1,0 +1,417 @@
+//! Per-job span tracing with deterministic hash-based sampling, exported
+//! as Chrome trace-event JSON (loadable in Perfetto / chrome://tracing).
+//!
+//! **Sampling** is a pure function of the request, never of scheduling:
+//! an FNV-1a hash over `(arrival bits, prompt, output, class)` mixed
+//! with a seed derived from the scenario seed is compared against
+//! `rate × u64::MAX`. Every shard sees the same full arrival stream
+//! (`PartitionSource` filters it), so the same jobs are sampled at any
+//! shard count, and the hash doubles as a shard-invariant trace id.
+//!
+//! **Recording** happens at the engine's hook points: arrival, route,
+//! prefill (start → done), decode admission, completion, plus the fault
+//! path's reroute/park/recover edges. Server ids are translated
+//! local → global at record time (`server_base`), so shard-local traces
+//! speak fleet coordinates. Finished jobs append to `done` in completion
+//! order; [`SpanTrace::merge`] concatenates shards in ascending shard
+//! index — with the shard partition a pure function of the fleet, the
+//! merged export is byte-identical across shard-thread budgets (a
+//! sharded run remains its own design point vs the unsharded engine,
+//! exactly like the report bytes).
+//!
+//! **Export** ([`SpanTrace::to_chrome_json`]): one trace-event process
+//! per server (pid = global id + 1, named after the GPU) plus a `router`
+//! pseudo-process (pid 0) for pre-placement instants; each job is a
+//! thread (tid = low 32 bits of its trace id) so its queue/prefill/
+//! decode slices ("X" events, µs) stack on the server that served them,
+//! with instant events ("i") marking arrival/route/reroute/park/recover/
+//! complete.
+
+/// Span-relevant lifecycle moments of one sampled job.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SpanEvent {
+    /// Placed on a server's prompt queue.
+    Route { t: f64, server: usize },
+    /// Displaced off a killed (or dead-target) server, re-entering
+    /// routing.
+    Reroute { t: f64, from: usize },
+    /// Parked in the recovery queue: no live server could take it.
+    Park { t: f64 },
+    /// Drained out of the recovery queue after capacity returned.
+    Recover { t: f64 },
+    /// One prefill busy period serving this job.
+    Prefill { server: usize, t0: f64, t1: f64 },
+    /// Admitted into a server's decode batch.
+    DecodeStart { t: f64, server: usize },
+    /// All output tokens produced.
+    Complete { t: f64 },
+}
+
+/// The recorded spans of one sampled job.
+#[derive(Debug, Clone)]
+pub struct JobSpan {
+    /// Shard-invariant trace id (the sampling hash).
+    pub id: u64,
+    pub arrival: f64,
+    pub online: bool,
+    pub events: Vec<SpanEvent>,
+}
+
+/// Deterministic per-job span recorder. See the module docs.
+#[derive(Debug)]
+pub struct SpanTrace {
+    seed: u64,
+    /// Sample iff `hash < threshold` (`rate` mapped onto the u64 range).
+    threshold: u64,
+    /// Local → global server-id map (identity when unsharded).
+    server_base: Vec<usize>,
+    /// Open spans indexed by arena slot (slots recycle; completion or
+    /// stranded-flush clears the slot before the arena reuses it).
+    open: Vec<Option<JobSpan>>,
+    /// Finished (or flushed) spans in completion order.
+    done: Vec<JobSpan>,
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// The sampling hash: a pure function of the request and the span seed.
+pub fn job_hash(seed: u64, arrival_s: f64, prompt: usize, output: usize,
+                online: bool) -> u64 {
+    let mut h = fnv1a(FNV_OFFSET, &seed.to_le_bytes());
+    h = fnv1a(h, &arrival_s.to_bits().to_le_bytes());
+    h = fnv1a(h, &(prompt as u64).to_le_bytes());
+    h = fnv1a(h, &(output as u64).to_le_bytes());
+    fnv1a(h, &[online as u8])
+}
+
+/// `rate` ∈ [0, 1] mapped onto the u64 hash range.
+fn rate_threshold(rate: f64) -> u64 {
+    if rate >= 1.0 {
+        u64::MAX
+    } else if rate <= 0.0 {
+        0
+    } else {
+        (rate * u64::MAX as f64) as u64
+    }
+}
+
+impl SpanTrace {
+    /// `server_base[local]` names the global server id behind each local
+    /// slot (identity for an unsharded fleet).
+    pub fn new(seed: u64, rate: f64, server_base: Vec<usize>) -> SpanTrace {
+        SpanTrace {
+            seed,
+            threshold: rate_threshold(rate),
+            server_base,
+            open: Vec::new(),
+            done: Vec::new(),
+        }
+    }
+
+    fn global(&self, server: usize) -> usize {
+        self.server_base.get(server).copied().unwrap_or(server)
+    }
+
+    /// Sampling decision at job admission; opens a span in `slot` when
+    /// the hash falls under the rate threshold.
+    pub fn on_arrival(&mut self, slot: usize, arrival_s: f64, prompt: usize,
+                      output: usize, online: bool) {
+        if self.open.len() <= slot {
+            self.open.resize_with(slot + 1, || None);
+        }
+        let h = job_hash(self.seed, arrival_s, prompt, output, online);
+        self.open[slot] = (self.threshold == u64::MAX || h < self.threshold)
+            .then(|| JobSpan {
+                id: h,
+                arrival: arrival_s,
+                online,
+                events: Vec::new(),
+            });
+    }
+
+    fn record(&mut self, slot: usize, ev: SpanEvent) {
+        if let Some(Some(span)) = self.open.get_mut(slot) {
+            span.events.push(ev);
+        }
+    }
+
+    pub fn on_route(&mut self, slot: usize, t: f64, server: usize) {
+        let server = self.global(server);
+        self.record(slot, SpanEvent::Route { t, server });
+    }
+
+    pub fn on_reroute(&mut self, slot: usize, t: f64, from: usize) {
+        let from = self.global(from);
+        self.record(slot, SpanEvent::Reroute { t, from });
+    }
+
+    pub fn on_park(&mut self, slot: usize, t: f64) {
+        self.record(slot, SpanEvent::Park { t });
+    }
+
+    pub fn on_recover(&mut self, slot: usize, t: f64) {
+        self.record(slot, SpanEvent::Recover { t });
+    }
+
+    pub fn on_prefill(&mut self, slot: usize, server: usize, t0: f64,
+                      t1: f64) {
+        let server = self.global(server);
+        self.record(slot, SpanEvent::Prefill { server, t0, t1 });
+    }
+
+    pub fn on_decode_start(&mut self, slot: usize, t: f64, server: usize) {
+        let server = self.global(server);
+        self.record(slot, SpanEvent::DecodeStart { t, server });
+    }
+
+    /// Completion closes the span and frees the slot for arena reuse.
+    pub fn on_complete(&mut self, slot: usize, t: f64) {
+        if let Some(mut span) = self.open.get_mut(slot).and_then(|o| o.take()) {
+            span.events.push(SpanEvent::Complete { t });
+            self.done.push(span);
+        }
+    }
+
+    /// Flush never-completed spans (stranded by total capacity loss or
+    /// the horizon) in slot order, after the completion-ordered ones.
+    pub fn flush_stranded(&mut self) {
+        for slot in 0..self.open.len() {
+            if let Some(span) = self.open[slot].take() {
+                self.done.push(span);
+            }
+        }
+    }
+
+    /// Sampled spans recorded so far (completed + flushed).
+    pub fn len(&self) -> usize {
+        self.done.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.done.is_empty()
+    }
+
+    pub fn spans(&self) -> &[JobSpan] {
+        &self.done
+    }
+
+    /// Fold a shard's finished spans into this trace (ascending shard
+    /// index — the order-fixed merge discipline).
+    pub fn merge(&mut self, mut other: SpanTrace) {
+        debug_assert!(other.open.iter().all(Option::is_none),
+                      "merging a span trace with open spans");
+        self.done.append(&mut other.done);
+    }
+
+    /// Render as Chrome trace-event JSON (`{"traceEvents": [...]}`).
+    /// `server_labels[g]` names global server `g`'s track. Timestamps are
+    /// microseconds, formatted through the default f64 `Display` — the
+    /// same shortest-round-trip rendering every other artifact uses, so
+    /// the export is byte-deterministic.
+    pub fn to_chrome_json(&self, server_labels: &[String]) -> String {
+        let mut out = String::from("{\"traceEvents\":[");
+        let mut first = true;
+        let mut push = |out: &mut String, ev: String| {
+            if !std::mem::take(&mut first) {
+                out.push(',');
+            }
+            out.push_str(&ev);
+        };
+        // Process-name metadata: the router pseudo-process plus one
+        // process per server track.
+        push(&mut out, meta_event(0, "router"));
+        for (g, label) in server_labels.iter().enumerate() {
+            push(&mut out, meta_event(g + 1, label));
+        }
+        for span in &self.done {
+            let tid = span.id & 0xffff_ffff;
+            let class = if span.online { "online" } else { "offline" };
+            push(&mut out, instant_event("arrival", 0, tid, span.arrival,
+                                         span.id, class));
+            let mut route_t: Option<(f64, usize)> = None;
+            let mut decode_open: Option<(f64, usize)> = None;
+            let mut close_decode =
+                |out: &mut String,
+                 push: &mut dyn FnMut(&mut String, String),
+                 open: &mut Option<(f64, usize)>, t1: f64| {
+                    if let Some((t0, server)) = open.take() {
+                        push(out, slice_event("decode", server + 1, tid,
+                                              t0, t1, span.id, class));
+                    }
+                };
+            for ev in &span.events {
+                match *ev {
+                    SpanEvent::Route { t, server } => {
+                        route_t = Some((t, server));
+                        push(&mut out, instant_event("route", server + 1,
+                                                     tid, t, span.id, class));
+                    }
+                    SpanEvent::Reroute { t, from } => {
+                        close_decode(&mut out, &mut push, &mut decode_open, t);
+                        push(&mut out, instant_event("reroute", from + 1,
+                                                     tid, t, span.id, class));
+                    }
+                    SpanEvent::Park { t } => {
+                        close_decode(&mut out, &mut push, &mut decode_open, t);
+                        push(&mut out, instant_event("park", 0, tid, t,
+                                                     span.id, class));
+                    }
+                    SpanEvent::Recover { t } => {
+                        push(&mut out, instant_event("recover", 0, tid, t,
+                                                     span.id, class));
+                    }
+                    SpanEvent::Prefill { server, t0, t1 } => {
+                        if let Some((rt, _)) = route_t.take() {
+                            push(&mut out, slice_event("queue", server + 1,
+                                                       tid, rt, t0, span.id,
+                                                       class));
+                        }
+                        push(&mut out, slice_event("prefill", server + 1,
+                                                   tid, t0, t1, span.id,
+                                                   class));
+                    }
+                    SpanEvent::DecodeStart { t, server } => {
+                        close_decode(&mut out, &mut push, &mut decode_open, t);
+                        decode_open = Some((t, server));
+                    }
+                    SpanEvent::Complete { t } => {
+                        close_decode(&mut out, &mut push, &mut decode_open, t);
+                        push(&mut out, instant_event("complete", 0, tid, t,
+                                                     span.id, class));
+                    }
+                }
+            }
+            // A stranded span's open decode slice closes at its last
+            // recorded moment.
+            if let Some((t0, server)) = decode_open {
+                push(&mut out, slice_event("decode", server + 1, tid, t0, t0,
+                                           span.id, class));
+            }
+        }
+        out.push_str("]}");
+        out
+    }
+}
+
+fn us(t_s: f64) -> f64 {
+    t_s * 1e6
+}
+
+fn meta_event(pid: usize, name: &str) -> String {
+    format!("{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":{pid},\
+             \"tid\":0,\"args\":{{\"name\":\"{name}\"}}}}")
+}
+
+fn instant_event(name: &str, pid: usize, tid: u64, t_s: f64, id: u64,
+                 class: &str) -> String {
+    format!("{{\"name\":\"{name}\",\"ph\":\"i\",\"s\":\"t\",\"pid\":{pid},\
+             \"tid\":{tid},\"ts\":{},\
+             \"args\":{{\"job\":\"{id:016x}\",\"class\":\"{class}\"}}}}",
+            us(t_s))
+}
+
+fn slice_event(name: &str, pid: usize, tid: u64, t0_s: f64, t1_s: f64,
+               id: u64, class: &str) -> String {
+    format!("{{\"name\":\"{name}\",\"ph\":\"X\",\"pid\":{pid},\"tid\":{tid},\
+             \"ts\":{},\"dur\":{},\
+             \"args\":{{\"job\":\"{id:016x}\",\"class\":\"{class}\"}}}}",
+            us(t0_s), us((t1_s - t0_s).max(0.0)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sampling_is_a_pure_function_of_the_request() {
+        let h1 = job_hash(42, 1.5, 128, 64, true);
+        let h2 = job_hash(42, 1.5, 128, 64, true);
+        assert_eq!(h1, h2);
+        assert_ne!(h1, job_hash(43, 1.5, 128, 64, true));
+        assert_ne!(h1, job_hash(42, 1.5, 128, 64, false));
+    }
+
+    #[test]
+    fn rate_bounds_sample_none_or_all() {
+        let mut none = SpanTrace::new(7, 0.0, vec![0]);
+        let mut all = SpanTrace::new(7, 1.0, vec![0]);
+        for slot in 0..50 {
+            let t = slot as f64 * 0.1;
+            none.on_arrival(slot, t, 100, 50, true);
+            all.on_arrival(slot, t, 100, 50, true);
+            none.on_complete(slot, t + 1.0);
+            all.on_complete(slot, t + 1.0);
+        }
+        assert_eq!(none.len(), 0);
+        assert_eq!(all.len(), 50);
+    }
+
+    #[test]
+    fn slots_recycle_without_cross_talk() {
+        let mut tr = SpanTrace::new(1, 1.0, vec![0, 1]);
+        tr.on_arrival(0, 0.0, 10, 5, true);
+        tr.on_route(0, 0.1, 1);
+        tr.on_complete(0, 1.0);
+        // Slot 0 reused by a different job: a fresh span, new hash.
+        tr.on_arrival(0, 2.0, 20, 5, false);
+        tr.on_complete(0, 3.0);
+        assert_eq!(tr.len(), 2);
+        assert_ne!(tr.spans()[0].id, tr.spans()[1].id);
+        assert_eq!(tr.spans()[0].events.len(), 2); // route + complete
+    }
+
+    #[test]
+    fn chrome_export_has_metadata_slices_and_instants() {
+        let mut tr = SpanTrace::new(1, 1.0, vec![0]);
+        tr.on_arrival(0, 0.0, 10, 2, true);
+        tr.on_route(0, 0.0, 0);
+        tr.on_prefill(0, 0, 0.5, 0.8);
+        tr.on_decode_start(0, 0.9, 0);
+        tr.on_complete(0, 1.5);
+        let json = tr.to_chrome_json(&["server0 A100".to_string()]);
+        let parsed = crate::util::json::Json::parse(&json)
+            .expect("chrome export must be valid JSON");
+        let events = parsed.get("traceEvents").and_then(|e| e.as_arr())
+            .expect("traceEvents array");
+        let phases: Vec<&str> = events.iter()
+            .filter_map(|e| e.get("ph").and_then(|p| p.as_str()))
+            .collect();
+        assert!(phases.contains(&"M"));
+        assert!(phases.contains(&"X"));
+        assert!(phases.contains(&"i"));
+        let names: Vec<&str> = events.iter()
+            .filter_map(|e| e.get("name").and_then(|p| p.as_str()))
+            .collect();
+        for expect in ["arrival", "route", "queue", "prefill", "decode",
+                       "complete"] {
+            assert!(names.contains(&expect), "missing {expect}: {names:?}");
+        }
+    }
+
+    #[test]
+    fn shard_merge_concatenates_in_fold_order() {
+        let mut parent = SpanTrace::new(1, 1.0, vec![0, 1]);
+        let mut a = SpanTrace::new(1, 1.0, vec![0]);
+        let mut b = SpanTrace::new(1, 1.0, vec![1]);
+        a.on_arrival(0, 0.0, 10, 2, true);
+        a.on_route(0, 0.0, 0);
+        a.on_complete(0, 1.0);
+        b.on_arrival(0, 0.5, 12, 2, true);
+        b.on_route(0, 0.5, 0); // shard-local 0 → global 1
+        b.on_complete(0, 1.5);
+        parent.merge(a);
+        parent.merge(b);
+        assert_eq!(parent.len(), 2);
+        assert_eq!(parent.spans()[1].events[0],
+                   SpanEvent::Route { t: 0.5, server: 1 });
+    }
+}

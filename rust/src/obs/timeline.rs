@@ -1,0 +1,279 @@
+//! Fleet timeline: fixed-interval series sampled from the event core as
+//! it runs — server lifecycle counts, queue depths by request class,
+//! recovery-queue depth, instantaneous fleet power from the shared
+//! nonlinear model, per-region grid CI, cumulative operational/embodied
+//! carbon, and rolling SLO attainment. Memory is O(duration / interval),
+//! independent of trace length, matching the streaming core's contract.
+//!
+//! Determinism and shard merging follow the `Histogram::merge`
+//! discipline: every shard emits a sample at exactly the same grid
+//! instants `t_i = i · interval` (the engine flushes the tail with
+//! `upto = ∞` at finish, so each shard produces the full grid even if
+//! its events end early), and [`Timeline::merge`] folds shards in
+//! ascending shard index — counts and power/carbon sum elementwise; CI
+//! columns take the first fold's values, which are identical in every
+//! shard because `ShardPlan::sub_config` clones the full primary and
+//! region signals into each shard config. The merged CSV is therefore
+//! byte-identical for any shard-thread budget.
+
+/// One sampled grid instant. Counts are instantaneous (state just before
+/// the first event at `t > t_s` is processed); `op_kg`/`emb_kg`/
+/// `online_done`/`slo_ok` are cumulative since t = 0.
+#[derive(Debug, Clone)]
+pub struct TimelineSample {
+    pub t_s: f64,
+    pub pending: usize,
+    pub active: usize,
+    pub draining: usize,
+    pub retired: usize,
+    pub q_prompt_online: usize,
+    pub q_prompt_offline: usize,
+    pub q_decode_online: usize,
+    pub q_decode_offline: usize,
+    /// Jobs parked in the recovery queue (prompt + decode).
+    pub recovery: usize,
+    /// Instantaneous fleet draw: busy servers at their last busy-period
+    /// power, idle provisioned servers at the shared idle floor.
+    pub power_w: f64,
+    /// Cumulative busy-interval operational carbon metered so far (idle
+    /// op-carbon is priced once at finalize and is not in this column).
+    pub op_kg: f64,
+    /// Cumulative embodied carbon amortized over provisioned seconds
+    /// through `t_s`.
+    pub emb_kg: f64,
+    pub online_done: usize,
+    pub slo_ok: usize,
+    /// Grid CI at `t_s`: primary signal first, then one entry per
+    /// configured region signal (config order).
+    pub ci: Vec<f64>,
+}
+
+/// The fixed-interval fleet series. See the module docs for the grid and
+/// merge rules.
+#[derive(Debug, Clone)]
+pub struct Timeline {
+    interval_s: f64,
+    /// Grid size: `floor(duration / interval) + 1` instants.
+    n_samples: usize,
+    /// Next grid index this recorder owes a sample for.
+    next_idx: usize,
+    samples: Vec<TimelineSample>,
+    /// CSV column names for the per-region CI tail (`ci_primary`, …).
+    ci_names: Vec<String>,
+}
+
+/// Fixed (non-CI) CSV columns, in order. The golden header test pins the
+/// rendered form.
+const FIXED_COLUMNS: &[&str] = &[
+    "t_s", "pending", "active", "draining", "retired", "q_prompt_online",
+    "q_prompt_offline", "q_decode_online", "q_decode_offline", "recovery",
+    "power_w", "op_kg", "emb_kg", "online_done", "slo_ok", "slo_window",
+];
+
+impl Timeline {
+    pub fn new(interval_s: f64, duration_s: f64, ci_names: Vec<String>)
+        -> Timeline {
+        let interval_s = interval_s.max(1e-9);
+        let n_samples = (duration_s.max(0.0) / interval_s) as usize + 1;
+        Timeline {
+            interval_s,
+            n_samples,
+            next_idx: 0,
+            samples: Vec::with_capacity(n_samples),
+            ci_names,
+        }
+    }
+
+    /// The next grid instant due at or before `upto`, if any. The engine
+    /// calls this before processing each event (and with `upto = ∞` at
+    /// finish), sampling state for every due instant in order.
+    pub fn due(&self, upto: f64) -> Option<f64> {
+        if self.next_idx >= self.n_samples {
+            return None;
+        }
+        let t = self.next_idx as f64 * self.interval_s;
+        (t <= upto).then_some(t)
+    }
+
+    /// Append the sample for the instant [`Timeline::due`] returned.
+    pub fn push(&mut self, sample: TimelineSample) {
+        debug_assert!(self.next_idx < self.n_samples, "sample past the grid");
+        debug_assert_eq!(sample.ci.len(), self.ci_names.len(),
+                         "CI column count mismatch");
+        self.samples.push(sample);
+        self.next_idx += 1;
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Fold a shard's timeline into this one (ascending shard index, the
+    /// `Histogram::merge` discipline). Counts and power/carbon sums add
+    /// elementwise; CI columns keep the first fold's values (identical in
+    /// every shard — each shard config clones the full signals). An empty
+    /// parent (the fleet-level recorder never ticks when the run is
+    /// sharded) adopts the first shard's rows wholesale.
+    pub fn merge(&mut self, other: &Timeline) {
+        assert_eq!(self.n_samples, other.n_samples,
+                   "timeline grids differ: {} vs {}",
+                   self.n_samples, other.n_samples);
+        assert_eq!(self.interval_s.to_bits(), other.interval_s.to_bits(),
+                   "timeline intervals differ");
+        if self.samples.is_empty() {
+            self.samples = other.samples.clone();
+            self.next_idx = other.next_idx;
+            return;
+        }
+        assert_eq!(self.samples.len(), other.samples.len(),
+                   "timeline row counts differ");
+        for (a, b) in self.samples.iter_mut().zip(&other.samples) {
+            debug_assert_eq!(a.t_s.to_bits(), b.t_s.to_bits());
+            a.pending += b.pending;
+            a.active += b.active;
+            a.draining += b.draining;
+            a.retired += b.retired;
+            a.q_prompt_online += b.q_prompt_online;
+            a.q_prompt_offline += b.q_prompt_offline;
+            a.q_decode_online += b.q_decode_online;
+            a.q_decode_offline += b.q_decode_offline;
+            a.recovery += b.recovery;
+            a.power_w += b.power_w;
+            a.op_kg += b.op_kg;
+            a.emb_kg += b.emb_kg;
+            a.online_done += b.online_done;
+            a.slo_ok += b.slo_ok;
+            // CI columns: first-fold values stand (identical per shard).
+        }
+    }
+
+    /// Render the series as CSV. `slo_window` is the per-interval SLO
+    /// attainment (delta of the cumulative counters between consecutive
+    /// rows; an interval with no online completions reports 1, matching
+    /// the sink's vacuous-attainment convention).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        for (i, c) in FIXED_COLUMNS.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(c);
+        }
+        for name in &self.ci_names {
+            out.push(',');
+            out.push_str(name);
+        }
+        out.push('\n');
+        let mut prev_done = 0usize;
+        let mut prev_ok = 0usize;
+        for s in &self.samples {
+            let w_done = s.online_done - prev_done;
+            let w_ok = s.slo_ok - prev_ok;
+            let slo_window = if w_done == 0 {
+                1.0
+            } else {
+                w_ok as f64 / w_done as f64
+            };
+            prev_done = s.online_done;
+            prev_ok = s.slo_ok;
+            out.push_str(&format!(
+                "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
+                s.t_s, s.pending, s.active, s.draining, s.retired,
+                s.q_prompt_online, s.q_prompt_offline, s.q_decode_online,
+                s.q_decode_offline, s.recovery, s.power_w, s.op_kg, s.emb_kg,
+                s.online_done, s.slo_ok, slo_window));
+            for ci in &s.ci {
+                out.push_str(&format!(",{ci}"));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// The golden CSV header for this timeline's CI columns.
+    pub fn csv_header(&self) -> String {
+        self.to_csv().lines().next().unwrap_or_default().to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(t: f64, active: usize, done: usize, ok: usize)
+        -> TimelineSample {
+        TimelineSample {
+            t_s: t,
+            pending: 0,
+            active,
+            draining: 0,
+            retired: 0,
+            q_prompt_online: 1,
+            q_prompt_offline: 0,
+            q_decode_online: 2,
+            q_decode_offline: 0,
+            recovery: 0,
+            power_w: 100.0,
+            op_kg: 0.5,
+            emb_kg: 0.25,
+            online_done: done,
+            slo_ok: ok,
+            ci: vec![261.0],
+        }
+    }
+
+    #[test]
+    fn grid_emits_every_instant_through_flush() {
+        let mut tl = Timeline::new(10.0, 35.0, vec!["ci_primary".into()]);
+        assert_eq!(tl.n_samples, 4); // 0, 10, 20, 30
+        assert_eq!(tl.due(9.0), Some(0.0));
+        tl.push(sample(0.0, 1, 0, 0));
+        assert_eq!(tl.due(9.0), None);
+        assert_eq!(tl.due(10.0), Some(10.0)); // boundary instant is due
+        tl.push(sample(10.0, 2, 4, 3));
+        // Flush with ∞ drains the remaining grid.
+        while let Some(t) = tl.due(f64::INFINITY) {
+            tl.push(sample(t, 2, 8, 6));
+        }
+        assert_eq!(tl.len(), 4);
+        assert_eq!(tl.due(f64::INFINITY), None);
+    }
+
+    #[test]
+    fn csv_reports_windowed_slo_and_golden_header() {
+        let mut tl = Timeline::new(10.0, 20.0, vec!["ci_primary".into()]);
+        tl.push(sample(0.0, 1, 0, 0));
+        tl.push(sample(10.0, 1, 4, 3));
+        tl.push(sample(20.0, 1, 4, 3)); // empty window: vacuous 1
+        let csv = tl.to_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0],
+                   "t_s,pending,active,draining,retired,q_prompt_online,\
+                    q_prompt_offline,q_decode_online,q_decode_offline,\
+                    recovery,power_w,op_kg,emb_kg,online_done,slo_ok,\
+                    slo_window,ci_primary");
+        assert!(lines[2].contains(",0.75,"), "windowed slo: {}", lines[2]);
+        assert!(lines[3].ends_with(",1,261"), "vacuous window: {}", lines[3]);
+    }
+
+    #[test]
+    fn merge_sums_counts_and_keeps_first_fold_ci() {
+        let mut parent = Timeline::new(10.0, 10.0, vec!["ci_primary".into()]);
+        let mut a = Timeline::new(10.0, 10.0, vec!["ci_primary".into()]);
+        let mut b = Timeline::new(10.0, 10.0, vec!["ci_primary".into()]);
+        for tl in [&mut a, &mut b] {
+            tl.push(sample(0.0, 1, 2, 1));
+            tl.push(sample(10.0, 1, 3, 2));
+        }
+        parent.merge(&a);
+        parent.merge(&b);
+        assert_eq!(parent.samples[1].active, 2);
+        assert_eq!(parent.samples[1].online_done, 6);
+        assert_eq!(parent.samples[1].ci, vec![261.0]);
+        assert!((parent.samples[1].power_w - 200.0).abs() < 1e-12);
+    }
+}

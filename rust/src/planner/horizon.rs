@@ -178,6 +178,21 @@ pub struct PlannerStats {
     pub nodes: usize,
 }
 
+impl PlannerStats {
+    /// Elementwise accumulate (shard observers fold their counters back
+    /// into one fleet-level total; `usize` sums commute, so the result is
+    /// thread-invariant).
+    pub fn absorb(&mut self, o: PlannerStats) {
+        self.epochs += o.epochs;
+        self.full_solves += o.full_solves;
+        self.warm_hits += o.warm_hits;
+        self.drift_skips += o.drift_skips;
+        self.cut_patches += o.cut_patches;
+        self.cuts += o.cuts;
+        self.nodes += o.nodes;
+    }
+}
+
 impl IncrementalPlanner {
     pub fn new(drift_tol: f64, interval_cuts: bool) -> IncrementalPlanner {
         IncrementalPlanner {
@@ -317,11 +332,29 @@ pub fn plan_schedule_stream(model: &'static LlmSpec,
                             template: &[ServerSpec], base: &PlanConfig,
                             ci: &CiSignal, slo: Slo, h: &HorizonConfig,
                             duration_s: f64) -> FleetSchedule {
+    plan_schedule_stream_with_stats(model, source, template, base, ci, slo,
+                                    h, duration_s).0
+}
+
+/// [`plan_schedule_stream`] that also hands back the incremental
+/// planner's decision-ladder counters ([`PlannerStats`]) — what the
+/// observability layer's self-profile records per scenario run. The
+/// schedule bytes are identical to [`plan_schedule_stream`]; the stats
+/// are a passive read of the planner it ran anyway.
+#[allow(clippy::too_many_arguments)]
+pub fn plan_schedule_stream_with_stats(model: &'static LlmSpec,
+                                       source: &mut dyn ArrivalSource,
+                                       template: &[ServerSpec],
+                                       base: &PlanConfig, ci: &CiSignal,
+                                       slo: Slo, h: &HorizonConfig,
+                                       duration_s: f64)
+    -> (FleetSchedule, PlannerStats) {
     let epoch = h.effective_epoch(duration_s);
     let profile = DemandProfile::build(source, epoch, h.window_s, duration_s);
     let mut inc = IncrementalPlanner::from_horizon(h);
-    plan_schedule_from_profile(model, &profile, template, base, ci, slo, h,
-                               duration_s, &mut inc)
+    let schedule = plan_schedule_from_profile(model, &profile, template, base,
+                                              ci, slo, h, duration_s, &mut inc);
+    (schedule, inc.stats())
 }
 
 /// The epoch loop of [`plan_schedule_stream`], decoupled from the demand

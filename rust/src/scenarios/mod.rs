@@ -23,12 +23,15 @@ pub use runner::{run_sweep, SweepConfig, SweepReport};
 
 use crate::carbon::ci_stream::CiStream;
 use crate::carbon::intensity::{CiSignal, CiTrace, Region};
+use crate::obs::{ObsArtifacts, ObsSettings, Observer, Profile};
 use crate::planner::fused::DemandProfile;
-use crate::planner::horizon::{self, HorizonConfig, IncrementalPlanner};
+use crate::planner::horizon::{self, HorizonConfig, IncrementalPlanner,
+                              PlannerStats};
 use crate::planner::slicing::SliceAccum;
 use crate::planner::{self, PlanConfig};
-use crate::sim::{apply_ci_spikes, shard, simulate_stream, DeferralPolicy,
-                 FaultPlan, FleetSchedule, KeepAlivePolicy, Router, SimConfig,
+use crate::sim::{apply_ci_spikes, shard, simulate_stream,
+                 simulate_stream_observed, DeferralPolicy, FaultPlan,
+                 FleetSchedule, KeepAlivePolicy, Router, SimConfig,
                  SimReport};
 use crate::strategies::{fleet_from_plan, hetero_pd_fleet, sim_config,
                         splitwise_fleet, Strategy};
@@ -236,9 +239,10 @@ pub trait Scenario: Send + Sync {
         self.run_with(seed, duration_s, &Overrides::default())
     }
 
-    /// Like [`Scenario::run`] with sweep-level spec overrides.
-    fn run_with(&self, seed: u64, duration_s: f64, ov: &Overrides)
-        -> ScenarioOutcome {
+    /// The spec with sweep-level overrides applied — shared by the
+    /// observed and unobserved run paths so they exercise identical
+    /// configurations.
+    fn spec_with(&self, ov: &Overrides) -> ScenarioSpec {
         let mut spec = self.spec();
         if let Some(p) = &ov.ci_profile {
             spec.ci_profile = p.clone();
@@ -267,10 +271,27 @@ pub trait Scenario: Send + Sync {
         if let Some(p) = &ov.ci_file {
             spec.ci_profile = CiProfile::TraceFile { path: p.clone() };
         }
+        spec
+    }
+
+    /// Like [`Scenario::run`] with sweep-level spec overrides.
+    fn run_with(&self, seed: u64, duration_s: f64, ov: &Overrides)
+        -> ScenarioOutcome {
+        let spec = self.spec_with(ov);
         match ov.shards {
             Some(n) => run_spec_sharded(self.name(), &spec, seed, duration_s, n),
             None => run_spec(self.name(), &spec, seed, duration_s),
         }
+    }
+
+    /// [`Scenario::run_with`] carrying the passive observability
+    /// recorders ([`crate::obs`]) on the primary pass; baselines run
+    /// unobserved. The outcome bytes are identical to [`Scenario::run_with`]
+    /// — the recorders never touch simulation state.
+    fn run_observed(&self, seed: u64, duration_s: f64, ov: &Overrides,
+                    obs: &ObsSettings) -> (ScenarioOutcome, ObsArtifacts) {
+        let spec = self.spec_with(ov);
+        run_spec_observed(self.name(), &spec, seed, duration_s, ov.shards, obs)
     }
 }
 
@@ -465,7 +486,23 @@ pub fn run_spec(name: &str, spec: &ScenarioSpec, seed: u64, duration_s: f64)
     let fresh = || {
         Box::new(scenario_sources(spec, seed, duration_s)) as Box<dyn ArrivalSource>
     };
-    run_spec_with_sources(name, spec, seed, duration_s, &fresh, None)
+    run_spec_with_sources(name, spec, seed, duration_s, &fresh, None, None).0
+}
+
+/// [`run_spec`]/[`run_spec_sharded`] with the passive observability
+/// recorders attached to the primary pass: the outcome bytes are
+/// identical; the second element carries the rendered timeline CSV,
+/// Chrome-trace span JSON, and self-profile JSON per `obs` settings.
+pub fn run_spec_observed(name: &str, spec: &ScenarioSpec, seed: u64,
+                         duration_s: f64, shards: Option<usize>,
+                         obs: &ObsSettings) -> (ScenarioOutcome, ObsArtifacts) {
+    let fresh = || {
+        Box::new(scenario_sources(spec, seed, duration_s)) as Box<dyn ArrivalSource>
+    };
+    let (out, art) = run_spec_with_sources(name, spec, seed, duration_s,
+                                           &fresh, shards.map(|n| n.max(1)),
+                                           Some(obs));
+    (out, art.unwrap_or_default())
 }
 
 /// [`run_spec`] on the sharded runtime: the same global planning passes,
@@ -480,7 +517,7 @@ pub fn run_spec_sharded(name: &str, spec: &ScenarioSpec, seed: u64,
         Box::new(scenario_sources(spec, seed, duration_s)) as Box<dyn ArrivalSource>
     };
     run_spec_with_sources(name, spec, seed, duration_s, &fresh,
-                          Some(shards.max(1)))
+                          Some(shards.max(1)), None).0
 }
 
 /// Reference implementation for the differential suite: materialize the
@@ -494,7 +531,7 @@ pub fn run_spec_materialized(name: &str, spec: &ScenarioSpec, seed: u64,
     let fresh = || {
         Box::new(SliceSource::new(&trace)) as Box<dyn ArrivalSource + '_>
     };
-    run_spec_with_sources(name, spec, seed, duration_s, &fresh, None)
+    run_spec_with_sources(name, spec, seed, duration_s, &fresh, None, None).0
 }
 
 /// Materialized reference for the *sharded* differential: byte-identical
@@ -508,7 +545,7 @@ pub fn run_spec_sharded_materialized(name: &str, spec: &ScenarioSpec,
         Box::new(SliceSource::new(&trace)) as Box<dyn ArrivalSource + '_>
     };
     run_spec_with_sources(name, spec, seed, duration_s, &fresh,
-                          Some(shards.max(1)))
+                          Some(shards.max(1)), None).0
 }
 
 /// Factory handing out a fresh copy of a scenario's arrival stream; each
@@ -532,8 +569,8 @@ type SourceFactory<'a> = dyn Fn() -> Box<dyn ArrivalSource + 'a> + Sync;
 /// merged report is invariant in the thread budget.
 fn run_spec_with_sources<'a>(name: &str, spec: &ScenarioSpec, seed: u64,
                              duration_s: f64, fresh: &SourceFactory<'a>,
-                             shards: Option<usize>)
-    -> ScenarioOutcome {
+                             shards: Option<usize>, obs: Option<&ObsSettings>)
+    -> (ScenarioOutcome, Option<ObsArtifacts>) {
     use crate::planner::slicing::cluster_slices;
 
     let model = crate::models::llm(spec.model)
@@ -543,6 +580,12 @@ fn run_spec_with_sources<'a>(name: &str, spec: &ScenarioSpec, seed: u64,
         .or_else(|| slo_for(spec.model, false).map(|w| w.slo))
         .unwrap_or(Slo { ttft_s: 2.0, tpot_s: 0.2 });
 
+    // Harness self-profile: stage wall clocks + planner epoch counters.
+    // Always collected (a pair of `Instant` reads per stage); rendered
+    // only when observability asked for it. Wall clocks never feed the
+    // outcome, so the observed and unobserved paths stay byte-identical.
+    let mut prof = Profile::default();
+
     let plan_cfg = scenario_plan_config(spec, ci);
     // Re-provisioning scenarios used to walk the stream three times before
     // simulating (peak scan, peak re-materialization, sliding observation
@@ -551,12 +594,12 @@ fn run_spec_with_sources<'a>(name: &str, spec: &ScenarioSpec, seed: u64,
     // build it on the shard thread budget — byte-identical by contract.
     let profile = spec.reprovision.as_ref().map(|h| {
         let epoch = h.effective_epoch(duration_s);
-        match shards {
+        prof.stage(|p| &mut p.demand_pass_s, || match shards {
             None => DemandProfile::build(&mut *fresh(), epoch, h.window_s,
                                          duration_s),
             Some(threads) => DemandProfile::build_sharded(
                 fresh, threads, epoch, h.window_s, duration_s),
-        }
+        })
     });
     let plan = match &profile {
         Some(profile) => {
@@ -671,9 +714,12 @@ fn run_spec_with_sources<'a>(name: &str, spec: &ScenarioSpec, seed: u64,
     // shard against its own substream (see `sched` below).
     if let (Some(h), None, Some(profile)) = (&spec.reprovision, shards, &profile) {
         let mut inc = IncrementalPlanner::from_horizon(h);
-        cfg.fleet_plan = horizon::plan_schedule_from_profile(
-            model, profile, &cfg.servers, &plan_cfg, &cfg.ci, slo, h,
-            duration_s, &mut inc);
+        cfg.fleet_plan = prof.stage(|p| &mut p.plan_s, || {
+            horizon::plan_schedule_from_profile(
+                model, profile, &cfg.servers, &plan_cfg, &cfg.ci, slo, h,
+                duration_s, &mut inc)
+        });
+        prof.add_planner(inc.stats());
     }
 
     // Fault injection: the spec's fraction-typed fault times scale onto
@@ -703,11 +749,23 @@ fn run_spec_with_sources<'a>(name: &str, spec: &ScenarioSpec, seed: u64,
         (shard::ShardPlan::partition(&cfg, seed), threads)
     });
     let plan_cfg_ref = &plan_cfg;
+    // Sharded runs build their schedules inside the shard workers; the
+    // planner counters fold through a mutex (usize sums commute, so the
+    // total is thread-invariant). Only the primary pass records — the
+    // flag drops before the baselines re-schedule their twins.
+    let planner_stats = std::sync::Mutex::new(PlannerStats::default());
+    let planner_recording = std::sync::atomic::AtomicBool::new(true);
     let sched = spec.reprovision.as_ref().map(|h| {
+        let stats = &planner_stats;
+        let recording = &planner_recording;
         Box::new(move |sub: &SimConfig, src: &mut dyn ArrivalSource| {
-            horizon::plan_schedule_stream(model, src, &sub.servers,
-                                          plan_cfg_ref, &sub.ci, slo, h,
-                                          duration_s)
+            let (schedule, st) = horizon::plan_schedule_stream_with_stats(
+                model, src, &sub.servers, plan_cfg_ref, &sub.ci, slo, h,
+                duration_s);
+            if recording.load(std::sync::atomic::Ordering::Relaxed) {
+                stats.lock().unwrap().absorb(st);
+            }
+            schedule
         }) as Box<shard::ScheduleFn<'_>>
     });
     // One simulation pass: `reprovision` says whether this pass runs the
@@ -721,9 +779,67 @@ fn run_spec_with_sources<'a>(name: &str, spec: &ScenarioSpec, seed: u64,
                 if reprovision { sched.as_deref() } else { None }),
         }
     };
-    let r: SimReport = run_sim(&cfg, true);
+    // Passive observability rides the primary pass only; baselines run
+    // unobserved. The observer is built *after* the fault transforms so
+    // its timeline CI columns read the signals the engine integrates.
+    let mut observer = obs.and_then(|settings| {
+        let any = settings.timeline_interval_s.is_some()
+            || settings.trace_jobs_rate > 0.0
+            || settings.progress_s.is_some();
+        any.then(|| {
+            let ci_names = std::iter::once("ci_primary".to_string())
+                .chain(cfg.region_signals.iter()
+                           .map(|(rg, _)| format!("ci_{rg:?}")))
+                .collect();
+            Observer::for_run(settings, duration_s,
+                              seed ^ 0x9E37_79B9_7F4A_7C15, ci_names,
+                              cfg.servers.len())
+        })
+    });
+    let r: SimReport = match observer.as_mut() {
+        None => prof.stage(|p| &mut p.sim_s, || run_sim(&cfg, true)),
+        Some(o) => match &shard_ctx {
+            None => prof.stage(|p| &mut p.sim_s, || {
+                simulate_stream_observed(model, &mut *fresh(), &cfg,
+                                         slo.ttft_s, slo.tpot_s,
+                                         cfg.router.policy(),
+                                         cfg.batcher.policy(), Some(o))
+            }),
+            Some((sp, threads)) => {
+                let (r, merge_s) = prof.stage(|p| &mut p.sim_s, || {
+                    shard::simulate_sharded_observed(
+                        model, &cfg, slo.ttft_s, slo.tpot_s, sp, *threads,
+                        fresh, sched.as_deref(), Some(o))
+                });
+                prof.merge_s = merge_s;
+                r
+            }
+        },
+    };
+    planner_recording.store(false, std::sync::atomic::Ordering::Relaxed);
+    prof.add_planner(*planner_stats.lock().unwrap());
 
     let mut extras = BTreeMap::new();
+    // Per-server utilization (busy vs provisioned seconds), surfaced for
+    // every scenario from the accounting `ServerUsage` already keeps.
+    // Never-provisioned servers are excluded; an empty fleet reads 0.
+    let (mut busy, mut prov) = (0.0_f64, 0.0_f64);
+    let (mut umin, mut umax) = (f64::INFINITY, f64::NEG_INFINITY);
+    for u in &r.per_server {
+        if u.provisioned_s > 0.0 {
+            let util = u.busy_s / u.provisioned_s;
+            umin = umin.min(util);
+            umax = umax.max(util);
+            busy += u.busy_s;
+            prov += u.provisioned_s;
+        }
+    }
+    extras.insert("util_fleet_mean".into(),
+                  if prov > 0.0 { busy / prov } else { 0.0 });
+    extras.insert("util_server_max".into(),
+                  if umax.is_finite() { umax } else { 0.0 });
+    extras.insert("util_server_min".into(),
+                  if umin.is_finite() { umin } else { 0.0 });
     for region in &spec.compare_regions {
         // Operational carbon scales linearly with grid CI for a fixed
         // energy draw; embodied is region-independent. Normalize by the
@@ -857,7 +973,25 @@ fn run_spec_with_sources<'a>(name: &str, spec: &ScenarioSpec, seed: u64,
         extras.insert("trace_repaired_timestamps".into(), repaired as f64);
     }
 
-    ScenarioOutcome {
+    // Render the artifacts last so the profile sees every stage clock.
+    // Server track labels use global ids — identical at any shard count.
+    let artifacts = obs.map(|settings| {
+        let server_labels: Vec<String> = cfg.servers.iter().enumerate()
+            .map(|(g, s)| format!("s{g} {}", s.device.name))
+            .collect();
+        ObsArtifacts {
+            timeline_csv: observer.as_ref()
+                .and_then(|o| o.timeline.as_ref())
+                .map(|tl| tl.to_csv()),
+            spans_json: observer.as_ref()
+                .and_then(|o| o.spans.as_ref())
+                .map(|sp| sp.to_chrome_json(&server_labels)),
+            profile_json: settings.profile
+                .then(|| prof.to_json().to_string()),
+        }
+    });
+
+    let outcome = ScenarioOutcome {
         name: name.to_string(),
         seed,
         model: spec.model.to_string(),
@@ -892,7 +1026,8 @@ fn run_spec_with_sources<'a>(name: &str, spec: &ScenarioSpec, seed: u64,
         peak_live_jobs: r.peak_live_jobs,
         provisioned_server_hours: r.provisioned_server_hours,
         extras,
-    }
+    };
+    (outcome, artifacts)
 }
 
 #[cfg(test)]

@@ -10,10 +10,19 @@
 //! (`planner::horizon::IncrementalPlanner`) — the sweep stays
 //! byte-identical while planning cost scales with demand *change*, not
 //! epoch count.
+//!
+//! Stderr is deterministic too: each worker brackets its scenario with
+//! `log::capture_begin`/`capture_end`, and the buffered lines replay in
+//! scenario-selection order after the parallel scope — the same sweep at
+//! 1 and 8 threads prints byte-identical warnings. Only the opt-in
+//! `--progress` heartbeat bypasses the buffer (it is wall-clock-driven
+//! and excluded from every determinism gate).
 
 use super::{scenario_seed, CiProfile, Overrides, Scenario, ScenarioOutcome,
             TraceOverride};
+use crate::obs::{ObsArtifacts, ObsSettings};
 use crate::util::json::Json;
+use crate::util::log;
 use crate::util::table::{fnum, Table};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -51,6 +60,18 @@ pub struct SweepConfig {
     /// Replace every scenario's CI profile with a streamed grid-CI file
     /// (the `--ci-file` knob); wins over `ci_profile` when both are set.
     pub ci_file: Option<String>,
+    /// Write observability artifacts (`<name>.timeline.csv`,
+    /// `<name>.spans.json`, `<name>.profile.json`) into this directory
+    /// (the `--obs-dir` knob); `None` keeps the recorders detached and
+    /// the engine byte-identical to an unobserved run.
+    pub obs_dir: Option<String>,
+    /// Fleet-timeline sample interval, seconds (`--obs-interval`).
+    pub obs_interval_s: f64,
+    /// Span-sampling rate in [0, 1] (`--trace-jobs-rate`).
+    pub trace_jobs_rate: f64,
+    /// Wall-clock progress heartbeat period, seconds (`--progress`);
+    /// works with or without `obs_dir`.
+    pub progress_s: Option<f64>,
 }
 
 impl Default for SweepConfig {
@@ -58,7 +79,8 @@ impl Default for SweepConfig {
         SweepConfig { threads: 0, seed: 42, duration_s: 180.0,
                       ci_profile: None, epoch_s: None, shards: None,
                       coldstart_s: None, keepalive: None, trace: None,
-                      ci_file: None }
+                      ci_file: None, obs_dir: None, obs_interval_s: 60.0,
+                      trace_jobs_rate: 0.05, progress_s: None }
     }
 }
 
@@ -89,8 +111,8 @@ impl SweepReport {
     pub fn summary_table(&self) -> Table {
         let mut t = Table::new(&[
             "scenario", "carbon kg", "op kg", "emb kg", "TTFT p50 ms",
-            "TTFT p90 ms", "TPOT p50 ms", "SLO %", "gpus", "srv-hrs", "req",
-            "peak-jobs", "trunc",
+            "TTFT p90 ms", "TPOT p50 ms", "SLO %", "util %", "gpus",
+            "srv-hrs", "req", "peak-jobs", "trunc",
         ]);
         for o in &self.outcomes {
             t.row(&[
@@ -102,6 +124,8 @@ impl SweepReport {
                 fnum(o.ttft_p90_s * 1e3),
                 fnum(o.tpot_p50_s * 1e3),
                 fnum(100.0 * o.slo_attainment),
+                fnum(100.0 * o.extras.get("util_fleet_mean")
+                                     .copied().unwrap_or(0.0)),
                 format!("{}", o.fleet_gpus),
                 fnum(o.provisioned_server_hours),
                 format!("{}", o.requests),
@@ -134,15 +158,54 @@ fn resolve_threads(requested: usize, jobs: usize) -> usize {
     n.clamp(1, jobs.max(1))
 }
 
+/// Resolve the sweep's observability knobs into recorder settings;
+/// `None` when nothing is recorded (the byte-neutral default).
+fn obs_settings(cfg: &SweepConfig) -> Option<ObsSettings> {
+    match (&cfg.obs_dir, cfg.progress_s) {
+        (Some(_), _) => Some(ObsSettings {
+            timeline_interval_s: Some(cfg.obs_interval_s.max(1e-3)),
+            trace_jobs_rate: cfg.trace_jobs_rate.clamp(0.0, 1.0),
+            profile: true,
+            progress_s: cfg.progress_s,
+        }),
+        (None, Some(p)) => Some(ObsSettings::progress_only(p)),
+        (None, None) => None,
+    }
+}
+
+/// Best-effort artifact writes: a full disk or bad permission degrades to
+/// a buffered warning, never a lost sweep.
+fn write_artifacts(dir: &str, name: &str, art: &ObsArtifacts) {
+    let files = [("timeline.csv", &art.timeline_csv),
+                 ("spans.json", &art.spans_json),
+                 ("profile.json", &art.profile_json)];
+    for (ext, body) in files {
+        if let Some(body) = body {
+            let path = format!("{dir}/{name}.{ext}");
+            if let Err(e) = std::fs::write(&path, body) {
+                log::warn(&format!("warning: cannot write {path}: {e}"));
+            }
+        }
+    }
+}
+
 /// Run scenarios in parallel. Results are slotted by scenario index and
 /// then sorted by name, so the report is byte-identical for any thread
-/// count; per-scenario seeds come from [`scenario_seed`].
+/// count; per-scenario seeds come from [`scenario_seed`]. Log lines are
+/// buffered per scenario and replayed in selection order, so stderr is
+/// deterministic across thread counts too.
 pub fn run_sweep(scenarios: &[Box<dyn Scenario>], cfg: &SweepConfig) -> SweepReport {
     let n = scenarios.len();
     let threads = resolve_threads(cfg.threads, n);
     let next = AtomicUsize::new(0);
-    let slots: Vec<Mutex<Option<ScenarioOutcome>>> =
+    let slots: Vec<Mutex<Option<(ScenarioOutcome, Vec<String>)>>> =
         (0..n).map(|_| Mutex::new(None)).collect();
+    let obs = obs_settings(cfg);
+    if let Some(dir) = &cfg.obs_dir {
+        if let Err(e) = std::fs::create_dir_all(dir) {
+            log::warn(&format!("warning: cannot create obs dir {dir}: {e}"));
+        }
+    }
 
     std::thread::scope(|s| {
         for _ in 0..threads {
@@ -162,20 +225,34 @@ pub fn run_sweep(scenarios: &[Box<dyn Scenario>], cfg: &SweepConfig) -> SweepRep
                     trace: cfg.trace.clone(),
                     ci_file: cfg.ci_file.clone(),
                 };
-                let outcome = sc.run_with(seed, cfg.duration_s, &ov);
-                *slots[i].lock().unwrap() = Some(outcome);
+                log::capture_begin();
+                let outcome = match &obs {
+                    None => sc.run_with(seed, cfg.duration_s, &ov),
+                    Some(settings) => {
+                        let (outcome, art) =
+                            sc.run_observed(seed, cfg.duration_s, &ov,
+                                            settings);
+                        if let Some(dir) = &cfg.obs_dir {
+                            write_artifacts(dir, sc.name(), &art);
+                        }
+                        outcome
+                    }
+                };
+                let lines = log::capture_end();
+                *slots[i].lock().unwrap() = Some((outcome, lines));
             });
         }
     });
 
-    let mut outcomes: Vec<ScenarioOutcome> = slots
-        .into_iter()
-        .map(|m| {
-            m.into_inner()
-                .expect("sweep worker poisoned a result slot")
-                .expect("sweep worker skipped a scenario")
-        })
-        .collect();
+    let mut outcomes: Vec<ScenarioOutcome> = Vec::with_capacity(n);
+    for m in slots {
+        let (outcome, lines) = m
+            .into_inner()
+            .expect("sweep worker poisoned a result slot")
+            .expect("sweep worker skipped a scenario");
+        log::replay(&lines);
+        outcomes.push(outcome);
+    }
     outcomes.sort_by(|a, b| a.name.cmp(&b.name));
     SweepReport { seed: cfg.seed, duration_s: cfg.duration_s, outcomes }
 }

@@ -80,6 +80,20 @@ impl CarbonMeter {
         self.total_s[server]
     }
 
+    /// Provisioned seconds `server` has accrued *through* `t_s`: closed
+    /// intervals clipped at `t_s` plus the still-open interval, if any.
+    /// Drives the fleet timeline's cumulative embodied column; pure
+    /// read — O(intervals), never mutates the books.
+    pub fn provisioned_s_through(&self, server: usize, t_s: f64) -> f64 {
+        let closed: f64 = self.intervals[server].iter()
+            .map(|&(t0, t1)| (t1.min(t_s) - t0).max(0.0))
+            .sum();
+        let open = self.open_since[server]
+            .map(|t0| (t_s - t0).max(0.0))
+            .unwrap_or(0.0);
+        closed + open
+    }
+
     /// Mean of `sig` over `server`'s provisioned intervals, weighted by
     /// interval length — what idle draw should be priced at (an elastic
     /// server is only idle while it is provisioned). Falls back to the

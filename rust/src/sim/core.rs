@@ -20,6 +20,7 @@
 
 use crate::carbon::intensity::{CiSignal, Region};
 use crate::models::LlmSpec;
+use crate::obs::{Observer, SpanTrace, TimelineSample};
 use crate::workload::{ArrivalSource, RequestClass};
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -306,6 +307,11 @@ pub(crate) struct Sim<'a> {
     work_end: f64,
     /// Reusable batch-selection buffer (hot-path allocation avoidance).
     pub(crate) batch_scratch: Vec<usize>,
+    /// Passive observability hooks ([`crate::obs`]). `None` (the default)
+    /// keeps every code path byte-identical to the unobserved engine: the
+    /// hooks are `Option`-gated reads that push no events and never touch
+    /// simulation state.
+    obs: Option<&'a mut Observer>,
 }
 
 impl<'a> Sim<'a> {
@@ -384,6 +390,7 @@ impl<'a> Sim<'a> {
             recover_decode: Vec::new(),
             work_end: 0.0,
             batch_scratch: Vec::new(),
+            obs: None,
         };
         sim.pull_next_arrival();
         sim.refresh_eligibility();
@@ -486,6 +493,10 @@ impl<'a> Sim<'a> {
             for (ji, park_t) in parked {
                 self.metrics.jobs_recovered += 1;
                 self.metrics.recovery_wait_s += self.now - park_t;
+                let now = self.now;
+                if let Some(sp) = self.spans_mut() {
+                    sp.on_recover(ji, now);
+                }
                 self.route_job(ji);
             }
         }
@@ -496,6 +507,10 @@ impl<'a> Sim<'a> {
             for (ji, park_t) in parked {
                 self.metrics.jobs_recovered += 1;
                 self.metrics.recovery_wait_s += self.now - park_t;
+                let now = self.now;
+                if let Some(sp) = self.spans_mut() {
+                    sp.on_recover(ji, now);
+                }
                 let sid = self.best_decode_target()
                     .expect("checked: a live decode target exists");
                 let class = self.jobs[ji].class;
@@ -505,9 +520,93 @@ impl<'a> Sim<'a> {
         }
     }
 
+    /// Attach the passive observability recorders for this run. Called
+    /// (at most once, before [`Sim::run`]) only on observed paths; the
+    /// default engine carries `None` and is byte-identical without it.
+    pub(crate) fn attach_observer(&mut self, obs: &'a mut Observer) {
+        self.obs = Some(obs);
+    }
+
+    /// The span recorder, when one is attached and span tracing is on.
+    /// Hook sites copy whatever they need out of `self` first — this
+    /// borrow spans all of `Sim`.
+    pub(crate) fn spans_mut(&mut self) -> Option<&mut SpanTrace> {
+        self.obs.as_deref_mut().and_then(|o| o.spans.as_mut())
+    }
+
+    /// Emit every timeline sample due at or before `upto` (and the
+    /// progress heartbeat). Called before each popped event is processed
+    /// — counts are the state *just before* the first event past each
+    /// grid instant — and with `upto = ∞` from the finish path so every
+    /// recorder produces its full grid.
+    fn obs_tick(&mut self, upto: f64) {
+        let Some(obs) = self.obs.as_deref_mut() else { return };
+        if let Some(p) = obs.progress.as_mut() {
+            p.maybe_emit(self.metrics.events, self.now);
+        }
+        let Some(tl) = obs.timeline.as_mut() else { return };
+        while let Some(t) = tl.due(upto) {
+            let (mut pending, mut active, mut draining, mut retired) =
+                (0usize, 0usize, 0usize, 0usize);
+            let (mut q_po, mut q_pf, mut q_do, mut q_df) =
+                (0usize, 0usize, 0usize, 0usize);
+            let mut power_w = 0.0;
+            let mut emb_kg = 0.0;
+            for (i, s) in self.servers.iter().enumerate() {
+                match s.lifecycle {
+                    Lifecycle::Pending => pending += 1,
+                    Lifecycle::Active => active += 1,
+                    Lifecycle::Draining => draining += 1,
+                    Lifecycle::Retired => retired += 1,
+                }
+                q_po += s.prompt_q.len_online();
+                q_pf += s.prompt_q.len_offline();
+                q_do += s.decode_q.len_online();
+                q_df += s.decode_q.len_offline();
+                if matches!(s.lifecycle,
+                            Lifecycle::Active | Lifecycle::Draining) {
+                    power_w += if s.in_flight && s.busy_until > t {
+                        s.last_power_w
+                    } else {
+                        crate::carbon::operational::idle_power(
+                            s.spec.device.idle_w, s.spec.tp)
+                    };
+                }
+                emb_kg += self.cfg.emb_kg_per_hr[i]
+                    * self.meter.provisioned_s_through(i, t) / 3600.0;
+            }
+            let mut ci = Vec::with_capacity(1 + self.cfg.region_signals.len());
+            ci.push(self.cfg.ci.at(t));
+            for (_, sig) in &self.cfg.region_signals {
+                ci.push(sig.at(t));
+            }
+            tl.push(TimelineSample {
+                t_s: t,
+                pending,
+                active,
+                draining,
+                retired,
+                q_prompt_online: q_po,
+                q_prompt_offline: q_pf,
+                q_decode_online: q_do,
+                q_decode_offline: q_df,
+                recovery: self.recover_prompt.len() + self.recover_decode.len(),
+                power_w,
+                op_kg: self.meter.op_kg(),
+                emb_kg,
+                online_done: self.metrics.online_done,
+                slo_ok: self.metrics.slo_ok,
+                ci,
+            });
+        }
+    }
+
     /// Drain the event queue to completion.
     pub fn run(&mut self) {
         while let Some(ev) = self.queue.pop() {
+            if self.obs.is_some() {
+                self.obs_tick(ev.t);
+            }
             self.now = ev.t;
             self.metrics.events += 1;
             if !matches!(ev.kind, EventKind::Decommission(_)) {
@@ -519,6 +618,15 @@ impl<'a> Sim<'a> {
                     // so the next arrival is in the heap (and ordered)
                     // before any same-time Wake/Handoff churn.
                     self.pull_next_arrival();
+                    if self.obs.is_some() {
+                        let j = &self.jobs[ji];
+                        let (arrival, prompt, output, online) =
+                            (j.arrival, j.prompt, j.output,
+                             j.class == RequestClass::Online);
+                        if let Some(sp) = self.spans_mut() {
+                            sp.on_arrival(ji, arrival, prompt, output, online);
+                        }
+                    }
                     if self.jobs[ji].class == RequestClass::Offline {
                         let release =
                             self.defer.release_time(self.now, self.meter.primary());
@@ -545,8 +653,13 @@ impl<'a> Sim<'a> {
                     // of panicking — it drains when capacity returns.
                     let target = match self.servers[server].lifecycle {
                         Lifecycle::Active | Lifecycle::Draining => Some(server),
-                        Lifecycle::Pending | Lifecycle::Retired =>
-                            self.best_decode_target(),
+                        Lifecycle::Pending | Lifecycle::Retired => {
+                            let now = self.now;
+                            if let Some(sp) = self.spans_mut() {
+                                sp.on_reroute(job, now, server);
+                            }
+                            self.best_decode_target()
+                        }
                     };
                     match target {
                         Some(server) => {
@@ -554,7 +667,13 @@ impl<'a> Sim<'a> {
                             self.servers[server].decode_q.push(job, class);
                             self.queue.push(self.now, EventKind::Wake(server));
                         }
-                        None => self.recover_decode.push((job, self.now)),
+                        None => {
+                            let now = self.now;
+                            if let Some(sp) = self.spans_mut() {
+                                sp.on_park(job, now);
+                            }
+                            self.recover_decode.push((job, now));
+                        }
                     }
                 }
                 EventKind::Complete { server, gen } => {
@@ -708,6 +827,11 @@ impl<'a> Sim<'a> {
                 self.refresh_eligibility();
                 self.metrics.jobs_rescheduled +=
                     decode_orphans.len() + prompt_orphans.len();
+                if let Some(sp) = self.spans_mut() {
+                    for &ji in decode_orphans.iter().chain(&prompt_orphans) {
+                        sp.on_reroute(ji, now, sid);
+                    }
+                }
                 for ji in decode_orphans {
                     match self.best_decode_target() {
                         Some(t) => {
@@ -715,7 +839,12 @@ impl<'a> Sim<'a> {
                             self.servers[t].decode_q.push(ji, class);
                             self.queue.push(now, EventKind::Wake(t));
                         }
-                        None => self.recover_decode.push((ji, now)),
+                        None => {
+                            if let Some(sp) = self.spans_mut() {
+                                sp.on_park(ji, now);
+                            }
+                            self.recover_decode.push((ji, now));
+                        }
                     }
                 }
                 for ji in prompt_orphans {
@@ -740,7 +869,11 @@ impl<'a> Sim<'a> {
     /// recovered job's TTFT includes its outage wait.
     fn route_job(&mut self, ji: usize) {
         if self.prompt_eligible.is_empty() {
-            self.recover_prompt.push((ji, self.now));
+            let now = self.now;
+            if let Some(sp) = self.spans_mut() {
+                sp.on_park(ji, now);
+            }
+            self.recover_prompt.push((ji, now));
             return;
         }
         let ctx = RouteCtx { now: self.now, meter: &self.meter };
@@ -750,7 +883,11 @@ impl<'a> Sim<'a> {
                       "policy routed to an ineligible server");
         let class = self.jobs[ji].class;
         self.servers[sid].prompt_q.push(ji, class);
-        self.queue.push(self.now, EventKind::Wake(sid));
+        let now = self.now;
+        if let Some(sp) = self.spans_mut() {
+            sp.on_route(ji, now, sid);
+        }
+        self.queue.push(now, EventKind::Wake(sid));
     }
 
     /// Close the books: idle-floor energy, operational + embodied carbon.
@@ -767,6 +904,15 @@ impl<'a> Sim<'a> {
     /// partitions) into one fleet-wide meter instead of reconstructing
     /// interval totals from the report.
     pub fn finish_parts(mut self) -> (SimReport, CarbonMeter) {
+        // Flush the observers first: the timeline owes its full grid
+        // (every shard must emit the same instants), and stranded spans
+        // must leave the arena-slot table before their jobs are freed.
+        if self.obs.is_some() {
+            self.obs_tick(f64::INFINITY);
+            if let Some(sp) = self.spans_mut() {
+                sp.flush_stranded();
+            }
+        }
         // Jobs still parked when the queue drains were stranded by a
         // fault plan that never restored capacity: release their slots
         // (they count as arrivals, never completions) so the books still

@@ -52,8 +52,8 @@ pub use self::core::{histogram_window, Event, EventKind, EventQueue,
                      FleetAction, FleetEvent, FleetSchedule, KeepAlivePolicy,
                      SimConfig};
 pub use self::fault::{apply_ci_spikes, Fault, FaultPlan};
-pub use self::shard::{simulate_sharded, ShardPlan, ShardSpec, ShardSplitter,
-                      MAX_SHARD_SERVERS};
+pub use self::shard::{simulate_sharded, simulate_sharded_observed, ShardPlan,
+                      ShardSpec, ShardSplitter, MAX_SHARD_SERVERS};
 pub use self::metrics::{MetricsSink, ServerUsage, SimReport};
 pub use self::policy::{BatchPolicy, Batcher, CarbonGreedy, DeferralPolicy,
                        FifoBatch, Jsq, OnlineFirstBatch, RouteCtx, RoutePolicy,
@@ -99,8 +99,27 @@ pub fn simulate_stream_with(model: &LlmSpec, source: &mut dyn ArrivalSource,
                             cfg: &SimConfig, slo_ttft: f64, slo_tpot: f64,
                             route: &dyn RoutePolicy, batch: &dyn BatchPolicy)
     -> SimReport {
+    simulate_stream_observed(model, source, cfg, slo_ttft, slo_tpot,
+                             route, batch, None)
+}
+
+/// [`simulate_stream_with`] with the passive observability recorders of
+/// [`crate::obs`] attached: the engine drives the observer's timeline,
+/// span, and progress hooks as it runs and flushes them on finish.
+/// `None` is byte-identical to the unobserved path — the hooks are
+/// `Option`-gated reads that never touch simulation state.
+pub fn simulate_stream_observed(model: &LlmSpec,
+                                source: &mut dyn ArrivalSource,
+                                cfg: &SimConfig, slo_ttft: f64, slo_tpot: f64,
+                                route: &dyn RoutePolicy,
+                                batch: &dyn BatchPolicy,
+                                obs: Option<&mut crate::obs::Observer>)
+    -> SimReport {
     let mut sim = self::core::Sim::new(model, source, cfg, slo_ttft, slo_tpot,
                                        route, batch);
+    if let Some(o) = obs {
+        sim.attach_observer(o);
+    }
     sim.run();
     sim.finish()
 }

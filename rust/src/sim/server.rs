@@ -200,6 +200,16 @@ impl ClassQueue {
         self.online.is_empty() && self.offline.is_empty()
     }
 
+    /// Online-class depth (fleet-timeline sampling).
+    pub fn len_online(&self) -> usize {
+        self.online.len()
+    }
+
+    /// Offline-class depth (fleet-timeline sampling).
+    pub fn len_offline(&self) -> usize {
+        self.offline.len()
+    }
+
     /// Remove up to `max` job ids in strict arrival order (classes
     /// interleaved by enqueue sequence), appending to `out`.
     pub fn pop_fifo_into(&mut self, max: usize, out: &mut Vec<usize>) {
@@ -280,6 +290,11 @@ pub struct Server {
     /// cannot change what any server has observed.
     pub(crate) ka_hist: Vec<u64>,
     pub(crate) ka_obs: u64,
+    /// Power draw (W) of the most recent busy period — the figure the
+    /// fleet timeline samples while `busy_until > t`. Written on every
+    /// busy period, read only by the observer; simulation logic never
+    /// consults it, so it is byte-neutral with observers off.
+    pub(crate) last_power_w: f64,
 }
 
 /// Histogram bins are capped so a pathological idle duration cannot grow
@@ -304,6 +319,7 @@ impl Server {
             retire_at: 0.0,
             ka_hist: Vec::new(),
             ka_obs: 0,
+            last_power_w: 0.0,
         }
     }
 
@@ -397,6 +413,12 @@ impl<'a> Sim<'a> {
             let ttft = done_t - self.jobs[ji].dispatched_t;
             self.metrics.ttft.push(ttft);
         }
+        let t0 = self.now;
+        if let Some(sp) = self.spans_mut() {
+            for &ji in &picks {
+                sp.on_prefill(ji, sid, t0, done_t);
+            }
+        }
 
         // Hand sequences to a decode server (KV transfer if remote). The
         // Handoff event lands the KV at done_t + xfer — the decode side
@@ -426,6 +448,12 @@ impl<'a> Sim<'a> {
             self.batch.select_decode(&mut self.servers[sid].decode_q,
                                      self.jobs.as_slice(), slots, &mut picks);
             self.servers[sid].active.extend_from_slice(&picks);
+            let now = self.now;
+            if let Some(sp) = self.spans_mut() {
+                for &ji in &picks {
+                    sp.on_decode_start(ji, now, sid);
+                }
+            }
             picks.clear();
             self.batch_scratch = picks;
         }
@@ -465,6 +493,9 @@ impl<'a> Sim<'a> {
                     && tpot <= j.slo_tpot;
                 let on_time = done_t <= j.deadline;
                 self.metrics.complete(online, slo_hit, on_time, tpot);
+                if let Some(sp) = self.spans_mut() {
+                    sp.on_complete(ji, done_t);
+                }
                 self.jobs.free(ji);
                 false
             } else {
@@ -488,6 +519,7 @@ impl<'a> Sim<'a> {
         s.busy_s += latency_s;
         s.busy_until = done_t;
         s.energy_j += energy_j;
+        s.last_power_w = power_w;
         let gen = s.busy_gen;
         self.meter.record(sid, self.now, latency_s, energy_j);
         self.queue.push(done_t, EventKind::Complete { server: sid, gen });

@@ -43,6 +43,7 @@
 
 use crate::carbon::intensity::CiSignal;
 use crate::models::LlmSpec;
+use crate::obs::Observer;
 use crate::util::stats::Histogram;
 use crate::workload::{ArrivalSource, PartitionSource, Request};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -418,16 +419,65 @@ pub fn simulate_sharded<'a, 'b>(model: &LlmSpec, cfg: &SimConfig,
     assert!(!plan.is_empty(), "empty shard plan");
     let parts: Vec<ShardResult> = parallel_slots(plan.len(), threads, |k| {
         run_shard(model, cfg, plan, k, slo_ttft, slo_tpot, make_source,
-                  schedule)
+                  schedule, None)
     });
     merge_shard_reports(cfg, plan, parts)
+}
+
+/// [`simulate_sharded`] with the passive recorders of [`crate::obs`]
+/// attached: every shard worker runs with a fresh [`Observer::shard`]
+/// recorder (same grids and span seed, scoped to the shard's servers),
+/// and the recorders fold back into `obs` in ascending shard index — so
+/// the merged timeline/span artifacts, like the report itself, are
+/// byte-identical for any `threads` value. Returns the merged report
+/// plus the wall-clock seconds spent in the order-fixed merge (the
+/// self-profiling `merge_s` stage). `obs = None` is byte-identical to
+/// [`simulate_sharded`].
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_sharded_observed<'a, 'b>(
+    model: &LlmSpec, cfg: &SimConfig, slo_ttft: f64, slo_tpot: f64,
+    plan: &ShardPlan, threads: usize, make_source: &SourceFn<'a>,
+    schedule: Option<&ScheduleFn<'b>>, obs: Option<&mut Observer>)
+    -> (SimReport, f64) {
+    assert!(!plan.is_empty(), "empty shard plan");
+    let parts: Vec<(SimReport, CarbonMeter, Option<Observer>)> = {
+        let template: Option<&Observer> = obs.as_deref();
+        parallel_slots(plan.len(), threads, |k| {
+            let mut shard_obs = template.map(|o| {
+                o.shard(&plan.shards[k].servers,
+                        &format!(":{}", plan.shards[k].key))
+            });
+            let (report, meter) = run_shard(
+                model, cfg, plan, k, slo_ttft, slo_tpot, make_source,
+                schedule, shard_obs.as_mut());
+            (report, meter, shard_obs)
+        })
+    };
+    let t0 = std::time::Instant::now();
+    let mut reports: Vec<ShardResult> = Vec::with_capacity(parts.len());
+    match obs {
+        Some(o) => {
+            // Ascending shard index: the slot-ordered `parts` vector is
+            // already in plan order regardless of worker interleaving.
+            for (r, m, so) in parts {
+                reports.push((r, m));
+                if let Some(so) = so {
+                    o.merge(so);
+                }
+            }
+        }
+        None => reports.extend(parts.into_iter().map(|(r, m, _)| (r, m))),
+    }
+    let merged = merge_shard_reports(cfg, plan, reports);
+    (merged, t0.elapsed().as_secs_f64())
 }
 
 #[allow(clippy::too_many_arguments)]
 fn run_shard<'a, 'b>(model: &LlmSpec, cfg: &SimConfig, plan: &ShardPlan,
                      k: usize, slo_ttft: f64, slo_tpot: f64,
                      make_source: &SourceFn<'a>,
-                     schedule: Option<&ScheduleFn<'b>>)
+                     schedule: Option<&ScheduleFn<'b>>,
+                     obs: Option<&mut Observer>)
     -> (SimReport, CarbonMeter) {
     let mut sub = plan.sub_config(cfg, k);
     if let Some(sched) = schedule {
@@ -437,6 +487,9 @@ fn run_shard<'a, 'b>(model: &LlmSpec, cfg: &SimConfig, plan: &ShardPlan,
     let mut src = shard_stream(cfg, plan, k, make_source());
     let mut sim = Sim::new(model, &mut src, &sub, slo_ttft, slo_tpot,
                            sub.router.policy(), sub.batcher.policy());
+    if let Some(o) = obs {
+        sim.attach_observer(o);
+    }
     sim.run();
     sim.finish_parts()
 }

@@ -1,0 +1,143 @@
+//! Minimal leveled stderr logger for the CLI and the sweep engine — no
+//! external crates, no timestamps (timestamps would make stderr
+//! nondeterministic), no global mutable formatting state.
+//!
+//! Two jobs:
+//!
+//! 1. **Leveled emission** — `error!`-style free functions gated on a
+//!    process-wide [`Level`] (`--quiet` → `Error`, default → `Info`,
+//!    `-v`/`--verbose` → `Debug`).
+//! 2. **Deterministic capture for parallel sweeps** — a worker thread
+//!    brackets each scenario job with [`capture_begin`]/[`capture_end`];
+//!    anything logged in between is buffered instead of hitting stderr,
+//!    and the sweep engine replays the buffers in registry order after
+//!    the parallel scope. The same sweep at 1 and 8 threads therefore
+//!    produces byte-identical stderr, matching the report-byte contract.
+//!
+//! Capture is per-thread (a `thread_local` stack), so concurrent workers
+//! never interleave lines mid-capture; the level check happens at log
+//! time, so captured output honors the same verbosity as direct output.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Verbosity levels, most to least severe.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+/// Set the process-wide verbosity (CLI `--quiet` / `-v`).
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Whether a message at `level` would currently be emitted.
+pub fn enabled(level: Level) -> bool {
+    (level as u8) <= LEVEL.load(Ordering::Relaxed)
+}
+
+thread_local! {
+    /// Stack of active capture buffers on this thread (innermost last).
+    static CAPTURE: RefCell<Vec<Vec<String>>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Start buffering this thread's log lines instead of writing stderr.
+/// Nests; each `capture_begin` must be matched by a [`capture_end`].
+pub fn capture_begin() {
+    CAPTURE.with(|c| c.borrow_mut().push(Vec::new()));
+}
+
+/// Stop the innermost capture and return its buffered lines (already
+/// level-filtered) for deterministic replay via [`replay`].
+pub fn capture_end() -> Vec<String> {
+    CAPTURE.with(|c| c.borrow_mut().pop().unwrap_or_default())
+}
+
+/// Re-emit captured lines verbatim (they passed the level gate when
+/// logged).
+pub fn replay(lines: &[String]) {
+    for line in lines {
+        eprintln!("{line}");
+    }
+}
+
+/// Emit at Info level straight to stderr, bypassing any active capture —
+/// the wall-clock progress heartbeat must appear in real time, not after
+/// its scenario finishes. Callers opted in explicitly (`--progress`),
+/// accepting nondeterministic stderr interleaving for liveness.
+pub fn info_now(msg: &str) {
+    if enabled(Level::Info) {
+        eprintln!("{msg}");
+    }
+}
+
+fn emit(level: Level, msg: &str) {
+    if !enabled(level) {
+        return;
+    }
+    let captured = CAPTURE.with(|c| {
+        if let Some(buf) = c.borrow_mut().last_mut() {
+            buf.push(msg.to_string());
+            true
+        } else {
+            false
+        }
+    });
+    if !captured {
+        eprintln!("{msg}");
+    }
+}
+
+pub fn error(msg: &str) {
+    emit(Level::Error, msg);
+}
+
+pub fn warn(msg: &str) {
+    emit(Level::Warn, msg);
+}
+
+pub fn info(msg: &str) {
+    emit(Level::Info, msg);
+}
+
+pub fn debug(msg: &str) {
+    emit(Level::Debug, msg);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // One test body: the level gate is process-global, so concurrent
+    // test threads poking it would race each other's assertions.
+    #[test]
+    fn levels_gate_and_captures_nest() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+
+        set_level(Level::Info);
+        capture_begin();
+        warn("captured line");
+        debug("filtered line"); // below Info: dropped at log time
+        assert_eq!(capture_end(), vec!["captured line"]);
+        // An end without a begin is an empty no-op, not a panic.
+        assert!(capture_end().is_empty());
+
+        capture_begin();
+        info("outer");
+        capture_begin();
+        info("inner");
+        assert_eq!(capture_end(), vec!["inner"]);
+        info("outer2");
+        assert_eq!(capture_end(), vec!["outer", "outer2"]);
+    }
+}

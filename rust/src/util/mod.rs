@@ -3,6 +3,7 @@
 
 pub mod cli;
 pub mod json;
+pub mod log;
 pub mod rng;
 pub mod stats;
 pub mod table;

@@ -49,7 +49,8 @@ const OUTCOME_KEYS: &[&str] = &[
 /// Summary-table columns, in order.
 const TABLE_COLUMNS: &[&str] = &[
     "scenario", "carbon kg", "op kg", "emb kg", "TTFT p50 ms", "TTFT p90 ms",
-    "TPOT p50 ms", "SLO %", "gpus", "srv-hrs", "req", "peak-jobs", "trunc",
+    "TPOT p50 ms", "SLO %", "util %", "gpus", "srv-hrs", "req", "peak-jobs",
+    "trunc",
 ];
 
 fn sweep_json() -> Json {
@@ -89,19 +90,24 @@ fn baseline_extras_cannot_silently_vanish() {
         s.get("extras").and_then(|e| e.as_obj()).unwrap()
             .keys().cloned().collect()
     };
+    // Every scenario reports the fleet-utilization trio (busy seconds
+    // over provisioned seconds); the "util_" prefix sorts last.
     // Temporal shifting reports the run-immediately baseline.
     assert_eq!(extras_of("diurnal-shift"),
                vec!["carbon_kg_immediate", "op_kg_immediate",
-                    "slo_attainment_immediate", "ttft_p90_s_immediate"]);
+                    "slo_attainment_immediate", "ttft_p90_s_immediate",
+                    "util_fleet_mean", "util_server_max", "util_server_min"]);
     // Carbon-greedy routing reports the carbon-blind JSQ baseline.
     assert_eq!(extras_of("carbon-router"),
-               vec!["carbon_kg_jsq", "op_kg_jsq", "ttft_p90_s_jsq"]);
+               vec!["carbon_kg_jsq", "op_kg_jsq", "ttft_p90_s_jsq",
+                    "util_fleet_mean", "util_server_max", "util_server_min"]);
     // Rolling-horizon elasticity reports the static peak-provisioned
     // baseline.
     assert_eq!(extras_of("autoscale-diurnal"),
                vec!["carbon_kg_static", "emb_kg_static", "op_kg_static",
                     "provisioned_server_hours_static", "slo_attainment_static",
-                    "ttft_p90_s_static"]);
+                    "ttft_p90_s_static", "util_fleet_mean", "util_server_max",
+                    "util_server_min"]);
 }
 
 #[test]
@@ -135,7 +141,8 @@ fn honest_energy_extras_cannot_silently_vanish() {
     let nl = extras_of("nonlinear-power");
     assert_eq!(nl, vec!["carbon_kg_stock_freq", "energy_j_stock_freq",
                         "op_kg_stock_freq", "slo_attainment_stock_freq",
-                        "tpot_p90_s_stock_freq"]);
+                        "tpot_p90_s_stock_freq", "util_fleet_mean",
+                        "util_server_max", "util_server_min"]);
 }
 
 #[test]

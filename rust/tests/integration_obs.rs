@@ -1,0 +1,244 @@
+//! Determinism and format suite for the passive observability layer:
+//! obs-off runs must be byte-identical to the pre-observability engine,
+//! obs-on artifacts must be byte-identical across shard-thread budgets
+//! and across repeat runs, the span export must load as Chrome
+//! trace-event JSON, and the timeline CSV header is golden.
+
+use ecoserve::models;
+use ecoserve::obs::{ObsArtifacts, ObsSettings, Observer};
+use ecoserve::scenarios::{catalog, run_spec, run_spec_observed,
+                          run_spec_sharded, scenario_seed};
+use ecoserve::sim::{homogeneous_fleet, simulate_stream_observed, FaultPlan,
+                    FleetAction, FleetEvent, Router, SimConfig};
+use ecoserve::util::json::Json;
+use ecoserve::workload::{generate_trace, Arrivals, LengthDist, RequestClass,
+                         SliceSource};
+
+fn obs_settings(rate: f64, interval_s: f64) -> ObsSettings {
+    ObsSettings {
+        timeline_interval_s: Some(interval_s),
+        trace_jobs_rate: rate,
+        profile: true,
+        progress_s: None,
+    }
+}
+
+/// Run `name` observed and return (outcome JSON, artifacts).
+fn observed(name: &str, seed: u64, duration_s: f64, shards: Option<usize>,
+            settings: &ObsSettings) -> (String, ObsArtifacts) {
+    let s = catalog::by_names(&[name]).unwrap().remove(0);
+    let (out, art) = run_spec_observed(name, &s.spec(), seed, duration_s,
+                                       shards, settings);
+    (out.to_json().to_string(), art)
+}
+
+#[test]
+fn artifacts_are_byte_identical_across_shard_budgets() {
+    // The headline determinism gate: the shard partition is a pure
+    // function of the fleet and recorders fold in ascending shard index,
+    // so timeline and span bytes are invariant in the thread budget —
+    // and a repeat run reproduces them exactly.
+    let name = "carbon-router";
+    let seed = scenario_seed(71, name);
+    let settings = obs_settings(0.25, 10.0);
+    let runs: Vec<(String, ObsArtifacts)> = [1usize, 2, 4]
+        .iter()
+        .map(|&n| observed(name, seed, 60.0, Some(n), &settings))
+        .collect();
+    for (i, n) in [2usize, 4].iter().enumerate() {
+        assert_eq!(runs[0].0, runs[i + 1].0,
+                   "{name}: outcome bytes diverged at {n} shard threads");
+        assert_eq!(runs[0].1.timeline_csv, runs[i + 1].1.timeline_csv,
+                   "{name}: timeline bytes diverged at {n} shard threads");
+        assert_eq!(runs[0].1.spans_json, runs[i + 1].1.spans_json,
+                   "{name}: span bytes diverged at {n} shard threads");
+    }
+    let again = observed(name, seed, 60.0, Some(2), &settings);
+    assert_eq!(runs[1].1.timeline_csv, again.1.timeline_csv,
+               "repeat run must reproduce the timeline bytes");
+    assert_eq!(runs[1].1.spans_json, again.1.spans_json,
+               "repeat run must reproduce the span bytes");
+
+    // The merged grid is complete: header + floor(60/10)+1 rows.
+    let csv = runs[0].1.timeline_csv.as_ref().expect("timeline requested");
+    assert_eq!(csv.lines().count(), 1 + 7, "timeline grid rows");
+    assert!(runs[0].1.profile_json.is_some(), "profile requested");
+}
+
+#[test]
+fn observed_outcome_bytes_match_unobserved() {
+    // Byte-neutrality: attaching the recorders must not perturb a single
+    // outcome byte — one scenario from each of the core, replay, and
+    // failure packs, unsharded and sharded.
+    let settings = obs_settings(1.0, 5.0);
+    for name in ["carbon-router", "replay-day", "failure-storm"] {
+        let s = catalog::by_names(&[name]).unwrap().remove(0);
+        let seed = scenario_seed(23, name);
+        let plain = run_spec(name, &s.spec(), seed, 40.0)
+            .to_json().to_string();
+        let (obs, _) = run_spec_observed(name, &s.spec(), seed, 40.0, None,
+                                         &settings);
+        assert_eq!(plain, obs.to_json().to_string(),
+                   "{name}: observers changed the unsharded outcome bytes");
+        let plain_sh = run_spec_sharded(name, &s.spec(), seed, 40.0, 2)
+            .to_json().to_string();
+        let (obs_sh, _) = run_spec_observed(name, &s.spec(), seed, 40.0,
+                                            Some(2), &settings);
+        assert_eq!(plain_sh, obs_sh.to_json().to_string(),
+                   "{name}: observers changed the sharded outcome bytes");
+    }
+}
+
+#[test]
+fn failure_storm_span_trace_is_chrome_loadable_and_deterministic() {
+    // Rate 1.0 samples every job; the storm's mid-trace kills must show
+    // up as reroute instants on the killed servers' tracks, and the
+    // export must parse as `{"traceEvents": [...]}`.
+    let name = "failure-storm";
+    let seed = scenario_seed(47, name);
+    let settings = obs_settings(1.0, 15.0);
+    let (out_json, art) = observed(name, seed, 60.0, None, &settings);
+    let again = observed(name, seed, 60.0, None, &settings);
+    assert_eq!(art.spans_json, again.1.spans_json,
+               "span trace must be reproducible run-to-run");
+
+    let json = art.spans_json.as_ref().expect("spans requested");
+    let parsed = Json::parse(json).expect("chrome export must parse");
+    let events = parsed.get("traceEvents").and_then(|e| e.as_arr())
+        .expect("traceEvents array");
+    let phases: Vec<&str> = events.iter()
+        .filter_map(|e| e.get("ph").and_then(|p| p.as_str()))
+        .collect();
+    assert!(phases.contains(&"M"), "process-name metadata events");
+    assert!(phases.contains(&"X"), "queue/prefill/decode slices");
+    assert!(phases.contains(&"i"), "lifecycle instants");
+    let names: Vec<&str> = events.iter()
+        .filter_map(|e| e.get("name").and_then(|p| p.as_str()))
+        .collect();
+    for expect in ["arrival", "route", "prefill", "complete"] {
+        assert!(names.contains(&expect), "missing {expect} events");
+    }
+
+    let out = Json::parse(&out_json).unwrap();
+    let extra = |k: &str| out.get("extras").and_then(|e| e.get(k))
+        .and_then(|v| v.as_f64()).unwrap_or(0.0);
+    if extra("jobs_rescheduled") > 0.0 {
+        assert!(names.contains(&"reroute"),
+                "rescheduled jobs must leave reroute edges in the trace");
+    }
+    // Server 0 always survives the storm, so nothing ever parks.
+    if extra("jobs_recovered") == 0.0 {
+        assert!(!names.contains(&"park"),
+                "no park instants without recovery-queue traffic");
+    }
+}
+
+#[test]
+fn park_and_recover_edges_reach_the_span_trace() {
+    // Total-capacity-loss fixture from the core suite
+    // (`total_capacity_loss_parks_jobs_until_recovery`), observed: both
+    // servers die at t=30 and re-provision at t=60, so arrivals in
+    // (30, 60) park in the recovery queue and drain on return — the span
+    // trace must carry the park/recover instants and the timeline must
+    // show a non-empty recovery queue in between.
+    let m = models::llm("llama-8b").unwrap();
+    let tr = generate_trace(Arrivals::Poisson { rate: 2.0 },
+                            LengthDist::ShareGpt, RequestClass::Online,
+                            120.0, 17);
+    let mut cfg = SimConfig::flat(homogeneous_fleet("A100-40", 2, m, 2048),
+                                  Router::Jsq, 261.0, vec![0.005; 2]);
+    cfg.faults = FaultPlan::new()
+        .server_death(30.0, 0)
+        .server_death(30.0, 1);
+    for server in [0, 1] {
+        cfg.fleet_plan.events.push(FleetEvent {
+            t: 60.0, server, action: FleetAction::Provision,
+        });
+    }
+    let settings = obs_settings(1.0, 10.0);
+    let mut obs = Observer::for_run(&settings, 120.0, 0xEC05,
+                                    vec!["ci_primary".to_string()], 2);
+    let route = cfg.router.policy();
+    let batch = cfg.batcher.policy();
+    let mut src = SliceSource::new(&tr);
+    let r = simulate_stream_observed(m, &mut src, &cfg, 0.5, 0.1,
+                                     route, batch, Some(&mut obs));
+    assert_eq!(r.completed, tr.len());
+    assert!(r.jobs_recovered > 0, "arrivals in (30,60) must park");
+
+    let spans = obs.spans.as_ref().expect("span recorder attached");
+    let labels = vec!["s0 A100-40".to_string(), "s1 A100-40".to_string()];
+    let json = spans.to_chrome_json(&labels);
+    Json::parse(&json).expect("park/recover export must parse");
+    assert!(json.contains("\"name\":\"park\""), "park instants recorded");
+    assert!(json.contains("\"name\":\"recover\""),
+            "recover instants recorded");
+
+    let csv = obs.timeline.as_ref().expect("timeline attached").to_csv();
+    let peak_recovery = csv.lines().skip(1)
+        .filter_map(|l| l.split(',').nth(9))
+        .filter_map(|v| v.parse::<usize>().ok())
+        .max().unwrap_or(0);
+    assert!(peak_recovery > 0,
+            "recovery-queue depth must surface in the timeline: {csv}");
+}
+
+#[test]
+fn timeline_csv_header_is_golden() {
+    // The fixed column set is an external contract (plotting scripts,
+    // `inspect`): changing it is a deliberate golden update.
+    let name = "online-latency";
+    let seed = scenario_seed(5, name);
+    let (_, art) = observed(name, seed, 30.0, None, &obs_settings(0.0, 10.0));
+    let csv = art.timeline_csv.expect("timeline requested");
+    assert_eq!(csv.lines().next().unwrap(),
+               "t_s,pending,active,draining,retired,q_prompt_online,\
+                q_prompt_offline,q_decode_online,q_decode_offline,recovery,\
+                power_w,op_kg,emb_kg,online_done,slo_ok,slo_window,\
+                ci_primary");
+    // A two-region fleet under a time-varying CI profile appends one CI
+    // column per configured region signal.
+    let (_, art2) = observed("production-day",
+                             scenario_seed(5, "production-day"),
+                             30.0, None, &obs_settings(0.0, 10.0));
+    let header = art2.timeline_csv.expect("timeline requested");
+    let header = header.lines().next().unwrap().to_string();
+    assert!(header.starts_with("t_s,"), "{header}");
+    assert!(header.contains(",ci_primary"), "{header}");
+    assert!(header.split(',').count() > 17,
+            "two-region fleet must add region CI columns: {header}");
+}
+
+#[test]
+fn span_sampling_is_rate_monotone_and_shard_invariant() {
+    // Sampling is a pure function of the request: the rate-0.2 sample
+    // set must be a subset of the rate-1.0 set (same seed), and the
+    // sampled job ids must not depend on the shard budget.
+    let name = "carbon-router";
+    let seed = scenario_seed(9, name);
+    let ids = |art: &ObsArtifacts| -> Vec<String> {
+        let parsed = Json::parse(art.spans_json.as_ref().unwrap()).unwrap();
+        let mut ids: Vec<String> = parsed.get("traceEvents")
+            .and_then(|e| e.as_arr()).unwrap()
+            .iter()
+            .filter_map(|e| e.get("args").and_then(|a| a.get("job"))
+                .and_then(|j| j.as_str()).map(str::to_string))
+            .collect();
+        ids.sort();
+        ids.dedup();
+        ids
+    };
+    let (_, all) = observed(name, seed, 40.0, Some(1), &obs_settings(1.0, 20.0));
+    let (_, some) = observed(name, seed, 40.0, Some(1),
+                             &obs_settings(0.2, 20.0));
+    let (_, some4) = observed(name, seed, 40.0, Some(4),
+                              &obs_settings(0.2, 20.0));
+    let (all_ids, some_ids, some4_ids) = (ids(&all), ids(&some), ids(&some4));
+    assert!(!all_ids.is_empty(), "rate 1.0 must sample every job");
+    assert!(some_ids.len() < all_ids.len(),
+            "rate 0.2 must thin the sample set");
+    assert!(some_ids.iter().all(|id| all_ids.binary_search(id).is_ok()),
+            "low-rate samples must be a subset of the full set");
+    assert_eq!(some_ids, some4_ids,
+               "sampled job ids must not depend on the shard budget");
+}

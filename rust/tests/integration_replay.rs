@@ -121,7 +121,8 @@ fn replay_day_extras_carry_the_golden_burstiness_panel() {
                     "provisioned_server_hours_static",
                     "slo_attainment_static", "trace_records",
                     "trace_repaired_timestamps", "trace_skipped_lines",
-                    "ttft_p90_s_static"],
+                    "ttft_p90_s_static", "util_fleet_mean",
+                    "util_server_max", "util_server_min"],
                "replay-day extras drifted from the golden key set");
     // The committed fixtures are clean and bursty: the replayed CV must
     // exceed the rate-matched Poisson baseline, and the health counters
